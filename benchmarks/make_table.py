@@ -1,0 +1,34 @@
+"""Render the §Roofline table (markdown) from benchmarks/dryrun_results/."""
+import json
+import sys
+from pathlib import Path
+
+DIR = Path(__file__).resolve().parent / "dryrun_results"
+
+
+def fmt_s(x):
+    return f"{x*1e3:9.1f}" if x < 10 else f"{x:8.1f}s"
+
+
+def main(mesh="single"):
+    rows = []
+    for f in sorted(DIR.glob(f"*__{mesh}.json")):
+        r = json.load(open(f))
+        rows.append(r)
+    print(f"| arch | shape | compute (s) | memory (s) | collective (s) | "
+          f"dominant | MODEL_FLOPS | useful | frac | state/dev GiB | peak GiB |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        st = r.get("state_analysis", {}).get("state_per_device_gib", float("nan"))
+        peak = r.get("memory_stats", {}).get("peak_est_bytes", 0) / 2**30
+        print(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+            f"| {r['collective_s']:.3f} | {r['dominant']} "
+            f"| {r['model_flops']:.2e} | {r['useful_ratio']:.3f} "
+            f"| {r['roofline_fraction']:.4f} | {st:.2f} | {peak:.1f} |"
+        )
+
+
+if __name__ == "__main__":
+    main(*(sys.argv[1:] or ["single"]))

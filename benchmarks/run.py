@@ -1,0 +1,217 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = the table's claim
+being checked, e.g. a flop count, speedup, or ratio).
+
+  table1_overhead        — paper Table I: per-stage client cost (flops/biops)
+                           measured (wall µs) + counted vs the paper's models
+  table2_characteristics — paper Table II: executable protocol properties
+  table3_matrix_support  — paper Table III/IV: odd/even sizes + minimal padding
+  fig_scaling            — §IV.D: N-server parallel LU scaling (the 2-server
+                           baseline of Gao & Yu = N=2 column)
+  verification_cost      — §IV.E: Q1 vs Q2 vs Q3 cost and rejection power
+  cipher_fusion          — §IV.C: fused CED kernel vs two-pass cipher traffic
+  spdc_pipeline_comm     — §IV.D.3: one-way relay bytes vs paper-exact volume
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _t(fn, *args, reps=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6, out
+
+
+def _wellcond(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n, n)) + n * np.eye(n)
+
+
+def table1_overhead(n: int = 1024):
+    """Paper Table I: SeedGen 2n biops, KeyGen ns, Cipher n², Authenticate
+    0 + 2n(n+1) (Q3), Decipher 2n."""
+    from repro.core import (
+        cipher, cipher_flops, decipher, decipher_flops, keygen, lu_unblocked,
+        seedgen,
+    )
+    from repro.core.verify import authenticate, verification_flops
+
+    m = _wellcond(n)
+    mj = jnp.asarray(m)
+
+    us, seed = _t(lambda: seedgen(128, m), reps=3)
+    print(f"table1_seedgen_n{n},{us:.1f},claimed_biops={2*n}")
+
+    us, key = _t(lambda: keygen(128, seed, n), reps=3)
+    print(f"table1_keygen_n{n},{us:.1f},claimed_biops={n}s")
+
+    cfn = jax.jit(lambda x: cipher(x, key, seed)[0])
+    us, x = _t(cfn, mj)
+    print(f"table1_cipher_n{n},{us:.1f},claimed_flops={cipher_flops(n)}")
+
+    _, meta = cipher(mj, key, seed)
+    l, u = jax.jit(lu_unblocked)(x)
+    for method in ("q1", "q2", "q3"):
+        us, _ = _t(
+            lambda: authenticate(l, u, x, num_servers=4, method=method), reps=3
+        )
+        print(f"table1_auth_{method}_n{n},{us:.1f},"
+              f"claimed_flops={verification_flops(n, method)}")
+
+    us, det = _t(lambda: decipher(seed, meta, l, u), reps=3)
+    print(f"table1_decipher_n{n},{us:.1f},claimed_flops={decipher_flops(n)}")
+
+
+def table2_characteristics():
+    """Paper Table II, as executable checks: privacy-preserving (cipher
+    changes all entries), parallel outsourcing (N-server LU matches), and
+    malicious-model detection (tamper rejected)."""
+    from repro.core import outsource_determinant
+
+    m = _wellcond(24, seed=1)
+    t0 = time.perf_counter()
+    res = outsource_determinant(m, 4)
+    ok = res.verified and np.isclose(
+        res.det.logabs, np.linalg.slogdet(m)[1], rtol=1e-8
+    )
+    bad = outsource_determinant(
+        m, 4, tamper=lambda l, u: (l.at[7, 3].add(0.05), u)
+    )
+    us = (time.perf_counter() - t0) * 1e6
+    print(f"table2_protocol_roundtrip,{us:.1f},correct={ok}")
+    print(f"table2_malicious_detected,0.0,rejected={not bad.verified}")
+
+
+def table3_matrix_support():
+    """Paper Tables III/IV: odd sizes minimally padded, even unpadded."""
+    from repro.core import outsource_determinant, padding_for_servers
+
+    rows = [(7, 2), (8, 2), (9, 3), (12, 3), (11, 4)]
+    for n, servers in rows:
+        m = _wellcond(n, seed=n)
+        t0 = time.perf_counter()
+        res = outsource_determinant(m, servers)
+        us = (time.perf_counter() - t0) * 1e6
+        ok = res.verified and np.isclose(
+            res.det.logabs, np.linalg.slogdet(m)[1], rtol=1e-8
+        )
+        print(f"table3_n{n}_N{servers},{us:.1f},"
+              f"padding={res.padding},min={padding_for_servers(n, servers)},ok={ok}")
+
+
+def fig_scaling(n: int = 512):
+    """N-server LU vs a sequential blocked LU at the SAME block granularity
+    (isolates the parallelism benefit from the blocking benefit). The
+    critical-path model is the paper's §IV.D scalability claim: the last
+    server's work ≈ (2/3)(n/N)³·N + O(n²·n/N) → ~1/N² of total flops on its
+    own row after the pipeline fills."""
+    from repro.core.lu import lu_blocked, lu_nserver
+
+    x = jnp.asarray(_wellcond(n, seed=2))
+    for N in (2, 4, 8):
+        seq = jax.jit(lambda a, N=N: lu_blocked(a, n // N))
+        base_us, _ = _t(seq, x, reps=2, warmup=1)
+        fn = jax.jit(lambda a, N=N: lu_nserver(a, N)[:2])
+        us, _ = _t(fn, x, reps=2, warmup=1)
+        print(f"fig_scaling_{N}server_n{n},{us:.1f},"
+              f"seq_blocked_us={base_us:.1f},speedup={base_us/us:.2f}")
+
+
+def verification_cost(n: int = 2048):
+    """Q1 (vector) vs Q2/Q3 (scalar): cost and single-element sensitivity."""
+    from repro.core import lu_unblocked, q1, q2, q3
+
+    x = jnp.asarray(_wellcond(n, seed=3))
+    l, u = jax.jit(lu_unblocked)(x)
+    r = jnp.asarray(np.random.default_rng(0).standard_normal(n))
+    for name, fn in (
+        ("q1", jax.jit(lambda l, u, x: jnp.max(jnp.abs(q1(l, u, x, r))))),
+        ("q2", jax.jit(lambda l, u, x: jnp.abs(q2(l, u, x, r)))),
+        ("q3", jax.jit(q3)),
+    ):
+        us, resid = _t(fn, l, u, x, reps=3)
+        u_bad = u.at[n // 2, n // 2].multiply(1.001)
+        detect = float(fn(l, u_bad, x)) > 10 * float(resid) + 1e-12
+        print(f"verify_{name}_n{n},{us:.1f},residual={float(resid):.2e},"
+              f"detects_0.1pct_tamper={detect}")
+
+
+def cipher_fusion(n: int = 2048):
+    """Fused CED (1 HBM pass) vs unfused scale-then-rotate (2 passes)."""
+    from repro.core import keygen, seedgen
+    from repro.core.prt import rot90_cw
+    from repro.kernels import ops
+
+    m = jnp.asarray(_wellcond(n, seed=4))
+    seed = seedgen(128, np.asarray(m))
+    key = keygen(128, seed, n)
+    v = jnp.asarray(key.v)
+
+    fused = jax.jit(lambda m: ops.ced(m, v, 1, block=128))
+    unfused = jax.jit(lambda m: rot90_cw(m / v.reshape(-1, 1), 1))
+    us_f, a = _t(fused, m, reps=3)
+    us_u, b = _t(unfused, m, reps=3)
+    ok = np.allclose(np.asarray(a), np.asarray(b))
+    # wall time of the fused kernel is interpret-mode (Python) — the claim
+    # being checked is correctness + the 1-vs-2 HBM-pass traffic model
+    print(f"cipher_fused_n{n},{us_f:.1f},passes=1,match={ok},note=interpret-mode")
+    print(f"cipher_unfused_n{n},{us_u:.1f},passes=2,traffic_ratio=2.0")
+
+
+def spdc_pipeline_comm(n: int = 4096):
+    """One-way relay volume: fixed-shape shard_map hops vs paper-exact."""
+    from repro.distrib.spdc_pipeline import pipeline_collective_bytes
+
+    for N in (2, 4, 8, 16):
+        info = pipeline_collective_bytes(n, N)
+        print(
+            f"comm_n{n}_N{N},0.0,"
+            f"relay_MB={info['relay_bytes']/1e6:.1f},"
+            f"paper_MB={info['paper_exact_bytes']/1e6:.1f},"
+            f"overcount={info['overcount_factor']:.2f}"
+        )
+
+
+def extension_inverse(n: int = 128):
+    """Paper §VII.B future work, implemented: secure outsourced inversion."""
+    from repro.core import outsource_inverse
+
+    m = _wellcond(n, seed=9)
+    t0 = time.perf_counter()
+    res = outsource_inverse(m, 4)
+    us = (time.perf_counter() - t0) * 1e6
+    err = float(np.max(np.abs(np.asarray(res.inverse) @ m - np.eye(n))))
+    print(f"ext_inverse_n{n}_N4,{us:.1f},verified={res.verified},max_err={err:.2e}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    table1_overhead()
+    table2_characteristics()
+    table3_matrix_support()
+    fig_scaling()
+    verification_cost()
+    cipher_fusion()
+    spdc_pipeline_comm()
+    extension_inverse()
+
+
+if __name__ == "__main__":
+    main()

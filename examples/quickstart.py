@@ -1,0 +1,64 @@
+"""Quickstart: securely outsource one determinant through the full SPDC
+protocol — SeedGen → KeyGen → Cipher(CED) → Parallelize(N-server LU) →
+Authenticate(Q3) → Decipher.
+
+    PYTHONPATH=src python examples/quickstart.py [--n 256] [--servers 4]
+"""
+import argparse
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+
+from repro.core import outsource_determinant
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=256)
+    ap.add_argument("--servers", type=int, default=4)
+    ap.add_argument("--mode", choices=["ewd", "ewm"], default="ewd")
+    ap.add_argument("--method", choices=["q1", "q2", "q3"], default="q3")
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(0)
+    # a client matrix (well-conditioned, as an outsourcing client can ensure)
+    m = rng.standard_normal((args.n, args.n)) + args.n * np.eye(args.n)
+
+    print(f"Outsourcing det of a {args.n}x{args.n} matrix to "
+          f"{args.servers} untrusted edge servers (CED: {args.mode} + PRT, "
+          f"verify: {args.method})")
+    res = outsource_determinant(
+        m, args.servers, mode=args.mode, method=args.method
+    )
+    want_sign, want_log = np.linalg.slogdet(m)
+
+    print(f"  seed Ψ            = {res.seed.psi:.6f}")
+    print(f"  rotation          = {res.meta.rotate_k * 90}°")
+    print(f"  padding           = {res.padding}")
+    print(f"  verified          = {res.verified} (residual {res.residual:.2e})")
+    print(f"  det (sign,logabs) = ({res.det.sign:+.0f}, {res.det.logabs:.10f})")
+    print(f"  numpy slogdet     = ({want_sign:+.0f}, {want_log:.10f})")
+    assert res.verified
+    assert res.det.sign == want_sign
+    assert np.isclose(res.det.logabs, want_log, rtol=1e-9)
+    print("OK: determinant recovered exactly; servers saw only the ciphertext.")
+
+    # a malicious server corrupts its block — the client catches it
+    bad = outsource_determinant(
+        m, args.servers, tamper=lambda l, u: (l.at[5, 2].add(0.05), u)
+    )
+    print(f"  tampered result rejected = {not bad.verified} "
+          f"(residual {bad.residual:.2e})")
+    assert not bad.verified
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Secure edge cluster: the distributed SPDC pipeline on a simulated
+N-device cluster (shard_map + one-way ppermute relay), including the
+paper's odd-size augmentation and a comparison of EWD vs EWM recovery.
+
+    PYTHONPATH=src python examples/secure_edge_cluster.py [--servers 8]
+"""
+import argparse
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+
+from repro.core import outsource_determinant
+from repro.distrib.spdc_pipeline import pipeline_collective_bytes
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--servers", type=int, default=8)
+    ap.add_argument("--n", type=int, default=237)  # deliberately awkward size
+    args = ap.parse_args()
+    assert args.servers <= len(jax.devices()), (
+        f"need {args.servers} devices, have {len(jax.devices())}"
+    )
+
+    rng = np.random.default_rng(1)
+    m = rng.standard_normal((args.n, args.n)) + args.n * np.eye(args.n)
+    want_sign, want_log = np.linalg.slogdet(m)
+
+    print(f"cluster: {args.servers} edge servers (1 JAX device each)")
+    print(f"matrix:  {args.n}x{args.n} (odd/awkward on purpose)")
+
+    for mode in ("ewd", "ewm"):
+        res = outsource_determinant(
+            m, args.servers, mode=mode, distributed=True, method="q2"
+        )
+        status = "OK" if (
+            res.verified and res.det.sign == want_sign
+            and np.isclose(res.det.logabs, want_log, rtol=1e-9)
+        ) else "MISMATCH"
+        print(f"  CED={mode}: padded +{res.padding} -> "
+              f"{(args.n + res.padding)}, verified={res.verified}, "
+              f"logdet={res.det.logabs:.6f} ({status})")
+
+    info = pipeline_collective_bytes(args.n + 3, args.servers)
+    print(f"one-way relay traffic: {info['relay_bytes']/1e6:.1f} MB "
+          f"(paper-exact {info['paper_exact_bytes']/1e6:.1f} MB, "
+          f"fixed-shape overcount {info['overcount_factor']:.2f}x)")
+    print("note: no all-gather/all-reduce appears in the pipeline HLO — "
+          "neighbor permutes only (tests/test_distributed.py asserts this).")
+
+
+if __name__ == "__main__":
+    main()

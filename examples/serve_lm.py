@@ -1,0 +1,26 @@
+"""Serving example: batched greedy generation with per-layer-kind caches
+(ring-buffered sliding windows for gemma3, SSM state for mamba2).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch gemma3-1b
+    PYTHONPATH=src python examples/serve_lm.py --arch mamba2-370m
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def main():
+    args = sys.argv[1:] or ["--arch", "tinyllama-1.1b"]
+    cmd = [sys.executable, "-m", "repro.launch.serve", "--smoke",
+           "--batch", "4", "--prompt-len", "12", "--gen", "20"] + args
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    print("+", " ".join(cmd))
+    sys.exit(subprocess.call(cmd, env=env, cwd=ROOT))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""End-to-end training driver: train the ~100M-param repro-100m model for a
+few hundred steps on synthetic Markov data, with checkpointing, resume, and
+optional Freivalds SDC verification.
+
+    PYTHONPATH=src python examples/train_lm.py               # full run (~100M, 300 steps)
+    PYTHONPATH=src python examples/train_lm.py --quick       # CI-sized (~15s)
+
+This is a thin veneer over the production launcher
+(`python -m repro.launch.train`) — same code path the cluster would run.
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def main():
+    quick = "--quick" in sys.argv
+    extra = [a for a in sys.argv[1:] if a != "--quick"]
+    cmd = [
+        sys.executable, "-m", "repro.launch.train",
+        "--arch", "repro-100m",
+        "--steps", "30" if quick else "300",
+        "--batch", "4" if quick else "16",
+        "--seq", "128" if quick else "512",
+        "--ckpt", "/tmp/repro_100m_ckpt",
+        "--sdc",
+    ] + extra
+    env = {"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin"}
+    import os
+
+    env.update({k: v for k, v in os.environ.items() if k not in env})
+    print("+", " ".join(cmd))
+    sys.exit(subprocess.call(cmd, env=env, cwd=ROOT))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Architecture config: llama4-scout-17b-a16e [moe] 16e top-1. Auto-split from the assignment table."""
+from .base import ModelConfig
+
+# -- [ssm] SSD / state-space duality [arXiv:2405.21060] ----------------------
+MAMBA2_370M = ModelConfig(
+    name="mamba2-370m", family="ssm",
+    num_layers=48, d_model=1024, num_heads=0, num_kv_heads=0, head_dim=0,
+    d_ff=0, vocab_size=50280,
+    pattern=(("ssm", "none"),),
+    rope_type="none",
+    ssm_state=128, ssm_heads=32, ssm_head_dim=64, ssm_expand=2,
+    long_ok=True,
+    notes="attention-free; decode is O(1)/token via the SSM state",
+)
+
+# -- [dense] Gemma 2B: GeGLU, head_dim 256, MQA [arXiv:2403.08295] -----------
+GEMMA_2B = ModelConfig(
+    name="gemma-2b", family="dense",
+    num_layers=18, d_model=2048, num_heads=8, num_kv_heads=1, head_dim=256,
+    d_ff=16384, vocab_size=256000,
+    pattern=(("attn_full", "mlp"),),
+    mlp_type="geglu",
+    notes="MQA (kv=1): KV replicated across model axis; 8 heads < 16-way "
+          "model axis => sequence-parallel attention fallback",
+)
+
+# -- [dense] Nemotron-4 340B: GQA kv=8, squared-ReLU [arXiv:2402.16819] ------
+NEMOTRON_4_340B = ModelConfig(
+    name="nemotron-4-340b", family="dense",
+    num_layers=96, d_model=18432, num_heads=96, num_kv_heads=8, head_dim=192,
+    d_ff=73728, vocab_size=256000,
+    pattern=(("attn_full", "mlp"),),
+    mlp_type="relu2",
+    optimizer_dtype="bfloat16", grad_accum=16,
+    notes="bf16 optimizer state + 16-way grad accumulation to fit 340B "
+          "training state in 256x16GB (DESIGN.md §5)",
+)
+
+# -- [dense] TinyLlama 1.1B: llama2 arch [arXiv:2401.02385] ------------------
+TINYLLAMA_1_1B = ModelConfig(
+    name="tinyllama-1.1b", family="dense",
+    num_layers=22, d_model=2048, num_heads=32, num_kv_heads=4, head_dim=64,
+    d_ff=5632, vocab_size=32000,
+    pattern=(("attn_full", "mlp"),),
+    mlp_type="swiglu",
+)
+
+# -- [dense] Gemma3 1B: 5:1 local:global sliding window [hf] -----------------
+GEMMA3_1B = ModelConfig(
+    name="gemma3-1b", family="dense",
+    num_layers=26, d_model=1152, num_heads=4, num_kv_heads=1, head_dim=256,
+    d_ff=6912, vocab_size=262144,
+    pattern=(("attn_sliding", "mlp"),) * 5 + (("attn_full", "mlp"),),
+    mlp_type="geglu", window=1024, rope_theta=1e6,
+    long_ok=True,
+    notes="26 = 4 full periods of 6 + 2 remainder (sliding) layers; "
+          "single rope_theta used for local+global",
+)
+
+# -- [moe] Granite 3.0 1B-A400M: 32e top-8 [hf:ibm-granite] ------------------
+GRANITE_MOE_1B = ModelConfig(
+    name="granite-moe-1b-a400m", family="moe",
+    num_layers=24, d_model=1024, num_heads=16, num_kv_heads=8, head_dim=64,
+    d_ff=512, vocab_size=49155,
+    pattern=(("attn_full", "moe"),),
+    mlp_type="swiglu", num_experts=32, experts_per_token=8,
+)
+
+# -- [moe] Llama4 Scout 17B-A16E: 16e top-1, chunked attention [hf] ----------
+LLAMA4_SCOUT = ModelConfig(
+    name="llama4-scout-17b-a16e", family="moe",
+    num_layers=48, d_model=5120, num_heads=40, num_kv_heads=8, head_dim=128,
+    d_ff=8192, vocab_size=202048,
+    pattern=(("attn_chunked", "moe"),) * 3 + (("attn_full", "moe"),),
+    mlp_type="swiglu", num_experts=16, experts_per_token=1,
+    window=8192, rope_theta=5e5, long_ok=True, grad_accum=4,
+    notes="3:1 chunked-local:global (iRoPE-style, chunk 8192) => long_500k "
+          "runs; shared expert omitted (backbone scope); 40 heads % 16 != 0 "
+          "=> sequence-parallel attention",
+)

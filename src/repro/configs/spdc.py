@@ -1,0 +1,27 @@
+"""The paper's own workload config: SPDC secure determinant outsourcing.
+
+Not an LM — this configures the Parallelize stage (matrix size, server
+count, cipher mode, verification method) for benchmarks, examples, and the
+SPDC dry-run cell.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class SPDCConfig:
+    name: str = "spdc"
+    matrix_n: int = 4096
+    num_servers: int = 16
+    mode: str = "ewd"  # ewd | ewm
+    method: str = "q3"  # q1 | q2 | q3
+    lambda1: int = 128
+    lambda2: int = 128
+    dtype: str = "float64"
+    block: int = 256  # per-server blocked-LU tile
+
+
+SPDC_DEFAULT = SPDCConfig()
+SPDC_EDGE_SMALL = SPDCConfig(name="spdc-edge-small", matrix_n=512, num_servers=4)
+SPDC_POD = SPDCConfig(name="spdc-pod", matrix_n=8192, num_servers=16)

@@ -1,0 +1,56 @@
+"""Determinant-preserving matrix augmentation — paper §II.B and §IV.D.1.
+
+Pads an n×n matrix A to (n+p)×(n+p) as the block matrix
+
+    B = [[A, 0],
+         [R, I_p]]
+
+where R is arbitrary (we draw it from a PRNG so padding leaks no structure)
+and the lower-right block is the p×p identity, so det(B) = det(A)·det(I) =
+det(A). p is the smallest non-negative integer such that (n+p) is divisible
+by the server count N and (n+p)/N > 1 (paper §IV.D.1), or such that (n+p)
+is even for the "nearest-even" mode (paper §VI.C).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def padding_for_servers(n: int, num_servers: int) -> int:
+    """Minimum p ≥ 0 with (n+p) % N == 0 and (n+p)/N > 1 (paper §IV.D.1)."""
+    if num_servers < 1:
+        raise ValueError("num_servers must be >= 1")
+    p = 0
+    while (n + p) % num_servers != 0 or (n + p) // num_servers <= 1:
+        p += 1
+    return p
+
+
+def padding_to_even(n: int) -> int:
+    """Nearest-even padding (paper §VI.C): p ∈ {0, 1}."""
+    return n % 2
+
+
+def augment(a: jnp.ndarray, p: int, *, key: jax.Array | None = None) -> jnp.ndarray:
+    """Pad a to (n+p)×(n+p) preserving det. R-block random if key given."""
+    if p == 0:
+        return a
+    n = a.shape[0]
+    dtype = a.dtype
+    if key is not None:
+        r = jax.random.uniform(key, (p, n), dtype=dtype, minval=-1.0, maxval=1.0)
+    else:
+        r = jnp.zeros((p, n), dtype=dtype)
+    top = jnp.concatenate([a, jnp.zeros((n, p), dtype=dtype)], axis=1)
+    bot = jnp.concatenate([r, jnp.eye(p, dtype=dtype)], axis=1)
+    return jnp.concatenate([top, bot], axis=0)
+
+
+def augment_for_servers(
+    a: jnp.ndarray, num_servers: int, *, key: jax.Array | None = None
+) -> tuple[jnp.ndarray, int]:
+    """Augment so the result partitions into N×N equal blocks. Returns (B, p)."""
+    n = a.shape[0]
+    p = padding_for_servers(n, num_servers)
+    return augment(a, p, key=key), p

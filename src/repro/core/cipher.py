@@ -1,0 +1,89 @@
+"""Cipher — Composite Element Distortion (CED), paper §IV.C.
+
+CED = EWO ∘ PRT:
+
+  * EWO (element-wise obfuscation): row i is divided (EWD) or multiplied
+    (EWM) by blinding entry v_i.
+  * PRT obfuscation: the scaled matrix is rotated by k ∈ {1,2,3} clockwise
+    quarter-turns, k = Rotate(Ψ) = (⌊Ψ⌋ mod 3) + 1.
+
+Both are applied in a single pass ("run simultaneously", §IV.C): the fused
+Pallas kernel (kernels/ced.py) reads each input tile once, scales it in
+VMEM, and writes it to the rotated destination via the BlockSpec index map —
+the rotation costs nothing beyond addressing. This module is the public API;
+it dispatches to the fused kernel or a pure-jnp path.
+
+Determinant bookkeeping (used by Decipher):
+
+    EWD:  det(X) = det(M) / Ψ · s      EWM:  det(X) = det(M) · Ψ · s
+
+with s = rotation_sign(n, k).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Literal
+
+import jax.numpy as jnp
+import numpy as np
+
+from .keygen import Key
+from .prt import rot90_cw, rotate_degree
+from .seed import Seed
+
+Mode = Literal["ewd", "ewm"]
+
+
+@dataclass(frozen=True)
+class CipherMeta:
+    """Public-side record of how M was ciphered (client keeps this)."""
+
+    mode: Mode
+    rotate_k: int  # quarter-turns applied
+    n: int
+
+
+def ewo(m: jnp.ndarray, v: jnp.ndarray, mode: Mode) -> jnp.ndarray:
+    """Element-wise obfuscation: row-scale by the blinding vector."""
+    v = v.reshape(-1, 1).astype(m.dtype)
+    if mode == "ewd":
+        return m / v
+    if mode == "ewm":
+        return m * v
+    raise ValueError(f"unknown EWO mode: {mode!r}")
+
+
+def cipher(
+    m: jnp.ndarray,
+    key: Key,
+    seed: Seed,
+    *,
+    mode: Mode = "ewd",
+    use_kernel: bool = False,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, CipherMeta]:
+    """Cipher(K, M) → X. Returns the ciphertext and the (client-held) meta.
+
+    use_kernel selects the fused Pallas CED kernel (TPU target; interpret
+    mode executes it on CPU). The jnp path is the oracle.
+    """
+    n = int(m.shape[0])
+    if key.v.shape[0] != n:
+        raise ValueError(f"blinding vector length {key.v.shape[0]} != n {n}")
+    k = rotate_degree(seed.psi)
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        x = kops.ced(m, jnp.asarray(key.v), k, mode=mode, interpret=interpret)
+    else:
+        x = rot90_cw(ewo(m, jnp.asarray(key.v), mode), k)
+    return x, CipherMeta(mode=mode, rotate_k=k, n=n)
+
+
+def cipher_flops(n: int) -> int:
+    """Cipher cost model — paper Table I claims n² flops for our protocol.
+
+    One multiply (or divide) per element; the rotation is pure data
+    movement (0 flops).
+    """
+    return n * n

@@ -1,0 +1,102 @@
+"""SPDC end-to-end protocol — the paper's six-algorithm tuple
+(SeedGen, KeyGen, Cipher, Parallelize, Authenticate, Decipher), §III–§IV.
+
+This is the client-side orchestration: everything the client does locally
+(seed/key/cipher/augment/verify/decipher) plus the dispatch of the ciphered
+blocks to the "edge servers" — either the faithful single-process simulation
+(core.lu.lu_nserver) or the real distributed shard_map pipeline
+(distrib.spdc_pipeline) where each mesh device plays one server.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .augment import augment_for_servers
+from .cipher import CipherMeta, Mode, cipher
+from .decipher import Determinant, decipher
+from .keygen import keygen
+from .lu import CommLog, lu_nserver
+from .seed import Seed, seedgen
+from .verify import authenticate
+
+
+@dataclass
+class SPDCResult:
+    det: Determinant
+    verified: bool
+    residual: float
+    seed: Seed
+    meta: CipherMeta
+    comm: CommLog | None
+    padding: int
+    num_servers: int
+
+
+def outsource_determinant(
+    m: np.ndarray | jnp.ndarray,
+    num_servers: int,
+    *,
+    lambda1: int = 128,
+    lambda2: int = 128,
+    mode: Mode = "ewd",
+    method: str = "q3",
+    use_kernel: bool = False,
+    distributed: bool = False,
+    faithful_sign: bool = False,
+    tamper=None,
+    dtype=jnp.float64,
+) -> SPDCResult:
+    """Run the full SPDC protocol for one matrix.
+
+    tamper: optional fn (L, U) -> (L, U) applied to the servers' results
+    before authentication — models a malicious edge server (tests use it to
+    show Q2/Q3 reject tampered results).
+    distributed: route Parallelize through the shard_map pipeline (requires
+    the active process to have >= num_servers JAX devices); otherwise the
+    faithful single-process simulation of Algorithm 3 is used.
+    """
+    m = jnp.asarray(m, dtype=dtype)
+    n = int(m.shape[0])
+
+    # --- client: PMOP (privacy-preserving matrix obfuscation protocol) ---
+    seed = seedgen(lambda1, np.asarray(m))
+    key = keygen(lambda2, seed, n)
+    x, meta = cipher(m, key, seed, mode=mode, use_kernel=use_kernel)
+
+    # augmentation (only when needed — paper Table IV) with random R block
+    aug_key = jax.random.key(
+        int.from_bytes(seed.digest[8:16], "big") % (2**31)
+    )
+    x_aug, padding = augment_for_servers(x, num_servers, key=aug_key)
+
+    # --- servers: SPCP (secure parallel computation protocol) ---
+    if distributed:
+        from repro.distrib.spdc_pipeline import lu_nserver_shardmap
+
+        l, u = lu_nserver_shardmap(x_aug, num_servers)
+        comm = None
+    else:
+        l, u, comm = lu_nserver(x_aug, num_servers)
+
+    if tamper is not None:
+        l, u = tamper(l, u)
+
+    # --- client: RRVP (result recovery & verification protocol) ---
+    verified, residual = authenticate(
+        l, u, x_aug, num_servers=num_servers, method=method
+    )
+    det = decipher(seed, meta, l, u, faithful=faithful_sign)
+    return SPDCResult(
+        det=det,
+        verified=verified,
+        residual=residual,
+        seed=seed,
+        meta=meta,
+        comm=comm,
+        padding=padding,
+        num_servers=num_servers,
+    )

@@ -1,0 +1,77 @@
+"""Panth Rotation Theorem (PRT) — paper §II.A.
+
+The theorem: for an n×n matrix X and k clockwise quarter-turns,
+
+    det(rot90_cw^k(X)) = ((-1)^{floor(n/2)})^k · det(X)
+
+so the determinant sign is invariant for n ≡ 0,1 (mod 4) and flips per
+quarter-turn for n ≡ 2,3 (mod 4). 180° (k=2) always preserves the sign.
+
+This module provides the rotation itself (as a cheap, fusable JAX op), the
+sign law, and the paper's literal (erroneous for n ≡ 0,1 mod 4, k odd)
+recovery factor for faithful comparison — see DESIGN.md §1.1.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rot90_cw(x: jnp.ndarray, k: int = 1) -> jnp.ndarray:
+    """Rotate a matrix by k clockwise quarter-turns.
+
+    Matches the paper's R_90(X): transpose followed by column reversal.
+    jnp.rot90 rotates counter-clockwise, so cw k turns == ccw (-k) turns.
+    """
+    k = k % 4
+    return jnp.rot90(x, k=-k, axes=(0, 1))
+
+
+def rotation_sign(n: int, k: int) -> int:
+    """Correct determinant sign factor after k clockwise quarter-turns.
+
+    det(rot90_cw^k(X)) = rotation_sign(n, k) * det(X).
+    """
+    return (-1) ** ((n // 2) * (k % 4))
+
+
+def rotation_sign_paper(k: int) -> int:
+    """The paper's literal Decipher factor (-1)^{Rotate(Ψ)} — ignores n.
+
+    Correct only for n ≡ 2,3 (mod 4). Kept for the faithful-reproduction
+    comparison in tests and EXPERIMENTS.md.
+    """
+    return (-1) ** (k % 4)
+
+
+def sign_preserved(n: int, k: int) -> bool:
+    """True iff a k-quarter-turn rotation preserves det sign for size n.
+
+    Encodes the theorem's case split:
+      n ≡ 0,1 (mod 4): preserved for all k.
+      n ≡ 2,3 (mod 4): preserved iff k even.
+    """
+    return rotation_sign(n, k) == 1
+
+
+def quantize_seed(psi: float, method: str = "floor") -> int:
+    """Quantized seed Ψ' — paper §IV.C.2 offers floor/ceil/round/trunc."""
+    import math
+
+    if method == "floor":
+        return int(math.floor(psi))
+    if method == "ceil":
+        return int(math.ceil(psi))
+    if method == "round":
+        return int(round(psi))
+    if method == "trunc":
+        return int(psi)
+    raise ValueError(f"unknown quantization method: {method!r}")
+
+
+def rotate_degree(psi: float, method: str = "floor") -> int:
+    """Rotate(Ψ) ∈ {1,2,3} — the number of clockwise quarter-turns.
+
+    Paper §IV.C.2: Ψ' = quantize(Ψ); degree = (Ψ' mod 3) + 1, mapping to
+    {90°, 180°, 270°}.
+    """
+    return (quantize_seed(psi, method) % 3) + 1

@@ -1,0 +1,53 @@
+"""Silent-data-corruption (SDC) detection via Freivalds projection checks.
+
+Beyond-paper extension (DESIGN.md §2): the paper's Q2 is a scalar Freivalds
+check specialized to LU. The same O(n²) projection verifies any outsourced
+matmul C = A·B — exactly the integrity problem a 1000+-chip training fleet
+has with silently corrupting cores. We expose:
+
+  * freivalds_residual(a, b, c, key)  — scalar |rᵀ(A(Br) − Cr)| residual
+  * checked_matmul(a, b, key)         — matmul + residual, jit-safe
+  * check_step_outputs(...)           — verify a pytree of (A,B,C) triples
+
+These run at O(n²) against the O(n³) they protect, i.e. ~b⁻¹ relative
+overhead for block size b — negligible at LM shapes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def freivalds_residual(
+    a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray, key: jax.Array
+) -> jnp.ndarray:
+    """Relative scalar residual of the claim C = A @ B (last-2-dims matmul)."""
+    r = jax.random.rademacher(key, (b.shape[-1],), dtype=c.dtype)
+    lhs = a @ (b @ r)
+    rhs = c @ r
+    num = jnp.linalg.norm(lhs - rhs)
+    den = jnp.linalg.norm(rhs) + jnp.asarray(1e-30, c.dtype)
+    return num / den
+
+
+def sdc_flag(residual: jnp.ndarray, *, dtype=None, c: float = 1e3) -> jnp.ndarray:
+    """True iff the residual exceeds the roundoff-scaled acceptance bound."""
+    eps = jnp.finfo(dtype or residual.dtype).eps
+    return residual > c * eps
+
+
+def checked_matmul(
+    a: jnp.ndarray, b: jnp.ndarray, key: jax.Array
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """C = A@B plus its Freivalds residual (jit/pjit-safe, collective-free)."""
+    c = a @ b
+    return c, freivalds_residual(a, b, c, key)
+
+
+def check_step_outputs(triples, key: jax.Array) -> jnp.ndarray:
+    """Max residual over an iterable of (A, B, C) claims (e.g. one per layer)."""
+    keys = jax.random.split(key, max(len(triples), 1))
+    resids = [freivalds_residual(a, b, c, k) for (a, b, c), k in zip(triples, keys)]
+    if not resids:
+        return jnp.zeros(())
+    return jnp.max(jnp.stack(resids))

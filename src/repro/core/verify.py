@@ -1,0 +1,112 @@
+"""Result authentication — paper §IV.E: Q1 (prior work), Q2, Q3, ε(N).
+
+Q1 (Gao & Yu):  vector residual   L(U r) − X r
+Q2 (paper):     scalar residual   (Lᵀr)ᵀ(U r) − (rᵀ X) r
+Q3 (paper):     deterministic     Σ_i |Σ_{j≤i} L_ij U_ji − x_ii|
+
+All avoid matrix–matrix products: Q1/Q2 are matrix–vector (O(n²)), Q3 reads
+only the diagonal band terms it needs (O(n²) for the inner products over
+j ≤ i, or O(n) if L/U rows are streamed during integration).
+
+ε(N): multi-server block pipelining + no-pivot elimination accumulate
+rounding; the paper validates |Q| ≤ ε(N) with ε growing in N. We model
+ε(N) = c · (1 + N) · n · u · scale(X) with u the unit roundoff of the
+compute dtype and scale(X) = ‖X‖_F / √n (RMS magnitude) — first-order error
+analysis of an n-step elimination distributed over N pipeline stages.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def q1(l: jnp.ndarray, u: jnp.ndarray, x: jnp.ndarray, r: jnp.ndarray) -> jnp.ndarray:
+    """Gao & Yu's vector check: L(Ur) − Xr. Zero vector iff LU consistent."""
+    return l @ (u @ r) - x @ r
+
+
+def q2(l: jnp.ndarray, u: jnp.ndarray, x: jnp.ndarray, r: jnp.ndarray) -> jnp.ndarray:
+    """Paper's scalar probabilistic check: (Lᵀr)ᵀ(Ur) − (rᵀX)r."""
+    return (l.T @ r) @ (u @ r) - (r @ x) @ r
+
+
+def q3(l: jnp.ndarray, u: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Deterministic diagonal check, per-element abs (the form the paper's
+    own correctness proof §V.C.2 uses): Σ_i |(L·U)_ii − x_ii|."""
+    lu_diag = jnp.einsum("ij,ji->i", jnp.tril(l), jnp.triu(u))
+    return jnp.sum(jnp.abs(lu_diag - jnp.diagonal(x)))
+
+
+def q3_paper_literal(l: jnp.ndarray, u: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Q3 exactly as §IV.E.2 writes it: |Σ_i (Σ_{j≤i} L_ij U_ji − x_ii)|.
+
+    Weaker than q3: opposite-sign per-row errors cancel (see
+    tests/test_verify.py::test_q3_literal_cancellation).
+    """
+    lu_diag = jnp.einsum("ij,ji->i", jnp.tril(l), jnp.triu(u))
+    return jnp.abs(jnp.sum(lu_diag - jnp.diagonal(x)))
+
+
+def epsilon(
+    num_servers: int,
+    n: int,
+    x: jnp.ndarray | None = None,
+    *,
+    dtype=jnp.float64,
+    c: float = 64.0,
+) -> float:
+    """Acceptance threshold ε(N) — grows with server count (paper §IV.E.3)."""
+    u = float(jnp.finfo(dtype).eps)
+    if x is not None:
+        scale = float(jnp.linalg.norm(x) / np.sqrt(n))
+    else:
+        scale = 1.0
+    return c * (1.0 + num_servers) * n * u * max(scale, 1.0) ** 2
+
+
+def authenticate(
+    l: jnp.ndarray,
+    u: jnp.ndarray,
+    x: jnp.ndarray,
+    *,
+    num_servers: int,
+    method: str = "q3",
+    rng: np.random.Generator | None = None,
+    eps: float | None = None,
+) -> tuple[bool, float]:
+    """Authenticate(L, U, X) → {1, 0} plus the residual magnitude.
+
+    method ∈ {"q1", "q2", "q3", "q3_literal"}. For q1/q2 a random r is drawn
+    client-side (the server never sees it).
+    """
+    n = x.shape[0]
+    if eps is None:
+        eps = epsilon(num_servers, n, x, dtype=x.dtype)
+    if method in ("q1", "q2"):
+        rng = rng or np.random.default_rng(0)
+        r = jnp.asarray(rng.standard_normal(n), dtype=x.dtype)
+        if method == "q1":
+            resid = float(jnp.max(jnp.abs(q1(l, u, x, r))))
+        else:
+            resid = float(jnp.abs(q2(l, u, x, r)))
+            # Q2 contracts twice with r: widen by the extra ‖r‖² factor.
+            eps = eps * n
+    elif method == "q3":
+        resid = float(q3(l, u, x))
+    elif method == "q3_literal":
+        resid = float(q3_paper_literal(l, u, x))
+    else:
+        raise ValueError(f"unknown authentication method {method!r}")
+    return bool(resid <= eps), resid
+
+
+def verification_flops(n: int, method: str) -> int:
+    """Cost models backing benchmarks/ (paper Table I's Authenticate column)."""
+    if method == "q1":
+        return 3 * 2 * n * n  # three mat-vec products
+    if method == "q2":
+        return 3 * 2 * n * n + 2 * 2 * n  # three mat-vec + two dot products
+    if method in ("q3", "q3_literal"):
+        return 2 * n * (n + 1) // 2 + n  # Σ_i 2i muls/adds + n subtractions
+    raise ValueError(method)

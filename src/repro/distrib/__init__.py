@@ -1,0 +1,1 @@
+"""Distributed runtime: SPDC shard_map pipeline + LM sharding rules."""

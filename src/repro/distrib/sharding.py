@@ -1,0 +1,138 @@
+"""Sharding rules: logical axis names → mesh PartitionSpecs.
+
+Models are written against *logical* axis names; a ShardingRules object
+resolves them to the active mesh's physical axes. With no active rules
+(smoke tests, single device) every constraint is a no-op and params are
+unsharded.
+
+Logical names:
+  "batch"   → the data-parallel axes (("pod","data") multi-pod, ("data",)
+              single-pod, () on one device)
+  "model"   → the tensor-parallel axis
+  "seq"     → sequence sharding of the residual stream (mapped to "model";
+              Ulysses-style — attention reshards seq→heads via all-to-all,
+              inserted by the SPMD partitioner)
+  None      → replicated
+
+Fallback policy (DESIGN.md §5): head-sharded attention when
+num_heads % model_size == 0, else sequence-parallel attention (Q sharded on
+seq, KV gathered — exact for the MQA/GQA archs that hit this: gemma-2b
+8 heads, gemma3 4, llama4 40 on a 16-way model axis).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from dataclasses import dataclass, field
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    mesh: jax.sharding.Mesh | None = None
+    batch_axes: tuple[str, ...] = ()
+    model_axis: str | None = None
+    fsdp_axes: tuple[str, ...] = ()  # param-only second axis (ZeRO-3 style)
+    # resolved per-config at step-build time:
+    shard_heads: bool = True  # False => sequence-parallel attention
+    shard_kv: bool = False    # kv heads sharded (only when divisible)
+    shard_seq: bool = True    # residual-stream sequence sharding
+
+    @property
+    def model_size(self) -> int:
+        if self.mesh is None or self.model_axis is None:
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+    def resolve(self, *names) -> P:
+        """Map logical names to a PartitionSpec under these rules."""
+        out = []
+        for nm in names:
+            if nm == "batch":
+                out.append(self.batch_axes if self.batch_axes else None)
+            elif nm == "model":
+                out.append(self.model_axis)
+            elif nm == "seq":
+                out.append(self.model_axis if self.shard_seq else None)
+            elif nm == "heads":
+                out.append(self.model_axis if self.shard_heads else None)
+            elif nm == "kv_heads":
+                out.append(self.model_axis if self.shard_kv else None)
+            elif nm == "fsdp":
+                out.append(self.fsdp_axes if self.fsdp_axes else None)
+            elif nm == "qseq":
+                # sequence-parallel attention fallback axis
+                out.append(None if self.shard_heads else self.model_axis)
+            elif nm is None:
+                out.append(None)
+            else:
+                raise ValueError(f"unknown logical axis {nm!r}")
+        return P(*out)
+
+    def sharding(self, *names) -> NamedSharding | None:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.resolve(*names))
+
+
+_rules: contextvars.ContextVar[ShardingRules | None] = contextvars.ContextVar(
+    "sharding_rules", default=None
+)
+
+
+def current_rules() -> ShardingRules | None:
+    return _rules.get()
+
+
+@contextlib.contextmanager
+def use_rules(rules: ShardingRules | None):
+    tok = _rules.set(rules)
+    try:
+        yield rules
+    finally:
+        _rules.reset(tok)
+
+
+def make_rules(
+    mesh: jax.sharding.Mesh | None,
+    *,
+    num_heads: int | None = None,
+    num_kv_heads: int | None = None,
+    shard_seq: bool = True,
+    use_fsdp: bool = True,
+) -> ShardingRules:
+    """Build rules from a mesh with axes ⊆ {pod, data, model, servers}."""
+    if mesh is None:
+        return ShardingRules()
+    names = mesh.axis_names
+    batch = tuple(a for a in ("pod", "data") if a in names)
+    model = "model" if "model" in names else None
+    msize = mesh.shape[model] if model else 1
+    shard_heads = True
+    if num_heads is not None and model and num_heads % msize != 0:
+        shard_heads = False
+    shard_kv = bool(
+        shard_heads and num_kv_heads and model and num_kv_heads % msize == 0
+    )
+    # FSDP/ZeRO over all data-parallel axes, pod included: at ≥340B params,
+    # sharding state across pods (ZeRO over DCN — gather weights once per
+    # step, standard practice) is the difference between fitting 512×16 GB
+    # and not. Weight gathers inside a pod ride the ICI.
+    fsdp = tuple(a for a in ("pod", "data") if a in names) if use_fsdp else ()
+    return ShardingRules(
+        mesh=mesh, batch_axes=batch, model_axis=model, fsdp_axes=fsdp,
+        shard_heads=shard_heads, shard_kv=shard_kv, shard_seq=shard_seq,
+    )
+
+
+def constrain(x, *names):
+    """with_sharding_constraint against the active rules (no-op if none)."""
+    rules = current_rules()
+    if rules is None or rules.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, rules.resolve(*names))
+    )

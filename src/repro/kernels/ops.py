@@ -1,0 +1,52 @@
+"""Jit'd public wrappers for every Pallas kernel (the API the rest of the
+framework calls). Each has an `interpret` flag: True executes the kernel
+body on CPU (this container), False targets the TPU Mosaic pipeline.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .ced import ced as _ced
+from .flash_attn import flash_attention as _flash
+from .gemm import schur_update as _schur
+from .lu_panel import lu_panel_compact as _lu_panel_compact
+from .trsm import trsm_lower as _trsm_lower
+from .trsm import trsm_upper_right as _trsm_upper_right
+
+
+def ced(m, v, k, *, mode="ewd", block=128, interpret=True):
+    """Fused CED cipher: rot90_cw^k(EWO(m, v))."""
+    return _ced(m, v, k, mode=mode, block=block, interpret=interpret)
+
+
+def lu_panel(x, *, interpret=True):
+    """Panel LU -> (L unit-lower, U upper)."""
+    compact = _lu_panel_compact(x, interpret=interpret)
+    n = x.shape[0]
+    l = jnp.tril(compact, -1) + jnp.eye(n, dtype=x.dtype)
+    u = jnp.triu(compact)
+    return l, u
+
+
+def trsm_lower(l, b, *, interpret=True):
+    """X = L^{-1} B (L unit lower)."""
+    return _trsm_lower(l, b, interpret=interpret)
+
+
+def trsm_upper_right(u, b, *, interpret=True):
+    """Z = B U^{-1} (U upper)."""
+    return _trsm_upper_right(u, b, interpret=interpret)
+
+
+def schur_update(c, a, b, *, interpret=True, **tiles):
+    """C - A @ B."""
+    return _schur(c, a, b, interpret=interpret, **tiles)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
+                    bq=128, bk=128, interpret=True):
+    """Blockwise online-softmax attention (GQA-aware)."""
+    return _flash(
+        q, k, v, causal=causal, window=window, scale=scale,
+        bq=bq, bk=bk, interpret=interpret,
+    )

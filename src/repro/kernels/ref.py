@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel. These define correctness."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ced_ref(m: jnp.ndarray, v: jnp.ndarray, k: int, mode: str = "ewd") -> jnp.ndarray:
+    """Fused CED cipher oracle: row-blind by v then rotate k cw quarter-turns."""
+    v = v.reshape(-1, 1).astype(m.dtype)
+    scaled = m / v if mode == "ewd" else m * v
+    return jnp.rot90(scaled, k=-(k % 4), axes=(0, 1))
+
+
+def lu_panel_ref(a: jnp.ndarray) -> jnp.ndarray:
+    """Compact LU (strict-lower L multipliers + upper U in one matrix)."""
+    from repro.core.lu import lu_unblocked
+
+    l, u = lu_unblocked(a)
+    return jnp.tril(l, -1) + u
+
+
+def trsm_lower_ref(l: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """X = L^{-1} B with L unit lower triangular."""
+    return jax.scipy.linalg.solve_triangular(l, b, lower=True, unit_diagonal=True)
+
+
+def trsm_upper_right_ref(u: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Z = B U^{-1} with U upper triangular (non-unit diagonal)."""
+    return jax.scipy.linalg.solve_triangular(u.T, b.T, lower=True).T
+
+
+def schur_update_ref(c: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """C − A @ B (the Schur-complement GEMM)."""
+    return c - a @ b
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Standard softmax attention oracle with GQA head-grouping.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D); Hq % Hkv == 0.
+    window: sliding-window width (keys within [i-window+1, i]).
+    """
+    bq, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    kk = jnp.repeat(k, g, axis=1)
+    vv = jnp.repeat(v, g, axis=1)
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kk).astype(jnp.float32) * scale
+    sk = k.shape[2]
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)  # right-aligned (decode-friendly)
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), vv)

@@ -1,0 +1,156 @@
+"""Roofline analysis from compiled artifacts (no hardware required).
+
+Three terms per (arch × shape × mesh), all in seconds (DESIGN.md §6):
+
+    compute    = HLO_flops_per_device / PEAK_FLOPS
+    memory     = HLO_bytes_per_device / HBM_BW
+    collective = Σ per-class effective bytes / (ICI_LINKS_USED · LINK_BW)
+
+HLO flops/bytes come from compiled.cost_analysis() (the partitioned
+per-device module). Collective bytes are parsed from the post-SPMD HLO text:
+we take each collective op's result-shape bytes and apply a wire-traffic
+multiplier (ring all-reduce moves ≈ 2× the buffer; all-gather's result
+already counts the gathered size; reduce-scatter moves ≈ its input ≈
+result × group). collective-permute is 1× (neighbor hop).
+
+MODEL_FLOPS = 6·N·tokens for training (2 fwd + 4 bwd), 2·N·tokens for
+inference, N = active params. The "useful-compute ratio" MODEL_FLOPS /
+(HLO_flops·chips) exposes remat/redundancy waste; the roofline fraction
+ideal_compute_time / max(term) is the score §Perf reports.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass, field
+
+import numpy as np
+
+PEAK_FLOPS = 197e12  # bf16 / chip (TPU v5e)
+HBM_BW = 819e9  # B/s per chip
+LINK_BW = 50e9  # B/s per ICI link
+ICI_LINKS_USED = 2  # effective links for ring collectives on a 2D torus
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"(\w[\w\d.\-]*)\s*=\s*(?:\()?([a-z0-9]+)\[([\d,]*)\][^=]*?"
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+
+_WIRE_MULT = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,  # applied to result bytes × group ≈ input bytes
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+@dataclass
+class CollectiveStats:
+    counts: dict = field(default_factory=dict)
+    result_bytes: dict = field(default_factory=dict)
+    wire_bytes: dict = field(default_factory=dict)
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return float(sum(self.wire_bytes.values()))
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum collective op bytes from post-SPMD HLO. Ignores -done ops (the
+    -start carries the shape) and duplicate tuple elements conservatively."""
+    stats = CollectiveStats()
+    for m in _COLL_RE.finditer(hlo_text):
+        _, dtype, dims, op = m.groups()
+        if dtype not in _DTYPE_BYTES:
+            continue
+        size = 1
+        if dims:
+            for d in dims.split(","):
+                size *= int(d)
+        nbytes = size * _DTYPE_BYTES[dtype]
+        stats.counts[op] = stats.counts.get(op, 0) + 1
+        stats.result_bytes[op] = stats.result_bytes.get(op, 0) + nbytes
+        stats.wire_bytes[op] = (
+            stats.wire_bytes.get(op, 0) + nbytes * _WIRE_MULT[op]
+        )
+    return stats
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_wire_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float
+    ideal_s: float
+    roofline_fraction: float
+    collectives: dict
+    memory_stats: dict
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def analyze(
+    *, arch: str, shape: str, mesh_name: str, chips: int,
+    cost: dict, hlo_text: str, memory_stats: dict,
+    active_params: float, tokens: float, training: bool,
+    hlo_cost=None,
+) -> Roofline:
+    """hlo_cost: a launch.hlo_cost.Cost with trip-count-corrected numbers
+    (preferred); `cost` keeps XLA's raw cost_analysis for cross-reference."""
+    if hlo_cost is not None:
+        flops = float(hlo_cost.flops)
+        nbytes = float(hlo_cost.hbm_bytes)
+        coll_wire = float(hlo_cost.total_coll_wire)
+        coll_detail = {
+            "counts": hlo_cost.coll_counts,
+            "result_bytes": hlo_cost.coll_bytes,
+            "wire_bytes": hlo_cost.coll_wire,
+        }
+    else:
+        flops = float(cost.get("flops", 0.0))
+        nbytes = float(cost.get("bytes accessed", 0.0))
+        c = parse_collectives(hlo_text)
+        coll_wire = c.total_wire_bytes
+        coll_detail = {"counts": c.counts, "result_bytes": c.result_bytes,
+                       "wire_bytes": c.wire_bytes}
+    compute_s = flops / PEAK_FLOPS
+    memory_s = nbytes / HBM_BW
+    collective_s = coll_wire / (ICI_LINKS_USED * LINK_BW)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mult = 6.0 if training else 2.0
+    model_flops = mult * active_params * tokens
+    hlo_total = flops * chips
+    useful = model_flops / hlo_total if hlo_total else 0.0
+    ideal_s = model_flops / (chips * PEAK_FLOPS)
+    bound_s = max(terms.values())
+    fraction = ideal_s / bound_s if bound_s > 0 else 0.0
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_device=flops, bytes_per_device=nbytes,
+        collective_wire_bytes=coll_wire,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops=model_flops, useful_ratio=useful,
+        ideal_s=ideal_s, roofline_fraction=fraction,
+        collectives=coll_detail,
+        memory_stats=memory_stats,
+    )

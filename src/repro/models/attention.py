@@ -1,0 +1,257 @@
+"""Attention: GQA/MQA, full (blockwise online-softmax), local
+(sliding-window / chunked, exact 2-chunk formulation), and decode-over-cache.
+
+Three execution paths, chosen by layer kind and phase:
+
+  * full train/prefill — lax.scan over KV blocks with online softmax
+    (flash-attention at the JAX level; the Pallas kernel in
+    kernels/flash_attn.py is the TPU-target twin, validated vs the same
+    oracle). O(S·block) memory instead of O(S²).
+  * local train/prefill — seq reshaped to (chunks, W); each q-chunk attends
+    to [previous ‖ current] chunk. Exact for sliding windows ≤ W (a token
+    looks back < W ⇒ within the two chunks) and for llama4-style chunked
+    attention (current chunk only). O(S·W) compute — this is what makes
+    gemma3/llama4 long-context shapes sub-quadratic.
+  * decode — single-token einsum over the (possibly ring-buffered) cache.
+
+GQA: K/V are stored with HK heads and broadcast to H = HK·g query heads by
+jnp.repeat at use; under head sharding the repeat of a replicated KV tensor
+partitions to a local slice (no collective, no HBM copy of the full tensor).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distrib.sharding import constrain
+from .common import Initializer, apply_mrope, apply_rope
+
+F32 = jnp.float32
+NEG = jnp.asarray(-1e30, F32)
+
+
+def init_attention(ini: Initializer, cfg) -> dict:
+    d, h, hk, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    std_o = 0.02 / (2 * cfg.num_layers) ** 0.5
+    return {
+        "wq": ini.normal((d, h, dh), ("fsdp", "heads", None)),
+        "wk": ini.normal((d, hk, dh), ("fsdp", "kv_heads", None)),
+        "wv": ini.normal((d, hk, dh), ("fsdp", "kv_heads", None)),
+        "wo": ini.normal((h, dh, d), ("heads", None, "fsdp"), std=std_o),
+    }
+
+
+def _mask(qpos, kpos, *, causal: bool, window: int | None, chunk: int | None):
+    """qpos: (..., S) or (S,); kpos: (T,) — broadcast to (..., S, T)."""
+    q = qpos[..., :, None]
+    k = kpos[..., None, :]
+    m = k >= 0  # ring-buffer slots not yet written carry pos = -1
+    if causal:
+        m &= k <= q
+    if window is not None:
+        m &= k > q - window
+    if chunk is not None:
+        m &= (k // chunk) == (q // chunk)
+    return m
+
+
+def _sdpa(q, k, v, qpos, kpos, *, causal, window, chunk, scale):
+    """Direct attention on (B,S,H,D)×(B,T,H,D) with position-based mask."""
+    s = jnp.einsum("bshd,bthd->bhst", q, k, preferred_element_type=F32) * scale
+    m = _mask(qpos[:, None], kpos, causal=causal, window=window, chunk=chunk)
+    s = jnp.where(m[:, :, None] if m.ndim == 3 else m, s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bthd->bshd", p.astype(v.dtype), v)
+
+
+def _blockwise(q, k, v, qpos, kpos, *, causal, window, chunk, scale, block,
+               probs_bf16=False):
+    """Online-softmax scan over KV blocks. q:(B,S,H,D), k/v:(B,T,H,D)."""
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    if t <= block:
+        return _sdpa(q, k, v, qpos, kpos, causal=causal, window=window,
+                     chunk=chunk, scale=scale)
+    nb = -(-t // block)
+    pad = nb * block - t
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, (0, pad), constant_values=-1)
+    kb = jnp.moveaxis(k.reshape(b, nb, block, h, d), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nb, block, h, d), 1, 0)
+    pb = kpos.reshape(nb, block)
+
+    def body(carry, blk):
+        m_run, l_run, acc = carry
+        kblk, vblk, kp = blk
+        st = jnp.einsum("bshd,bthd->bhst", q, kblk, preferred_element_type=F32) * scale
+        msk = _mask(qpos[:, None], kp, causal=causal, window=window, chunk=chunk)
+        st = jnp.where(msk[:, :, None] if msk.ndim == 3 else msk, st, NEG)
+        m_new = jnp.maximum(m_run, jnp.max(st, axis=-1))
+        p = jnp.exp(st - m_new[..., None])
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + jnp.sum(p, axis=-1)
+        # §Perf lever: bf16 probabilities halve the PV-matmul input traffic
+        # and the bwd-saved probability stacks (exactly what a flash kernel
+        # keeps in VMEM); accumulation stays f32.
+        pv = p.astype(jnp.bfloat16) if probs_bf16 else p
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhst,bthd->bhsd", pv, vblk, preferred_element_type=F32
+        )
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, h, s), -jnp.inf, F32)
+    l0 = jnp.zeros((b, h, s), F32)
+    a0 = jnp.zeros((b, h, s, d), F32)
+    (m_f, l_f, acc), _ = lax.scan(body, (m0, l0, a0), (kb, vb, pb))
+    l_f = jnp.where(l_f == 0.0, 1.0, l_f)
+    return jnp.moveaxis(acc / l_f[..., None], 1, 2).astype(q.dtype)
+
+
+def _local(q, k, v, qpos, *, kind, window, scale):
+    """Exact local attention: q-chunk attends [prev ‖ cur] chunk.
+
+    kind = "sliding" (look back `window`, two chunks of size `window`) or
+    "chunked" (llama4: attend within the current `window`-sized chunk only).
+    """
+    b, s, h, d = q.shape
+    w = window
+    pad = (-s) % w
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        qpos = jnp.pad(qpos, ((0, 0), (0, pad)), constant_values=-(10**9))
+    nc = q.shape[1] // w
+    qc = q.reshape(b, nc, w, h, d)
+    kc = k.reshape(b, nc, w, h, d)
+    vc = v.reshape(b, nc, w, h, d)
+    pc = qpos.reshape(b, nc, w)
+    if kind == "sliding":
+        prev = lambda x: jnp.pad(x[:, :-1], ((0, 0), (1, 0)) + ((0, 0),) * (x.ndim - 2),
+                                 constant_values=0)
+        kc2 = jnp.concatenate([prev(kc), kc], axis=2)  # (b, nc, 2w, h, d)
+        vc2 = jnp.concatenate([prev(vc), vc], axis=2)
+        kp2 = jnp.concatenate(
+            [jnp.pad(pc[:, :-1], ((0, 0), (1, 0), (0, 0)), constant_values=-1), pc],
+            axis=2,
+        )
+    else:  # chunked: current chunk only
+        kc2, vc2, kp2 = kc, vc, pc
+    st = jnp.einsum("bcqhd,bckhd->bchqk", qc, kc2, preferred_element_type=F32) * scale
+    qp = pc[..., :, None]
+    kp = kp2[..., None, :]
+    msk = (kp >= 0) & (kp <= qp)
+    if kind == "sliding":
+        msk &= kp > qp - w
+    st = jnp.where(msk[:, :, None], st, NEG)
+    p = jax.nn.softmax(st, axis=-1)
+    out = jnp.einsum("bchqk,bckhd->bcqhd", p.astype(v.dtype), vc2)
+    out = out.reshape(b, nc * w, h, d)
+    return out[:, :s] if pad else out
+
+
+def attention(
+    p: dict,
+    x: jnp.ndarray,
+    cfg,
+    positions: jnp.ndarray,
+    *,
+    kind: str = "full",
+    cache: dict | None = None,
+    block: int = 1024,
+) -> tuple[jnp.ndarray, dict | None]:
+    """x: (B, S, d_model). Returns (out, updated_cache).
+
+    Train/prefill: cache is None (prefill cache construction happens in
+    serve.steps). Decode: cache holds k/v/pos ring buffers and S == 1.
+    """
+    b, s, _ = x.shape
+    h, hk, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // hk
+    scale = dh**-0.5
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = constrain(q, "batch", "qseq", "heads", None)
+    k = constrain(k, "batch", "qseq", "kv_heads", None)
+    v = constrain(v, "batch", "qseq", "kv_heads", None)
+
+    rope_pos = positions if positions.ndim > 2 else positions
+    if cfg.rope_type == "mrope":
+        q = apply_mrope(q, rope_pos, cfg.rope_theta)
+        k = apply_mrope(k, rope_pos, cfg.rope_theta)
+        pos1d = positions[..., 0]
+    elif cfg.rope_type == "rope":
+        q = apply_rope(q, rope_pos, cfg.rope_theta)
+        k = apply_rope(k, rope_pos, cfg.rope_theta)
+        pos1d = positions
+    else:
+        pos1d = positions if positions.ndim == 2 else positions[..., 0]
+
+    new_cache = None
+    if cache is not None:
+        # decode: attention runs over the (read-only) cache plus the incoming
+        # token as a second softmax block. The cache WRITE is not done here —
+        # this layer emits a {k,v,pos} delta and serve.kvcache merges all
+        # layers' deltas into the stacked buffers with ONE batched
+        # dynamic-update-slice after the period scan. Updating caches inside
+        # the scan lets XLA commute score-converts into the update chain and
+        # materialize f32 copies of the entire stacked cache (observed:
+        # +27 GiB on nemotron decode_32k).
+        new_cache = {
+            "k_new": k.astype(cache["k"].dtype),
+            "v_new": v.astype(cache["v"].dtype),
+            "pos_new": pos1d[0, :1].astype(cache["pos"].dtype),
+        }
+        # SEQ-sharded scores, matching the cache layout (flash-decoding:
+        # per-shard partial softmax; re-sharding the cache to heads triggers
+        # involuntary full rematerialization)
+        kk = constrain(jnp.repeat(cache["k"], g, axis=2),
+                       "batch", "model", None, None)
+        vv = constrain(jnp.repeat(cache["v"], g, axis=2),
+                       "batch", "model", None, None)
+        window = cfg.window if kind == "sliding" else None
+        chunk = cfg.window if kind == "chunked" else None
+        s_old = jnp.einsum("bshd,bthd->bhst", q, kk,
+                           preferred_element_type=F32) * scale  # (B,H,1,L)
+        msk = _mask(pos1d[:, None], cache["pos"], causal=cfg.causal,
+                    window=window, chunk=chunk)
+        s_old = jnp.where(msk[:, :, None] if msk.ndim == 3 else msk, s_old, NEG)
+        # the slot just overwritten still holds its OLD pos in cache["pos"]:
+        # full caches have pos=-1 there (masked); ring caches hold pos-cl,
+        # which fails the window/chunk test (masked). The new token is the
+        # second block:
+        kq = jnp.repeat(k, g, axis=2)
+        s_new = jnp.einsum("bshd,bthd->bhst", q, kq,
+                           preferred_element_type=F32) * scale  # (B,H,1,1)
+        m = jnp.maximum(jnp.max(s_old, axis=-1, keepdims=True), s_new)
+        p_old = jnp.exp(s_old - m)
+        p_new = jnp.exp(s_new - m)
+        denom = jnp.sum(p_old, axis=-1, keepdims=True) + p_new
+        out_old = jnp.einsum("bhst,bthd->bshd", p_old.astype(vv.dtype), vv)
+        out_new = jnp.einsum(
+            "bhst,bthd->bshd", p_new.astype(v.dtype), jnp.repeat(v, g, axis=2)
+        )
+        out = (out_old + out_new) / jnp.moveaxis(denom, 1, 2).astype(out_old.dtype)
+    else:
+        kk = jnp.repeat(k, g, axis=2)
+        vv = jnp.repeat(v, g, axis=2)
+        kk = constrain(kk, "batch", "qseq", "heads", None)
+        vv = constrain(vv, "batch", "qseq", "heads", None)
+        if kind in ("sliding", "chunked") and cfg.window and 1 < cfg.window < s:
+            out = _local(q, kk, vv, pos1d, kind=kind, window=cfg.window,
+                         scale=scale)
+        else:
+            kpos = pos1d[0]  # assumes aligned positions across batch
+            out = _blockwise(q, kk, vv, pos1d, kpos, causal=cfg.causal,
+                             window=None, chunk=None, scale=scale,
+                             block=cfg.attn_block,
+                             probs_bf16=cfg.attn_probs_bf16)
+    out = constrain(out, "batch", "qseq", "heads", None)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    y = constrain(y, "batch", "seq", None)
+    return y, new_cache

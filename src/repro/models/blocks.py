@@ -1,0 +1,158 @@
+"""Layer composition: pre-norm residual blocks and the period structure.
+
+Heterogeneous stacks (jamba's 1-attn:7-mamba, gemma3's 5-local:1-global,
+llama4's 3-chunked:1-global) are expressed as a *pattern* — a tuple of
+(mixer, ffn) kinds forming one period. The model scans over periods
+(params stacked on a leading period axis) so HLO size is O(pattern), not
+O(num_layers); layers beyond the last full period ("remainder") are
+applied unrolled. This keeps 96-layer × 512-device compiles tractable and
+matches how these models are actually built (repeating superblocks).
+
+mixer ∈ {"attn_full", "attn_sliding", "attn_chunked", "ssm"}
+ffn   ∈ {"mlp", "moe", "none"}
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention, init_attention
+from .common import Initializer, apply_norm, init_norm
+from .mlp import apply_mlp, init_mlp
+from .moe import apply_moe, init_moe
+from .ssm import apply_ssm, init_ssm
+
+
+def init_layer(ini: Initializer, cfg, mixer: str, ffn: str) -> dict:
+    p = {"mixer_norm": init_norm(ini, cfg.d_model, cfg.norm_type)}
+    if mixer == "ssm":
+        p["mixer"] = init_ssm(ini, cfg)
+    else:
+        p["mixer"] = init_attention(ini, cfg)
+    if ffn != "none":
+        p["ffn_norm"] = init_norm(ini, cfg.d_model, cfg.norm_type)
+        p["ffn"] = init_moe(ini, cfg) if ffn == "moe" else init_mlp(ini, cfg)
+    return p
+
+
+def apply_layer(
+    p: dict,
+    x: jnp.ndarray,
+    cfg,
+    mixer: str,
+    ffn: str,
+    positions: jnp.ndarray,
+    cache: dict | None = None,
+) -> tuple[jnp.ndarray, dict | None]:
+    h = apply_norm(p["mixer_norm"], x, cfg.norm_type)
+    if mixer == "ssm":
+        mx, new_cache = apply_ssm(p["mixer"], h, cfg, cache=cache)
+    else:
+        kind = {"attn_full": "full", "attn_sliding": "sliding",
+                "attn_chunked": "chunked"}[mixer]
+        mx, new_cache = attention(p["mixer"], h, cfg, positions, kind=kind,
+                                  cache=cache)
+    x = x + mx
+    if ffn != "none":
+        h = apply_norm(p["ffn_norm"], x, cfg.norm_type)
+        f = apply_moe(p["ffn"], h, cfg) if ffn == "moe" else apply_mlp(p["ffn"], h, cfg)
+        x = x + f
+    return x, new_cache
+
+
+def split_layers(cfg) -> tuple[int, int]:
+    """(num_full_periods, num_remainder_layers)."""
+    plen = len(cfg.pattern)
+    return cfg.num_layers // plen, cfg.num_layers % plen
+
+
+def init_stack(ini: Initializer, cfg) -> dict:
+    """Stacked per-period params + unrolled remainder params."""
+    from .common import Px, is_px
+
+    n_periods, rem = split_layers(cfg)
+
+    def one_period():
+        return {
+            f"l{i}": init_layer(ini, cfg, mixer, ffn)
+            for i, (mixer, ffn) in enumerate(cfg.pattern)
+        }
+
+    periods = [one_period() for _ in range(n_periods)]
+    stacked = jax.tree.map(
+        lambda *ps: Px(jnp.stack([p.value for p in ps]), (None,) + ps[0].spec),
+        *periods,
+        is_leaf=is_px,
+    )
+    out = {"periods": stacked}
+    if rem:
+        out["remainder"] = {
+            f"l{i}": init_layer(ini, cfg, *cfg.pattern[i]) for i in range(rem)
+        }
+    return out
+
+
+def apply_stack(
+    params: dict,
+    x: jnp.ndarray,
+    cfg,
+    positions: jnp.ndarray,
+    caches: dict | None = None,
+    *,
+    remat_policy: str = "nothing",
+) -> tuple[jnp.ndarray, dict | None]:
+    """Scan over periods (+ unrolled remainder). caches mirror the params
+    structure ({"periods": stacked-per-period, "remainder": {...}})."""
+    n_periods, rem = split_layers(cfg)
+    decode = caches is not None
+
+    def period_body(x, inputs):
+        pp, pc = inputs
+        new_pc = {}
+        for i, (mixer, ffn) in enumerate(cfg.pattern):
+            x, nc = apply_layer(
+                pp[f"l{i}"], x, cfg, mixer, ffn, positions,
+                cache=None if pc is None else pc[f"l{i}"],
+            )
+            if nc is not None:
+                new_pc[f"l{i}"] = nc
+        return x, (new_pc if decode else None)
+
+    body = period_body
+    if not decode and remat_policy != "none":
+        policy = (
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            if remat_policy == "dots"
+            else jax.checkpoint_policies.nothing_saveable
+        )
+        body = jax.checkpoint(period_body, policy=policy)
+
+    if n_periods > 0:
+        pc = caches["periods"] if decode else None
+        xs = (params["periods"], pc) if decode else (params["periods"], None)
+        if decode:
+            x, new_caches = jax.lax.scan(body, x, xs)
+        else:
+            x, _ = jax.lax.scan(lambda c, pp: body(c, (pp, None)), x,
+                                params["periods"])
+            new_caches = None
+    else:
+        new_caches = None
+
+    new_rem = {}
+    if rem:
+        for i in range(rem):
+            mixer, ffn = cfg.pattern[i]
+            x, nc = apply_layer(
+                params["remainder"][f"l{i}"], x, cfg, mixer, ffn, positions,
+                cache=None if not decode else caches["remainder"][f"l{i}"],
+            )
+            if nc is not None:
+                new_rem[f"l{i}"] = nc
+
+    if decode:
+        out_caches = {"periods": new_caches}
+        if rem:
+            out_caches["remainder"] = new_rem
+        return x, out_caches
+    return x, None

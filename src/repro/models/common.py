@@ -1,0 +1,186 @@
+"""Shared model machinery: spec-carrying params, norms, RoPE variants.
+
+Params are built as trees of `Px(value, spec)` — every leaf carries its
+logical PartitionSpec from birth, so the init function *is* the sharding
+map (no drift between a params tree and a separate spec tree).
+`split_tree` peels them apart for jit in_shardings / checkpointing.
+Init can run under jax.eval_shape for allocation-free dry-runs.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distrib.sharding import constrain
+
+
+@jax.tree_util.register_pytree_node_class
+class Px:
+    """A param leaf carrying its logical PartitionSpec as pytree aux data —
+    transparent to tracing (eval_shape of a 340B init never sees the spec
+    strings), opaque to split_tree (is_leaf=is_px)."""
+
+    __slots__ = ("value", "spec")
+
+    def __init__(self, value: Any, spec: tuple):
+        self.value = value
+        self.spec = tuple(spec)
+
+    def tree_flatten(self):
+        return (self.value,), self.spec
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+    def __repr__(self):
+        shape = getattr(self.value, "shape", None)
+        return f"Px(shape={shape}, spec={self.spec})"
+
+
+def is_px(x) -> bool:
+    return isinstance(x, Px)
+
+
+def split_tree(tree):
+    """(params, logical_specs) from a Px tree."""
+    params = jax.tree.map(lambda p: p.value, tree, is_leaf=is_px)
+    specs = jax.tree.map(lambda p: p.spec, tree, is_leaf=is_px)
+    return params, specs
+
+
+class Initializer:
+    """Deterministic per-path param factory (splittable like a PRNG key)."""
+
+    def __init__(self, key: jax.Array, dtype=jnp.bfloat16):
+        self.key = key
+        self.dtype = dtype
+        self._n = 0
+
+    def _next(self):
+        self._n += 1
+        return jax.random.fold_in(self.key, self._n)
+
+    def normal(self, shape, spec, *, std=0.02, dtype=None) -> Px:
+        d = dtype or self.dtype
+        v = (jax.random.normal(self._next(), shape, jnp.float32) * std).astype(d)
+        return Px(v, spec)
+
+    def zeros(self, shape, spec, *, dtype=None) -> Px:
+        return Px(jnp.zeros(shape, dtype or self.dtype), spec)
+
+    def ones(self, shape, spec, *, dtype=None) -> Px:
+        return Px(jnp.ones(shape, dtype or self.dtype), spec)
+
+    def value(self, v, spec) -> Px:
+        return Px(v, spec)
+
+
+# ---------------------------------------------------------------------------
+# norms (computed in f32, cast back)
+# ---------------------------------------------------------------------------
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + gamma.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layer_norm(
+    x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray, eps: float = 1e-6
+) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * gamma.astype(jnp.float32) + beta.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def init_norm(ini: Initializer, d: int, kind: str = "rmsnorm"):
+    if kind == "rmsnorm":
+        return {"gamma": ini.zeros((d,), (None,))}
+    return {"gamma": ini.ones((d,), (None,)), "beta": ini.zeros((d,), (None,))}
+
+
+def apply_norm(p, x, kind: str = "rmsnorm"):
+    if kind == "rmsnorm":
+        return rms_norm(x, p["gamma"])
+    return layer_norm(x, p["gamma"], p["beta"])
+
+
+# ---------------------------------------------------------------------------
+# RoPE (half-split convention) + M-RoPE (Qwen2-VL §3.1)
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(
+    x: jnp.ndarray, positions: jnp.ndarray, theta: float = 1e4
+) -> jnp.ndarray:
+    """x: (B, S, H, D); positions: (B, S) int."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, d/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope_sections(head_dim: int) -> tuple[int, int, int]:
+    """Qwen2-VL's (temporal, h, w) = (16, 24, 24) of the 64 freq slots at
+    head_dim 128, generalized proportionally (1/4, 3/8, 3/8)."""
+    half = head_dim // 2
+    t = half // 4
+    h = (half - t) // 2
+    return (t, h, half - t - h)
+
+
+def apply_mrope(
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    theta: float = 1e4,
+    sections: tuple[int, int, int] | None = None,
+) -> jnp.ndarray:
+    """M-RoPE: head_dim/2 freq slots split into (temporal, h, w) sections,
+    each rotated by its own position stream. positions: (B, S, 3) — for the
+    text-only backbone all three streams equal the text position (exactly
+    Qwen2-VL's behavior on text tokens).
+    """
+    d = x.shape[-1]
+    if sections is None:
+        sections = mrope_sections(d)
+    assert sum(sections) == d // 2, (sections, d)
+    freqs = rope_freqs(d, theta)  # (d/2,)
+    sec_id = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections), total_repeat_length=d // 2
+    )  # (d/2,) which position stream each freq slot uses
+    pos = positions.astype(jnp.float32)  # (B, S, 3)
+    pos_per_slot = jnp.take(pos, sec_id, axis=-1)  # (B, S, d/2)
+    ang = pos_per_slot * freqs  # (B, S, d/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def positions_for(cfg, batch: int, seq: int, offset: int | jnp.ndarray = 0):
+    """Position stream(s) for a text segment starting at `offset`."""
+    pos = jnp.arange(seq)[None, :] + jnp.asarray(offset).reshape(-1, 1)
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if cfg.rope_type == "mrope":
+        return jnp.repeat(pos[..., None], 3, axis=-1)
+    return pos
+
+
+__all__ = [
+    "Px", "is_px", "split_tree", "Initializer",
+    "rms_norm", "layer_norm", "init_norm", "apply_norm",
+    "apply_rope", "apply_mrope", "positions_for", "constrain",
+]

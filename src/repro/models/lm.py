@@ -1,0 +1,134 @@
+"""Full model assembly: embeddings / stub frontends → period stack → norm →
+(chunked) logits + loss. Decoder-only LMs and the encoder-only audio arch
+share this file (cfg.causal distinguishes them).
+
+Vocab handling: the table is padded to a multiple of 128·model_size so the
+vocab axis always shards evenly; padded logit slots are masked to -inf
+before any softmax/CE so numerics are exact w.r.t. the true vocab.
+
+Cross-entropy is computed in seq-chunks (lax.scan) so the (B, S, V) logits
+tensor never materializes — at gemma3's 262k vocab that is the difference
+between a 2 GiB and a 130 MiB per-device transient (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distrib.sharding import constrain
+from .blocks import apply_stack, init_stack
+from .common import Initializer, apply_norm, init_norm, positions_for
+
+F32 = jnp.float32
+
+
+def padded_vocab(cfg, multiple: int = 2048) -> int:
+    v = cfg.vocab_size
+    return -(-v // multiple) * multiple
+
+
+def init_lm(cfg, key: jax.Array) -> dict:
+    """Px-tree of all model params (run under eval_shape for dry-runs)."""
+    ini = Initializer(key, dtype=cfg.param_dtype)
+    vp = padded_vocab(cfg)
+    params: dict = {}
+    if cfg.frontend is None:
+        params["embed"] = ini.normal((vp, cfg.d_model), ("model", "fsdp"))
+    else:
+        # stub frontend: inputs arrive as precomputed embeddings; a single
+        # linear adapter stands in for the patch/frame projection
+        params["frontend"] = {
+            "adapter": ini.normal((cfg.d_model, cfg.d_model), ("fsdp", None))
+        }
+    params["stack"] = init_stack(ini, cfg)
+    params["final_norm"] = init_norm(ini, cfg.d_model, cfg.norm_type)
+    params["lm_head"] = ini.normal((cfg.d_model, vp), ("fsdp", "model"))
+    return params
+
+
+def embed_inputs(params: dict, batch: dict, cfg) -> jnp.ndarray:
+    if cfg.frontend is None:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    else:
+        x = batch["embeds"].astype(cfg.dtype) @ params["frontend"]["adapter"]
+    return constrain(x.astype(cfg.dtype), "batch", "seq", None)
+
+
+def forward_hidden(
+    params: dict,
+    batch: dict,
+    cfg,
+    positions: jnp.ndarray | None = None,
+    caches: dict | None = None,
+    *,
+    remat_policy: str = "nothing",
+) -> tuple[jnp.ndarray, dict | None]:
+    x = embed_inputs(params, batch, cfg)
+    b, s = x.shape[:2]
+    if positions is None:
+        positions = positions_for(cfg, b, s)
+    x, cache_updates = apply_stack(
+        params["stack"], x, cfg, positions, caches, remat_policy=remat_policy
+    )
+    new_caches = None
+    if caches is not None:
+        # fold every layer's decode delta into the stacked cache buffers in
+        # one batched update (outside the scan — see serve/kvcache.py)
+        from repro.serve.kvcache import merge_cache_updates
+
+        new_caches = merge_cache_updates(caches, cache_updates)
+    x = apply_norm(params["final_norm"], x, cfg.norm_type)
+    return x, new_caches
+
+
+def _chunk_ce(hidden, labels, head, cfg, chunk: int):
+    """Chunked cross-entropy over seq. hidden: (B,S,D), labels: (B,S)."""
+    b, s, d = hidden.shape
+    vp = head.shape[1]
+    chunk = min(chunk, s)
+    while s % chunk != 0:
+        chunk //= 2
+    nc = s // chunk
+    hc = jnp.moveaxis(hidden.reshape(b, nc, chunk, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+    vocab_ok = jnp.arange(vp) < cfg.vocab_size
+
+    def body(acc, inp):
+        h, lab = inp
+        logits = (h @ head).astype(F32)
+        logits = jnp.where(vocab_ok, logits, -1e30)
+        logits = constrain(logits, "batch", None, "model")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        mask = (lab >= 0).astype(F32)
+        loss = jnp.sum((lse - gold) * mask)
+        return (acc[0] + loss, acc[1] + jnp.sum(mask)), None
+
+    (tot, cnt), _ = lax.scan(body, (jnp.zeros((), F32), jnp.zeros((), F32)),
+                             (hc, lc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def lm_loss(
+    params: dict, batch: dict, cfg, *, remat_policy: str = "nothing",
+    ce_chunk: int = 512,
+) -> jnp.ndarray:
+    """Mean next-token (decoder) or per-position (encoder) CE loss."""
+    hidden, _ = forward_hidden(params, batch, cfg, remat_policy=remat_policy)
+    labels = batch["labels"]
+    if cfg.causal:
+        # shift labels left, mask the last position (-1) — keeps S intact so
+        # the CE chunking divides evenly (4096, not 4095)
+        labels = jnp.concatenate(
+            [labels[:, 1:], jnp.full_like(labels[:, :1], -1)], axis=1
+        )
+    return _chunk_ce(hidden, labels, params["lm_head"], cfg, ce_chunk)
+
+
+def lm_logits_last(params: dict, hidden: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Logits for the last position only (decode path)."""
+    logits = (hidden[:, -1] @ params["lm_head"]).astype(F32)
+    vp = params["lm_head"].shape[1]
+    logits = jnp.where(jnp.arange(vp) < cfg.vocab_size, logits, -1e30)
+    return constrain(logits, "batch", "model")

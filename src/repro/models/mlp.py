@@ -1,0 +1,42 @@
+"""Feed-forward variants: SwiGLU / GeGLU (gated), squared-ReLU / GELU
+(non-gated). Column-parallel in → row-parallel out: w_in sharded on d_ff,
+w_out sharded on its d_ff input dim, so each block costs exactly one psum
+(inserted by the partitioner at the w_out contraction).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distrib.sharding import constrain
+from .common import Initializer
+
+GATED = {"swiglu": jax.nn.silu, "geglu": jax.nn.gelu}
+PLAIN = {"relu2": lambda x: jnp.square(jax.nn.relu(x)), "gelu": jax.nn.gelu}
+
+
+def init_mlp(ini: Initializer, cfg, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    std_o = 0.02 / (2 * cfg.num_layers) ** 0.5
+    if cfg.mlp_type in GATED:
+        return {
+            "w_gate": ini.normal((d, f), ("fsdp", "model")),
+            "w_up": ini.normal((d, f), ("fsdp", "model")),
+            "w_down": ini.normal((f, d), ("model", "fsdp"), std=std_o),
+        }
+    return {
+        "w_up": ini.normal((d, f), ("fsdp", "model")),
+        "w_down": ini.normal((f, d), ("model", "fsdp"), std=std_o),
+    }
+
+
+def apply_mlp(p: dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    if cfg.mlp_type in GATED:
+        act = GATED[cfg.mlp_type]
+        h = act(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        act = PLAIN[cfg.mlp_type]
+        h = act(x @ p["w_up"])
+    h = constrain(h, "batch", None, "model")
+    y = h @ p["w_down"]
+    return constrain(y, "batch", "seq", None)

@@ -1,0 +1,123 @@
+"""Mixture-of-Experts FFN with top-k routing.
+
+Two interchangeable implementations (cfg.moe_impl):
+
+  * "dense"    — every expert computes every token; router weights zero out
+                 the unused ones at combine. Simple, collective-free,
+                 O(E/k)× wasted FLOPs. The §Perf baseline.
+  * "dispatch" — capacity-bounded one-hot dispatch (MaxText-style expert
+                 parallelism): tokens are gathered into per-expert buffers
+                 via a dispatch einsum, experts are sharded over the model
+                 axis, outputs combined with routing weights. Compute is
+                 O(k·capacity_factor / E) of dense — the §Perf optimized
+                 path for the MoE archs.
+
+Router: softmax over expert logits, top-k, weights renormalized over the
+selected experts (Mixtral/Llama4 convention).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distrib.sharding import constrain
+from .common import Initializer
+
+ACT = {
+    "swiglu": jax.nn.silu,
+    "geglu": jax.nn.gelu,
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+    "gelu": jax.nn.gelu,
+}
+
+
+def init_moe(ini: Initializer, cfg) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    std_o = 0.02 / (2 * cfg.num_layers) ** 0.5
+    return {
+        "router": ini.normal((d, e), ("fsdp", None), dtype=jnp.float32),
+        "w_gate": ini.normal((e, d, f), ("model", "fsdp", None)),
+        "w_up": ini.normal((e, d, f), ("model", "fsdp", None)),
+        "w_down": ini.normal((e, f, d), ("model", "fsdp", None), std=std_o),
+    }
+
+
+def _routing(p, x, cfg):
+    """x: (T, d) flat tokens → (weights (T,k) f32, idx (T,k) int)."""
+    logits = x.astype(jnp.float32) @ p["router"]
+    k = cfg.experts_per_token
+    w, idx = jax.lax.top_k(jax.nn.softmax(logits, axis=-1), k)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    return w, idx
+
+
+def _expert_ffn(p, h, cfg):
+    """h: (E, C, d) per-expert token buffers → (E, C, d)."""
+    act = ACT[cfg.mlp_type]
+    gate = jnp.einsum("ecd,edf->ecf", h, p["w_gate"])
+    up = jnp.einsum("ecd,edf->ecf", h, p["w_up"])
+    out = act(gate) * up
+    return jnp.einsum("ecf,efd->ecd", out, p["w_down"])
+
+
+def apply_moe(p: dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    w, idx = _routing(p, xt, cfg)
+    e = cfg.num_experts
+
+    if cfg.moe_impl == "dense":
+        # all experts on all tokens; combine = Σ_k w_k · out[idx_k]
+        act = ACT[cfg.mlp_type]
+        gate = jnp.einsum("td,edf->etf", xt, p["w_gate"])
+        up = jnp.einsum("td,edf->etf", xt, p["w_up"])
+        out = jnp.einsum("etf,efd->etd", act(gate) * up, p["w_down"])  # (E,T,d)
+        onehot = jax.nn.one_hot(idx, e, dtype=w.dtype) * w[..., None]  # (T,k,E)
+        comb = jnp.einsum("tke,etd->td", onehot, out.astype(w.dtype))
+        y = comb.astype(x.dtype)
+    else:  # dispatch — token-grouped (see module docstring)
+        t = b * s
+        tg = min(cfg.moe_group, t)
+        while t % tg != 0:
+            tg //= 2
+        g = t // tg
+        cap = max(int(cfg.moe_capacity_factor * tg * cfg.experts_per_token / e), 1)
+        # per-group slot assignment: position of each (token, choice) within
+        # its expert's buffer, computed independently per group so the
+        # dispatch tensor is O(T·tg·k), not O(T²·k/E)
+        onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32).reshape(g, tg, -1, e)
+        pos_in_e = jnp.cumsum(onehot.reshape(g, -1, e), axis=1).reshape(
+            g, tg, -1, e
+        ) - 1
+        keep = (pos_in_e < cap) & (onehot > 0)
+        slot = jnp.where(keep, pos_in_e, cap)  # cap == overflow bucket
+        disp = jax.nn.one_hot(slot, cap + 1, dtype=x.dtype)[..., :cap]
+        disp = jnp.sum(disp * keep[..., None].astype(x.dtype), axis=2)  # (G,tg,E,cap)
+        gspec = "batch" if s > 1 else None  # groups follow batch sharding
+        disp = constrain(disp, gspec, None, "model", None)
+        xg = constrain(xt.reshape(g, tg, d), gspec, None, None)
+        h = jnp.einsum("gtec,gtd->gecd", disp, xg)  # (G, E, cap, d)
+        h = constrain(h, gspec, "model", None, None)
+        out = jnp.einsum(
+            "gecf,efd->gecd",
+            ACT[cfg.mlp_type](jnp.einsum("gecd,edf->gecf", h, p["w_gate"]))
+            * jnp.einsum("gecd,edf->gecf", h, p["w_up"]),
+            p["w_down"],
+        )
+        out = constrain(out, gspec, "model", None, None)
+        wk = jnp.einsum(
+            "gtke,gtk->gte",
+            jnp.asarray(onehot, w.dtype) * keep.astype(w.dtype),
+            w.reshape(g, tg, -1),
+        ).astype(x.dtype)
+        combine = constrain(disp * wk[..., None], gspec, None, "model", None)
+        y = jnp.einsum("gtec,gecd->gtd", combine, out)
+        y = constrain(y, gspec, None, None).reshape(t, d)
+    y = constrain(y.reshape(b, s, d), "batch", "seq", None)
+    return y
+
+
+def moe_active_params(cfg) -> int:
+    """Per-token active expert params (for MODEL_FLOPS accounting)."""
+    per_expert = 3 * cfg.d_model * cfg.d_ff
+    return cfg.experts_per_token * per_expert + cfg.d_model * cfg.num_experts

@@ -1,0 +1,184 @@
+"""Mamba2 / SSD (state-space duality) mixer — arXiv:2405.21060, adapted to
+TPU-idiomatic JAX: the chunked SSD algorithm is three einsum families
+(intra-chunk quadratic, chunk-state build, inter-chunk recurrence), all
+MXU-shaped, with a lax.scan only over the O(S/Q) chunk recurrence.
+
+Discretization: h_t = exp(dt_t·A) h_{t-1} + dt_t B_t x_t;  y_t = C_t h_t + D x_t.
+Heads are sharded over the model axis (H % model_size == 0 for both SSM
+archs); B/C are single-group (G=1) and replicated — they are O(N) per token.
+
+Decode is the O(1) recurrence — this is why mamba2/jamba run the 500k
+decode shape at constant cost per token (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distrib.sharding import constrain
+from .common import Initializer, rms_norm
+
+F32 = jnp.float32
+
+
+def init_ssm(ini: Initializer, cfg) -> dict:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    assert h * p == di, (h, p, di)
+    std_o = 0.02 / (2 * cfg.num_layers) ** 0.5
+    return {
+        "w_z": ini.normal((d, di), ("fsdp", "model")),
+        "w_x": ini.normal((d, di), ("fsdp", "model")),
+        "w_B": ini.normal((d, n), ("fsdp", None)),
+        "w_C": ini.normal((d, n), ("fsdp", None)),
+        "w_dt": ini.normal((d, h), ("fsdp", "model")),
+        "conv_x": ini.normal((4, di), (None, "model"), std=0.2),
+        "conv_B": ini.normal((4, n), (None, None), std=0.2),
+        "conv_C": ini.normal((4, n), (None, None), std=0.2),
+        "A_log": ini.zeros((h,), ("model",), dtype=F32),
+        "D": ini.ones((h,), ("model",), dtype=F32),
+        "dt_bias": ini.zeros((h,), ("model",), dtype=F32),
+        "norm_gamma": ini.zeros((di,), ("model",)),
+        "w_out": ini.normal((di, d), ("model", "fsdp"), std=std_o),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv, width K, as K shifted adds. x: (B,S,C), w: (K,C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    s = x.shape[1]
+    out = jnp.zeros_like(x, dtype=F32)
+    for i in range(k):
+        out = out + w[i].astype(F32) * xp[:, i : i + s].astype(F32)
+    return out.astype(x.dtype)
+
+
+def _ssd_chunked(xd, la, Bc, Cc, chunk: int):
+    """Chunked SSD. xd: (B,S,H,P) dt-scaled inputs; la: (B,S,H) log-decay;
+    Bc/Cc: (B,S,N). Returns y: (B,S,H,P) and final state (B,H,N,P)."""
+    b, s, h, p = xd.shape
+    n = Bc.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        xd = jnp.pad(xd, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        la = jnp.pad(la, ((0, 0), (0, pad), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+    nc = xd.shape[1] // q
+    xd = xd.reshape(b, nc, q, h, p)
+    la = la.reshape(b, nc, q, h).astype(F32)
+    Bc = Bc.reshape(b, nc, q, n)
+    Cc = Cc.reshape(b, nc, q, n)
+
+    cum = jnp.cumsum(la, axis=2)  # (b,nc,q,h)
+    # --- intra-chunk (quadratic within q) ---
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc, preferred_element_type=F32)
+    ii = jnp.arange(q)[:, None]
+    jj = jnp.arange(q)[None, :]
+    ldecay = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (b,nc,i,j,h)
+    w_ij = jnp.where(
+        (ii >= jj)[None, None, :, :, None],
+        jnp.exp(ldecay) * scores[..., None],
+        0.0,
+    )
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w_ij, xd.astype(F32))
+
+    # --- chunk states ---
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (b,nc,q,h)
+    st = jnp.einsum(
+        "bcjn,bcjh,bcjhp->bchnp", Bc.astype(F32), decay_end, xd.astype(F32)
+    )
+
+    # --- inter-chunk recurrence (scan over chunks) ---
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (b,nc,h)
+    Cs = jnp.moveaxis(Cc, 1, 0)
+    cums = jnp.moveaxis(cum, 1, 0)
+    sts = jnp.moveaxis(st, 1, 0)
+    cds = jnp.moveaxis(chunk_decay, 1, 0)
+
+    def body(hstate, inp):
+        c_c, cum_c, st_c, cd_c = inp
+        y = jnp.einsum(
+            "bin,bhnp,bih->bihp", c_c.astype(F32), hstate, jnp.exp(cum_c)
+        )
+        hstate = hstate * cd_c[:, :, None, None] + st_c
+        return hstate, y
+
+    h0 = jnp.zeros((b, h, n, p), F32)
+    hfin, y_inter = lax.scan(body, h0, (Cs, cums, sts, cds))
+    y_inter = jnp.moveaxis(y_inter, 0, 1)  # (b,nc,q,h,p)
+
+    y = (y_intra + y_inter).reshape(b, nc * q, h, p)
+    if pad:
+        y = y[:, :s]
+    return y.astype(xd.dtype), hfin
+
+
+def apply_ssm(
+    p: dict, x: jnp.ndarray, cfg, *, cache: dict | None = None
+) -> tuple[jnp.ndarray, dict | None]:
+    """x: (B, S, d_model). cache (decode): {"state": (B,H,N,P),
+    "conv": (B, 3, C_conv)} with C_conv = d_inner + 2N."""
+    b, s, d = x.shape
+    h, pd, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    di = h * pd
+
+    z = x @ p["w_z"]
+    xs = x @ p["w_x"]
+    Bc = x @ p["w_B"]
+    Cc = x @ p["w_C"]
+    dt = (x @ p["w_dt"]).astype(F32)
+    xs = constrain(xs, "batch", None, "model")
+    z = constrain(z, "batch", None, "model")
+
+    conv_in = jnp.concatenate([xs, Bc, Cc], axis=-1)
+    conv_w = jnp.concatenate([p["conv_x"], p["conv_B"], p["conv_C"]], axis=-1)
+    new_cache = None
+    if cache is None:
+        conv_out = jax.nn.silu(_causal_conv(conv_in, conv_w).astype(F32))
+    else:
+        hist = jnp.concatenate([cache["conv"], conv_in], axis=1)  # (B,4,C)
+        conv_out = jax.nn.silu(
+            jnp.sum(conv_w.astype(F32) * hist.astype(F32), axis=1, keepdims=True)
+        )
+        new_conv = hist[:, 1:]
+    xs = conv_out[..., :di].astype(x.dtype)
+    Bc = conv_out[..., di : di + n].astype(x.dtype)
+    Cc = conv_out[..., di + n :].astype(x.dtype)
+
+    a = -jnp.exp(p["A_log"].astype(F32))  # (H,)
+    dt = jax.nn.softplus(dt + p["dt_bias"].astype(F32))  # (B,S,H)
+    xh = xs.reshape(b, s, h, pd)
+    xd = xh * dt[..., None].astype(x.dtype)
+    la = dt * a  # log decay
+
+    if cache is None:
+        y, _ = _ssd_chunked(xd, la, Bc, Cc, cfg.ssm_chunk)
+    else:
+        state = cache["state"]  # (B,H,N,P)
+        alpha = jnp.exp(la[:, 0])  # (B,H)
+        state = state * alpha[:, :, None, None] + jnp.einsum(
+            "bn,bhp->bhnp", Bc[:, 0].astype(F32), xd[:, 0].astype(F32)
+        )
+        y = jnp.einsum("bn,bhnp->bhp", Cc[:, 0].astype(F32), state)[:, None]
+        new_cache = {"state": state, "conv": new_conv}
+
+    y = y + p["D"].astype(F32)[None, None, :, None] * xh.astype(F32)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(F32)).astype(x.dtype), p["norm_gamma"])
+    y = constrain(y, "batch", None, "model")
+    out = y @ p["w_out"]
+    return constrain(out, "batch", "seq", None), new_cache
+
+
+def init_ssm_cache(cfg, batch: int, dtype=jnp.float32) -> dict:
+    h, pd, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    di = h * pd
+    return {
+        "state": jnp.zeros((batch, h, n, pd), F32),
+        "conv": jnp.zeros((batch, 3, di + 2 * n), dtype),
+    }

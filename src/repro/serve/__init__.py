@@ -1,0 +1,1 @@
+"""Serving substrate: KV/SSM caches, prefill/decode steps."""

@@ -1,0 +1,68 @@
+"""Serving steps: prefill (parallel forward over the prompt) and decode
+(one token against the caches). Factories mirror train/steps.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import positions_for
+from repro.models.lm import forward_hidden, lm_logits_last
+
+
+def build_prefill_step(cfg):
+    """prefill_step(params, batch) -> last-position logits. batch carries
+    tokens (B, S) (or stub embeds) for the full prompt."""
+
+    def prefill_step(params, batch):
+        hidden, _ = forward_hidden(params, batch, cfg, remat_policy="none")
+        return lm_logits_last(params, hidden, cfg)
+
+    return prefill_step
+
+
+def build_decode_step(cfg):
+    """decode_step(params, caches, inputs, pos) -> (logits, new_caches).
+
+    inputs: {"tokens": (B, 1)} or {"embeds": (B, 1, D)}; pos: (B,) absolute
+    position of this token (== number of tokens already in the cache).
+    """
+
+    def decode_step(params, caches, inputs, pos):
+        b = pos.shape[0]
+        positions = pos[:, None]
+        if cfg.rope_type == "mrope":
+            positions = jnp.repeat(positions[..., None], 3, axis=-1)
+        hidden, new_caches = forward_hidden(
+            params, inputs, cfg, positions=positions, caches=caches,
+            remat_policy="none",
+        )
+        return lm_logits_last(params, hidden, cfg), new_caches
+
+    return decode_step
+
+
+def greedy_generate(cfg, params, prompt: jnp.ndarray, steps: int,
+                    max_seq: int | None = None):
+    """Example-grade generation: prefill via sequential decode (exactness
+    over speed — production prefill threads K/V out of the parallel
+    forward), then greedy decode. prompt: (B, S0)."""
+    from .kvcache import init_caches
+
+    b, s0 = prompt.shape
+    max_seq = max_seq or (s0 + steps)
+    caches = init_caches(cfg, b, max_seq)
+    decode = jax.jit(build_decode_step(cfg))
+
+    tok = prompt[:, :1]
+    out = [tok]
+    logits = None
+    for t in range(s0 + steps - 1):
+        pos = jnp.full((b,), t, jnp.int32)
+        logits, caches = decode(params, caches, {"tokens": tok}, pos)
+        if t + 1 < s0:
+            tok = prompt[:, t + 1 : t + 2]  # teacher-forced prompt
+        else:
+            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,1 @@
+"""Training substrate: optimizer, steps, checkpointing, data, loop."""

@@ -1,0 +1,99 @@
+"""AdamW from scratch (no optax dependency) with global-norm clipping,
+linear-warmup cosine schedule, and configurable state dtype.
+
+State dtype matters at fleet scale (DESIGN.md §5): f32 moments for a 340B
+model are 2.7 TB; bf16 moments halve optimizer HBM and are the difference
+between fitting and not fitting 256×16 GB for the two ≥340B archs. The
+moment update is computed in f32 and stored in the state dtype.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    state_dtype: Any = jnp.float32
+
+
+def schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps)
+        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def init_opt_state(params, cfg: AdamWConfig) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.state_dtype)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(F32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-12))
+    lr = schedule(cfg, step.astype(F32))
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** step.astype(F32)
+    bc2 = 1.0 - b2 ** step.astype(F32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(F32) * scale
+        mu_f = b1 * mu.astype(F32) + (1 - b1) * g
+        nu_f = b2 * nu.astype(F32) + (1 - b2) * jnp.square(g)
+        mhat = mu_f / bc1
+        vhat = nu_f / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(F32)
+        new_p = (p.astype(F32) - lr * delta).astype(p.dtype)
+        return new_p, mu_f.astype(mu.dtype), nu_f.astype(nu.dtype)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+    # Chain per-leaf updates through optimization_barrier so XLA schedules
+    # them sequentially: the f32 intermediates of ONE leaf are live at a
+    # time, not all leaves at once (340B models: ~25 GB -> ~2 GB peak).
+    out = []
+    token = None
+    for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu):
+        if token is not None:
+            p, g, m, n, _ = jax.lax.optimization_barrier((p, g, m, n, token))
+        res = upd(p, g, m, n)
+        out.append(res)
+        token = res[1]
+    new_params = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_state = {
+        "mu": jax.tree.unflatten(tdef, [o[1] for o in out]),
+        "nu": jax.tree.unflatten(tdef, [o[2] for o in out]),
+        "step": step,
+    }
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

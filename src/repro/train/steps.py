@@ -1,0 +1,80 @@
+"""Train-step factory: value_and_grad over the model loss with microbatch
+gradient accumulation (lax.scan), remat policy from the config, optional
+Freivalds SDC verification (the paper's Q2 idea at training scale), and the
+AdamW update. One jit-compiled function per (config, opt, flags) triple.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.sdc import freivalds_residual
+from repro.models.lm import forward_hidden, lm_loss
+from .optimizer import AdamWConfig, adamw_update
+
+F32 = jnp.float32
+
+
+def build_train_step(cfg, opt_cfg: AdamWConfig, *, sdc_check: bool = False,
+                     ce_chunk: int = 512):
+    """Returns train_step(params, opt_state, batch, key) ->
+    (params, opt_state, metrics)."""
+
+    def loss_fn(params, mb):
+        return lm_loss(params, mb, cfg, remat_policy=cfg.remat,
+                       ce_chunk=ce_chunk)
+
+    accum_dtype = jnp.float32 if cfg.optimizer_dtype == "float32" else jnp.bfloat16
+
+    def compute_grads(params, batch):
+        a = cfg.grad_accum
+        if a == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+        mbs = jax.tree.map(
+            lambda x: x.reshape((a, x.shape[0] // a) + x.shape[1:]), batch
+        )
+
+        def body(carry, mb):
+            loss_acc, g_acc = carry
+            loss, g = jax.value_and_grad(loss_fn)(params, mb)
+            g_acc = jax.tree.map(lambda ga, gi: ga + gi.astype(ga.dtype), g_acc, g)
+            return (loss_acc + loss.astype(F32), g_acc), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype), params)
+        (loss_sum, grads), _ = lax.scan(body, (jnp.zeros((), F32), g0), mbs)
+        return loss_sum / a, jax.tree.map(lambda g: (g / a), grads)
+
+    def train_step(params, opt_state, batch, key):
+        loss, grads = compute_grads(params, batch)
+        metrics = {"loss": loss}
+        if sdc_check:
+            # verify the head matmul on a probe slice (paper's Q2 / Freivalds
+            # as silent-data-corruption detection, DESIGN.md §2)
+            hidden, _ = forward_hidden(
+                params,
+                jax.tree.map(lambda x: x[:1, :128], batch),
+                cfg,
+                remat_policy="none",
+            )
+            probe = hidden[0].astype(F32)
+            head = params["lm_head"].astype(F32)
+            claim = probe @ head
+            metrics["sdc_residual"] = freivalds_residual(probe, head, claim, key)
+        new_params, new_opt, opt_metrics = adamw_update(
+            params, grads, opt_state, opt_cfg
+        )
+        metrics.update(opt_metrics)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def build_eval_step(cfg, *, ce_chunk: int = 512):
+    def eval_step(params, batch):
+        return lm_loss(params, batch, cfg, remat_policy="none",
+                       ce_chunk=ce_chunk)
+
+    return eval_step

@@ -1,0 +1,18 @@
+"""Test session config: 8 fake CPU devices for sharding tests (NOT 512 —
+the production-mesh dry-run has its own entrypoint), x64 for the SPDC
+protocol's float64 paths.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import sys
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))

@@ -1,0 +1,221 @@
+"""Per-arch smoke tests (reduced configs, one forward/train step on CPU,
+shape + finiteness assertions — as the assignment requires) plus layer-level
+unit tests for attention variants, MoE, and SSD.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import CONFIGS, runnable_cells, smoke_config
+from repro.models.common import split_tree
+from repro.models.lm import forward_hidden, init_lm, lm_loss
+
+ARCHS = list(CONFIGS)
+
+
+def _batch(cfg, b=2, s=32, seed=0):
+    rng = np.random.default_rng(seed)
+    lab = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), dtype=jnp.int32)
+    if cfg.frontend is None:
+        return {"tokens": lab, "labels": lab}
+    emb = jnp.asarray(rng.standard_normal((b, s, cfg.d_model)), dtype=jnp.float32)
+    return {"embeds": emb, "labels": lab}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_shapes_and_finite(arch):
+    cfg = smoke_config(arch)
+    params, _ = split_tree(init_lm(cfg, jax.random.key(0)))
+    batch = _batch(cfg)
+    hidden, _ = jax.jit(lambda p, b: forward_hidden(p, b, cfg))(params, batch)
+    assert hidden.shape == (2, 32, cfg.d_model)
+    assert bool(jnp.all(jnp.isfinite(hidden)))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    from repro.train.optimizer import AdamWConfig, init_opt_state
+    from repro.train.steps import build_train_step
+
+    cfg = smoke_config(arch)
+    params, _ = split_tree(init_lm(cfg, jax.random.key(0)))
+    opt_cfg = AdamWConfig(lr=1e-3)
+    opt = init_opt_state(params, opt_cfg)
+    step = jax.jit(build_train_step(cfg, opt_cfg))
+    p1, o1, m1 = step(params, opt, _batch(cfg, seed=1), jax.random.key(1))
+    assert np.isfinite(float(m1["loss"]))
+    # params changed
+    d0 = jax.tree.leaves(params)[0]
+    d1 = jax.tree.leaves(p1)[0]
+    assert not np.allclose(np.asarray(d0), np.asarray(d1))
+    # loss decreases over a few steps on repeated batch (sanity learnable)
+    batch = _batch(cfg, seed=2)
+    p, o = params, opt
+    losses = []
+    for i in range(5):
+        p, o, m = step(p, o, batch, jax.random.key(i))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_grad_accum_equivalence(arch):
+    """grad_accum=2 must match accum=1 on the same global batch (up to
+    accumulation-dtype rounding)."""
+    from dataclasses import replace
+
+    from repro.train.optimizer import AdamWConfig, init_opt_state
+    from repro.train.steps import build_train_step
+
+    cfg1 = smoke_config(arch)
+    if cfg1.num_experts:
+        # capacity dropping is batch-composition-dependent; disable drops so
+        # microbatched routing matches full-batch routing exactly
+        cfg1 = replace(cfg1, moe_capacity_factor=8.0)
+    cfg2 = replace(cfg1, grad_accum=2)
+    params, _ = split_tree(init_lm(cfg1, jax.random.key(0)))
+    opt_cfg = AdamWConfig(lr=1e-3)
+    opt = init_opt_state(params, opt_cfg)
+    batch = _batch(cfg1, b=4, s=16, seed=3)
+    key = jax.random.key(0)
+    p1, _, m1 = jax.jit(build_train_step(cfg1, opt_cfg))(params, opt, batch, key)
+    p2, _, m2 = jax.jit(build_train_step(cfg2, opt_cfg))(params, opt, batch, key)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=2e-5)
+    for a, b_ in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=2e-4)
+
+
+def test_local_attention_exactness():
+    """Sliding/chunked local path == masked full attention, at several
+    window/seq combinations (incl. non-dividing)."""
+    from repro.models.attention import _blockwise, _local
+
+    rng = np.random.default_rng(0)
+    for s, w, kind in [(64, 16, "sliding"), (48, 16, "sliding"),
+                       (64, 16, "chunked"), (40, 16, "chunked")]:
+        q = jnp.asarray(rng.standard_normal((2, s, 4, 8)), dtype=jnp.float32)
+        k = jnp.asarray(rng.standard_normal((2, s, 4, 8)), dtype=jnp.float32)
+        v = jnp.asarray(rng.standard_normal((2, s, 4, 8)), dtype=jnp.float32)
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (2, s))
+        got = _local(q, k, v, pos, kind=kind, window=w, scale=0.35)
+        want = _blockwise(
+            q, k, v, pos, jnp.arange(s), causal=True,
+            window=w if kind == "sliding" else None,
+            chunk=w if kind == "chunked" else None, scale=0.35, block=10**9,
+        )
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, err_msg=f"{kind} s={s} w={w}")
+
+
+def test_blockwise_attention_matches_reference():
+    from repro.kernels.ref import flash_attention_ref
+    from repro.models.attention import _blockwise
+
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((2, 48, 4, 8)), dtype=jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 48, 4, 8)), dtype=jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 48, 4, 8)), dtype=jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(48)[None], (2, 48))
+    got = _blockwise(q, k, v, pos, jnp.arange(48), causal=True, window=None,
+                     chunk=None, scale=8**-0.5, block=16)
+    want = flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=True,
+    ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)
+
+
+def test_moe_dispatch_vs_dense_high_capacity():
+    """With capacity high enough to never drop, dispatch == dense."""
+    from dataclasses import replace
+
+    from repro.models.moe import apply_moe, init_moe
+    from repro.models.common import Initializer
+
+    cfg = replace(smoke_config("granite-moe-1b-a400m"),
+                  moe_capacity_factor=8.0, moe_group=64)
+    ini = Initializer(jax.random.key(0), dtype=jnp.float32)
+    p, _ = split_tree(init_moe(ini, cfg))
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((2, 32, cfg.d_model)),
+                    dtype=jnp.float32)
+    y_disp = apply_moe(p, x, replace(cfg, moe_impl="dispatch"))
+    y_dense = apply_moe(p, x, replace(cfg, moe_impl="dense"))
+    np.testing.assert_allclose(np.asarray(y_disp), np.asarray(y_dense), atol=1e-4)
+
+
+def test_ssd_chunked_matches_sequential():
+    """Chunked SSD == naive sequential recurrence."""
+    from repro.models.ssm import _ssd_chunked
+
+    rng = np.random.default_rng(2)
+    b, s, h, p_, n = 2, 24, 3, 4, 8
+    xd = jnp.asarray(rng.standard_normal((b, s, h, p_)), dtype=jnp.float32)
+    la = jnp.asarray(-np.abs(rng.standard_normal((b, s, h))) * 0.1,
+                     dtype=jnp.float32)
+    B = jnp.asarray(rng.standard_normal((b, s, n)), dtype=jnp.float32)
+    C = jnp.asarray(rng.standard_normal((b, s, n)), dtype=jnp.float32)
+    got, state = _ssd_chunked(xd, la, B, C, chunk=8)
+    # naive recurrence
+    want = np.zeros((b, s, h, p_), dtype=np.float64)
+    st = np.zeros((b, h, n, p_), dtype=np.float64)
+    for t in range(s):
+        al = np.exp(np.asarray(la[:, t], dtype=np.float64))  # (b,h)
+        st = st * al[:, :, None, None] + np.einsum(
+            "bn,bhp->bhnp", np.asarray(B[:, t], np.float64),
+            np.asarray(xd[:, t], np.float64),
+        )
+        want[:, t] = np.einsum("bn,bhnp->bhp", np.asarray(C[:, t], np.float64), st)
+    np.testing.assert_allclose(np.asarray(got), want, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(state), st, atol=1e-4)
+
+
+def test_mrope_sections_and_equivalence():
+    """Text-only M-RoPE (equal position streams) == plain RoPE."""
+    from repro.models.common import apply_mrope, apply_rope, mrope_sections
+
+    assert mrope_sections(128) == (16, 24, 24)  # Qwen2-VL's exact split
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((2, 8, 4, 32)), dtype=jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+    pos3 = jnp.repeat(pos[..., None], 3, axis=-1)
+    np.testing.assert_allclose(
+        np.asarray(apply_mrope(x, pos3)), np.asarray(apply_rope(x, pos)),
+        atol=1e-6,
+    )
+
+
+def test_runnable_cells_match_design():
+    """The 33-of-40 cell grid from DESIGN.md §4."""
+    total = sum(len(runnable_cells(CONFIGS[a])) for a in CONFIGS)
+    assert total == 33
+    assert runnable_cells(CONFIGS["hubert-xlarge"]) == ["train_4k", "prefill_32k"]
+    assert "long_500k" in runnable_cells(CONFIGS["mamba2-370m"])
+    assert "long_500k" in runnable_cells(CONFIGS["jamba-1.5-large-398b"])
+    assert "long_500k" not in runnable_cells(CONFIGS["gemma-2b"])
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "mamba2-370m",
+                                  "gemma3-1b", "granite-moe-1b-a400m"])
+def test_decode_matches_parallel_forward(arch):
+    """Sequential decode over caches == parallel forward (dense MoE to
+    exclude capacity-drop differences)."""
+    from dataclasses import replace as rep
+
+    from repro.serve.kvcache import init_caches
+    from repro.serve.steps import build_decode_step, build_prefill_step
+
+    cfg = rep(smoke_config(arch), moe_impl="dense")
+    params, _ = split_tree(init_lm(cfg, jax.random.key(1)))
+    B, S = 2, 24
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), dtype=jnp.int32)
+    ref = jax.jit(build_prefill_step(cfg))(params, {"tokens": toks})
+    decode = jax.jit(build_decode_step(cfg))
+    caches = init_caches(cfg, B, S)
+    for t in range(S):
+        logits, caches = decode(params, caches, {"tokens": toks[:, t:t+1]},
+                                jnp.full((B,), t, jnp.int32))
+    mask = np.arange(logits.shape[-1]) < cfg.vocab_size
+    err = np.max(np.abs(np.asarray(logits - ref))[:, mask])
+    assert err < 2e-3, err

@@ -1,0 +1,87 @@
+"""PRT (Panth Rotation Theorem) — the theorem itself, as tests + hypothesis
+property checks, including the paper's §IV.F sign-recovery erratum."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.prt import (
+    quantize_seed, rot90_cw, rotate_degree, rotation_sign,
+    rotation_sign_paper, sign_preserved,
+)
+
+
+def _det(x):
+    return np.linalg.det(np.asarray(x, dtype=np.float64))
+
+
+@pytest.mark.parametrize("n", [2, 3, 4, 5, 6, 7, 8, 9])
+@pytest.mark.parametrize("k", [1, 2, 3, 4])
+def test_prt_sign_law(n, k):
+    """det(rot90_cw^k(X)) == rotation_sign(n,k) * det(X) for all n mod 4."""
+    rng = np.random.default_rng(n * 10 + k)
+    x = jnp.asarray(rng.standard_normal((n, n)))
+    got = _det(rot90_cw(x, k))
+    want = rotation_sign(n, k) * _det(x)
+    np.testing.assert_allclose(got, want, rtol=1e-9)
+
+
+@pytest.mark.parametrize("n,k,preserved", [
+    (4, 1, True), (5, 1, True),     # n ≡ 0,1 (mod 4): all rotations preserve
+    (6, 1, False), (7, 1, False),   # n ≡ 2,3 (mod 4): 90° flips
+    (6, 2, True), (7, 2, True),     # 180° always preserves
+    (6, 3, False), (7, 3, False),   # 270° flips
+    (6, 4, True),                   # 360° identity
+])
+def test_theorem_case_split(n, k, preserved):
+    assert sign_preserved(n, k) is preserved
+
+
+def test_rotation_matches_paper_example_layout():
+    """The paper's explicit 4×4 R_90 layout (§II.A.1)."""
+    x = jnp.arange(16, dtype=jnp.float64).reshape(4, 4) + 11  # X_ij = i*10+j style
+    r = rot90_cw(x, 1)
+    # paper: first row of R_90(X) is X_41, X_31, X_21, X_11 (first column reversed)
+    np.testing.assert_array_equal(np.asarray(r)[0], np.asarray(x)[::-1, 0])
+    # 360° is identity
+    np.testing.assert_array_equal(np.asarray(rot90_cw(x, 4)), np.asarray(x))
+
+
+def test_paper_sign_erratum():
+    """Paper's Decipher factor (-1)^k is wrong for n ≡ 0,1 (mod 4), odd k
+    (its own theorem says sign is preserved there). DESIGN.md §1.1."""
+    for n in (4, 8, 5, 9):
+        for k in (1, 3):
+            assert rotation_sign(n, k) == 1
+            assert rotation_sign_paper(k) == -1  # the paper's literal formula
+    # agreement region: n ≡ 2,3 (mod 4)
+    for n in (6, 7, 10, 11):
+        for k in (1, 2, 3):
+            assert rotation_sign(n, k) == rotation_sign_paper(k)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 12), k=st.integers(0, 7))
+def test_prt_property(n, k):
+    rng = np.random.default_rng(42)
+    x = jnp.asarray(rng.standard_normal((n, n)))
+    got = _det(rot90_cw(x, k))
+    want = rotation_sign(n, k) * _det(x)
+    np.testing.assert_allclose(got, want, rtol=1e-8, atol=1e-10)
+
+
+@settings(max_examples=25, deadline=None)
+@given(psi=st.floats(0.01, 1e6))
+def test_rotate_degree_range(psi):
+    assert rotate_degree(psi) in (1, 2, 3)
+    for method in ("floor", "ceil", "round", "trunc"):
+        assert isinstance(quantize_seed(psi, method), int)
+
+
+def test_rotation_composition():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((6, 6)))
+    np.testing.assert_array_equal(
+        np.asarray(rot90_cw(rot90_cw(x, 1), 2)), np.asarray(rot90_cw(x, 3))
+    )
