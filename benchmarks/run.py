@@ -1,7 +1,10 @@
-"""Benchmark harness — one function per paper table/figure.
+"""Benchmark harness — one function per paper table/figure, plus the
+throughput suite that tracks the batch-first protocol.
 
 Prints ``name,us_per_call,derived`` CSV rows (derived = the table's claim
-being checked, e.g. a flop count, speedup, or ratio).
+being checked, e.g. a flop count, speedup, or ratio) AND collects every row
+into a machine-readable JSON baseline (BENCH_1.json at the repo root) so
+future PRs have a perf trajectory to beat.
 
   table1_overhead        — paper Table I: per-stage client cost (flops/biops)
                            measured (wall µs) + counted vs the paper's models
@@ -12,6 +15,12 @@ being checked, e.g. a flop count, speedup, or ratio).
   verification_cost      — §IV.E: Q1 vs Q2 vs Q3 cost and rejection power
   cipher_fusion          — §IV.C: fused CED kernel vs two-pass cipher traffic
   spdc_pipeline_comm     — §IV.D.3: one-way relay bytes vs paper-exact volume
+  throughput             — batch-first protocol: dets/sec vs batch size for
+                           the (B, n, n) stack API vs a Python loop of
+                           single-matrix calls
+  extension_inverse      — paper §VII.B future work: secure inversion
+
+Usage: python benchmarks/run.py [suite ...]   (default: all suites)
 """
 from __future__ import annotations
 
@@ -21,13 +30,26 @@ import jax
 
 jax.config.update("jax_enable_x64", True)
 
+import json
+import platform
 import sys
 from pathlib import Path
 
-sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
 
 import jax.numpy as jnp
 import numpy as np
+
+#: every emit() lands here; main() dumps it as BENCH_1.json
+RESULTS: list[dict] = []
+
+
+def emit(name: str, us: float, **derived) -> None:
+    """One benchmark row: CSV to stdout + structured record to RESULTS."""
+    kv = ",".join(f"{k}={v}" for k, v in derived.items())
+    print(f"{name},{us:.1f}{',' + kv if kv else ''}")
+    RESULTS.append({"name": name, "us_per_call": round(us, 1), **derived})
 
 
 def _t(fn, *args, reps=5, warmup=2):
@@ -39,13 +61,15 @@ def _t(fn, *args, reps=5, warmup=2):
     return (time.perf_counter() - t0) / reps * 1e6, out
 
 
-def _wellcond(n, seed=0):
+def _wellcond(n, seed=0, batch=None):
     rng = np.random.default_rng(seed)
-    return rng.standard_normal((n, n)) + n * np.eye(n)
+    if batch is None:
+        return rng.standard_normal((n, n)) + n * np.eye(n)
+    return rng.standard_normal((batch, n, n)) + n * np.eye(n)
 
 
 def table1_overhead(n: int = 1024):
-    """Paper Table I: SeedGen 2n biops, KeyGen ns, Cipher n², Authenticate
+    """Paper Table I: SeedGen 2n biops, KeyGen n, Cipher n², Authenticate
     0 + 2n(n+1) (Q3), Decipher 2n."""
     from repro.core import (
         cipher, cipher_flops, decipher, decipher_flops, keygen, lu_unblocked,
@@ -57,14 +81,14 @@ def table1_overhead(n: int = 1024):
     mj = jnp.asarray(m)
 
     us, seed = _t(lambda: seedgen(128, m), reps=3)
-    print(f"table1_seedgen_n{n},{us:.1f},claimed_biops={2*n}")
+    emit(f"table1_seedgen_n{n}", us, claimed_biops=2 * n)
 
     us, key = _t(lambda: keygen(128, seed, n), reps=3)
-    print(f"table1_keygen_n{n},{us:.1f},claimed_biops={n}s")
+    emit(f"table1_keygen_n{n}", us, claimed_biops=n)
 
     cfn = jax.jit(lambda x: cipher(x, key, seed)[0])
     us, x = _t(cfn, mj)
-    print(f"table1_cipher_n{n},{us:.1f},claimed_flops={cipher_flops(n)}")
+    emit(f"table1_cipher_n{n}", us, claimed_flops=cipher_flops(n))
 
     _, meta = cipher(mj, key, seed)
     l, u = jax.jit(lu_unblocked)(x)
@@ -72,11 +96,11 @@ def table1_overhead(n: int = 1024):
         us, _ = _t(
             lambda: authenticate(l, u, x, num_servers=4, method=method), reps=3
         )
-        print(f"table1_auth_{method}_n{n},{us:.1f},"
-              f"claimed_flops={verification_flops(n, method)}")
+        emit(f"table1_auth_{method}_n{n}", us,
+             claimed_flops=verification_flops(n, method))
 
     us, det = _t(lambda: decipher(seed, meta, l, u), reps=3)
-    print(f"table1_decipher_n{n},{us:.1f},claimed_flops={decipher_flops(n)}")
+    emit(f"table1_decipher_n{n}", us, claimed_flops=decipher_flops(n))
 
 
 def table2_characteristics():
@@ -95,8 +119,8 @@ def table2_characteristics():
         m, 4, tamper=lambda l, u: (l.at[7, 3].add(0.05), u)
     )
     us = (time.perf_counter() - t0) * 1e6
-    print(f"table2_protocol_roundtrip,{us:.1f},correct={ok}")
-    print(f"table2_malicious_detected,0.0,rejected={not bad.verified}")
+    emit("table2_protocol_roundtrip", us, correct=bool(ok))
+    emit("table2_malicious_detected", 0.0, rejected=bool(not bad.verified))
 
 
 def table3_matrix_support():
@@ -112,8 +136,8 @@ def table3_matrix_support():
         ok = res.verified and np.isclose(
             res.det.logabs, np.linalg.slogdet(m)[1], rtol=1e-8
         )
-        print(f"table3_n{n}_N{servers},{us:.1f},"
-              f"padding={res.padding},min={padding_for_servers(n, servers)},ok={ok}")
+        emit(f"table3_n{n}_N{servers}", us, padding=res.padding,
+             min=padding_for_servers(n, servers), ok=bool(ok))
 
 
 def fig_scaling(n: int = 512):
@@ -130,8 +154,9 @@ def fig_scaling(n: int = 512):
         base_us, _ = _t(seq, x, reps=2, warmup=1)
         fn = jax.jit(lambda a, N=N: lu_nserver(a, N)[:2])
         us, _ = _t(fn, x, reps=2, warmup=1)
-        print(f"fig_scaling_{N}server_n{n},{us:.1f},"
-              f"seq_blocked_us={base_us:.1f},speedup={base_us/us:.2f}")
+        emit(f"fig_scaling_{N}server_n{n}", us,
+             seq_blocked_us=round(base_us, 1),
+             speedup=round(base_us / us, 2))
 
 
 def verification_cost(n: int = 2048):
@@ -149,8 +174,8 @@ def verification_cost(n: int = 2048):
         us, resid = _t(fn, l, u, x, reps=3)
         u_bad = u.at[n // 2, n // 2].multiply(1.001)
         detect = float(fn(l, u_bad, x)) > 10 * float(resid) + 1e-12
-        print(f"verify_{name}_n{n},{us:.1f},residual={float(resid):.2e},"
-              f"detects_0.1pct_tamper={detect}")
+        emit(f"verify_{name}_n{n}", us, residual=f"{float(resid):.2e}",
+             detects_tamper=bool(detect))
 
 
 def cipher_fusion(n: int = 2048):
@@ -171,8 +196,9 @@ def cipher_fusion(n: int = 2048):
     ok = np.allclose(np.asarray(a), np.asarray(b))
     # wall time of the fused kernel is interpret-mode (Python) — the claim
     # being checked is correctness + the 1-vs-2 HBM-pass traffic model
-    print(f"cipher_fused_n{n},{us_f:.1f},passes=1,match={ok},note=interpret-mode")
-    print(f"cipher_unfused_n{n},{us_u:.1f},passes=2,traffic_ratio=2.0")
+    emit(f"cipher_fused_n{n}", us_f, passes=1, match=bool(ok),
+         note="interpret-mode")
+    emit(f"cipher_unfused_n{n}", us_u, passes=2, traffic_ratio=2.0)
 
 
 def spdc_pipeline_comm(n: int = 4096):
@@ -181,12 +207,44 @@ def spdc_pipeline_comm(n: int = 4096):
 
     for N in (2, 4, 8, 16):
         info = pipeline_collective_bytes(n, N)
-        print(
-            f"comm_n{n}_N{N},0.0,"
-            f"relay_MB={info['relay_bytes']/1e6:.1f},"
-            f"paper_MB={info['paper_exact_bytes']/1e6:.1f},"
-            f"overcount={info['overcount_factor']:.2f}"
-        )
+        emit(f"comm_n{n}_N{N}", 0.0,
+             relay_MB=round(info["relay_bytes"] / 1e6, 1),
+             paper_MB=round(info["paper_exact_bytes"] / 1e6, 1),
+             overcount=round(info["overcount_factor"], 2))
+
+
+def throughput(ns=(64, 256, 1024), Ns=(2, 4, 8), batches=(1, 8, 32)):
+    """Batch-first protocol throughput: dets/sec of one (B, n, n) call vs a
+    Python loop of single-matrix calls (the pre-batching client pattern).
+
+    The loop baseline's throughput is 1 / t_single: a loop of B calls costs
+    exactly B · t_single (no warm state is shared between calls beyond what
+    a real client would have)."""
+    from repro.core import outsource_determinant
+
+    for n in ns:
+        for N in Ns:
+            single_m = _wellcond(n, seed=n + N)
+            t_single_us, res = _t(
+                lambda: outsource_determinant(single_m, N), reps=2, warmup=1
+            )
+            loop_dets_per_sec = 1e6 / t_single_us
+            emit(f"throughput_loop_n{n}_N{N}", t_single_us,
+                 suite="throughput", n=n, num_servers=N, batch=1,
+                 mode="loop", dets_per_sec=round(loop_dets_per_sec, 2),
+                 verified=bool(res.verified))
+            for B in batches:
+                stack = jnp.asarray(_wellcond(n, seed=n + N, batch=B))
+                t_us, resb = _t(
+                    lambda s=stack: outsource_determinant(s, N),
+                    reps=2, warmup=1,
+                )
+                dets_per_sec = B * 1e6 / t_us
+                emit(f"throughput_batched_n{n}_N{N}_B{B}", t_us,
+                     suite="throughput", n=n, num_servers=N, batch=B,
+                     mode="batched", dets_per_sec=round(dets_per_sec, 2),
+                     speedup_vs_loop=round(dets_per_sec / loop_dets_per_sec, 2),
+                     all_verified=bool(np.asarray(resb.verified).all()))
 
 
 def extension_inverse(n: int = 128):
@@ -198,19 +256,52 @@ def extension_inverse(n: int = 128):
     res = outsource_inverse(m, 4)
     us = (time.perf_counter() - t0) * 1e6
     err = float(np.max(np.abs(np.asarray(res.inverse) @ m - np.eye(n))))
-    print(f"ext_inverse_n{n}_N4,{us:.1f},verified={res.verified},max_err={err:.2e}")
+    emit(f"ext_inverse_n{n}_N4", us, verified=bool(res.verified),
+         max_err=f"{err:.2e}")
 
 
-def main() -> None:
+SUITES = {
+    "table1": table1_overhead,
+    "table2": table2_characteristics,
+    "table3": table3_matrix_support,
+    "scaling": fig_scaling,
+    "verify": verification_cost,
+    "cipher": cipher_fusion,
+    "comm": spdc_pipeline_comm,
+    "throughput": throughput,
+    "inverse": extension_inverse,
+}
+
+
+def main(argv: list[str] | None = None) -> None:
+    names = (argv if argv is not None else sys.argv[1:]) or list(SUITES)
+    unknown = [s for s in names if s not in SUITES]
+    if unknown:
+        raise SystemExit(f"unknown suites {unknown}; pick from {list(SUITES)}")
     print("name,us_per_call,derived")
-    table1_overhead()
-    table2_characteristics()
-    table3_matrix_support()
-    fig_scaling()
-    verification_cost()
-    cipher_fusion()
-    spdc_pipeline_comm()
-    extension_inverse()
+    for s in names:
+        SUITES[s]()
+    if set(names) != set(SUITES):
+        # subset runs must not clobber the committed full baseline
+        print("# partial suite run — BENCH_1.json left untouched "
+              "(run with no args to refresh the baseline)")
+        return
+    baseline = {
+        "bench_version": 1,
+        "suites": names,
+        "env": {
+            "jax": jax.__version__,
+            "python": platform.python_version(),
+            "platform": platform.platform(),
+            "device_count": jax.device_count(),
+            "backend": jax.default_backend(),
+            "x64": bool(jax.config.jax_enable_x64),
+        },
+        "rows": RESULTS,
+    }
+    out = ROOT / "BENCH_1.json"
+    out.write_text(json.dumps(baseline, indent=1) + "\n")
+    print(f"# wrote {out} ({len(RESULTS)} rows)")
 
 
 if __name__ == "__main__":

@@ -1,18 +1,21 @@
 """SPDC core — the paper's contribution as composable JAX modules."""
 from .augment import augment, augment_for_servers, padding_for_servers, padding_to_even
-from .cipher import CipherMeta, cipher, cipher_flops, ewo
-from .decipher import Determinant, decipher, decipher_flops
+from .cipher import CipherMeta, cipher, cipher_batch, cipher_flops, ewo
+from .decipher import Determinant, decipher, decipher_batch, decipher_flops
 from .inverse import SPDCInverseResult, outsource_inverse
-from .keygen import Key, keygen
+from .keygen import Key, keygen, keygen_batch
 from .lu import (
     CommLog,
     det_from_lu,
     lu_blocked,
+    lu_diag_factor,
     lu_nserver,
+    lu_panel_blocked,
     lu_unblocked,
+    nserver_comm_model,
     slogdet_from_lu,
 )
-from .protocol import SPDCResult, outsource_determinant
+from .protocol import SPDCBatchResult, SPDCResult, outsource_determinant
 from .prt import (
     quantize_seed,
     rot90_cw,
@@ -22,21 +25,22 @@ from .prt import (
     sign_preserved,
 )
 from .sdc import checked_matmul, freivalds_residual, sdc_flag
-from .seed import Seed, seedgen
+from .seed import Seed, seedgen, seedgen_batch
 from .verify import authenticate, epsilon, q1, q2, q3, q3_paper_literal
 
 __all__ = [
     "augment", "augment_for_servers", "padding_for_servers", "padding_to_even",
-    "CipherMeta", "cipher", "cipher_flops", "ewo",
-    "Determinant", "decipher", "decipher_flops",
-    "Key", "keygen",
+    "CipherMeta", "cipher", "cipher_batch", "cipher_flops", "ewo",
+    "Determinant", "decipher", "decipher_batch", "decipher_flops",
+    "Key", "keygen", "keygen_batch",
     "SPDCInverseResult", "outsource_inverse",
-    "CommLog", "det_from_lu", "lu_blocked", "lu_nserver", "lu_unblocked",
+    "CommLog", "det_from_lu", "lu_blocked", "lu_diag_factor", "lu_nserver",
+    "lu_panel_blocked", "lu_unblocked", "nserver_comm_model",
     "slogdet_from_lu",
-    "SPDCResult", "outsource_determinant",
+    "SPDCBatchResult", "SPDCResult", "outsource_determinant",
     "quantize_seed", "rot90_cw", "rotate_degree", "rotation_sign",
     "rotation_sign_paper", "sign_preserved",
     "checked_matmul", "freivalds_residual", "sdc_flag",
-    "Seed", "seedgen",
+    "Seed", "seedgen", "seedgen_batch",
     "authenticate", "epsilon", "q1", "q2", "q3", "q3_paper_literal",
 ]

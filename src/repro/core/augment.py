@@ -33,24 +33,32 @@ def padding_to_even(n: int) -> int:
 
 
 def augment(a: jnp.ndarray, p: int, *, key: jax.Array | None = None) -> jnp.ndarray:
-    """Pad a to (n+p)×(n+p) preserving det. R-block random if key given."""
+    """Pad a to (n+p)×(n+p) preserving det. R-block random if key given.
+
+    Batch-aware: (..., n, n) inputs get per-matrix independent R blocks
+    from the same key (the draw covers the leading dims).
+    """
     if p == 0:
         return a
-    n = a.shape[0]
+    n = a.shape[-1]
+    batch = a.shape[:-2]
     dtype = a.dtype
     if key is not None:
-        r = jax.random.uniform(key, (p, n), dtype=dtype, minval=-1.0, maxval=1.0)
+        r = jax.random.uniform(
+            key, (*batch, p, n), dtype=dtype, minval=-1.0, maxval=1.0
+        )
     else:
-        r = jnp.zeros((p, n), dtype=dtype)
-    top = jnp.concatenate([a, jnp.zeros((n, p), dtype=dtype)], axis=1)
-    bot = jnp.concatenate([r, jnp.eye(p, dtype=dtype)], axis=1)
-    return jnp.concatenate([top, bot], axis=0)
+        r = jnp.zeros((*batch, p, n), dtype=dtype)
+    eye = jnp.broadcast_to(jnp.eye(p, dtype=dtype), (*batch, p, p))
+    top = jnp.concatenate([a, jnp.zeros((*batch, n, p), dtype=dtype)], axis=-1)
+    bot = jnp.concatenate([r, eye], axis=-1)
+    return jnp.concatenate([top, bot], axis=-2)
 
 
 def augment_for_servers(
     a: jnp.ndarray, num_servers: int, *, key: jax.Array | None = None
 ) -> tuple[jnp.ndarray, int]:
     """Augment so the result partitions into N×N equal blocks. Returns (B, p)."""
-    n = a.shape[0]
+    n = a.shape[-1]
     p = padding_for_servers(n, num_servers)
     return augment(a, p, key=key), p

@@ -22,10 +22,13 @@ with s = rotation_sign(n, k).
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import partial
 from typing import Literal
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from .keygen import Key
 from .prt import rot90_cw, rotate_degree
@@ -78,6 +81,71 @@ def cipher(
     else:
         x = rot90_cw(ewo(m, jnp.asarray(key.v), mode), k)
     return x, CipherMeta(mode=mode, rotate_k=k, n=n)
+
+
+@partial(jax.jit, static_argnames=("mode",))
+def _cipher_batch_jnp(m: jnp.ndarray, v: jnp.ndarray, ks: jnp.ndarray,
+                      *, mode: Mode) -> jnp.ndarray:
+    """Batched CED, pure jnp: per-matrix blinding vector AND rotation degree.
+
+    The per-example quarter-turn count is data (each matrix has its own
+    seed), so the rotation is a vmapped lax.switch over the four turn
+    counts — XLA lowers it to selects over cheap relayouts; still zero
+    flops beyond the blinding scale.
+    """
+
+    def one(mi, vi, ki):
+        scaled = ewo(mi, vi, mode)
+        return lax.switch(
+            ki % 4,
+            [
+                lambda a: a,
+                lambda a: jnp.rot90(a, k=-1, axes=(0, 1)),
+                lambda a: jnp.rot90(a, k=-2, axes=(0, 1)),
+                lambda a: jnp.rot90(a, k=-3, axes=(0, 1)),
+            ],
+            scaled,
+        )
+
+    return jax.vmap(one)(m, v, ks)
+
+
+def cipher_batch(
+    m: jnp.ndarray,
+    key_vs: np.ndarray | jnp.ndarray,
+    seeds: list[Seed],
+    *,
+    mode: Mode = "ewd",
+    use_kernel: bool = False,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, list[CipherMeta]]:
+    """Batched Cipher: (B, n, n) stack + (B, n) stacked blinding vectors.
+
+    Pure-jnp path is one jitted vmapped program. The Pallas path groups the
+    batch by rotation degree (the kernel's output index map is static in k)
+    and launches one batched-grid kernel per group — at most 3 launches for
+    any B.
+    """
+    B, n = int(m.shape[0]), int(m.shape[-1])
+    if len(seeds) != B:
+        raise ValueError(f"{len(seeds)} seeds for batch of {B}")
+    v = jnp.asarray(key_vs, dtype=m.dtype)
+    if v.shape != (B, n):
+        raise ValueError(f"blinding stack shape {v.shape} != {(B, n)}")
+    ks = np.array([rotate_degree(s.psi) for s in seeds], dtype=np.int32)
+    metas = [CipherMeta(mode=mode, rotate_k=int(k), n=n) for k in ks]
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        x = jnp.zeros_like(m)
+        for k in sorted(set(ks.tolist())):
+            idx = np.nonzero(ks == k)[0]
+            xk = kops.ced(m[idx], v[idx], int(k), mode=mode,
+                          interpret=interpret)
+            x = x.at[idx].set(xk)
+    else:
+        x = _cipher_batch_jnp(m, v, jnp.asarray(ks), mode=mode)
+    return x, metas
 
 
 def cipher_flops(n: int) -> int:

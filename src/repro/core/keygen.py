@@ -78,3 +78,13 @@ def keygen(lambda2: int, seed: Seed, n: int, *, spread: float = 0.5) -> Key:
         v[ones] = np.nextafter(1.0, 2.0)
         v[n - 1] = float(seed.psi) / float(np.prod(v[: n - 1]))
     return Key(v=v)
+
+
+def keygen_batch(lambda2: int, seeds: list[Seed], n: int, *,
+                 spread: float = 0.5) -> np.ndarray:
+    """KeyGen over a batch of seeds → stacked blinding vectors (B, n).
+
+    Each row satisfies the per-matrix product constraint ∏ v_i = Ψ_b; the
+    stack feeds the batched cipher in one device call (DESIGN.md §3).
+    """
+    return np.stack([keygen(lambda2, s, n, spread=spread).v for s in seeds])

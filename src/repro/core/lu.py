@@ -5,9 +5,14 @@ ciphered matrix: the schedule must be value-independent (pivot choices leak
 magnitudes), and the client's ε(N)-thresholded Q2/Q3 check (§IV.E) is the
 paper's own guard against the resulting numerical drift.
 
-Three implementations, used as successive oracles for one another:
+Implementations, used as successive oracles for one another:
 
   * lu_unblocked     — textbook Doolittle elimination, pure jnp (oracle).
+  * lu_panel_blocked — blocked factorization of one diagonal tile: the
+                       panel→TRSM→Schur structure of lu_blocked applied
+                       *inside* the b×b tile, shrinking the sequential
+                       critical path from b dependent rank-1 updates to
+                       b/inner panel steps + matmuls (DESIGN.md §1.1).
   * lu_blocked       — right-looking block LU (panel → TRSM → Schur GEMM),
                        the per-server local computation. Optionally uses the
                        Pallas kernels (kernels/ops.py) for panel/TRSM/GEMM.
@@ -15,6 +20,10 @@ Three implementations, used as successive oracles for one another:
                        computes L_{i,1..i-1}, factors X_ii, computes
                        U_{i,i+1..N}; one-way message log recorded exactly as
                        the paper's communication pattern prescribes.
+
+All pure-jnp paths accept leading batch dimensions — (..., n, n) — so a
+stack of matrices factors in one call (DESIGN.md §3); jax.vmap composes
+with them as well.
 
 Paper errata handled here (see DESIGN.md §1.1): Alg. 3 line 7 writes
 U_kk^{-1}(X_ik − …) — the inverse must right-multiply (cf. Alg. 1 line 3,
@@ -33,24 +42,102 @@ from jax import lax
 # ---------------------------------------------------------------------------
 # unblocked (oracle)
 # ---------------------------------------------------------------------------
-def lu_unblocked(a: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Doolittle LU without pivoting. Returns (L unit-lower, U upper)."""
-    n = a.shape[0]
+def _doolittle_compact(a: jnp.ndarray) -> jnp.ndarray:
+    """Doolittle elimination on (..., n, n) without pivoting.
+
+    Returns the compact form: strict-lower multipliers + U in one array.
+    """
+    n = a.shape[-1]
     idx = jnp.arange(n)
 
     def body(k, a):
         below = idx > k
-        right = idx > k
-        lcol = jnp.where(below, a[:, k] / a[k, k], 0.0)
-        urow = jnp.where(right, a[k, :], 0.0)
-        a = a - jnp.outer(lcol, urow)
-        a = a.at[:, k].set(jnp.where(below, lcol, a[:, k]))
+        pivot = a[..., k, k]
+        lcol = jnp.where(below, a[..., :, k] / pivot[..., None], 0.0)
+        urow = jnp.where(below, a[..., k, :], 0.0)
+        a = a - lcol[..., :, None] * urow[..., None, :]
+        a = a.at[..., :, k].set(jnp.where(below, lcol, a[..., :, k]))
         return a
 
-    a = lax.fori_loop(0, n, body, a)
+    return lax.fori_loop(0, n, body, a)
+
+
+def _split_compact(a: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(L unit-lower, U upper) from the compact form; batch-aware."""
+    n = a.shape[-1]
     l = jnp.tril(a, -1) + jnp.eye(n, dtype=a.dtype)
     u = jnp.triu(a)
     return l, u
+
+
+def lu_unblocked(a: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Doolittle LU without pivoting on (..., n, n).
+
+    Returns (L unit-lower, U upper) with matching leading batch dims.
+    """
+    return _split_compact(_doolittle_compact(a))
+
+
+def _trsm_right_upper(u: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Solve Z U = B  →  Z = B U^{-1} via (Uᵀ)^{-1} Bᵀ; batch-aware."""
+    ut = jnp.swapaxes(u, -1, -2)
+    bt = jnp.swapaxes(b, -1, -2)
+    z = jax.scipy.linalg.solve_triangular(ut, bt, lower=True)
+    return jnp.swapaxes(z, -1, -2)
+
+
+# ---------------------------------------------------------------------------
+# blocked panel — the pipeline's per-round diagonal factorization
+# ---------------------------------------------------------------------------
+def lu_panel_blocked(
+    a: jnp.ndarray, inner: int = 32
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Blocked factorization of a (..., b, b) diagonal tile.
+
+    Reuses lu_blocked's panel→TRSM→Schur structure *inside* the tile: only
+    the inner×inner sub-panels run the dependent Doolittle elimination; the
+    off-diagonal strips are triangular solves and the trailing update is one
+    GEMM per step. The sequential critical path drops from b dependent
+    rank-1 updates to ceil(b/inner) panel factorizations — this is the
+    factorization used on the N-server pipeline's critical path (§IV.D,
+    DESIGN.md §1.1). Handles ragged tails (b not a multiple of inner) with
+    a short final panel. Batch-aware over leading dims.
+    """
+    b = a.shape[-1]
+    if b <= inner:
+        return _split_compact(_doolittle_compact(a))
+    for s0 in range(0, b, inner):
+        s1 = min(s0 + inner, b)
+        diag = _doolittle_compact(a[..., s0:s1, s0:s1])
+        a = a.at[..., s0:s1, s0:s1].set(diag)
+        if s1 < b:
+            lkk = jnp.tril(diag, -1) + jnp.eye(s1 - s0, dtype=a.dtype)
+            ukk = jnp.triu(diag)
+            u_right = jax.scipy.linalg.solve_triangular(
+                lkk, a[..., s0:s1, s1:], lower=True, unit_diagonal=True
+            )
+            l_below = _trsm_right_upper(ukk, a[..., s1:, s0:s1])
+            a = a.at[..., s0:s1, s1:].set(u_right)
+            a = a.at[..., s1:, s0:s1].set(l_below)
+            a = a.at[..., s1:, s1:].add(-(l_below @ u_right))
+    return _split_compact(a)
+
+
+#: tile sizes >= this threshold take the blocked-panel path on the pipeline
+#: critical path (below it the matmuls are too small to beat plain Doolittle)
+PANEL_BLOCK_THRESHOLD = 64
+
+
+def lu_diag_factor(a: jnp.ndarray, inner: int = 32) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Factor a diagonal tile, choosing blocked vs plain by tile size.
+
+    This is THE entry point for every per-round diagonal factorization in
+    lu_nserver and the shard_map pipeline: for b >= PANEL_BLOCK_THRESHOLD
+    the blocked panel runs (no full-tile Doolittle on the critical path).
+    """
+    if a.shape[-1] >= PANEL_BLOCK_THRESHOLD:
+        return lu_panel_blocked(a, inner=inner)
+    return lu_unblocked(a)
 
 
 # ---------------------------------------------------------------------------
@@ -63,14 +150,14 @@ def lu_blocked(
     use_kernels: bool = False,
     interpret: bool = True,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Right-looking block LU. n must be divisible by block.
+    """Right-looking block LU on (..., n, n). n must be divisible by block.
 
     Per step k over the block diagonal:
-      panel:  X_kk = L_kk U_kk              (in-VMEM unblocked factorization)
+      panel:  X_kk = L_kk U_kk              (blocked-panel factorization)
       trsm:   U_kj = L_kk^{-1} X_kj (j>k);  L_ik = X_ik U_kk^{-1} (i>k)
       schur:  X_ij -= L_ik U_kj             (i,j > k — the GEMM hot spot)
     """
-    n = a.shape[0]
+    n = a.shape[-1]
     if n % block != 0:
         raise ValueError(f"n={n} not divisible by block={block}")
     nb = n // block
@@ -83,24 +170,24 @@ def lu_blocked(
         trsm_u = lambda u, b: kops.trsm_upper_right(u, b, interpret=interpret)
         schur = lambda c, l, u_: kops.schur_update(c, l, u_, interpret=interpret)
     else:
-        panel = lu_unblocked
+        panel = lu_diag_factor
         trsm_l = lambda l, b: jax.scipy.linalg.solve_triangular(
             l, b, lower=True, unit_diagonal=True
         )
-        # solve Z @ U = B  ->  Z = B @ U^{-1} via (U^T)^{-1} B^T
-        trsm_u = lambda u, b: jax.scipy.linalg.solve_triangular(
-            u.T, b.T, lower=True
-        ).T
+        trsm_u = _trsm_right_upper
         schur = lambda c, l, u_: c - l @ u_
 
     # Work on an nb×nb grid of views. Python loop: nb is static & small.
     blocks = [
-        [a[i * block : (i + 1) * block, j * block : (j + 1) * block] for j in range(nb)]
+        [
+            a[..., i * block : (i + 1) * block, j * block : (j + 1) * block]
+            for j in range(nb)
+        ]
         for i in range(nb)
     ]
     lout = [[None] * nb for _ in range(nb)]
     uout = [[None] * nb for _ in range(nb)]
-    zero = jnp.zeros((block, block), dtype=a.dtype)
+    zero = jnp.zeros((*a.shape[:-2], block, block), dtype=a.dtype)
 
     for k in range(nb):
         lkk, ukk = panel(blocks[k][k])
@@ -145,6 +232,21 @@ class CommLog:
         return len(self.messages)
 
 
+def nserver_comm_model(n: int, num_servers: int) -> CommLog:
+    """The one-way chain's message log — a pure function of (n, N).
+
+    This IS lu_nserver's log (it builds its CommLog here); also used by the
+    batched protocol path (whose LU runs inside jit, where a host-side log
+    can't be threaded out) and by comm benchmarks.
+    """
+    b = n // num_servers
+    log = CommLog()
+    for i in range(num_servers - 1):
+        elems = sum((num_servers - k) * b * b for k in range(i + 1))
+        log.send(i, i + 1, elems)
+    return log
+
+
 def lu_nserver(
     x: jnp.ndarray, num_servers: int
 ) -> tuple[jnp.ndarray, jnp.ndarray, CommLog]:
@@ -153,9 +255,10 @@ def lu_nserver(
     Single-process faithful simulation: performs exactly the block operations
     of Alg. 3 in the paper's order and records every inter-server message of
     the one-way chain S_i → S_{i+1}. Server i computes only block row i.
+    Accepts (..., n, n) — a batch factors in one sweep of the schedule.
     Returns (L, U, comm_log).
     """
-    n = x.shape[0]
+    n = x.shape[-1]
     N = num_servers
     if n % N != 0 or n // N <= 1:
         raise ValueError(
@@ -163,12 +266,13 @@ def lu_nserver(
         )
     b = n // N
     X = [
-        [x[i * b : (i + 1) * b, j * b : (j + 1) * b] for j in range(N)]
+        [x[..., i * b : (i + 1) * b, j * b : (j + 1) * b] for j in range(N)]
         for i in range(N)
     ]
     L = [[None] * N for _ in range(N)]
     U = [[None] * N for _ in range(N)]
-    log = CommLog()
+    # one-way forward schedule: server i sends all U rows k <= i to i+1
+    log = nserver_comm_model(n, N)
 
     # Knowledge forwarded along the one-way chain: U rows of upstream servers.
     # (Server i receives {U_kj : k < i, j >= k} from server i-1 and forwards
@@ -180,12 +284,14 @@ def lu_nserver(
             for m in range(k):
                 acc = acc - L[i][m] @ U[m][k]
             # L_ik U_kk = acc  =>  L_ik = acc @ U_kk^{-1}
-            L[i][k] = jax.scipy.linalg.solve_triangular(U[k][k].T, acc.T, lower=True).T
-        # Schur update of the diagonal block (corrected U_{ki})
+            L[i][k] = _trsm_right_upper(U[k][k], acc)
+        # Schur update of the diagonal block (corrected U_{ki}); the
+        # factorization itself is the blocked panel for b >= 64 — no
+        # full-tile Doolittle on the critical path (DESIGN.md §1.1).
         acc = X[i][i]
         for k in range(i):
             acc = acc - L[i][k] @ U[k][i]
-        L[i][i], U[i][i] = lu_unblocked(acc)
+        L[i][i], U[i][i] = lu_diag_factor(acc)
         # U_{ij} for j > i
         for j in range(i + 1, N):
             acc = X[i][j]
@@ -194,12 +300,8 @@ def lu_nserver(
             U[i][j] = jax.scipy.linalg.solve_triangular(
                 L[i][i], acc, lower=True, unit_diagonal=True
             )
-        # one-way forward: server i sends all U rows k <= i to server i+1
-        if i + 1 < N:
-            elems = sum((N - k) * b * b for k in range(i + 1))
-            log.send(i, i + 1, elems)
 
-    zero = jnp.zeros((b, b), dtype=x.dtype)
+    zero = jnp.zeros((*x.shape[:-2], b, b), dtype=x.dtype)
     for i in range(N):
         for j in range(N):
             if L[i][j] is None:
@@ -216,11 +318,12 @@ def slogdet_from_lu(l: jnp.ndarray, u: jnp.ndarray) -> tuple[jnp.ndarray, jnp.nd
     """(sign, log|det|) from LU factors — paper §IV.F.1 in overflow-safe form.
 
     det(X) = Π L_ii · Π U_ii; L is unit-diagonal in our construction but we
-    include its diagonal anyway to match the paper's formula.
+    include its diagonal anyway to match the paper's formula. Batch-aware:
+    (..., n, n) factors give (...,)-shaped sign and logabs.
     """
-    d = jnp.diagonal(l) * jnp.diagonal(u)
-    sign = jnp.prod(jnp.sign(d))
-    logabs = jnp.sum(jnp.log(jnp.abs(d)))
+    d = jnp.diagonal(l, axis1=-2, axis2=-1) * jnp.diagonal(u, axis1=-2, axis2=-1)
+    sign = jnp.prod(jnp.sign(d), axis=-1)
+    logabs = jnp.sum(jnp.log(jnp.abs(d)), axis=-1)
     return sign, logabs
 
 

@@ -6,21 +6,30 @@ This is the client-side orchestration: everything the client does locally
 blocks to the "edge servers" — either the faithful single-process simulation
 (core.lu.lu_nserver) or the real distributed shard_map pipeline
 (distrib.spdc_pipeline) where each mesh device plays one server.
+
+Batch-first (DESIGN.md §3): `outsource_determinant` accepts one matrix
+(n, n) or a stack (B, n, n). The batched path runs every per-matrix stage
+as one jitted device program over the stack — independent seeds, blinding
+vectors, rotations, probes, and accept/reject decisions per matrix, but
+ONE cipher launch, ONE sweep of the N-server schedule, ONE verify — which
+is what makes high request throughput possible (see
+benchmarks/run.py:throughput).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .augment import augment_for_servers
-from .cipher import CipherMeta, Mode, cipher
-from .decipher import Determinant, decipher
-from .keygen import keygen
-from .lu import CommLog, lu_nserver
-from .seed import Seed, seedgen
+from .augment import augment_for_servers, padding_for_servers
+from .cipher import CipherMeta, Mode, cipher, cipher_batch
+from .decipher import Determinant, decipher, decipher_batch
+from .keygen import keygen, keygen_batch
+from .lu import CommLog, lu_nserver, nserver_comm_model
+from .seed import Seed, seedgen, seedgen_batch
 from .verify import authenticate
 
 
@@ -36,6 +45,100 @@ class SPDCResult:
     num_servers: int
 
 
+@dataclass
+class SPDCBatchResult:
+    """Per-matrix protocol outcomes for a (B, n, n) stack.
+
+    `verified`/`residual` are (B,) arrays — one accept/reject decision per
+    matrix (a single tampered matrix in the batch is flagged individually).
+    """
+
+    dets: list[Determinant]
+    verified: np.ndarray
+    residual: np.ndarray
+    seeds: list[Seed]
+    metas: list[CipherMeta]
+    comm: CommLog | None
+    padding: int
+    num_servers: int
+
+    @property
+    def batch(self) -> int:
+        return len(self.dets)
+
+
+@partial(jax.jit, static_argnames=("num_servers", "padding"))
+def _augment_lu_batch(x, aug_key, *, num_servers, padding):
+    """Jitted server-side stage for the batched path: augment + one
+    N-server schedule sweep over the whole stack."""
+    from .augment import augment
+
+    x_aug = augment(x, padding, key=aug_key)
+    l, u, _ = lu_nserver(x_aug, num_servers)
+    return x_aug, l, u
+
+
+def _outsource_determinant_batch(
+    m: jnp.ndarray,
+    num_servers: int,
+    *,
+    lambda1: int,
+    lambda2: int,
+    mode: Mode,
+    method: str,
+    use_kernel: bool,
+    distributed: bool,
+    faithful_sign: bool,
+    tamper,
+    dtype,
+) -> SPDCBatchResult:
+    B, n = int(m.shape[0]), int(m.shape[-1])
+
+    # --- client: PMOP, batched (host does B cheap hashes; the device does
+    # one cipher launch over the stack) ---
+    seeds = seedgen_batch(lambda1, np.asarray(m))
+    v = keygen_batch(lambda2, seeds, n)
+    x, metas = cipher_batch(m, v, seeds, mode=mode, use_kernel=use_kernel)
+
+    aug_key = jax.random.key(
+        int.from_bytes(seeds[0].digest[8:16], "big") % (2**31)
+    )
+    padding = padding_for_servers(n, num_servers)
+
+    # --- servers: SPCP — one wavefront sweep factors the whole stack ---
+    if distributed:
+        from .augment import augment
+        from repro.distrib.spdc_pipeline import lu_nserver_shardmap
+
+        x_aug = augment(x, padding, key=aug_key)
+        l, u = lu_nserver_shardmap(x_aug, num_servers)
+        comm = None
+    else:
+        x_aug, l, u = _augment_lu_batch(
+            x, aug_key, num_servers=num_servers, padding=padding
+        )
+        comm = nserver_comm_model(n + padding, num_servers)
+
+    if tamper is not None:
+        l, u = tamper(l, u)
+
+    # --- client: RRVP — per-matrix accept/reject + per-matrix determinant ---
+    verified, residual = authenticate(
+        l, u, x_aug, num_servers=num_servers, method=method
+    )
+    dets = decipher_batch(seeds, metas, l, u, faithful=faithful_sign)
+    return SPDCBatchResult(
+        dets=dets,
+        verified=verified,
+        residual=residual,
+        seeds=seeds,
+        metas=metas,
+        comm=comm,
+        padding=padding,
+        num_servers=num_servers,
+    )
+
+
 def outsource_determinant(
     m: np.ndarray | jnp.ndarray,
     num_servers: int,
@@ -49,17 +152,28 @@ def outsource_determinant(
     faithful_sign: bool = False,
     tamper=None,
     dtype=jnp.float64,
-) -> SPDCResult:
-    """Run the full SPDC protocol for one matrix.
+) -> SPDCResult | SPDCBatchResult:
+    """Run the full SPDC protocol for one matrix or a (B, n, n) stack.
 
     tamper: optional fn (L, U) -> (L, U) applied to the servers' results
     before authentication — models a malicious edge server (tests use it to
-    show Q2/Q3 reject tampered results).
+    show Q2/Q3 reject tampered results, including a single bad matrix
+    inside a batch).
     distributed: route Parallelize through the shard_map pipeline (requires
     the active process to have >= num_servers JAX devices); otherwise the
     faithful single-process simulation of Algorithm 3 is used.
+
+    Returns SPDCResult for a single matrix, SPDCBatchResult (per-matrix
+    dets and verdicts) for a stack.
     """
     m = jnp.asarray(m, dtype=dtype)
+    if m.ndim == 3:
+        return _outsource_determinant_batch(
+            m, num_servers,
+            lambda1=lambda1, lambda2=lambda2, mode=mode, method=method,
+            use_kernel=use_kernel, distributed=distributed,
+            faithful_sign=faithful_sign, tamper=tamper, dtype=dtype,
+        )
     n = int(m.shape[0])
 
     # --- client: PMOP (privacy-preserving matrix obfuscation protocol) ---

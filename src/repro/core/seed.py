@@ -53,3 +53,16 @@ def seedgen(lambda1: int, m: np.ndarray) -> Seed:
     u = struct.unpack(">Q", digest[:8])[0] / 2**64
     psi = float(2.0 ** (8.0 * u - 4.0))
     return Seed(psi=psi, mu=mu, m_max=m_max, digest=digest)
+
+
+def seedgen_batch(lambda1: int, m: np.ndarray) -> list[Seed]:
+    """SeedGen over a (B, n, n) stack — one independent seed per matrix.
+
+    Hashing is host-side and O(1) per matrix; the heavy per-matrix numerics
+    downstream (cipher/LU/verify) consume the stacked outputs in one
+    batched device program (DESIGN.md §3).
+    """
+    arr = np.asarray(m, dtype=np.float64)
+    if arr.ndim != 3 or arr.shape[-1] != arr.shape[-2]:
+        raise ValueError(f"M must be a (B, n, n) stack, got shape {arr.shape}")
+    return [seedgen(lambda1, arr[i]) for i in range(arr.shape[0])]

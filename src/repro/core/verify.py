@@ -8,6 +8,10 @@ All avoid matrix–matrix products: Q1/Q2 are matrix–vector (O(n²)), Q3 reads
 only the diagonal band terms it needs (O(n²) for the inner products over
 j ≤ i, or O(n) if L/U rows are streamed during integration).
 
+Every check is batch-aware (DESIGN.md §3): with (..., n, n) factors and
+(..., n) probes the residuals come back per-matrix — a tampered matrix
+inside a batch is flagged individually, never averaged away.
+
 ε(N): multi-server block pipelining + no-pivot elimination accumulate
 rounding; the paper validates |Q| ≤ ε(N) with ε growing in N. We model
 ε(N) = c · (1 + N) · n · u · scale(X) with u the unit roundoff of the
@@ -23,29 +27,40 @@ import numpy as np
 
 def q1(l: jnp.ndarray, u: jnp.ndarray, x: jnp.ndarray, r: jnp.ndarray) -> jnp.ndarray:
     """Gao & Yu's vector check: L(Ur) − Xr. Zero vector iff LU consistent."""
-    return l @ (u @ r) - x @ r
+    ur = jnp.einsum("...ij,...j->...i", u, r)
+    return (
+        jnp.einsum("...ij,...j->...i", l, ur)
+        - jnp.einsum("...ij,...j->...i", x, r)
+    )
 
 
 def q2(l: jnp.ndarray, u: jnp.ndarray, x: jnp.ndarray, r: jnp.ndarray) -> jnp.ndarray:
     """Paper's scalar probabilistic check: (Lᵀr)ᵀ(Ur) − (rᵀX)r."""
-    return (l.T @ r) @ (u @ r) - (r @ x) @ r
+    lt_r = jnp.einsum("...ij,...i->...j", l, r)
+    u_r = jnp.einsum("...ij,...j->...i", u, r)
+    rx = jnp.einsum("...i,...ij->...j", r, x)
+    return jnp.sum(lt_r * u_r, axis=-1) - jnp.sum(rx * r, axis=-1)
 
 
 def q3(l: jnp.ndarray, u: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
     """Deterministic diagonal check, per-element abs (the form the paper's
     own correctness proof §V.C.2 uses): Σ_i |(L·U)_ii − x_ii|."""
-    lu_diag = jnp.einsum("ij,ji->i", jnp.tril(l), jnp.triu(u))
-    return jnp.sum(jnp.abs(lu_diag - jnp.diagonal(x)))
+    lu_diag = jnp.einsum("...ij,...ji->...i", jnp.tril(l), jnp.triu(u))
+    return jnp.sum(
+        jnp.abs(lu_diag - jnp.diagonal(x, axis1=-2, axis2=-1)), axis=-1
+    )
 
 
 def q3_paper_literal(l: jnp.ndarray, u: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
     """Q3 exactly as §IV.E.2 writes it: |Σ_i (Σ_{j≤i} L_ij U_ji − x_ii)|.
 
     Weaker than q3: opposite-sign per-row errors cancel (see
-    tests/test_verify.py::test_q3_literal_cancellation).
+    tests/test_core_protocol.py::test_q3_literal_cancellation_weakness).
     """
-    lu_diag = jnp.einsum("ij,ji->i", jnp.tril(l), jnp.triu(u))
-    return jnp.abs(jnp.sum(lu_diag - jnp.diagonal(x)))
+    lu_diag = jnp.einsum("...ij,...ji->...i", jnp.tril(l), jnp.triu(u))
+    return jnp.abs(
+        jnp.sum(lu_diag - jnp.diagonal(x, axis1=-2, axis2=-1), axis=-1)
+    )
 
 
 def epsilon(
@@ -55,14 +70,21 @@ def epsilon(
     *,
     dtype=jnp.float64,
     c: float = 64.0,
-) -> float:
-    """Acceptance threshold ε(N) — grows with server count (paper §IV.E.3)."""
+):
+    """Acceptance threshold ε(N) — grows with server count (paper §IV.E.3).
+
+    Scalar for a single matrix; a (B,) array for a (B, n, n) stack (each
+    matrix gets a threshold scaled to its own magnitude).
+    """
     u = float(jnp.finfo(dtype).eps)
     if x is not None:
-        scale = float(jnp.linalg.norm(x) / np.sqrt(n))
+        scale = jnp.linalg.norm(x, axis=(-2, -1)) / np.sqrt(n)
     else:
-        scale = 1.0
-    return c * (1.0 + num_servers) * n * u * max(scale, 1.0) ** 2
+        scale = jnp.asarray(1.0)
+    out = c * (1.0 + num_servers) * n * u * jnp.maximum(scale, 1.0) ** 2
+    if out.ndim == 0:
+        return float(out)
+    return np.asarray(out)
 
 
 def authenticate(
@@ -73,32 +95,40 @@ def authenticate(
     num_servers: int,
     method: str = "q3",
     rng: np.random.Generator | None = None,
-    eps: float | None = None,
-) -> tuple[bool, float]:
+    eps: float | np.ndarray | None = None,
+) -> tuple[bool, float] | tuple[np.ndarray, np.ndarray]:
     """Authenticate(L, U, X) → {1, 0} plus the residual magnitude.
 
     method ∈ {"q1", "q2", "q3", "q3_literal"}. For q1/q2 a random r is drawn
-    client-side (the server never sees it).
+    client-side (the server never sees it) — an independent probe per matrix
+    when X is a (B, n, n) stack. Batched inputs return per-matrix
+    (verified, residual) numpy arrays; a single matrix returns plain
+    (bool, float).
     """
-    n = x.shape[0]
+    n = x.shape[-1]
+    batched = x.ndim == 3
     if eps is None:
         eps = epsilon(num_servers, n, x, dtype=x.dtype)
     if method in ("q1", "q2"):
         rng = rng or np.random.default_rng(0)
-        r = jnp.asarray(rng.standard_normal(n), dtype=x.dtype)
+        r_shape = (x.shape[0], n) if batched else (n,)
+        r = jnp.asarray(rng.standard_normal(r_shape), dtype=x.dtype)
         if method == "q1":
-            resid = float(jnp.max(jnp.abs(q1(l, u, x, r))))
+            resid = jnp.max(jnp.abs(q1(l, u, x, r)), axis=-1)
         else:
-            resid = float(jnp.abs(q2(l, u, x, r)))
+            resid = jnp.abs(q2(l, u, x, r))
             # Q2 contracts twice with r: widen by the extra ‖r‖² factor.
             eps = eps * n
     elif method == "q3":
-        resid = float(q3(l, u, x))
+        resid = q3(l, u, x)
     elif method == "q3_literal":
-        resid = float(q3_paper_literal(l, u, x))
+        resid = q3_paper_literal(l, u, x)
     else:
         raise ValueError(f"unknown authentication method {method!r}")
-    return bool(resid <= eps), resid
+    if batched:
+        resid = np.asarray(resid)
+        return np.asarray(resid <= eps), resid
+    return bool(resid <= eps), float(resid)
 
 
 def verification_flops(n: int, method: str) -> int:

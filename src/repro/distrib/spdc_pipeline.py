@@ -10,10 +10,17 @@ all-gather, exactly the paper's §IV.D.3 schedule.
 Program structure (SPMD, N rounds):
 
   round t:  device with axis_index == t runs its Alg.-3 row computation
-            (L_{t,0..t-1} via TRSM against upstream U; panel LU of the
-            Schur-updated diagonal block; its U row), writes the U row
+            (L_{t,0..t-1} via TRSM against upstream U; blocked-panel LU of
+            the Schur-updated diagonal block; its U row), writes the U row
             into the relay buffer; then every device forwards the relay
             buffer one hop down the ring.
+
+Batch semantics (DESIGN.md §3): every program accepts a device-local block
+of shape (b, n) — one matrix — or (B, b, n) — a stack. The batch dimension
+stays device-local (in_specs P(None, "servers", None)); the "servers" axis
+and the relay schedule are unchanged, so a single N-round wavefront sweep
+factors all B matrices: the N-1 relay hops are paid once per batch instead
+of once per matrix.
 
 The relay buffer is the fixed-shape (n, n) U matrix (rows ≥ t still zero).
 The paper's variable-size messages (rows 0..t only) would be a ragged
@@ -26,57 +33,76 @@ elsewhere — faithful to the paper's staggered activation (§IV.D.3).
 """
 from __future__ import annotations
 
-from functools import partial
+import warnings
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-
-def _lu_unblocked_local(a: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
-    from repro.core.lu import lu_unblocked
-
-    return lu_unblocked(a)
+from repro.compat import make_mesh, pcast, shard_map
 
 
-def _server_program(x_row: jnp.ndarray, *, n: int, b: int, num_servers: int,
+def _factor_diag(a: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-round diagonal factorization: the blocked panel for b >= 64 (no
+    full-tile Doolittle on the critical path), plain Doolittle below."""
+    from repro.core.lu import lu_diag_factor
+
+    return lu_diag_factor(a)
+
+
+def _batched_view(x_blk: jnp.ndarray, b: int, n: int) -> tuple[jnp.ndarray, bool]:
+    """Normalize a device-local block to (B, b, n); remember if it was 2-D."""
+    if x_blk.ndim == 3:
+        return x_blk, True
+    return x_blk.reshape(1, b, n), False
+
+
+def _trsm_right_upper_b(u: jnp.ndarray, acc: jnp.ndarray) -> jnp.ndarray:
+    """L_ik = acc @ U_kk^{-1}, batched over the leading dim."""
+    from repro.core.lu import _trsm_right_upper
+
+    return _trsm_right_upper(u, acc)
+
+
+def _server_program(x_blk: jnp.ndarray, *, n: int, b: int, num_servers: int,
                     axis: str) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Runs on every device inside shard_map. x_row: (b, n) block row."""
+    """Runs on every device inside shard_map. x_blk: (b, n) or (B, b, n)."""
     my_id = lax.axis_index(axis)
-    x_row = x_row.reshape(b, n)
+    x_row, batched = _batched_view(x_blk, b, n)
+    B = x_row.shape[0]
+    zero = jnp.zeros((), jnp.int32)
 
     def active(args):
-        u_buf, l_row, u_row = args
+        u_buf, l_row, u_row = args  # (B,n,n), (B,b,n), (B,b,n)
 
         # --- L_{i,k} for k < i (sequential in k; TRSM vs upstream U_kk) ---
-        zero = jnp.zeros((), jnp.int32)
-
         def lblk(k, l_row):
             kb = (k * b).astype(jnp.int32)
             # slice the U column panel FIRST: O(b·n·b) per step instead of
             # recomputing the full (b,n) product (§Perf C2 — 16x fewer flops
             # in the L-row loop)
-            u_col = lax.dynamic_slice(u_buf, (zero, kb), (n, b))
-            acc = lax.dynamic_slice(x_row, (zero, kb), (b, b)) - l_row @ u_col
-            ukk = lax.dynamic_slice(u_buf, (kb, kb), (b, b))
-            lik = jax.scipy.linalg.solve_triangular(ukk.T, acc.T, lower=True).T
-            return lax.dynamic_update_slice(l_row, lik, (zero, kb))
+            u_col = lax.dynamic_slice(u_buf, (zero, zero, kb), (B, n, b))
+            acc = lax.dynamic_slice(x_row, (zero, zero, kb), (B, b, b)) - l_row @ u_col
+            ukk = lax.dynamic_slice(u_buf, (zero, kb, kb), (B, b, b))
+            lik = _trsm_right_upper_b(ukk, acc)
+            return lax.dynamic_update_slice(l_row, lik, (zero, zero, kb))
 
         l_row = lax.fori_loop(0, my_id, lblk, l_row)
 
-        # --- Schur update of the whole row, panel LU of the diagonal ---
+        # --- Schur update of the whole row, blocked-panel LU of the diag ---
         s = x_row - l_row @ u_buf
         ib = (my_id * b).astype(jnp.int32)
-        sii = lax.dynamic_slice(s, (zero, ib), (b, b))
-        lii, uii = _lu_unblocked_local(sii)
-        l_row = lax.dynamic_update_slice(l_row, lii, (zero, ib))
+        sii = lax.dynamic_slice(s, (zero, zero, ib), (B, b, b))
+        lii, uii = _factor_diag(sii)
+        l_row = lax.dynamic_update_slice(l_row, lii, (zero, zero, ib))
 
         # --- U_{i,j} for j >= i, vectorized over the full row ---
         r = jax.scipy.linalg.solve_triangular(lii, s, lower=True, unit_diagonal=True)
-        cols = lax.broadcasted_iota(jnp.int32, (b, n), 1)
+        cols = lax.broadcasted_iota(jnp.int32, (B, b, n), 2)
         u_row = jnp.where(cols >= ib, r, jnp.zeros_like(r))
-        u_buf = lax.dynamic_update_slice(u_buf, u_row, (ib, zero))
+        u_buf = lax.dynamic_update_slice(u_buf, u_row, (zero, ib, zero))
         return u_buf, l_row, u_row
 
     def passive(args):
@@ -94,20 +120,22 @@ def _server_program(x_row: jnp.ndarray, *, n: int, b: int, num_servers: int,
         u_buf = lax.ppermute(u_buf, axis, fwd)
         return u_buf, l_row, u_row
 
-    u_buf0 = jnp.zeros((n, n), dtype=x_row.dtype)
-    l_row0 = jnp.zeros((b, n), dtype=x_row.dtype)
-    u_row0 = jnp.zeros((b, n), dtype=x_row.dtype)
+    u_buf0 = jnp.zeros((B, n, n), dtype=x_row.dtype)
+    l_row0 = jnp.zeros((B, b, n), dtype=x_row.dtype)
+    u_row0 = jnp.zeros((B, b, n), dtype=x_row.dtype)
     # carries become device-varying inside the loop; mark them so upfront
-    u_buf0, l_row0, u_row0 = jax.lax.pcast(
+    u_buf0, l_row0, u_row0 = pcast(
         (u_buf0, l_row0, u_row0), (axis,), to="varying"
     )
     _, l_row, u_row = lax.fori_loop(
         0, num_servers, round_fn, (u_buf0, l_row0, u_row0)
     )
+    if not batched:
+        return l_row[0], u_row[0]
     return l_row, u_row
 
 
-def _server_program_exact(x_row: jnp.ndarray, *, n: int, b: int,
+def _server_program_exact(x_blk: jnp.ndarray, *, n: int, b: int,
                           num_servers: int, axis: str):
     """Exact-relay variant (§Perf optimization, beyond-paper): rounds are
     unrolled (num_servers is static) so hop t ppermutes ONLY the U rows
@@ -116,41 +144,39 @@ def _server_program_exact(x_row: jnp.ndarray, *, n: int, b: int,
     matches the paper's §IV.D.3 message contents exactly.
     """
     my_id = lax.axis_index(axis)
-    x_row = x_row.reshape(b, n)
+    x_row, batched = _batched_view(x_blk, b, n)
+    B = x_row.shape[0]
     fwd = [(i, (i + 1) % num_servers) for i in range(num_servers)]
+    zero = jnp.zeros((), jnp.int32)
 
     def active_fn(args):
         u_buf, l_row, u_row = args
-        zero = jnp.zeros((), jnp.int32)
 
         def lblk(k, l_row):
             kb = (k * b).astype(jnp.int32)
-            # slice the U column panel FIRST: O(b·n·b) per step instead of
-            # recomputing the full (b,n) product (§Perf C2 — 16x fewer flops
-            # in the L-row loop)
-            u_col = lax.dynamic_slice(u_buf, (zero, kb), (n, b))
-            acc = lax.dynamic_slice(x_row, (zero, kb), (b, b)) - l_row @ u_col
-            ukk = lax.dynamic_slice(u_buf, (kb, kb), (b, b))
-            lik = jax.scipy.linalg.solve_triangular(ukk.T, acc.T, lower=True).T
-            return lax.dynamic_update_slice(l_row, lik, (zero, kb))
+            u_col = lax.dynamic_slice(u_buf, (zero, zero, kb), (B, n, b))
+            acc = lax.dynamic_slice(x_row, (zero, zero, kb), (B, b, b)) - l_row @ u_col
+            ukk = lax.dynamic_slice(u_buf, (zero, kb, kb), (B, b, b))
+            lik = _trsm_right_upper_b(ukk, acc)
+            return lax.dynamic_update_slice(l_row, lik, (zero, zero, kb))
 
         l_row = lax.fori_loop(0, my_id, lblk, l_row)
         s = x_row - l_row @ u_buf
         ib = (my_id * b).astype(jnp.int32)
-        sii = lax.dynamic_slice(s, (zero, ib), (b, b))
-        lii, _ = _lu_unblocked_local(sii)
-        l_row = lax.dynamic_update_slice(l_row, lii, (zero, ib))
+        sii = lax.dynamic_slice(s, (zero, zero, ib), (B, b, b))
+        lii, _ = _factor_diag(sii)
+        l_row = lax.dynamic_update_slice(l_row, lii, (zero, zero, ib))
         r = jax.scipy.linalg.solve_triangular(lii, s, lower=True,
                                               unit_diagonal=True)
-        cols = lax.broadcasted_iota(jnp.int32, (b, n), 1)
+        cols = lax.broadcasted_iota(jnp.int32, (B, b, n), 2)
         u_row = jnp.where(cols >= ib, r, jnp.zeros_like(r))
-        u_buf = lax.dynamic_update_slice(u_buf, u_row, (ib, zero))
+        u_buf = lax.dynamic_update_slice(u_buf, u_row, (zero, ib, zero))
         return u_buf, l_row, u_row
 
-    u_buf = jnp.zeros((n, n), dtype=x_row.dtype)
-    l_row = jnp.zeros((b, n), dtype=x_row.dtype)
-    u_row = jnp.zeros((b, n), dtype=x_row.dtype)
-    u_buf, l_row, u_row = jax.lax.pcast(
+    u_buf = jnp.zeros((B, n, n), dtype=x_row.dtype)
+    l_row = jnp.zeros((B, b, n), dtype=x_row.dtype)
+    u_row = jnp.zeros((B, b, n), dtype=x_row.dtype)
+    u_buf, l_row, u_row = pcast(
         (u_buf, l_row, u_row), (axis,), to="varying"
     )
     for t in range(num_servers):
@@ -159,12 +185,14 @@ def _server_program_exact(x_row: jnp.ndarray, *, n: int, b: int,
         )
         if t + 1 < num_servers:
             # relay exactly rows 0..t (static slice — rounds are unrolled)
-            chunk = lax.ppermute(u_buf[: (t + 1) * b], axis, fwd)
-            u_buf = u_buf.at[: (t + 1) * b].set(chunk)
+            chunk = lax.ppermute(u_buf[:, : (t + 1) * b], axis, fwd)
+            u_buf = u_buf.at[:, : (t + 1) * b].set(chunk)
+    if not batched:
+        return l_row[0], u_row[0]
     return l_row, u_row
 
 
-def _server_program_stream(x_row: jnp.ndarray, *, n: int, b: int,
+def _server_program_stream(x_blk: jnp.ndarray, *, n: int, b: int,
                            num_servers: int, axis: str):
     """Streaming variant (§Perf C3): no (n,n) relay buffer at all. Each
     round's live state is exactly the received U rows ((t·b, n), a static
@@ -173,47 +201,48 @@ def _server_program_stream(x_row: jnp.ndarray, *, n: int, b: int,
     exact relay; local HBM traffic drops by the (n,n) buffer copies.
     """
     my_id = lax.axis_index(axis)
-    x_row = x_row.reshape(b, n)
+    x_row, batched = _batched_view(x_blk, b, n)
+    B = x_row.shape[0]
     fwd = [(i, (i + 1) % num_servers) for i in range(num_servers)]
     zero = jnp.zeros((), jnp.int32)
 
-    l_row = jnp.zeros((b, n), dtype=x_row.dtype)
-    u_row = jnp.zeros((b, n), dtype=x_row.dtype)
-    l_row, u_row = jax.lax.pcast((l_row, u_row), (axis,), to="varying")
-    # _stream_rows[t] = rows received before round t ((t·b, n), static shape)
+    l_row = jnp.zeros((B, b, n), dtype=x_row.dtype)
+    u_row = jnp.zeros((B, b, n), dtype=x_row.dtype)
+    l_row, u_row = pcast((l_row, u_row), (axis,), to="varying")
+    # _stream_rows[t] = rows received before round t ((B, t·b, n), static)
     _stream_rows = [
-        jax.lax.pcast(jnp.zeros((t * b, n), dtype=x_row.dtype), (axis,),
-                      to="varying")
+        pcast(jnp.zeros((B, t * b, n), dtype=x_row.dtype), (axis,),
+              to="varying")
         for t in range(num_servers)
     ]
 
     for t in range(num_servers):
-        def active_fn(args, t=t, u_rows=None):
+        def active_fn(args, t=t):
             l_row, u_row = args
             tb = t * b
-            u_recv = _stream_rows[t]  # (tb, n) received rows, static shape
+            u_recv = _stream_rows[t]  # (B, tb, n) received rows, static shape
 
             def lblk(k, l_row):
                 kb = (k * b).astype(jnp.int32)
-                u_col = lax.dynamic_slice(u_recv, (zero, kb), (tb, b))
-                acc = lax.dynamic_slice(x_row, (zero, kb), (b, b)) \
-                    - l_row[:, :tb] @ u_col
-                ukk = lax.dynamic_slice(u_recv, (kb, kb), (b, b))
-                lik = jax.scipy.linalg.solve_triangular(ukk.T, acc.T, lower=True).T
-                return lax.dynamic_update_slice(l_row, lik, (zero, kb))
+                u_col = lax.dynamic_slice(u_recv, (zero, zero, kb), (B, tb, b))
+                acc = lax.dynamic_slice(x_row, (zero, zero, kb), (B, b, b)) \
+                    - l_row[:, :, :tb] @ u_col
+                ukk = lax.dynamic_slice(u_recv, (zero, kb, kb), (B, b, b))
+                lik = _trsm_right_upper_b(ukk, acc)
+                return lax.dynamic_update_slice(l_row, lik, (zero, zero, kb))
 
             if t:
                 l_row = lax.fori_loop(0, t, lblk, l_row)
-                s = x_row - l_row[:, :tb] @ u_recv
+                s = x_row - l_row[:, :, :tb] @ u_recv
             else:
                 s = x_row
             ib = jnp.asarray(t * b, jnp.int32)
-            sii = lax.dynamic_slice(s, (zero, ib), (b, b))
-            lii, _ = _lu_unblocked_local(sii)
-            l_row = lax.dynamic_update_slice(l_row, lii, (zero, ib))
+            sii = lax.dynamic_slice(s, (zero, zero, ib), (B, b, b))
+            lii, _ = _factor_diag(sii)
+            l_row = lax.dynamic_update_slice(l_row, lii, (zero, zero, ib))
             r = jax.scipy.linalg.solve_triangular(lii, s, lower=True,
                                                   unit_diagonal=True)
-            cols = lax.broadcasted_iota(jnp.int32, (b, n), 1)
+            cols = lax.broadcasted_iota(jnp.int32, (B, b, n), 2)
             u_row = jnp.where(cols >= ib, r, jnp.zeros_like(r))
             return l_row, u_row
 
@@ -228,9 +257,11 @@ def _server_program_stream(x_row: jnp.ndarray, *, n: int, b: int,
             send = jnp.concatenate(
                 [_stream_rows[t],
                  jnp.where(my_id == t, u_row, jnp.zeros_like(u_row))],
-                axis=0,
+                axis=1,
             )
             _stream_rows[t + 1] = lax.ppermute(send, axis, fwd)
+    if not batched:
+        return l_row[0], u_row[0]
     return l_row, u_row
 
 
@@ -241,45 +272,87 @@ _PROGRAMS = {
 }
 
 
+@lru_cache(maxsize=None)
+def _compiled_pipeline(program: str, n: int, batch: int | None,
+                       num_servers: int, axis: str):
+    """Build + jit one pipeline program on the default device mesh.
+
+    Cached so repeated protocol calls (the high-throughput serving path)
+    reuse the compiled executable instead of re-tracing a fresh shard_map.
+    """
+    devs = tuple(jax.devices()[:num_servers])
+    mesh = make_mesh((num_servers,), (axis,), devices=devs)
+    b = n // num_servers
+    spec = P(None, axis, None) if batch is not None else P(axis, None)
+    fn = shard_map(
+        partial(_PROGRAMS[program], n=n, b=b, num_servers=num_servers,
+                axis=axis),
+        mesh=mesh,
+        in_specs=spec,
+        out_specs=(spec, spec),
+    )
+    return jax.jit(fn)
+
+
 def lu_nserver_shardmap(
     x: jnp.ndarray, num_servers: int, *, mesh=None, axis: str = "servers",
-    exact_relay: bool = False,
+    program: str = "baseline", exact_relay: bool | str | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Distributed Alg. 3. x: (n, n) with n % num_servers == 0.
+    """Distributed Alg. 3. x: (n, n) or (B, n, n) with n % num_servers == 0.
+
+    program: one of "baseline" (fixed-shape relay), "exact" (paper-exact
+    ragged relay), "stream" (no relay buffer; received rows only). The
+    batch dimension, if present, stays device-local — one wavefront sweep
+    factors the whole stack (DESIGN.md §3).
 
     mesh: optional existing mesh containing `axis`; default builds a 1-D
     mesh over the first num_servers devices of this process.
+
+    exact_relay is deprecated: it was a bool that silently grew string
+    values; pass program="exact" / "stream" instead.
     """
-    n = x.shape[0]
+    if exact_relay is not None:
+        warnings.warn(
+            "lu_nserver_shardmap(exact_relay=...) is deprecated; use "
+            "program='baseline'|'exact'|'stream'",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        if exact_relay is True:
+            program = "exact"
+        elif exact_relay is False:
+            program = "baseline"
+        else:
+            program = exact_relay
+    if program not in _PROGRAMS:
+        raise ValueError(
+            f"unknown program {program!r}; expected one of {sorted(_PROGRAMS)}"
+        )
+    n = x.shape[-1]
+    if x.ndim not in (2, 3):
+        raise ValueError(f"x must be (n, n) or (B, n, n), got shape {x.shape}")
     if n % num_servers != 0 or n // num_servers <= 1:
         raise ValueError(f"n={n} not partitionable over N={num_servers}; augment first")
-    b = n // num_servers
+    batch = x.shape[0] if x.ndim == 3 else None
+
     if mesh is None:
-        devs = jax.devices()[:num_servers]
-        if len(devs) < num_servers:
+        if len(jax.devices()) < num_servers:
             raise ValueError(
                 f"need {num_servers} devices, have {len(jax.devices())} "
                 "(set --xla_force_host_platform_device_count)"
             )
-        mesh = jax.make_mesh(
-            (num_servers,), (axis,),
-            axis_types=(jax.sharding.AxisType.Auto,),
-            devices=devs,
-        )
-    if exact_relay is True:
-        program = _server_program_exact
-    elif exact_relay in _PROGRAMS:
-        program = _PROGRAMS[exact_relay]
+        fn = _compiled_pipeline(program, n, batch, num_servers, axis)
     else:
-        program = _server_program
-    fn = jax.shard_map(
-        partial(program, n=n, b=b, num_servers=num_servers, axis=axis),
-        mesh=mesh,
-        in_specs=P(axis, None),
-        out_specs=(P(axis, None), P(axis, None)),
-    )
-    l, u = jax.jit(fn)(x)
-    # L's unit diagonal comes back as the panel's; ensure exact unit diag
+        b = n // num_servers
+        spec = P(None, axis, None) if batch is not None else P(axis, None)
+        fn = jax.jit(shard_map(
+            partial(_PROGRAMS[program], n=n, b=b, num_servers=num_servers,
+                    axis=axis),
+            mesh=mesh,
+            in_specs=spec,
+            out_specs=(spec, spec),
+        ))
+    l, u = fn(x)
     return l, u
 
 

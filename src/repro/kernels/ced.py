@@ -11,6 +11,13 @@ memory-bound, so halving traffic halves cipher latency.
 Tiles are square (b×b, b a multiple of the 128-lane for the TPU target);
 the in-tile quarter-turn is a (sublane,lane) transpose + flip, supported by
 the Mosaic relayout path on TPU and exact in interpret mode.
+
+Batch (DESIGN.md §3): a (B, n, n) stack adds a leading batch grid axis —
+grid (B, nb, nb), each program ciphers one tile of one matrix; the
+rotation index map acts on the tile coordinates only, the batch coordinate
+passes through. All matrices in one call share the rotation degree k (the
+index map is static in k); core.cipher.cipher_batch groups a mixed-k batch
+into ≤ 3 launches.
 """
 from __future__ import annotations
 
@@ -25,18 +32,24 @@ def _ced_kernel(m_ref, v_ref, o_ref, *, k: int, mode: str):
     tile = m_ref[...]
     vcol = v_ref[...]  # (b, 1) slice of the blinding vector for these rows
     scaled = tile / vcol if mode == "ewd" else tile * vcol
-    o_ref[...] = jnp.rot90(scaled, k=-(k % 4), axes=(0, 1))
+    o_ref[...] = jnp.rot90(
+        scaled, k=-(k % 4), axes=(tile.ndim - 2, tile.ndim - 1)
+    )
 
 
-def _out_index_map(k: int, nb: int):
+def _out_index_map(k: int, nb: int, *, batched: bool):
     k = k % 4
     if k == 1:  # block (i,j) -> (j, nb-1-i)
-        return lambda i, j: (j, nb - 1 - i)
-    if k == 2:  # -> (nb-1-i, nb-1-j)
-        return lambda i, j: (nb - 1 - i, nb - 1 - j)
-    if k == 3:  # -> (nb-1-j, i)
-        return lambda i, j: (nb - 1 - j, i)
-    return lambda i, j: (i, j)
+        rot = lambda i, j: (j, nb - 1 - i)
+    elif k == 2:  # -> (nb-1-i, nb-1-j)
+        rot = lambda i, j: (nb - 1 - i, nb - 1 - j)
+    elif k == 3:  # -> (nb-1-j, i)
+        rot = lambda i, j: (nb - 1 - j, i)
+    else:
+        rot = lambda i, j: (i, j)
+    if batched:
+        return lambda b, i, j: (b, *rot(i, j))
+    return rot
 
 
 @partial(jax.jit, static_argnames=("k", "mode", "block", "interpret"))
@@ -49,22 +62,42 @@ def ced(
     block: int = 128,
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """Fused Cipher: rot90_cw^k(EWO(m, v)). n must be divisible by block
-    (callers pad via core.augment first when needed)."""
-    n = m.shape[0]
+    """Fused Cipher: rot90_cw^k(EWO(m, v)) for (n, n) or (B, n, n).
+
+    n must be divisible by block (callers pad via core.augment first when
+    needed); otherwise the largest power-of-two divisor is used.
+    """
+    n = m.shape[-1]
     if n % block != 0:
         block = 1
         while block * 2 <= n and n % (block * 2) == 0:
             block *= 2
     nb = n // block
-    return pl.pallas_call(
-        partial(_ced_kernel, k=k, mode=mode),
-        out_shape=jax.ShapeDtypeStruct((n, n), m.dtype),
-        grid=(nb, nb),
-        in_specs=[
+    batched = m.ndim == 3
+    if batched:
+        B = m.shape[0]
+        grid = (B, nb, nb)
+        in_specs = [
+            pl.BlockSpec((1, block, block), lambda b, i, j: (b, i, j)),
+            pl.BlockSpec((1, block, 1), lambda b, i, j: (b, i, 0)),
+        ]
+        out_shape = jax.ShapeDtypeStruct((B, n, n), m.dtype)
+        vv = v.reshape(B, n, 1).astype(m.dtype)
+    else:
+        grid = (nb, nb)
+        in_specs = [
             pl.BlockSpec((block, block), lambda i, j: (i, j)),
             pl.BlockSpec((block, 1), lambda i, j: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((block, block), _out_index_map(k, nb)),
+        ]
+        out_shape = jax.ShapeDtypeStruct((n, n), m.dtype)
+        vv = v.reshape(n, 1).astype(m.dtype)
+    return pl.pallas_call(
+        partial(_ced_kernel, k=k, mode=mode),
+        out_shape=out_shape,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(
+            in_specs[0].block_shape, _out_index_map(k, nb, batched=batched)
+        ),
         interpret=interpret,
-    )(m, v.reshape(-1, 1).astype(m.dtype))
+    )(m, vv)

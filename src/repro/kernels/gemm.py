@@ -6,6 +6,11 @@ tile revisited across the contraction index k (k innermost ⇒ the out tile
 stays resident in VMEM; Mosaic keeps the accumulator on-chip between grid
 steps). MXU-aligned 128× tiles; accumulation in the output dtype's widened
 form (f32 for bf16 inputs) via preferred_element_type.
+
+Batch (DESIGN.md §3): (B, m, k)·(B, k, n) stacks prepend a batch grid axis
+— grid (B, i, j, k), one independent accumulator walk per matrix. The
+contraction index stays innermost so the VMEM-residency argument is
+unchanged.
 """
 from __future__ import annotations
 
@@ -17,13 +22,15 @@ from jax.experimental import pallas as pl
 
 
 def _schur_kernel(c_ref, a_ref, b_ref, o_ref, *, acc_dtype):
-    k = pl.program_id(2)
+    # contraction index is the innermost grid axis: 2 for (i,j,k) grids,
+    # 3 for batched (b,i,j,k) grids — equal to the block rank
+    k = pl.program_id(c_ref.ndim)
 
     @pl.when(k == 0)
     def _init():
         o_ref[...] = c_ref[...]
 
-    o_ref[...] -= jnp.dot(
+    o_ref[...] -= jnp.matmul(
         a_ref[...], b_ref[...], preferred_element_type=acc_dtype
     ).astype(o_ref.dtype)
 
@@ -46,22 +53,38 @@ def schur_update(
     bk: int = 128,
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """C − A @ B with (M,K)@(K,N) tiling."""
-    m, kdim = a.shape
-    _, n = b.shape
+    """C − A @ B with (M,K)@(K,N) tiling; batched over a leading stack dim."""
+    m, kdim = a.shape[-2:]
+    n = b.shape[-1]
     bm = _fit_block(m, bm)
     bn = _fit_block(n, bn)
     bk = _fit_block(kdim, bk)
     acc_dtype = jnp.float32 if c.dtype in (jnp.bfloat16, jnp.float16) else c.dtype
-    return pl.pallas_call(
-        partial(_schur_kernel, acc_dtype=acc_dtype),
-        out_shape=jax.ShapeDtypeStruct((m, n), c.dtype),
-        grid=(m // bm, n // bn, kdim // bk),
-        in_specs=[
+    batched = c.ndim == 3
+    if batched:
+        B = c.shape[0]
+        grid = (B, m // bm, n // bn, kdim // bk)
+        in_specs = [
+            pl.BlockSpec((1, bm, bn), lambda p, i, j, k: (p, i, j)),
+            pl.BlockSpec((1, bm, bk), lambda p, i, j, k: (p, i, k)),
+            pl.BlockSpec((1, bk, bn), lambda p, i, j, k: (p, k, j)),
+        ]
+        out_specs = pl.BlockSpec((1, bm, bn), lambda p, i, j, k: (p, i, j))
+        out_shape = jax.ShapeDtypeStruct((B, m, n), c.dtype)
+    else:
+        grid = (m // bm, n // bn, kdim // bk)
+        in_specs = [
             pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
             pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        ]
+        out_specs = pl.BlockSpec((bm, bn), lambda i, j, k: (i, j))
+        out_shape = jax.ShapeDtypeStruct((m, n), c.dtype)
+    return pl.pallas_call(
+        partial(_schur_kernel, acc_dtype=acc_dtype),
+        out_shape=out_shape,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
         interpret=interpret,
     )(c, a, b)

@@ -21,6 +21,9 @@ from jax.experimental import pallas as pl
 
 def _lu_panel_kernel(x_ref, o_ref):
     a = x_ref[...]
+    squeeze = a.ndim == 3  # batched launch: one (1, b, b) tile per program
+    if squeeze:
+        a = a[0]
     b = a.shape[0]
     # 2D iota (TPU requires >= 2D); rows[i,j] = i, cols[i,j] = j
     rows = lax.broadcasted_iota(jnp.int32, (b, b), 0)
@@ -40,13 +43,25 @@ def _lu_panel_kernel(x_ref, o_ref):
         a = jnp.where((cols == k) & (rows > k), lcol[:, None], a)
         return a
 
-    o_ref[...] = lax.fori_loop(0, b, body, a)
+    out = lax.fori_loop(0, b, body, a)
+    o_ref[...] = out[None] if squeeze else out
 
 
 @partial(jax.jit, static_argnames=("interpret",))
 def lu_panel_compact(x: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
-    """Compact LU of a single panel (whole tile = one VMEM block)."""
-    b = x.shape[0]
+    """Compact LU of one panel, or of a (B, b, b) stack via a batch grid
+    axis (one panel per program instance — DESIGN.md §3)."""
+    b = x.shape[-1]
+    if x.ndim == 3:
+        B = x.shape[0]
+        return pl.pallas_call(
+            _lu_panel_kernel,
+            out_shape=jax.ShapeDtypeStruct((B, b, b), x.dtype),
+            grid=(B,),
+            in_specs=[pl.BlockSpec((1, b, b), lambda i: (i, 0, 0))],
+            out_specs=pl.BlockSpec((1, b, b), lambda i: (i, 0, 0)),
+            interpret=interpret,
+        )(x)
     return pl.pallas_call(
         _lu_panel_kernel,
         out_shape=jax.ShapeDtypeStruct((b, b), x.dtype),

@@ -20,9 +20,9 @@ def ced(m, v, k, *, mode="ewd", block=128, interpret=True):
 
 
 def lu_panel(x, *, interpret=True):
-    """Panel LU -> (L unit-lower, U upper)."""
+    """Panel LU -> (L unit-lower, U upper); batched over a leading dim."""
     compact = _lu_panel_compact(x, interpret=interpret)
-    n = x.shape[0]
+    n = x.shape[-1]
     l = jnp.tril(compact, -1) + jnp.eye(n, dtype=x.dtype)
     u = jnp.triu(compact)
     return l, u

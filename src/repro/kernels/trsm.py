@@ -22,6 +22,9 @@ from jax.experimental import pallas as pl
 def _trsm_lower_kernel(l_ref, b_ref, o_ref):
     l = l_ref[...]
     x = b_ref[...]
+    squeeze = l.ndim == 3  # batched launch: (1, n, n) / (1, n, cb) blocks
+    if squeeze:
+        l, x = l[0], x[0]
     b = l.shape[0]
     rows = lax.broadcasted_iota(jnp.int32, (b, b), 0)
     cols = lax.broadcasted_iota(jnp.int32, (b, b), 1)
@@ -34,12 +37,16 @@ def _trsm_lower_kernel(l_ref, b_ref, o_ref):
         lcol = jnp.where(jnp.arange(b) > k, lcol, 0.0)
         return x - lcol[:, None] * row_k[None, :]
 
-    o_ref[...] = lax.fori_loop(0, b, body, x)
+    out = lax.fori_loop(0, b, body, x)
+    o_ref[...] = out[None] if squeeze else out
 
 
 def _trsm_upper_right_kernel(u_ref, b_ref, o_ref):
     u = u_ref[...]
     x = b_ref[...]
+    squeeze = u.ndim == 3  # batched launch: (1, n, n) / (1, rb, n) blocks
+    if squeeze:
+        u, x = u[0], x[0]
     b = u.shape[0]
     rows = lax.broadcasted_iota(jnp.int32, (b, b), 0)
     cols = lax.broadcasted_iota(jnp.int32, (b, b), 1)
@@ -55,18 +62,33 @@ def _trsm_upper_right_kernel(u_ref, b_ref, o_ref):
         iscol = lax.broadcasted_iota(jnp.int32, x.shape, 1) == k
         return jnp.where(iscol, col_k[:, None], x)
 
-    o_ref[...] = lax.fori_loop(0, b, body, x)
+    out = lax.fori_loop(0, b, body, x)
+    o_ref[...] = out[None] if squeeze else out
 
 
 @partial(jax.jit, static_argnames=("col_block", "interpret"))
 def trsm_lower(
     l: jnp.ndarray, b: jnp.ndarray, *, col_block: int = 256, interpret: bool = True
 ) -> jnp.ndarray:
-    """Solve L X = B for X; grid over column tiles of B."""
-    n, m = b.shape
+    """Solve L X = B for X; grid over column tiles of B. A (B, n, n) /
+    (B, n, m) stack adds a leading batch grid axis (DESIGN.md §3)."""
+    n, m = b.shape[-2:]
     cb = min(col_block, m)
     while m % cb != 0:
         cb //= 2
+    if b.ndim == 3:
+        batch = b.shape[0]
+        return pl.pallas_call(
+            _trsm_lower_kernel,
+            out_shape=jax.ShapeDtypeStruct((batch, n, m), b.dtype),
+            grid=(batch, m // cb),
+            in_specs=[
+                pl.BlockSpec((1, n, n), lambda i, j: (i, 0, 0)),
+                pl.BlockSpec((1, n, cb), lambda i, j: (i, 0, j)),
+            ],
+            out_specs=pl.BlockSpec((1, n, cb), lambda i, j: (i, 0, j)),
+            interpret=interpret,
+        )(l, b)
     return pl.pallas_call(
         _trsm_lower_kernel,
         out_shape=jax.ShapeDtypeStruct((n, m), b.dtype),
@@ -84,11 +106,25 @@ def trsm_lower(
 def trsm_upper_right(
     u: jnp.ndarray, b: jnp.ndarray, *, row_block: int = 256, interpret: bool = True
 ) -> jnp.ndarray:
-    """Solve Z U = B for Z; grid over row tiles of B."""
-    m, n = b.shape
+    """Solve Z U = B for Z; grid over row tiles of B. A (B, n, n) /
+    (B, m, n) stack adds a leading batch grid axis (DESIGN.md §3)."""
+    m, n = b.shape[-2:]
     rb = min(row_block, m)
     while m % rb != 0:
         rb //= 2
+    if b.ndim == 3:
+        batch = b.shape[0]
+        return pl.pallas_call(
+            _trsm_upper_right_kernel,
+            out_shape=jax.ShapeDtypeStruct((batch, m, n), b.dtype),
+            grid=(batch, m // rb),
+            in_specs=[
+                pl.BlockSpec((1, n, n), lambda i, j: (i, 0, 0)),
+                pl.BlockSpec((1, rb, n), lambda i, j: (i, j, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, rb, n), lambda i, j: (i, j, 0)),
+            interpret=interpret,
+        )(u, b)
     return pl.pallas_call(
         _trsm_upper_right_kernel,
         out_shape=jax.ShapeDtypeStruct((m, n), b.dtype),

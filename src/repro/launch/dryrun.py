@@ -162,7 +162,8 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: Path) -> dict:
             + mem.temp_size_in_bytes - mem.alias_size_in_bytes
         ),
     }
-    cost = dict(compiled.cost_analysis())
+    from repro.compat import cost_analysis_dict
+    cost = cost_analysis_dict(compiled)
     hlo = compiled.as_text()
     hc = analyze_hlo(hlo)  # trip-count-corrected (see hlo_cost.py docstring)
 
@@ -228,7 +229,9 @@ def run_spdc_cell(mesh_name: str, out_dir: Path, n: int = 8192) -> dict:
     from repro.distrib.spdc_pipeline import _server_program
     from jax.sharding import PartitionSpec as P
     N = mesh.shape["model"]
-    fn = jax.shard_map(
+    from repro.compat import shard_map
+
+    fn = shard_map(
         partial(_server_program, n=n, b=n // N, num_servers=N, axis="model"),
         mesh=mesh, in_specs=P("model", None),
         out_specs=(P("model", None), P("model", None)),
@@ -238,7 +241,8 @@ def run_spdc_cell(mesh_name: str, out_dir: Path, n: int = 8192) -> dict:
     compiled = lowered.compile()
     compile_s = time.time() - t0
     mem = compiled.memory_analysis()
-    cost = dict(compiled.cost_analysis())
+    from repro.compat import cost_analysis_dict
+    cost = cost_analysis_dict(compiled)
     hc = analyze_hlo(compiled.as_text())
     rl = analyze(
         arch="spdc-lu", shape=f"n{n}", mesh_name=mesh_name,

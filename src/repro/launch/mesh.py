@@ -12,7 +12,8 @@ first device query.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
@@ -29,10 +30,7 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
             "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
             "any jax import"
         )
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes),
-        devices=devs[:need],
-    )
+    return make_mesh(shape, axes, devices=devs[:need])
 
 
 def make_smoke_mesh(shape=(2, 2), axes=("data", "model")) -> jax.sharding.Mesh:
@@ -40,7 +38,4 @@ def make_smoke_mesh(shape=(2, 2), axes=("data", "model")) -> jax.sharding.Mesh:
     need = 1
     for s in shape:
         need *= s
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes),
-        devices=jax.devices()[:need],
-    )
+    return make_mesh(shape, axes, devices=jax.devices()[:need])

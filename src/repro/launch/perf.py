@@ -78,7 +78,9 @@ def run_spdc_variant(mesh_name, relay, n, tag):
     N = mesh.shape["model"]
     prog = _PROGRAMS[relay if isinstance(relay, str) else
                      ("exact" if relay else "baseline")]
-    fn = jax.shard_map(
+    from repro.compat import shard_map
+
+    fn = shard_map(
         partial(prog, n=n, b=n // N, num_servers=N, axis="model"),
         mesh=mesh, in_specs=P("model", None),
         out_specs=(P("model", None), P("model", None)),

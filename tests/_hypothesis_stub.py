@@ -1,0 +1,72 @@
+"""Minimal stand-in for the slice of the `hypothesis` API this suite uses.
+
+The test image does not ship `hypothesis`; conftest.py installs this module
+under the name ``hypothesis`` only when the real package is absent, so the
+property tests keep running (as deterministic seeded sweeps) instead of
+erroring at collection. If real hypothesis is ever installed it wins.
+
+Supported surface: ``given(**strategies)``, ``settings(max_examples=,
+deadline=)``, ``strategies.integers/floats/sampled_from``.
+"""
+from __future__ import annotations
+
+import random
+import zlib
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class strategies:  # mirrors `from hypothesis import strategies as st`
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(options) -> _Strategy:
+        opts = list(options)
+        return _Strategy(lambda rng: opts[rng.randrange(len(opts))])
+
+
+def settings(max_examples: int = 20, deadline=None, **_ignored):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategy_kwargs):
+    def deco(fn):
+        # NOT functools.wraps: copying __wrapped__ would make pytest
+        # introspect the inner signature and treat strategy params as
+        # missing fixtures. The wrapper must look parameterless.
+        def runner(*args, **kwargs):
+            # @settings may decorate either the raw fn (inner) or this
+            # wrapper (outer) — check the wrapper first, then the fn.
+            max_ex = getattr(
+                runner, "_stub_max_examples",
+                getattr(fn, "_stub_max_examples", 20),
+            )
+            # Deterministic per-test seed so failures reproduce exactly.
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(max_ex):
+                drawn = {k: s.example(rng) for k, s in strategy_kwargs.items()}
+                fn(*args, **kwargs, **drawn)
+
+        runner.__name__ = fn.__name__
+        runner.__qualname__ = fn.__qualname__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        return runner
+
+    return deco

@@ -16,3 +16,16 @@ from pathlib import Path
 SRC = Path(__file__).resolve().parents[1] / "src"
 if str(SRC) not in sys.path:
     sys.path.insert(0, str(SRC))
+
+# The test image may not ship `hypothesis`; fall back to the deterministic
+# shim in tests/_hypothesis_stub.py so property tests still run.
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    import importlib.util
+
+    _stub_path = Path(__file__).resolve().parent / "_hypothesis_stub.py"
+    _spec = importlib.util.spec_from_file_location("hypothesis", _stub_path)
+    _mod = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis"] = _mod

@@ -17,13 +17,34 @@ def _wellcond(n, seed=0):
     return jnp.asarray(rng.standard_normal((n, n)) + n * np.eye(n))
 
 
+@pytest.mark.parametrize("program", ["baseline", "exact", "stream"])
 @pytest.mark.parametrize("n,servers", [(16, 4), (24, 8), (32, 2), (40, 5)])
-def test_shardmap_matches_reference(n, servers):
+def test_shardmap_matches_reference(n, servers, program):
     x = _wellcond(n, seed=servers)
-    l, u = lu_nserver_shardmap(x, servers)
+    l, u = lu_nserver_shardmap(x, servers, program=program)
     l2, u2, _ = lu_nserver(x, servers)
     np.testing.assert_allclose(np.asarray(l), np.asarray(l2), atol=1e-9)
     np.testing.assert_allclose(np.asarray(u), np.asarray(u2), atol=1e-9)
+
+
+def test_shardmap_exact_relay_deprecation_shim():
+    """The old exact_relay bool|str overload still works but warns."""
+    x = _wellcond(16, seed=1)
+    ref_l, ref_u = lu_nserver_shardmap(x, 4, program="exact")
+    for legacy, modern in [(True, "exact"), (False, "baseline"),
+                           ("stream", "stream")]:
+        with pytest.warns(DeprecationWarning):
+            l, u = lu_nserver_shardmap(x, 4, exact_relay=legacy)
+        l2, u2 = lu_nserver_shardmap(x, 4, program=modern)
+        np.testing.assert_allclose(np.asarray(l), np.asarray(l2), atol=0)
+        np.testing.assert_allclose(np.asarray(u), np.asarray(u2), atol=0)
+    np.testing.assert_allclose(np.asarray(ref_l @ ref_u), np.asarray(x),
+                               atol=1e-9)
+
+
+def test_shardmap_rejects_unknown_program():
+    with pytest.raises(ValueError, match="unknown program"):
+        lu_nserver_shardmap(_wellcond(16), 4, program="telepathy")
 
 
 def test_shardmap_hlo_is_one_way():
@@ -35,12 +56,10 @@ def test_shardmap_hlo_is_one_way():
     from repro.distrib.spdc_pipeline import _server_program
     from jax.sharding import PartitionSpec as P
 
-    mesh = jax.make_mesh(
-        (servers,), ("servers",),
-        axis_types=(jax.sharding.AxisType.Auto,),
-        devices=jax.devices()[:servers],
-    )
-    fn = jax.shard_map(
+    from repro.compat import make_mesh, shard_map
+
+    mesh = make_mesh((servers,), ("servers",), devices=jax.devices()[:servers])
+    fn = shard_map(
         partial(_server_program, n=n, b=n // servers, num_servers=servers,
                 axis="servers"),
         mesh=mesh, in_specs=P("servers", None),
@@ -72,11 +91,9 @@ def test_comm_model_overcount_bounded():
 
 # ----------------------------------------------------------- sharding rules
 def test_rules_head_fallback():
-    mesh = jax.make_mesh(
-        (2, 4), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-        devices=jax.devices(),
-    )
+    from repro.compat import make_mesh
+
+    mesh = make_mesh((2, 4), ("data", "model"), devices=jax.devices())
     r1 = make_rules(mesh, num_heads=8, num_kv_heads=4)
     assert r1.shard_heads and r1.shard_kv
     r2 = make_rules(mesh, num_heads=6, num_kv_heads=1)  # 6 % 4 != 0
@@ -104,11 +121,9 @@ def test_sharded_train_step_runs():
     from jax.sharding import NamedSharding
 
     cfg = smoke_config("tinyllama-1.1b")
-    mesh = jax.make_mesh(
-        (2, 4), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-        devices=jax.devices(),
-    )
+    from repro.compat import make_mesh
+
+    mesh = make_mesh((2, 4), ("data", "model"), devices=jax.devices())
     rules = make_rules(mesh, num_heads=cfg.num_heads,
                        num_kv_heads=cfg.num_kv_heads)
     with use_rules(rules):

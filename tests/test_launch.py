@@ -29,7 +29,9 @@ def test_hlo_cost_counts_scan_trip_counts():
     x = jnp.zeros((64, 128), jnp.float32)
     w = jnp.zeros((128, 128), jnp.float32)
     compiled = jax.jit(f).lower(x, w).compile()
-    raw = dict(compiled.cost_analysis()).get("flops", 0.0)
+    from repro.compat import cost_analysis_dict
+
+    raw = cost_analysis_dict(compiled).get("flops", 0.0)
     ours = analyze_hlo(compiled.as_text()).flops
     dot_flops = 2 * 64 * 128 * 128
     assert raw < 2 * dot_flops  # XLA: body counted once
@@ -42,10 +44,9 @@ def test_hlo_cost_collectives_in_loops():
 
     from repro.launch.hlo_cost import analyze_hlo
 
-    mesh = jax.make_mesh(
-        (2, 4), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2, devices=jax.devices()
-    )
+    from repro.compat import make_mesh
+
+    mesh = make_mesh((2, 4), ("data", "model"), devices=jax.devices())
     xs = jax.ShapeDtypeStruct((16, 64), jnp.float32,
                               sharding=NamedSharding(mesh, P("data", None)))
     ws = jax.ShapeDtypeStruct((64, 64), jnp.float32,
@@ -91,12 +92,12 @@ def test_relay_programs_equivalent():
     n, N = 32, 8
     x = jnp.asarray(rng.standard_normal((n, n)) + n * np.eye(n))
     ref_l, ref_u, _ = lu_nserver(x, N)
-    for relay in (False, True, "stream"):
-        l, u = lu_nserver_shardmap(x, N, exact_relay=relay)
+    for program in ("baseline", "exact", "stream"):
+        l, u = lu_nserver_shardmap(x, N, program=program)
         np.testing.assert_allclose(np.asarray(l), np.asarray(ref_l),
-                                   atol=1e-9, err_msg=str(relay))
+                                   atol=1e-9, err_msg=program)
         np.testing.assert_allclose(np.asarray(u), np.asarray(ref_u),
-                                   atol=1e-9, err_msg=str(relay))
+                                   atol=1e-9, err_msg=program)
 
 
 def test_dp_over_model_rules():

@@ -124,8 +124,10 @@ def test_elastic_restore_onto_different_mesh():
         mgr = CheckpointManager(d)
         st = {"w": jnp.arange(16.0).reshape(4, 4)}
         mgr.save(1, st, blocking=True)
-        mesh = jax.make_mesh(
-            (4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,),
+        from repro.compat import make_mesh
+
+        mesh = make_mesh(
+            (4,), ("data",),
             devices=jax.devices()[:4],
         )
         sh = {"w": NamedSharding(mesh, P("data", None))}
