@@ -1,0 +1,66 @@
+"""CI guard: fail when batched protocol throughput regresses vs baseline.
+
+Compares a fresh benchmark JSON (benchmarks/run.py ... --out BENCH_ci.json)
+against the committed baseline (BENCH_1.json): the best batched dets/sec
+for the chosen (n, N) shape must stay within `--factor` of the baseline's.
+
+    python benchmarks/check_regression.py BENCH_ci.json BENCH_1.json \
+        --n 64 --servers 2 --factor 2.0
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def best_batched_dets_per_sec(rows: list[dict], n: int, servers: int) -> float:
+    """Max dets/sec over the batched throughput rows for one (n, N) shape."""
+    rates = [
+        float(r["dets_per_sec"])
+        for r in rows
+        if r.get("suite") == "throughput"
+        and r.get("mode") == "batched"
+        and r.get("n") == n
+        and r.get("num_servers") == servers
+    ]
+    if not rates:
+        raise SystemExit(
+            f"no batched throughput rows for n={n}, N={servers} — "
+            "did the throughput suite run?"
+        )
+    return max(rates)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("fresh", type=Path, help="freshly measured BENCH json")
+    ap.add_argument("baseline", type=Path, help="committed baseline json")
+    ap.add_argument("--n", type=int, default=64)
+    ap.add_argument("--servers", type=int, default=2)
+    ap.add_argument(
+        "--factor",
+        type=float,
+        default=2.0,
+        help="maximum tolerated slowdown vs baseline (default 2.0x)",
+    )
+    args = ap.parse_args(argv)
+
+    fresh = json.loads(args.fresh.read_text())
+    base = json.loads(args.baseline.read_text())
+    got = best_batched_dets_per_sec(fresh["rows"], args.n, args.servers)
+    want = best_batched_dets_per_sec(base["rows"], args.n, args.servers)
+    floor = want / args.factor
+    verdict = "OK" if got >= floor else "REGRESSION"
+    print(
+        f"throughput n={args.n} N={args.servers}: fresh {got:.1f} dets/sec "
+        f"vs baseline {want:.1f} (floor {floor:.1f} at {args.factor}x) "
+        f"-> {verdict}"
+    )
+    return 0 if got >= floor else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

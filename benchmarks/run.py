@@ -18,9 +18,14 @@ future PRs have a perf trajectory to beat.
   throughput             — batch-first protocol: dets/sec vs batch size for
                            the (B, n, n) stack API vs a Python loop of
                            single-matrix calls
+  faults                 — fault-tolerant SPDC: localized-shard recovery
+                           overhead vs the paper's only remedy (full
+                           re-outsource), wire savings included
   extension_inverse      — paper §VII.B future work: secure inversion
 
-Usage: python benchmarks/run.py [suite ...]   (default: all suites)
+Usage: python benchmarks/run.py [suite ...] [--smoke] [--out PATH]
+(default: all suites; --smoke shrinks shapes for CI; --out writes the
+measured rows as JSON without touching the committed BENCH_1.json)
 """
 from __future__ import annotations
 
@@ -43,6 +48,9 @@ import numpy as np
 
 #: every emit() lands here; main() dumps it as BENCH_1.json
 RESULTS: list[dict] = []
+
+#: --smoke shrinks suite shapes for the CI benchmark job
+SMOKE = False
 
 
 def emit(name: str, us: float, **derived) -> None:
@@ -222,6 +230,8 @@ def throughput(ns=(64, 256, 1024), Ns=(2, 4, 8), batches=(1, 8, 32)):
     a real client would have)."""
     from repro.core import outsource_determinant
 
+    if SMOKE:
+        ns, Ns, batches = (64,), (2,), (1, 8, 32)
     for n in ns:
         for N in Ns:
             single_m = _wellcond(n, seed=n + N)
@@ -247,6 +257,72 @@ def throughput(ns=(64, 256, 1024), Ns=(2, 4, 8), batches=(1, 8, 32)):
                      all_verified=bool(np.asarray(resb.verified).all()))
 
 
+def faults_suite(n: int = 64, N: int = 4):
+    """Fault-tolerant SPDC: the cost of healing one misbehaving server.
+
+    Three timed paths per fault kind: honest run, tampered run with the
+    verification-driven recovery scheduler (localize → re-dispatch one
+    shard → splice), and the paper's only remedy — detect + full
+    re-outsource (≈ 2× the honest run). Derived columns: recovery overhead
+    vs honest, savings vs re-outsource, and the wire-cost ratio of one
+    shard re-dispatch vs resending the n² ciphertext."""
+    from repro.core import ServerFault, outsource_determinant
+
+    if SMOKE:
+        n = min(n, 64)
+    m = _wellcond(n, seed=5)
+    t_honest, res = _t(lambda: outsource_determinant(m, N), reps=2, warmup=1)
+    assert res.verified
+    emit(f"faults_honest_n{n}_N{N}", t_honest, suite="faults", n=n,
+         num_servers=N, mode="honest")
+
+    for kind, fault in (
+        ("tamper", ServerFault(server=1)),
+        ("dropout", ServerFault(server=1, kind="dropout")),
+    ):
+        t_rec, res_rec = _t(
+            lambda f=fault: outsource_determinant(
+                m, N, faults=f, recover=True, standby=1
+            ),
+            reps=2, warmup=1,
+        )
+        assert bool(np.all(res_rec.verified)) and res_rec.recovery.ok
+        t_full = 2.0 * t_honest  # detect (wasted run) + re-outsource
+        shard_elems = res_rec.recovery.events[0].comm_elements
+        emit(
+            f"faults_recover_{kind}_n{n}_N{N}", t_rec, suite="faults", n=n,
+            num_servers=N, mode=f"recover_{kind}",
+            rounds=res_rec.recovery.rounds,
+            overhead_vs_honest=round(t_rec / t_honest, 2),
+            speedup_vs_reoutsource=round(t_full / t_rec, 2),
+            shard_wire_elems=shard_elems,
+            reoutsource_wire_elems=(n + res_rec.padding) ** 2,
+        )
+
+    # batched: one bad matrix inside a stack — recovery splices one shard
+    # of one matrix; the re-outsource remedy redoes the WHOLE batch
+    B = 8
+    stack = _wellcond(n, seed=6, batch=B)
+    t_b, res_b = _t(
+        lambda: outsource_determinant(stack, N), reps=2, warmup=1
+    )
+    t_brec, res_brec = _t(
+        lambda: outsource_determinant(
+            stack, N,
+            faults=ServerFault(server=2, matrices=(3,)),
+            recover=True, standby=1,
+        ),
+        reps=2, warmup=1,
+    )
+    assert bool(np.all(res_brec.verified)) and res_brec.recovery.ok
+    emit(
+        f"faults_recover_batched_n{n}_N{N}_B{B}", t_brec, suite="faults",
+        n=n, num_servers=N, batch=B, mode="recover_batched",
+        overhead_vs_honest=round(t_brec / t_b, 2),
+        speedup_vs_reoutsource=round(2.0 * t_b / t_brec, 2),
+    )
+
+
 def extension_inverse(n: int = 128):
     """Paper §VII.B future work, implemented: secure outsourced inversion."""
     from repro.core import outsource_inverse
@@ -269,26 +345,37 @@ SUITES = {
     "cipher": cipher_fusion,
     "comm": spdc_pipeline_comm,
     "throughput": throughput,
+    "faults": faults_suite,
     "inverse": extension_inverse,
 }
 
 
 def main(argv: list[str] | None = None) -> None:
-    names = (argv if argv is not None else sys.argv[1:]) or list(SUITES)
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("suites", nargs="*",
+                    help=f"suites to run (default: all; pick from {list(SUITES)})")
+    ap.add_argument("--smoke", action="store_true",
+                    help="shrink shapes for the CI benchmark smoke job")
+    ap.add_argument("--out", type=str, default=None,
+                    help="write measured rows as JSON to this path "
+                         "(BENCH_1.json is never touched when set)")
+    args = ap.parse_args(argv if argv is not None else sys.argv[1:])
+    names = args.suites or list(SUITES)
     unknown = [s for s in names if s not in SUITES]
     if unknown:
         raise SystemExit(f"unknown suites {unknown}; pick from {list(SUITES)}")
+
+    global SMOKE
+    SMOKE = args.smoke
     print("name,us_per_call,derived")
     for s in names:
         SUITES[s]()
-    if set(names) != set(SUITES):
-        # subset runs must not clobber the committed full baseline
-        print("# partial suite run — BENCH_1.json left untouched "
-              "(run with no args to refresh the baseline)")
-        return
-    baseline = {
+    record = {
         "bench_version": 1,
         "suites": names,
+        "smoke": SMOKE,
         "env": {
             "jax": jax.__version__,
             "python": platform.python_version(),
@@ -299,8 +386,18 @@ def main(argv: list[str] | None = None) -> None:
         },
         "rows": RESULTS,
     }
+    if args.out is not None:
+        out = Path(args.out)
+        out.write_text(json.dumps(record, indent=1) + "\n")
+        print(f"# wrote {out} ({len(RESULTS)} rows)")
+        return
+    if set(names) != set(SUITES) or SMOKE:
+        # subset/smoke runs must not clobber the committed full baseline
+        print("# partial suite run — BENCH_1.json left untouched "
+              "(run with no args to refresh the baseline)")
+        return
     out = ROOT / "BENCH_1.json"
-    out.write_text(json.dumps(baseline, indent=1) + "\n")
+    out.write_text(json.dumps(record, indent=1) + "\n")
     print(f"# wrote {out} ({len(RESULTS)} rows)")
 
 

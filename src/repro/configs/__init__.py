@@ -14,7 +14,9 @@ from .llama4_scout_17b_a16e import LLAMA4_SCOUT
 from .mamba2_370m import MAMBA2_370M
 from .nemotron_4_340b import NEMOTRON_4_340B
 from .qwen2_vl_72b import QWEN2_VL_72B
-from .spdc import SPDC_DEFAULT, SPDC_EDGE_SMALL, SPDC_POD, SPDCConfig
+from .spdc import (
+    SPDC_DEFAULT, SPDC_EDGE_HARDENED, SPDC_EDGE_SMALL, SPDC_POD, SPDCConfig,
+)
 from .tinyllama_1_1b import TINYLLAMA_1_1B
 
 CONFIGS: dict[str, ModelConfig] = {
@@ -60,5 +62,6 @@ def smoke_config(name: str) -> ModelConfig:
 __all__ = [
     "CONFIGS", "get_config", "smoke_config", "SHAPES", "ModelConfig",
     "ShapeConfig", "cell_status", "runnable_cells",
-    "SPDCConfig", "SPDC_DEFAULT", "SPDC_EDGE_SMALL", "SPDC_POD",
+    "SPDCConfig", "SPDC_DEFAULT", "SPDC_EDGE_HARDENED", "SPDC_EDGE_SMALL",
+    "SPDC_POD",
 ]

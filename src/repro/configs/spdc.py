@@ -20,8 +20,34 @@ class SPDCConfig:
     lambda2: int = 128
     dtype: str = "float64"
     block: int = 256  # per-server blocked-LU tile
+    # fault tolerance (DESIGN.md §4): N+r standby servers provisioned for
+    # localized-shard re-dispatch, whether the client heals rejected
+    # verdicts instead of re-outsourcing, and the straggler policy (rounds
+    # a server may run late before its shard is re-dispatched; None waits).
+    standby: int = 0
+    recover: bool = False
+    straggler_deadline: int | None = None
+
+    def protocol_kwargs(self) -> dict:
+        """Keyword arguments for core.protocol.outsource_determinant —
+        the bridge that keeps these fields from drifting away from the
+        protocol's actual signature (exercised in tests/test_recovery.py)."""
+        return dict(
+            lambda1=self.lambda1,
+            lambda2=self.lambda2,
+            mode=self.mode,
+            method=self.method,
+            recover=self.recover,
+            standby=self.standby,
+            straggler_deadline=self.straggler_deadline,
+        )
 
 
 SPDC_DEFAULT = SPDCConfig()
 SPDC_EDGE_SMALL = SPDCConfig(name="spdc-edge-small", matrix_n=512, num_servers=4)
 SPDC_POD = SPDCConfig(name="spdc-pod", matrix_n=8192, num_servers=16)
+#: untrusted-edge profile: assume misbehavior, heal in place (N+2 spares)
+SPDC_EDGE_HARDENED = SPDCConfig(
+    name="spdc-edge-hardened", matrix_n=512, num_servers=4,
+    standby=2, recover=True, straggler_deadline=8,
+)

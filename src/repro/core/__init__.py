@@ -1,12 +1,27 @@
 """SPDC core — the paper's contribution as composable JAX modules."""
-from .augment import augment, augment_for_servers, padding_for_servers, padding_to_even
+from .augment import (
+    augment,
+    augment_block_row,
+    augment_for_servers,
+    padding_for_servers,
+    padding_to_even,
+)
 from .cipher import CipherMeta, cipher, cipher_batch, cipher_flops, ewo
 from .decipher import Determinant, decipher, decipher_batch, decipher_flops
+from .faults import (
+    FaultPlan,
+    ServerFault,
+    apply_faults,
+    corrupt_strip,
+    normalize_plan,
+    resolve_delays,
+)
 from .inverse import SPDCInverseResult, outsource_inverse
 from .keygen import Key, keygen, keygen_batch
 from .lu import (
     CommLog,
     det_from_lu,
+    lu_block_row,
     lu_blocked,
     lu_diag_factor,
     lu_nserver,
@@ -26,21 +41,35 @@ from .prt import (
 )
 from .sdc import checked_matmul, freivalds_residual, sdc_flag
 from .seed import Seed, seedgen, seedgen_batch
-from .verify import authenticate, epsilon, q1, q2, q3, q3_paper_literal
+from .verify import (
+    Verdict,
+    authenticate,
+    epsilon,
+    localize,
+    per_server_residuals,
+    q1,
+    q2,
+    q3,
+    q3_paper_literal,
+)
 
 __all__ = [
-    "augment", "augment_for_servers", "padding_for_servers", "padding_to_even",
+    "augment", "augment_block_row", "augment_for_servers",
+    "padding_for_servers", "padding_to_even",
     "CipherMeta", "cipher", "cipher_batch", "cipher_flops", "ewo",
     "Determinant", "decipher", "decipher_batch", "decipher_flops",
+    "FaultPlan", "ServerFault", "apply_faults", "corrupt_strip",
+    "normalize_plan", "resolve_delays",
     "Key", "keygen", "keygen_batch",
     "SPDCInverseResult", "outsource_inverse",
-    "CommLog", "det_from_lu", "lu_blocked", "lu_diag_factor", "lu_nserver",
-    "lu_panel_blocked", "lu_unblocked", "nserver_comm_model",
+    "CommLog", "det_from_lu", "lu_block_row", "lu_blocked", "lu_diag_factor",
+    "lu_nserver", "lu_panel_blocked", "lu_unblocked", "nserver_comm_model",
     "slogdet_from_lu",
     "SPDCBatchResult", "SPDCResult", "outsource_determinant",
     "quantize_seed", "rot90_cw", "rotate_degree", "rotation_sign",
     "rotation_sign_paper", "sign_preserved",
     "checked_matmul", "freivalds_residual", "sdc_flag",
     "Seed", "seedgen", "seedgen_batch",
-    "authenticate", "epsilon", "q1", "q2", "q3", "q3_paper_literal",
+    "Verdict", "authenticate", "epsilon", "localize", "per_server_residuals",
+    "q1", "q2", "q3", "q3_paper_literal",
 ]

@@ -62,3 +62,63 @@ def augment_for_servers(
     n = a.shape[-1]
     p = padding_for_servers(n, num_servers)
     return augment(a, p, key=key), p
+
+
+def augment_block_row(
+    a: jnp.ndarray,
+    p: int,
+    row0: int,
+    rows: int,
+    *,
+    key: jax.Array | None = None,
+) -> jnp.ndarray:
+    """Rows [row0, row0+rows) of `augment(a, p, key=key)` WITHOUT building
+    the full augmented matrix.
+
+    The recovery scheduler (distrib/recovery.py) re-derives exactly one
+    server's shard — a (rows, n+p) strip — when re-dispatching after a
+    localized fault: the client never has to cache the augmented ciphertext
+    to recover, only replay the deterministic padding draw (O(p·n) for R)
+    and slice. Bitwise-identical to slicing the full augmentation, because
+    the R block is drawn with the same key and shapes.
+    """
+    n = a.shape[-1]
+    batch = a.shape[:-2]
+    dtype = a.dtype
+    if not 0 <= row0 <= row0 + rows <= n + p:
+        raise ValueError(f"rows [{row0}, {row0 + rows}) outside n+p={n + p}")
+    if p == 0:
+        return a[..., row0 : row0 + rows, :]
+    # assemble only the requested rows — slice a (and the identity) BEFORE
+    # concatenating; only the R block is drawn full-width so the PRNG
+    # stream stays bitwise-identical to augment()'s
+    parts = []
+    top_rows = min(row0 + rows, n) - row0 if row0 < n else 0
+    if top_rows > 0:
+        parts.append(
+            jnp.concatenate(
+                [
+                    a[..., row0 : row0 + top_rows, :],
+                    jnp.zeros((*batch, top_rows, p), dtype=dtype),
+                ],
+                axis=-1,
+            )
+        )
+    bot_rows = rows - max(top_rows, 0)
+    if bot_rows > 0:
+        b0 = max(row0, n) - n
+        if key is not None:
+            r = jax.random.uniform(
+                key, (*batch, p, n), dtype=dtype, minval=-1.0, maxval=1.0
+            )
+        else:
+            r = jnp.zeros((*batch, p, n), dtype=dtype)
+        eye_rows = jnp.broadcast_to(
+            jnp.eye(p, dtype=dtype)[b0 : b0 + bot_rows], (*batch, bot_rows, p)
+        )
+        parts.append(
+            jnp.concatenate([r[..., b0 : b0 + bot_rows, :], eye_rows], axis=-1)
+        )
+    if len(parts) == 1:
+        return parts[0]
+    return jnp.concatenate(parts, axis=-2)

@@ -1,0 +1,223 @@
+"""Untrusted-server fault models — first-class, testable misbehavior.
+
+The paper's threat model (§IV.E) is that the N edge servers are untrusted:
+Q2/Q3 exist so the client can *reject* bad results. This module makes the
+misbehavior itself first-class so the verification and recovery layers can
+be exercised deterministically:
+
+  * ``tamper``  — the server corrupts the L/U strip it reports. Three modes
+    matching the verification-power study (tests/test_faults.py):
+    ``single`` (one element perturbed), ``sign_flip`` (one element negated),
+    ``block`` (the whole strip scaled — a wholesale substitution).
+  * ``dropout`` — the server's strip never arrives; the client sees zeros
+    (an all-zero L diagonal is structurally invalid, so Q1/Q3 flag it).
+  * ``delay``   — a straggler. ``delay_rounds`` models how many pipeline
+    rounds late the strip lands; a client with ``deadline`` d treats any
+    server later than d as dropped and re-dispatches proactively, instead
+    of stalling the whole batch behind one slow server.
+
+Faults are *per-server* (Algorithm 3's block-row ownership makes a server's
+contribution exactly one L strip + one U strip) and *batch-aware*
+(``matrices`` restricts a fault to chosen matrices of a (B, n, n) stack —
+a server may corrupt one request and serve the rest honestly).
+
+``in_band=True`` marks a tamper that enters the one-way relay chain: the
+corrupted U row is what downstream servers consume, so every block row at
+or below the faulty server is poisoned. Only the single-process simulation
+(``core.lu.lu_nserver``) models in-band corruption; the shard_map pipeline
+injects at the device-output (report) level. Recovery handles both — the
+in-band case cascades one verification-driven re-dispatch per poisoned row.
+
+Every ``ServerFault`` is a frozen (hashable) dataclass so a ``FaultPlan``
+tuple can be a static jit argument and a compile-cache key.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+TAMPER_MODES = ("single", "sign_flip", "block")
+FAULT_KINDS = ("tamper", "dropout", "delay")
+
+
+@dataclass(frozen=True)
+class ServerFault:
+    """One misbehaving server. See the module docstring for semantics."""
+
+    server: int
+    kind: str = "tamper"  # "tamper" | "dropout" | "delay"
+    mode: str = "single"  # tamper only: "single" | "sign_flip" | "block"
+    target: str = "u"  # tamper only: corrupt "l", "u", or "lu"
+    magnitude: float = 0.05
+    delay_rounds: int = 0  # delay only: rounds late
+    matrices: tuple[int, ...] | None = None  # batch indices hit; None = all
+    in_band: bool = False  # corruption enters the relay chain
+    seed: int = 0  # position PRNG for single/sign_flip
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}; expected one of {FAULT_KINDS}"
+            )
+        if self.kind == "tamper" and self.mode not in TAMPER_MODES:
+            raise ValueError(
+                f"unknown tamper mode {self.mode!r}; expected one of {TAMPER_MODES}"
+            )
+        if self.target not in ("l", "u", "lu"):
+            raise ValueError(f"target must be 'l', 'u', or 'lu', got {self.target!r}")
+        if self.server < 0:
+            raise ValueError("server must be >= 0")
+        if self.in_band and self.kind != "tamper":
+            raise ValueError(
+                "in_band is only meaningful for tamper faults (a dropped or "
+                "late server sends nothing downstream; the pipeline stalls "
+                "and the client's deadline converts it to a dropout)"
+            )
+
+
+FaultPlan = tuple[ServerFault, ...]
+
+
+def normalize_plan(faults) -> FaultPlan:
+    """Accept None, a single ServerFault, or an iterable → canonical tuple."""
+    if faults is None:
+        return ()
+    if isinstance(faults, ServerFault):
+        return (faults,)
+    plan = tuple(faults)
+    for f in plan:
+        if not isinstance(f, ServerFault):
+            raise TypeError(f"fault plan entries must be ServerFault, got {f!r}")
+    return plan
+
+
+def resolve_delays(faults, deadline: int | None) -> FaultPlan:
+    """Client-side straggler policy: a server later than ``deadline`` rounds
+    is treated as dropped (its strip re-dispatched); an on-time-enough delay
+    is harmless and removed from the effective plan. ``deadline=None``
+    tolerates any delay (the client waits)."""
+    out = []
+    for f in normalize_plan(faults):
+        if f.kind != "delay":
+            out.append(f)
+        elif deadline is not None and f.delay_rounds > deadline:
+            out.append(
+                ServerFault(server=f.server, kind="dropout", matrices=f.matrices)
+            )
+    return tuple(out)
+
+
+def _tamper_position(
+    fault: ServerFault, *, block: int, n: int, factor: str
+) -> tuple[int, int]:
+    """Deterministic (local_row, global_col) inside the faulty strip, kept
+    within the named factor's structural support so the corruption is
+    something a malicious server could actually report. ``factor`` is the
+    strip being corrupted ("l" or "u") — for target="lu" faults each
+    factor gets a position inside its own triangle."""
+    row0 = fault.server * block
+    h = (fault.seed * 1315423911 + fault.server * 2654435761) & 0x7FFFFFFF
+    if factor == "l" and fault.server > 0:
+        r = h % block
+        g = row0 + r
+        c = (h >> 8) % g  # strictly lower: 0 <= c < g
+        return r, c
+    if factor == "l":
+        # server 0's L strip: strictly-lower entries need r >= 1
+        r = 1 + h % max(1, block - 1)
+        c = (h >> 8) % (row0 + r)
+        return r, c
+    r = h % block
+    g = row0 + r
+    c = g + (h >> 8) % (n - g)  # upper: g <= c < n
+    return r, c
+
+
+def corrupt_strip(
+    strip: jnp.ndarray,
+    fault: ServerFault,
+    *,
+    n: int,
+    factor: str | None = None,
+) -> jnp.ndarray:
+    """Apply one tamper/dropout fault to a server's (..., b, n) strip.
+
+    Pure jnp with static positions — usable on full-matrix slices
+    (report-level), inside ``lu_nserver``'s wavefront (in-band), and inside
+    the shard_map server program (device-local injection). ``factor``
+    names which strip this is ("l"/"u") so single-element positions stay
+    in its triangle; defaults to the fault's target when unambiguous.
+    Batch targeting (``fault.matrices``) is handled by the callers, which
+    know the batch layout; this function corrupts every leading index it
+    is given.
+    """
+    b = strip.shape[-2]
+    if fault.kind == "dropout":
+        return jnp.zeros_like(strip)
+    if fault.kind == "delay":
+        return strip
+    if fault.mode == "block":
+        return strip * (1.0 + fault.magnitude)
+    if factor is None:
+        factor = "u" if fault.target == "lu" else fault.target
+    r, c = _tamper_position(fault, block=b, n=n, factor=factor)
+    if fault.mode == "sign_flip":
+        return strip.at[..., r, c].multiply(-1.0)
+    # single: multiplicative + additive so structurally-zero entries move too
+    return strip.at[..., r, c].set(
+        strip[..., r, c] * (1.0 + fault.magnitude) + fault.magnitude
+    )
+
+
+def _splice(full: jnp.ndarray, strip: jnp.ndarray, fault: ServerFault, b: int):
+    """Write a corrupted strip back into the full factor, honoring the
+    fault's batch targeting."""
+    sl = slice(fault.server * b, (fault.server + 1) * b)
+    if fault.matrices is not None and full.ndim == 3:
+        idx = np.asarray(fault.matrices, dtype=np.int32)
+        return full.at[idx, sl, :].set(strip[idx])
+    return full.at[..., sl, :].set(strip)
+
+
+def apply_faults(
+    l: jnp.ndarray,
+    u: jnp.ndarray,
+    faults,
+    *,
+    num_servers: int,
+    deadline: int | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Report-level fault application on full (..., n, n) factors.
+
+    Models what the *client* receives: each fault corrupts (or zeroes) the
+    responsible server's strip of L and/or U. ``deadline`` resolves delay
+    faults first (see ``resolve_delays``). In-band faults are NOT applied
+    here — they belong inside the factorization (``lu_nserver(faults=…)``).
+    """
+    n = l.shape[-1]
+    b = n // num_servers
+    for f in resolve_delays(faults, deadline):
+        if f.in_band:
+            continue
+        if f.server >= num_servers:
+            raise ValueError(f"fault targets server {f.server} of {num_servers}")
+        targets = ("l", "u") if f.kind == "dropout" else tuple(f.target)
+        sl = slice(f.server * b, (f.server + 1) * b)
+        if "l" in targets:
+            bad = corrupt_strip(l[..., sl, :], f, n=n, factor="l")
+            l = _splice(l, bad, f, b)
+        if "u" in targets:
+            bad = corrupt_strip(u[..., sl, :], f, n=n, factor="u")
+            u = _splice(u, bad, f, b)
+    return l, u
+
+
+def split_plan(faults) -> tuple[FaultPlan, FaultPlan]:
+    """(in_band, report_level) partition of a plan."""
+    plan = normalize_plan(faults)
+    in_band = tuple(f for f in plan if f.in_band)
+    report = tuple(f for f in plan if not f.in_band)
+    return in_band, report

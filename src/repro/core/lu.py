@@ -36,6 +36,7 @@ from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 
@@ -165,17 +166,29 @@ def lu_blocked(
     if use_kernels:
         from repro.kernels import ops as kops
 
-        panel = lambda x: kops.lu_panel(x, interpret=interpret)
-        trsm_l = lambda l, b: kops.trsm_lower(l, b, interpret=interpret)
-        trsm_u = lambda u, b: kops.trsm_upper_right(u, b, interpret=interpret)
-        schur = lambda c, l, u_: kops.schur_update(c, l, u_, interpret=interpret)
+        def panel(x):
+            return kops.lu_panel(x, interpret=interpret)
+
+        def trsm_l(l, b):
+            return kops.trsm_lower(l, b, interpret=interpret)
+
+        def trsm_u(u, b):
+            return kops.trsm_upper_right(u, b, interpret=interpret)
+
+        def schur(c, l, u_):
+            return kops.schur_update(c, l, u_, interpret=interpret)
     else:
         panel = lu_diag_factor
-        trsm_l = lambda l, b: jax.scipy.linalg.solve_triangular(
-            l, b, lower=True, unit_diagonal=True
-        )
+
+        def trsm_l(l, b):
+            return jax.scipy.linalg.solve_triangular(
+                l, b, lower=True, unit_diagonal=True
+            )
+
         trsm_u = _trsm_right_upper
-        schur = lambda c, l, u_: c - l @ u_
+
+        def schur(c, l, u_):
+            return c - l @ u_
 
     # Work on an nb×nb grid of views. Python loop: nb is static & small.
     blocks = [
@@ -247,8 +260,35 @@ def nserver_comm_model(n: int, num_servers: int) -> CommLog:
     return log
 
 
+def _corrupt_row_blocks(blocks, row_faults, *, n, b, batched, factor):
+    """In-band injection for lu_nserver: corrupt one server's strip of row
+    blocks IN PLACE in the wavefront, so downstream servers consume the
+    corrupted relay (the cascading-poison threat model)."""
+    from .faults import corrupt_strip
+
+    defined = [j for j in range(len(blocks)) if blocks[j] is not None]
+    strip = jnp.concatenate([blocks[j] for j in defined], axis=-1)
+    # pad to the full (…, b, n) strip so global column positions line up
+    lead = strip.shape[:-2]
+    full = jnp.zeros((*lead, b, n), dtype=strip.dtype)
+    off = {j: k for k, j in enumerate(defined)}
+    for j in defined:
+        full = full.at[..., :, j * b : (j + 1) * b].set(
+            strip[..., :, off[j] * b : (off[j] + 1) * b]
+        )
+    for f in row_faults:
+        bad = corrupt_strip(full, f, n=n, factor=factor)
+        if f.matrices is not None and batched:
+            idx = np.asarray(f.matrices, dtype=np.int32)
+            full = full.at[idx].set(bad[idx])
+        else:
+            full = bad
+    for j in defined:
+        blocks[j] = full[..., :, j * b : (j + 1) * b]
+
+
 def lu_nserver(
-    x: jnp.ndarray, num_servers: int
+    x: jnp.ndarray, num_servers: int, faults=()
 ) -> tuple[jnp.ndarray, jnp.ndarray, CommLog]:
     """Paper Algorithm 3 — N-server one-way pipelined block LU.
 
@@ -257,7 +297,16 @@ def lu_nserver(
     the one-way chain S_i → S_{i+1}. Server i computes only block row i.
     Accepts (..., n, n) — a batch factors in one sweep of the schedule.
     Returns (L, U, comm_log).
+
+    faults: a FaultPlan (see core.faults). Faults marked ``in_band`` corrupt
+    the faulty server's U strip *inside* the wavefront — downstream servers
+    consume the poisoned relay, so every later block row is contaminated
+    (recovery must cascade). Report-level faults are applied to the
+    assembled factors on the way out, exactly as ``apply_faults`` would.
     """
+    from .faults import apply_faults, split_plan
+
+    in_band, report = split_plan(faults)
     n = x.shape[-1]
     N = num_servers
     if n % N != 0 or n // N <= 1:
@@ -300,6 +349,21 @@ def lu_nserver(
             U[i][j] = jax.scipy.linalg.solve_triangular(
                 L[i][i], acc, lower=True, unit_diagonal=True
             )
+        # in-band faults: server i corrupts its strips BEFORE the relay hop,
+        # so rows > i are computed against the poisoned U row
+        row_faults = [f for f in in_band if f.server == i]
+        if row_faults:
+            batched = x.ndim == 3
+            u_faults = [f for f in row_faults if "u" in f.target]
+            l_faults = [f for f in row_faults if "l" in f.target]
+            if u_faults:
+                _corrupt_row_blocks(
+                    U[i], u_faults, n=n, b=b, batched=batched, factor="u"
+                )
+            if l_faults:
+                _corrupt_row_blocks(
+                    L[i], l_faults, n=n, b=b, batched=batched, factor="l"
+                )
 
     zero = jnp.zeros((*x.shape[:-2], b, b), dtype=x.dtype)
     for i in range(N):
@@ -308,7 +372,101 @@ def lu_nserver(
                 L[i][j] = zero
             if U[i][j] is None:
                 U[i][j] = zero
-    return jnp.block(L), jnp.block(U), log
+    l_out, u_out = jnp.block(L), jnp.block(U)
+    if report:
+        l_out, u_out = apply_faults(l_out, u_out, report, num_servers=N)
+    return l_out, u_out, log
+
+
+def lu_block_row(
+    x: jnp.ndarray,
+    u: jnp.ndarray,
+    server: int,
+    num_servers: int,
+    *,
+    style: str = "nserver",
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Recompute one server's block row of the Alg.-3 factorization.
+
+    This is the recovery primitive (distrib/recovery.py): given the
+    ciphertext ``x`` and factors whose U rows *above* ``server`` are
+    verified-correct, recompute exactly the (L strip, U strip) that server
+    ``server`` should have reported. Rows of ``u`` at or below the faulty
+    block row are masked out, so a corrupted or dropped strip never
+    contaminates its own recomputation.
+
+    style selects the *operation order*, which must match the execution
+    path that produced the surviving rows — otherwise the recomputed strip
+    differs from the honest one by enough rounding that the re-verification
+    residual of the (honest!) downstream rows can graze ε(N):
+
+      * "nserver"  — block-wise accumulation, bit-matching lu_nserver (the
+        single-process simulation, the protocol's default Parallelize).
+      * "pipeline" — full-row matmul accumulation, matching the shard_map
+        server program (distrib/spdc_pipeline).
+
+    Batch-aware over leading dims. Returns strips of shape (..., b, n).
+    """
+    n = x.shape[-1]
+    N = num_servers
+    if n % N != 0 or n // N <= 1:
+        raise ValueError(f"n={n} not partitionable over N={N}")
+    if not 0 <= server < N:
+        raise ValueError(f"server {server} out of range for N={N}")
+    if style not in ("nserver", "pipeline"):
+        raise ValueError(f"unknown style {style!r}")
+    b = n // N
+    s0 = server * b
+    x_row = x[..., s0 : s0 + b, :]
+    rows = jnp.arange(n)
+    u_above = jnp.where((rows < s0)[:, None], u, 0.0)
+    l_row = jnp.zeros_like(x_row)
+
+    if style == "pipeline":
+        for k in range(server):
+            kb = k * b
+            u_col = u_above[..., :, kb : kb + b]
+            acc = x_row[..., :, kb : kb + b] - l_row @ u_col
+            ukk = u_above[..., kb : kb + b, kb : kb + b]
+            lik = _trsm_right_upper(ukk, acc)
+            l_row = l_row.at[..., :, kb : kb + b].set(lik)
+        s = x_row - l_row @ u_above
+        sii = s[..., :, s0 : s0 + b]
+        lii, _ = lu_diag_factor(sii)
+        l_row = l_row.at[..., :, s0 : s0 + b].set(lii)
+        r = jax.scipy.linalg.solve_triangular(
+            lii, s, lower=True, unit_diagonal=True
+        )
+        u_row = jnp.where((rows >= s0)[None, :], r, 0.0)
+        return l_row, u_row
+
+    # "nserver": mirror lu_nserver's per-block sequential accumulation
+    def blk(a, i, j):
+        return a[..., i * b : (i + 1) * b, j * b : (j + 1) * b]
+
+    L = [None] * N
+    for k in range(server):
+        acc = blk(x, server, k)
+        for m in range(k):
+            acc = acc - L[m] @ blk(u_above, m, k)
+        L[k] = _trsm_right_upper(blk(u_above, k, k), acc)
+        l_row = l_row.at[..., :, k * b : (k + 1) * b].set(L[k])
+    acc = blk(x, server, server)
+    for k in range(server):
+        acc = acc - L[k] @ blk(u_above, k, server)
+    lii, uii = lu_diag_factor(acc)
+    l_row = l_row.at[..., :, s0 : s0 + b].set(lii)
+    u_row = jnp.zeros_like(x_row)
+    u_row = u_row.at[..., :, s0 : s0 + b].set(uii)
+    for j in range(server + 1, N):
+        acc = blk(x, server, j)
+        for k in range(server):
+            acc = acc - L[k] @ blk(u_above, k, j)
+        uij = jax.scipy.linalg.solve_triangular(
+            lii, acc, lower=True, unit_diagonal=True
+        )
+        u_row = u_row.at[..., :, j * b : (j + 1) * b].set(uij)
+    return l_row, u_row
 
 
 # ---------------------------------------------------------------------------

@@ -27,10 +27,11 @@ import numpy as np
 from .augment import augment_for_servers, padding_for_servers
 from .cipher import CipherMeta, Mode, cipher, cipher_batch
 from .decipher import Determinant, decipher, decipher_batch
+from .faults import normalize_plan, resolve_delays
 from .keygen import keygen, keygen_batch
 from .lu import CommLog, lu_nserver, nserver_comm_model
 from .seed import Seed, seedgen, seedgen_batch
-from .verify import authenticate
+from .verify import Verdict, authenticate
 
 
 @dataclass
@@ -43,6 +44,10 @@ class SPDCResult:
     comm: CommLog | None
     padding: int
     num_servers: int
+    #: structured Authenticate outcome (method, ε(N), per-server blame)
+    verdict: Verdict | None = None
+    #: verification-driven re-dispatch log (None unless recover=True fired)
+    recovery: object | None = None
 
 
 @dataclass
@@ -61,21 +66,55 @@ class SPDCBatchResult:
     comm: CommLog | None
     padding: int
     num_servers: int
+    verdict: Verdict | None = None
+    recovery: object | None = None
 
     @property
     def batch(self) -> int:
         return len(self.dets)
 
 
-@partial(jax.jit, static_argnames=("num_servers", "padding"))
-def _augment_lu_batch(x, aug_key, *, num_servers, padding):
+@partial(jax.jit, static_argnames=("num_servers", "padding", "faults"))
+def _augment_lu_batch(x, aug_key, *, num_servers, padding, faults=()):
     """Jitted server-side stage for the batched path: augment + one
-    N-server schedule sweep over the whole stack."""
+    N-server schedule sweep over the whole stack. The fault plan is a
+    static (hashable) argument — each distinct plan compiles once."""
     from .augment import augment
 
     x_aug = augment(x, padding, key=aug_key)
-    l, u, _ = lu_nserver(x_aug, num_servers)
+    l, u, _ = lu_nserver(x_aug, num_servers, faults=faults)
     return x_aug, l, u
+
+
+def _probe_rng(digest: bytes) -> np.random.Generator:
+    """Verification-probe generator keyed to client-secret material."""
+    return np.random.default_rng(int.from_bytes(digest[:8], "big"))
+
+
+def _batch_digest(seeds: list[Seed]) -> bytes:
+    """One dispatch-channel digest for a whole stack: H(Ψ₀-digest ‖ … ‖
+    Ψ_{B-1}-digest), so recovery sub-seeds are keyed to the batch's full
+    secret material rather than matrix 0's alone."""
+    import hashlib
+
+    h = hashlib.sha256()
+    for s in seeds:
+        h.update(s.digest)
+    return h.digest()
+
+
+def _recover_if_needed(l, u, x_aug, verdict, *, num_servers, method, recover,
+                       standby, digest, style):
+    """Shared RRVP tail: on a rejected verdict, run the verification-driven
+    re-dispatch loop (distrib.recovery) and re-authenticate."""
+    if not recover or bool(np.all(verdict.ok)):
+        return l, u, verdict, None
+    from repro.distrib.recovery import recover_lu
+
+    return recover_lu(
+        l, u, x_aug, num_servers=num_servers, method=method,
+        standby=standby, digest=digest, style=style, verdict=verdict,
+    )
 
 
 def _outsource_determinant_batch(
@@ -90,6 +129,10 @@ def _outsource_determinant_batch(
     distributed: bool,
     faithful_sign: bool,
     tamper,
+    faults,
+    recover: bool,
+    standby: int,
+    straggler_deadline: int | None,
     dtype,
 ) -> SPDCBatchResult:
     B, n = int(m.shape[0]), int(m.shape[-1])
@@ -105,37 +148,49 @@ def _outsource_determinant_batch(
     )
     padding = padding_for_servers(n, num_servers)
 
-    # --- servers: SPCP — one wavefront sweep factors the whole stack ---
+    # --- servers: SPCP — one wavefront sweep factors the whole stack,
+    # with the fault plan (untrusted-server models) applied in-line ---
+    plan = resolve_delays(normalize_plan(faults), straggler_deadline)
     if distributed:
         from .augment import augment
         from repro.distrib.spdc_pipeline import lu_nserver_shardmap
 
         x_aug = augment(x, padding, key=aug_key)
-        l, u = lu_nserver_shardmap(x_aug, num_servers)
+        l, u = lu_nserver_shardmap(x_aug, num_servers, faults=plan)
         comm = None
     else:
         x_aug, l, u = _augment_lu_batch(
-            x, aug_key, num_servers=num_servers, padding=padding
+            x, aug_key, num_servers=num_servers, padding=padding, faults=plan
         )
         comm = nserver_comm_model(n + padding, num_servers)
 
     if tamper is not None:
         l, u = tamper(l, u)
 
-    # --- client: RRVP — per-matrix accept/reject + per-matrix determinant ---
-    verified, residual = authenticate(
-        l, u, x_aug, num_servers=num_servers, method=method
+    # --- client: RRVP — per-matrix accept/reject + per-matrix determinant,
+    # healing localized faults by re-dispatching single shards ---
+    verdict = authenticate(
+        l, u, x_aug, num_servers=num_servers, method=method,
+        rng=_probe_rng(_batch_digest(seeds)),
+    )
+    l, u, verdict, report = _recover_if_needed(
+        l, u, x_aug, verdict, num_servers=num_servers, method=method,
+        recover=recover, standby=standby,
+        digest=_batch_digest(seeds),
+        style="pipeline" if distributed else "nserver",
     )
     dets = decipher_batch(seeds, metas, l, u, faithful=faithful_sign)
     return SPDCBatchResult(
         dets=dets,
-        verified=verified,
-        residual=residual,
+        verified=np.asarray(verdict.ok),
+        residual=np.asarray(verdict.residual),
         seeds=seeds,
         metas=metas,
         comm=comm,
         padding=padding,
         num_servers=num_servers,
+        verdict=verdict,
+        recovery=report,
     )
 
 
@@ -151,6 +206,10 @@ def outsource_determinant(
     distributed: bool = False,
     faithful_sign: bool = False,
     tamper=None,
+    faults=None,
+    recover: bool = False,
+    standby: int = 0,
+    straggler_deadline: int | None = None,
     dtype=jnp.float64,
 ) -> SPDCResult | SPDCBatchResult:
     """Run the full SPDC protocol for one matrix or a (B, n, n) stack.
@@ -159,12 +218,22 @@ def outsource_determinant(
     before authentication — models a malicious edge server (tests use it to
     show Q2/Q3 reject tampered results, including a single bad matrix
     inside a batch).
+    faults: a core.faults FaultPlan (or one ServerFault) — the structured
+    untrusted-server model: per-server tamper/dropout/delay, batch-aware,
+    applied inside the Parallelize stage (in-band faults poison the relay
+    in the single-process simulation; the distributed pipeline injects at
+    the device output).
+    recover: on a rejected verdict, localize the faulty server (blocked-Q1
+    attribution) and re-dispatch ONLY its shard via distrib.recovery —
+    result.recovery holds the RecoveryReport. standby: provision N+r
+    spare servers for those re-dispatches. straggler_deadline: rounds after
+    which a delayed server is treated as dropped (None = wait forever).
     distributed: route Parallelize through the shard_map pipeline (requires
     the active process to have >= num_servers JAX devices); otherwise the
     faithful single-process simulation of Algorithm 3 is used.
 
     Returns SPDCResult for a single matrix, SPDCBatchResult (per-matrix
-    dets and verdicts) for a stack.
+    dets and verdicts) for a stack; both carry the structured Verdict.
     """
     m = jnp.asarray(m, dtype=dtype)
     if m.ndim == 3:
@@ -172,7 +241,9 @@ def outsource_determinant(
             m, num_servers,
             lambda1=lambda1, lambda2=lambda2, mode=mode, method=method,
             use_kernel=use_kernel, distributed=distributed,
-            faithful_sign=faithful_sign, tamper=tamper, dtype=dtype,
+            faithful_sign=faithful_sign, tamper=tamper, faults=faults,
+            recover=recover, standby=standby,
+            straggler_deadline=straggler_deadline, dtype=dtype,
         )
     n = int(m.shape[0])
 
@@ -188,29 +259,40 @@ def outsource_determinant(
     x_aug, padding = augment_for_servers(x, num_servers, key=aug_key)
 
     # --- servers: SPCP (secure parallel computation protocol) ---
+    plan = resolve_delays(normalize_plan(faults), straggler_deadline)
     if distributed:
         from repro.distrib.spdc_pipeline import lu_nserver_shardmap
 
-        l, u = lu_nserver_shardmap(x_aug, num_servers)
+        l, u = lu_nserver_shardmap(x_aug, num_servers, faults=plan)
         comm = None
     else:
-        l, u, comm = lu_nserver(x_aug, num_servers)
+        l, u, comm = lu_nserver(x_aug, num_servers, faults=plan)
 
     if tamper is not None:
         l, u = tamper(l, u)
 
     # --- client: RRVP (result recovery & verification protocol) ---
-    verified, residual = authenticate(
-        l, u, x_aug, num_servers=num_servers, method=method
+    # probes are drawn from a generator keyed to the SECRET Ψ digest: a
+    # predictable probe could be evaded by a codebase-aware server
+    verdict = authenticate(
+        l, u, x_aug, num_servers=num_servers, method=method,
+        rng=_probe_rng(seed.digest),
+    )
+    l, u, verdict, report = _recover_if_needed(
+        l, u, x_aug, verdict, num_servers=num_servers, method=method,
+        recover=recover, standby=standby, digest=seed.digest,
+        style="pipeline" if distributed else "nserver",
     )
     det = decipher(seed, meta, l, u, faithful=faithful_sign)
     return SPDCResult(
         det=det,
-        verified=verified,
-        residual=residual,
+        verified=bool(np.all(verdict.ok)),
+        residual=verdict.residual,
         seed=seed,
         meta=meta,
         comm=comm,
         padding=padding,
         num_servers=num_servers,
+        verdict=verdict,
+        recovery=report,
     )

@@ -1,4 +1,5 @@
-"""Result authentication — paper §IV.E: Q1 (prior work), Q2, Q3, ε(N).
+"""Result authentication — paper §IV.E: Q1 (prior work), Q2, Q3, ε(N) —
+plus per-server tamper LOCALIZATION (DESIGN.md §4).
 
 Q1 (Gao & Yu):  vector residual   L(U r) − X r
 Q2 (paper):     scalar residual   (Lᵀr)ᵀ(U r) − (rᵀ X) r
@@ -17,8 +18,26 @@ rounding; the paper validates |Q| ≤ ε(N) with ε growing in N. We model
 ε(N) = c · (1 + N) · n · u · scale(X) with u the unit roundoff of the
 compute dtype and scale(X) = ‖X‖_F / √n (RMS magnitude) — first-order error
 analysis of an n-step elimination distributed over N pipeline stages.
+
+Localization: Algorithm 3 gives server i ownership of block row i of both
+factors, so a verification failure is *attributable*. Blocking the Q1
+residual vector by server — rows [i·b, (i+1)·b) — names the culprit: a
+corruption anywhere in server k's strips perturbs residual rows of block k
+(L strip: directly; U strip: through (Ur)_k, which L's lower-triangular
+support propagates only to rows ≥ k·b). The FIRST block with residual
+above ε(N) is therefore the faulty server, and blocks above it are clean —
+exactly the invariant the recovery scheduler (distrib/recovery.py) needs
+to recompute a single strip from verified upstream rows. Q3's diagonal
+terms attribute to the *diagonal owner* instead (an off-diagonal U tamper
+in row k surfaces at column c's diagonal, implicating server ⌊c/b⌋), so
+localization always uses the Q1 form regardless of the accept/reject
+method; `per_server_residuals(..., method="q3")` stays available for
+diagnostics.
 """
 from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -87,6 +106,121 @@ def epsilon(
     return np.asarray(out)
 
 
+def per_server_residuals(
+    l: jnp.ndarray,
+    u: jnp.ndarray,
+    x: jnp.ndarray,
+    *,
+    num_servers: int,
+    method: str = "q1",
+    r: jnp.ndarray | None = None,
+    rng: np.random.Generator | None = None,
+) -> np.ndarray:
+    """Blocked residuals attributing the check to Alg. 3's block rows.
+
+    Returns (N,) for a single matrix, (B, N) for a stack. method="q1" (the
+    default, and what `localize` uses) blocks the Q1 residual vector by
+    owner row — attribution-correct for any strip corruption (see module
+    docstring). method="q3" blocks the diagonal terms by diagonal owner —
+    a diagnostic view, not a culprit-namer.
+    """
+    n = x.shape[-1]
+    if n % num_servers != 0:
+        raise ValueError(f"n={n} not partitioned by N={num_servers}")
+    batched = x.ndim == 3
+    if method == "q1":
+        if r is None:
+            rng = rng or np.random.default_rng(1)
+            r_shape = (x.shape[0], n) if batched else (n,)
+            r = jnp.asarray(rng.standard_normal(r_shape), dtype=x.dtype)
+        terms = jnp.abs(q1(l, u, x, r))  # (..., n)
+        reduce = jnp.max
+    elif method == "q3":
+        lu_diag = jnp.einsum("...ij,...ji->...i", jnp.tril(l), jnp.triu(u))
+        terms = jnp.abs(lu_diag - jnp.diagonal(x, axis1=-2, axis2=-1))
+        reduce = jnp.sum
+    else:
+        raise ValueError(f"unknown localization method {method!r}")
+    blocked = terms.reshape(*terms.shape[:-1], num_servers, n // num_servers)
+    return np.asarray(reduce(blocked, axis=-1))
+
+
+@dataclass
+class Verdict:
+    """Structured Authenticate outcome: global accept/reject PLUS the
+    per-server attribution the recovery scheduler consumes.
+
+    Scalars (bool/float) for a single matrix; per-matrix numpy arrays for a
+    (B, n, n) stack. `culprit` is the FIRST server whose residual block
+    exceeds ε(N) — the owner of the earliest corrupted strip, with every
+    strip above it verified-clean (-1 when all blocks pass).
+
+    Iterating/indexing a Verdict emulates the legacy `(verified, residual)`
+    tuple with a DeprecationWarning, so pre-structured callers keep
+    working.
+    """
+
+    ok: bool | np.ndarray
+    residual: float | np.ndarray
+    method: str
+    eps: float | np.ndarray
+    num_servers: int
+    server_residual: np.ndarray | None = None  # (N,) or (B, N)
+    server_ok: np.ndarray | None = None
+    culprit: int | np.ndarray = -1
+
+    def _legacy(self, what: str):
+        warnings.warn(
+            f"{what} a Verdict as the legacy (verified, residual) tuple is "
+            "deprecated; use .ok / .residual / .server_residual",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+
+    def __iter__(self):
+        self._legacy("unpacking")
+        return iter((self.ok, self.residual))
+
+    def __getitem__(self, i):
+        self._legacy("indexing")
+        return (self.ok, self.residual)[i]
+
+    def __len__(self):
+        return 2
+
+    @property
+    def all_ok(self) -> bool:
+        return bool(np.all(self.ok))
+
+
+def _first_culprit(server_ok: np.ndarray) -> int | np.ndarray:
+    """Index of the first failing block row; -1 if all pass. (B,) if batched."""
+    bad = ~server_ok
+    if server_ok.ndim == 1:
+        return int(np.argmax(bad)) if bad.any() else -1
+    first = np.argmax(bad, axis=-1)
+    return np.where(bad.any(axis=-1), first, -1).astype(np.int64)
+
+
+def localize(
+    l: jnp.ndarray,
+    u: jnp.ndarray,
+    x: jnp.ndarray,
+    *,
+    num_servers: int,
+    eps: float | np.ndarray | None = None,
+    rng: np.random.Generator | None = None,
+) -> tuple[np.ndarray, np.ndarray, int | np.ndarray]:
+    """(server_residual, server_ok, culprit) via the blocked Q1 residual."""
+    n = x.shape[-1]
+    if eps is None:
+        eps = epsilon(num_servers, n, x, dtype=x.dtype)
+    sres = per_server_residuals(l, u, x, num_servers=num_servers, rng=rng)
+    eps_col = np.asarray(eps)[..., None] if np.ndim(eps) else eps
+    sok = sres <= eps_col
+    return sres, sok, _first_culprit(sok)
+
+
 def authenticate(
     l: jnp.ndarray,
     u: jnp.ndarray,
@@ -96,14 +230,28 @@ def authenticate(
     method: str = "q3",
     rng: np.random.Generator | None = None,
     eps: float | np.ndarray | None = None,
-) -> tuple[bool, float] | tuple[np.ndarray, np.ndarray]:
-    """Authenticate(L, U, X) → {1, 0} plus the residual magnitude.
+    attribute: bool | str = "auto",
+) -> Verdict:
+    """Authenticate(L, U, X) → Verdict (accept/reject + per-server blame).
 
-    method ∈ {"q1", "q2", "q3", "q3_literal"}. For q1/q2 a random r is drawn
-    client-side (the server never sees it) — an independent probe per matrix
-    when X is a (B, n, n) stack. Batched inputs return per-matrix
-    (verified, residual) numpy arrays; a single matrix returns plain
-    (bool, float).
+    method ∈ {"q1", "q2", "q3", "q3_literal"} picks the accept/reject
+    residual. For q1/q2 a random r is drawn client-side (the server never
+    sees it) — an independent probe per matrix when X is a (B, n, n) stack.
+    rng SHOULD be seeded from client-held secret material (the protocol
+    seeds it from the Ψ digest): with the module-default generator an
+    adversarial server who knows the codebase can pick a perturbation
+    orthogonal to the predictable probe and evade the q1/q2 checks and the
+    localization pass entirely.
+
+    attribute="auto" (default) computes the blocked-Q1 per-server
+    residuals and culprit index only when the global verdict rejects (its
+    sole consumer is the recovery scheduler) and n divides evenly over
+    num_servers; True forces the pass on accepting verdicts too, False
+    always skips it.
+
+    Returns a Verdict; its fields are scalars for a single matrix and
+    per-matrix numpy arrays for a stack. Unpacking the Verdict as the old
+    (verified, residual) tuple still works but warns.
     """
     n = x.shape[-1]
     batched = x.ndim == 3
@@ -127,8 +275,33 @@ def authenticate(
         raise ValueError(f"unknown authentication method {method!r}")
     if batched:
         resid = np.asarray(resid)
-        return np.asarray(resid <= eps), resid
-    return bool(resid <= eps), float(resid)
+        ok = np.asarray(resid <= eps)
+        eps_out = np.asarray(eps) + np.zeros_like(resid)
+    else:
+        resid = float(resid)
+        ok = bool(resid <= eps)
+        eps_out = float(np.asarray(eps))
+    verdict = Verdict(
+        ok=ok,
+        residual=resid,
+        method=method,
+        eps=eps_out,
+        num_servers=num_servers,
+    )
+    wanted = attribute is True or (
+        attribute == "auto" and not bool(np.all(verdict.ok))
+    )
+    if wanted and n % num_servers == 0:
+        # localization eps: the blocked check is Q1-shaped, so use the raw
+        # ε(N) (no Q2 widening)
+        loc_eps = epsilon(num_servers, n, x, dtype=x.dtype)
+        sres, sok, culprit = localize(
+            l, u, x, num_servers=num_servers, eps=loc_eps, rng=rng
+        )
+        verdict.server_residual = sres
+        verdict.server_ok = sok
+        verdict.culprit = culprit
+    return verdict
 
 
 def verification_flops(n: int, method: str) -> int:

@@ -1,1 +1,2 @@
-"""Distributed runtime: SPDC shard_map pipeline + LM sharding rules."""
+"""Distributed runtime: SPDC shard_map pipeline + fault recovery + LM
+sharding rules."""

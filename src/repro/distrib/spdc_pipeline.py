@@ -66,8 +66,39 @@ def _trsm_right_upper_b(u: jnp.ndarray, acc: jnp.ndarray) -> jnp.ndarray:
     return _trsm_right_upper(u, acc)
 
 
+def _inject_faults(l_row, u_row, my_id, faults, *, n, batched):
+    """Device-output fault injection (core.faults surface, distributed leg).
+
+    The mesh device playing the faulty server corrupts the (B, b, n) strips
+    it reports — tamper modes and dropouts are first-class on the real
+    pipeline, not just the single-process simulation. Faults are static
+    (part of the compile cache key); the injection is a `where` on the
+    traced axis index, so honest devices' outputs pass through untouched.
+    In-band relay poisoning is NOT modeled here (see core.lu.lu_nserver).
+    """
+    import numpy as np
+
+    from repro.core.faults import corrupt_strip
+
+    for f in faults:
+        targets = ("l", "u") if f.kind == "dropout" else tuple(f.target)
+
+        def masked(orig, factor, f=f):
+            bad = corrupt_strip(orig, f, n=n, factor=factor)
+            if f.matrices is not None and batched:
+                idx = np.asarray(f.matrices, dtype=np.int32)
+                bad = orig.at[idx].set(bad[idx])
+            return jnp.where(my_id == f.server, bad, orig)
+
+        if "l" in targets:
+            l_row = masked(l_row, "l")
+        if "u" in targets:
+            u_row = masked(u_row, "u")
+    return l_row, u_row
+
+
 def _server_program(x_blk: jnp.ndarray, *, n: int, b: int, num_servers: int,
-                    axis: str) -> tuple[jnp.ndarray, jnp.ndarray]:
+                    axis: str, faults=()) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Runs on every device inside shard_map. x_blk: (b, n) or (B, b, n)."""
     my_id = lax.axis_index(axis)
     x_row, batched = _batched_view(x_blk, b, n)
@@ -130,13 +161,16 @@ def _server_program(x_blk: jnp.ndarray, *, n: int, b: int, num_servers: int,
     _, l_row, u_row = lax.fori_loop(
         0, num_servers, round_fn, (u_buf0, l_row0, u_row0)
     )
+    if faults:
+        l_row, u_row = _inject_faults(l_row, u_row, my_id, faults, n=n,
+                                      batched=batched)
     if not batched:
         return l_row[0], u_row[0]
     return l_row, u_row
 
 
 def _server_program_exact(x_blk: jnp.ndarray, *, n: int, b: int,
-                          num_servers: int, axis: str):
+                          num_servers: int, axis: str, faults=()):
     """Exact-relay variant (§Perf optimization, beyond-paper): rounds are
     unrolled (num_servers is static) so hop t ppermutes ONLY the U rows
     0..t computed so far — (t+1)·b×n elements instead of the fixed n×n
@@ -187,13 +221,16 @@ def _server_program_exact(x_blk: jnp.ndarray, *, n: int, b: int,
             # relay exactly rows 0..t (static slice — rounds are unrolled)
             chunk = lax.ppermute(u_buf[:, : (t + 1) * b], axis, fwd)
             u_buf = u_buf.at[:, : (t + 1) * b].set(chunk)
+    if faults:
+        l_row, u_row = _inject_faults(l_row, u_row, my_id, faults, n=n,
+                                      batched=batched)
     if not batched:
         return l_row[0], u_row[0]
     return l_row, u_row
 
 
 def _server_program_stream(x_blk: jnp.ndarray, *, n: int, b: int,
-                           num_servers: int, axis: str):
+                           num_servers: int, axis: str, faults=()):
     """Streaming variant (§Perf C3): no (n,n) relay buffer at all. Each
     round's live state is exactly the received U rows ((t·b, n), a static
     shape per unrolled round); the active server computes against that row
@@ -260,6 +297,9 @@ def _server_program_stream(x_blk: jnp.ndarray, *, n: int, b: int,
                 axis=1,
             )
             _stream_rows[t + 1] = lax.ppermute(send, axis, fwd)
+    if faults:
+        l_row, u_row = _inject_faults(l_row, u_row, my_id, faults, n=n,
+                                      batched=batched)
     if not batched:
         return l_row[0], u_row[0]
     return l_row, u_row
@@ -274,7 +314,7 @@ _PROGRAMS = {
 
 @lru_cache(maxsize=None)
 def _compiled_pipeline(program: str, n: int, batch: int | None,
-                       num_servers: int, axis: str):
+                       num_servers: int, axis: str, faults=()):
     """Build + jit one pipeline program on the default device mesh.
 
     Cached so repeated protocol calls (the high-throughput serving path)
@@ -286,7 +326,7 @@ def _compiled_pipeline(program: str, n: int, batch: int | None,
     spec = P(None, axis, None) if batch is not None else P(axis, None)
     fn = shard_map(
         partial(_PROGRAMS[program], n=n, b=b, num_servers=num_servers,
-                axis=axis),
+                axis=axis, faults=faults),
         mesh=mesh,
         in_specs=spec,
         out_specs=(spec, spec),
@@ -296,7 +336,8 @@ def _compiled_pipeline(program: str, n: int, batch: int | None,
 
 def lu_nserver_shardmap(
     x: jnp.ndarray, num_servers: int, *, mesh=None, axis: str = "servers",
-    program: str = "baseline", exact_relay: bool | str | None = None,
+    program: str = "baseline", faults=(),
+    exact_relay: bool | str | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Distributed Alg. 3. x: (n, n) or (B, n, n) with n % num_servers == 0.
 
@@ -304,6 +345,12 @@ def lu_nserver_shardmap(
     ragged relay), "stream" (no relay buffer; received rows only). The
     batch dimension, if present, stays device-local — one wavefront sweep
     factors the whole stack (DESIGN.md §3).
+
+    faults: a FaultPlan (core.faults) injected at the device-output level:
+    the mesh device playing each faulty server corrupts (or zeroes) the
+    strips it reports. Delay faults must be resolved by the caller
+    (core.faults.resolve_delays); in-band relay poisoning is only modeled
+    by the single-process simulation and is rejected here.
 
     mesh: optional existing mesh containing `axis`; default builds a 1-D
     mesh over the first num_servers devices of this process.
@@ -328,6 +375,18 @@ def lu_nserver_shardmap(
         raise ValueError(
             f"unknown program {program!r}; expected one of {sorted(_PROGRAMS)}"
         )
+    from repro.core.faults import normalize_plan
+
+    faults = normalize_plan(faults)
+    if any(f.in_band for f in faults):
+        raise ValueError(
+            "in_band faults are not modeled by the shard_map pipeline; use "
+            "core.lu.lu_nserver for relay-poisoning simulation"
+        )
+    if any(f.kind == "delay" for f in faults):
+        raise ValueError(
+            "resolve delay faults first (core.faults.resolve_delays)"
+        )
     n = x.shape[-1]
     if x.ndim not in (2, 3):
         raise ValueError(f"x must be (n, n) or (B, n, n), got shape {x.shape}")
@@ -341,13 +400,13 @@ def lu_nserver_shardmap(
                 f"need {num_servers} devices, have {len(jax.devices())} "
                 "(set --xla_force_host_platform_device_count)"
             )
-        fn = _compiled_pipeline(program, n, batch, num_servers, axis)
+        fn = _compiled_pipeline(program, n, batch, num_servers, axis, faults)
     else:
         b = n // num_servers
         spec = P(None, axis, None) if batch is not None else P(axis, None)
         fn = jax.jit(shard_map(
             partial(_PROGRAMS[program], n=n, b=b, num_servers=num_servers,
-                    axis=axis),
+                    axis=axis, faults=faults),
             mesh=mesh,
             in_specs=spec,
             out_specs=(spec, spec),

@@ -40,13 +40,17 @@ def _ced_kernel(m_ref, v_ref, o_ref, *, k: int, mode: str):
 def _out_index_map(k: int, nb: int, *, batched: bool):
     k = k % 4
     if k == 1:  # block (i,j) -> (j, nb-1-i)
-        rot = lambda i, j: (j, nb - 1 - i)
+        def rot(i, j):
+            return (j, nb - 1 - i)
     elif k == 2:  # -> (nb-1-i, nb-1-j)
-        rot = lambda i, j: (nb - 1 - i, nb - 1 - j)
+        def rot(i, j):
+            return (nb - 1 - i, nb - 1 - j)
     elif k == 3:  # -> (nb-1-j, i)
-        rot = lambda i, j: (nb - 1 - j, i)
+        def rot(i, j):
+            return (nb - 1 - j, i)
     else:
-        rot = lambda i, j: (i, j)
+        def rot(i, j):
+            return (i, j)
     if batched:
         return lambda b, i, j: (b, *rot(i, j))
     return rot

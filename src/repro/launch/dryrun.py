@@ -102,7 +102,8 @@ def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str):
         params_sds = _sds(params_sds, rules, specs)
         batch_sds = _batch_specs(cfg, shape, rules)
 
-        shardings_of = lambda tree: jax.tree.map(lambda x: x.sharding, tree)
+        def shardings_of(tree):
+            return jax.tree.map(lambda x: x.sharding, tree)
         if shape.kind == "train":
             opt_cfg = AdamWConfig(state_dtype=cfg.opt_dtype)
             opt_sds = jax.eval_shape(lambda p: init_opt_state(p, opt_cfg), params_sds)

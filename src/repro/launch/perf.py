@@ -40,7 +40,7 @@ def _coerce(v: str):
 
 def run_variant(arch, shape_name, mesh_name, overrides, tag):
     import repro.launch.dryrun as dr
-    from repro.configs import SHAPES, get_config
+    from repro.configs import get_config
     from repro.launch.hlo_cost import analyze_hlo
     from repro.launch.mesh import make_production_mesh
     from repro.launch.roofline import analyze

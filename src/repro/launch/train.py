@@ -21,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding
 
-from repro.configs import CONFIGS, ModelConfig, get_config, smoke_config
+from repro.configs import ModelConfig, get_config, smoke_config
 from repro.distrib.sharding import make_rules, use_rules
 from repro.launch.mesh import make_smoke_mesh
 from repro.models.common import split_tree

@@ -130,8 +130,11 @@ def _local(q, k, v, qpos, *, kind, window, scale):
     vc = v.reshape(b, nc, w, h, d)
     pc = qpos.reshape(b, nc, w)
     if kind == "sliding":
-        prev = lambda x: jnp.pad(x[:, :-1], ((0, 0), (1, 0)) + ((0, 0),) * (x.ndim - 2),
-                                 constant_values=0)
+        def prev(x):
+            return jnp.pad(
+                x[:, :-1], ((0, 0), (1, 0)) + ((0, 0),) * (x.ndim - 2),
+                constant_values=0,
+            )
         kc2 = jnp.concatenate([prev(kc), kc], axis=2)  # (b, nc, 2w, h, d)
         vc2 = jnp.concatenate([prev(vc), vc], axis=2)
         kp2 = jnp.concatenate(

@@ -42,7 +42,9 @@ def schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
 
 
 def init_opt_state(params, cfg: AdamWConfig) -> dict:
-    zeros = lambda p: jnp.zeros(p.shape, cfg.state_dtype)
+    def zeros(p):
+        return jnp.zeros(p.shape, cfg.state_dtype)
+
     return {
         "mu": jax.tree.map(zeros, params),
         "nu": jax.tree.map(zeros, params),

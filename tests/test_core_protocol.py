@@ -7,10 +7,9 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core import (
-    augment, augment_for_servers, cipher, decipher, keygen,
-    lu_blocked, lu_nserver, lu_unblocked, outsource_determinant,
-    padding_for_servers, q1, q2, q3, q3_paper_literal, seedgen,
-    slogdet_from_lu,
+    augment, cipher, keygen, lu_blocked, lu_nserver, lu_unblocked,
+    outsource_determinant, padding_for_servers, q1, q2, q3,
+    q3_paper_literal, seedgen, slogdet_from_lu,
 )
 
 

@@ -6,7 +6,7 @@ import pytest
 
 from repro.core import freivalds_residual, outsource_determinant, sdc_flag
 from repro.core.lu import lu_nserver
-from repro.distrib.sharding import ShardingRules, make_rules, use_rules
+from repro.distrib.sharding import make_rules, use_rules
 from repro.distrib.spdc_pipeline import (
     lu_nserver_shardmap, pipeline_collective_bytes,
 )

@@ -1,0 +1,301 @@
+"""Untrusted-server fault models + tamper localization + verification power.
+
+Covers the fault-injection surface (core.faults through core.lu.lu_nserver
+and the shard_map pipeline), the blocked-Q1 per-server attribution
+(core.verify.localize / Verdict), and MEASURED false-accept /
+false-reject rates of Q2 and Q3 under the three tamper models — per server
+and per matrix within a batch.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    ServerFault, apply_faults, authenticate, localize, lu_nserver,
+    normalize_plan, per_server_residuals, resolve_delays,
+)
+
+N = 4
+B_N = 16  # matrix size for most cases (b = 4 per server)
+
+
+def _wellcond(n, seed=0, batch=None):
+    rng = np.random.default_rng(seed)
+    if batch is None:
+        return jnp.asarray(rng.standard_normal((n, n)) + n * np.eye(n))
+    return jnp.asarray(
+        rng.standard_normal((batch, n, n)) + n * np.eye(n)
+    )
+
+
+@pytest.fixture(scope="module")
+def honest_lu():
+    a = _wellcond(B_N, seed=1)
+    l, u, _ = lu_nserver(a, N)
+    return a, l, u
+
+
+# ------------------------------------------------------------- fault plumbing
+def test_fault_plan_normalization_and_validation():
+    f = ServerFault(server=1)
+    assert normalize_plan(None) == ()
+    assert normalize_plan(f) == (f,)
+    assert normalize_plan([f, f]) == (f, f)
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        ServerFault(server=0, kind="gremlin")
+    with pytest.raises(ValueError, match="unknown tamper mode"):
+        ServerFault(server=0, mode="subtle")
+    with pytest.raises(ValueError, match="in_band"):
+        ServerFault(server=0, kind="dropout", in_band=True)
+    with pytest.raises(TypeError):
+        normalize_plan(["not a fault"])
+
+
+def test_resolve_delays_deadline_policy():
+    late = ServerFault(server=2, kind="delay", delay_rounds=5)
+    tam = ServerFault(server=1)
+    # no deadline: the client waits; the delay disappears from the plan
+    assert resolve_delays((late, tam), None) == (tam,)
+    # past deadline: treated as a dropout of the same server
+    eff = resolve_delays((late, tam), 3)
+    assert eff[0].kind == "dropout" and eff[0].server == 2
+    assert eff[1] is tam
+    # within deadline: tolerated
+    assert resolve_delays((late,), 8) == ()
+
+
+@pytest.mark.parametrize("mode", ["single", "sign_flip", "block"])
+@pytest.mark.parametrize("target", ["l", "u"])
+def test_report_faults_touch_only_owner_strip(honest_lu, mode, target):
+    a, l, u = honest_lu
+    b = B_N // N
+    for s in range(N):
+        f = ServerFault(server=s, mode=mode, target=target)
+        lf, uf = apply_faults(l, u, (f,), num_servers=N)
+        changed, same = (lf, uf) if target == "l" else (uf, lf)
+        ref = l if target == "l" else u
+        other = u if target == "l" else l
+        assert not np.allclose(
+            np.asarray(changed[s * b : (s + 1) * b]),
+            np.asarray(ref[s * b : (s + 1) * b]),
+        )
+        # rows outside the faulty server's strip are untouched
+        mask = np.ones(B_N, dtype=bool)
+        mask[s * b : (s + 1) * b] = False
+        np.testing.assert_array_equal(
+            np.asarray(changed[mask]), np.asarray(ref[mask])
+        )
+        np.testing.assert_array_equal(np.asarray(same), np.asarray(other))
+
+
+def test_dropout_zeroes_both_strips(honest_lu):
+    a, l, u = honest_lu
+    b = B_N // N
+    lf, uf = apply_faults(
+        l, u, (ServerFault(server=2, kind="dropout"),), num_servers=N
+    )
+    assert np.all(np.asarray(lf[2 * b : 3 * b]) == 0)
+    assert np.all(np.asarray(uf[2 * b : 3 * b]) == 0)
+
+
+def test_in_band_fault_poisons_downstream_only():
+    a = _wellcond(B_N, seed=2)
+    l, u, _ = lu_nserver(a, N)
+    b = B_N // N
+    li, ui, _ = lu_nserver(
+        a, N, faults=(ServerFault(server=1, in_band=True, target="u"),)
+    )
+    # upstream of the faulty server: bitwise clean
+    np.testing.assert_array_equal(np.asarray(li[:b]), np.asarray(l[:b]))
+    np.testing.assert_array_equal(np.asarray(ui[:b]), np.asarray(u[:b]))
+    # the faulty row and everything downstream is contaminated
+    assert not np.allclose(np.asarray(ui[b : 2 * b]), np.asarray(u[b : 2 * b]))
+    assert not np.allclose(np.asarray(li[2 * b :]), np.asarray(l[2 * b :]))
+
+
+def test_batch_targeted_fault_hits_only_named_matrices():
+    ab = _wellcond(B_N, seed=3, batch=4)
+    lh, uh, _ = lu_nserver(ab, N)
+    lf, uf, _ = lu_nserver(
+        ab, N, faults=(ServerFault(server=2, kind="dropout", matrices=(1, 3)),)
+    )
+    b = B_N // N
+    for i in (1, 3):
+        assert np.all(np.asarray(uf[i, 2 * b : 3 * b]) == 0)
+    for i in (0, 2):
+        np.testing.assert_array_equal(np.asarray(uf[i]), np.asarray(uh[i]))
+
+
+@pytest.mark.parametrize("program", ["baseline", "exact", "stream"])
+def test_shardmap_injection_matches_simulation(program):
+    from repro.distrib.spdc_pipeline import lu_nserver_shardmap
+
+    a = _wellcond(B_N, seed=4)
+    f = ServerFault(server=2, mode="sign_flip", target="u")
+    lf, uf = lu_nserver_shardmap(a, N, program=program, faults=(f,))
+    lr, ur, _ = lu_nserver(a, N, faults=(f,))
+    np.testing.assert_allclose(np.asarray(lf), np.asarray(lr), atol=1e-9)
+    np.testing.assert_allclose(np.asarray(uf), np.asarray(ur), atol=1e-9)
+
+
+def test_shardmap_rejects_in_band_and_unresolved_delay():
+    from repro.distrib.spdc_pipeline import lu_nserver_shardmap
+
+    a = _wellcond(B_N, seed=5)
+    with pytest.raises(ValueError, match="in_band"):
+        lu_nserver_shardmap(
+            a, N, faults=(ServerFault(server=0, in_band=True),)
+        )
+    with pytest.raises(ValueError, match="delay"):
+        lu_nserver_shardmap(
+            a, N, faults=(ServerFault(server=0, kind="delay", delay_rounds=1),)
+        )
+
+
+# ------------------------------------------------------------- localization
+@pytest.mark.parametrize("kind,mode,target", [
+    ("tamper", "single", "u"),
+    ("tamper", "single", "l"),
+    ("tamper", "sign_flip", "u"),
+    ("tamper", "block", "lu"),
+    ("dropout", "single", "u"),
+])
+def test_localize_names_the_faulty_server(honest_lu, kind, mode, target):
+    a, l, u = honest_lu
+    for s in range(N):
+        f = ServerFault(server=s, kind=kind, mode=mode, target=target)
+        lf, uf = apply_faults(l, u, (f,), num_servers=N)
+        sres, sok, culprit = localize(lf, uf, a, num_servers=N)
+        assert culprit == s, (kind, mode, target, s, sres)
+        # every strip ABOVE the culprit is verified-clean — the invariant
+        # recovery relies on to recompute from upstream rows
+        assert sok[:s].all()
+
+
+def test_localize_clean_run_blames_nobody(honest_lu):
+    a, l, u = honest_lu
+    sres, sok, culprit = localize(l, u, a, num_servers=N)
+    assert culprit == -1 and sok.all()
+
+
+def test_q3_per_server_view_attributes_to_diagonal_owner(honest_lu):
+    """Documented contrast: an off-diagonal U tamper in server 1's strip at
+    a column owned by server 3 shows up in the q3 view at server 3 (the
+    diagonal owner), while the q1 localization names server 1 (the row
+    owner). This is exactly why localize() uses the q1 form."""
+    a, l, u = honest_lu
+    b = B_N // N
+    # tamper server 1's U strip in the last block column (owner: server 3)
+    col = 3 * b + 1
+    uf = u.at[b, col].add(0.5)
+    q3_view = per_server_residuals(l, uf, a, num_servers=N, method="q3")
+    q1_view = per_server_residuals(l, uf, a, num_servers=N, method="q1")
+    assert np.argmax(q3_view) == 3
+    eps = 1e-9
+    assert (q1_view > eps).nonzero()[0][0] == 1
+
+
+def test_batched_localization_per_matrix(honest_lu):
+    ab = _wellcond(B_N, seed=6, batch=5)
+    l, u, _ = lu_nserver(ab, N)
+    plan = (
+        ServerFault(server=0, matrices=(1,)),
+        ServerFault(server=3, kind="dropout", matrices=(4,)),
+    )
+    lf, uf = apply_faults(l, u, plan, num_servers=N)
+    v = authenticate(lf, uf, ab, num_servers=N)
+    assert list(v.culprit) == [-1, 0, -1, -1, 3]
+    assert list(v.ok) == [True, False, True, True, False]
+
+
+# -------------------------------------------------- verdict structure + shim
+def test_verdict_fields_and_legacy_shim(honest_lu):
+    a, l, u = honest_lu
+    v = authenticate(l, u, a, num_servers=N, method="q2", attribute=True)
+    assert v.method == "q2" and v.num_servers == N
+    assert v.eps > 0 and v.server_residual.shape == (N,)
+    assert v.all_ok
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        ok, resid = v
+    assert ok is v.ok and resid == v.residual
+    with pytest.warns(DeprecationWarning):
+        assert v[0] is v.ok
+    assert len(v) == 2
+
+
+def test_verdict_attribute_flag_skips_localization(honest_lu):
+    a, l, u = honest_lu
+    v = authenticate(l, u, a, num_servers=N, attribute=False)
+    assert v.server_residual is None and v.culprit == -1
+    # default "auto": no attribution pass on accepting verdicts (its only
+    # consumer is the recovery scheduler), full attribution on rejects
+    v_auto = authenticate(l, u, a, num_servers=N)
+    assert v_auto.ok and v_auto.server_residual is None
+
+
+# ------------------------------------------- verification power (measured)
+TAMPER_MODES = ["single", "sign_flip", "block"]
+
+
+@pytest.mark.parametrize("method", ["q2", "q3"])
+def test_false_reject_rate_is_zero_on_honest_runs(method):
+    """FR: honest factorizations must never be rejected (20 trials/server
+    count — ε(N) absorbs the no-pivot drift)."""
+    rejects = 0
+    trials = 20
+    for t in range(trials):
+        a = _wellcond(B_N, seed=100 + t)
+        l, u, _ = lu_nserver(a, N)
+        v = authenticate(l, u, a, num_servers=N, method=method)
+        rejects += not v.ok
+    assert rejects == 0
+
+
+@pytest.mark.parametrize("method", ["q2", "q3"])
+@pytest.mark.parametrize("mode", TAMPER_MODES)
+def test_false_accept_rate_per_server(method, mode):
+    """FA: tampered results must be rejected — measured over every server ×
+    10 trials with fresh matrices and fresh tamper positions."""
+    accepts = 0
+    trials = 10
+    for s in range(N):
+        for t in range(trials):
+            a = _wellcond(B_N, seed=200 + t)
+            l, u, _ = lu_nserver(a, N)
+            f = ServerFault(server=s, mode=mode, target="u", seed=t)
+            lf, uf = apply_faults(l, u, (f,), num_servers=N)
+            v = authenticate(lf, uf, a, num_servers=N, method=method)
+            accepts += bool(np.all(v.ok))
+    assert accepts == 0, f"{accepts}/{N * trials} tampered results accepted"
+
+
+@pytest.mark.parametrize("method", ["q2", "q3"])
+@pytest.mark.parametrize("mode", TAMPER_MODES)
+def test_false_accept_rate_per_matrix_in_batch(method, mode):
+    """Batched FA: one tampered matrix inside a stack must flip ONLY its
+    own verdict — measured per matrix over 8 trials."""
+    trials = 8
+    B = 4
+    for t in range(trials):
+        ab = _wellcond(B_N, seed=300 + t, batch=B)
+        l, u, _ = lu_nserver(ab, N)
+        bad = t % B
+        f = ServerFault(server=t % N, mode=mode, target="u",
+                        matrices=(bad,), seed=t)
+        lf, uf = apply_faults(l, u, (f,), num_servers=N)
+        v = authenticate(lf, uf, ab, num_servers=N, method=method)
+        want = np.ones(B, dtype=bool)
+        want[bad] = False
+        assert (v.ok == want).all(), (t, v.ok, want)
+
+
+def test_dropout_never_accepted():
+    for method in ("q1", "q2", "q3"):
+        for s in range(N):
+            a = _wellcond(B_N, seed=400 + s)
+            l, u, _ = lu_nserver(a, N)
+            lf, uf = apply_faults(
+                l, u, (ServerFault(server=s, kind="dropout"),), num_servers=N
+            )
+            v = authenticate(lf, uf, a, num_servers=N, method=method)
+            assert not v.ok

@@ -67,7 +67,7 @@ def test_hlo_cost_collectives_in_loops():
 
 def test_roofline_analyze_terms():
     from repro.launch.hlo_cost import Cost
-    from repro.launch.roofline import HBM_BW, PEAK_FLOPS, analyze
+    from repro.launch.roofline import analyze
 
     hc = Cost(flops=197e12, hbm_bytes=819e9 / 2)
     hc.coll_wire = {"all-reduce": 100e9}
