@@ -1,11 +1,17 @@
-"""CI guard: fail when batched protocol throughput regresses vs baseline.
+"""CI guard: fail when batched protocol / gateway throughput regresses.
 
 Compares a fresh benchmark JSON (benchmarks/run.py ... --out BENCH_ci.json)
-against the committed baseline (BENCH_1.json): the best batched dets/sec
-for the chosen (n, N) shape must stay within `--factor` of the baseline's.
+against a committed baseline: the best dets/sec for the chosen (n, N)
+shape must stay within `--factor` of the baseline's.
 
+    # batched-protocol guard (rows from the `throughput` suite, BENCH_1)
     python benchmarks/check_regression.py BENCH_ci.json BENCH_1.json \
         --n 64 --servers 2 --factor 2.0
+    # gateway guard (rows from the `gateway` suite, BENCH_2): additionally
+    # requires the fresh gateway to beat the fresh per-request loop rate —
+    # the serving layer's acceptance claim
+    python benchmarks/check_regression.py BENCH_ci.json BENCH_2.json \
+        --suite gateway --n 64 --servers 2 --factor 2.0
 """
 
 from __future__ import annotations
@@ -16,20 +22,22 @@ import sys
 from pathlib import Path
 
 
-def best_batched_dets_per_sec(rows: list[dict], n: int, servers: int) -> float:
-    """Max dets/sec over the batched throughput rows for one (n, N) shape."""
+def best_dets_per_sec(
+    rows: list[dict], n: int, servers: int, *, suite: str, modes: tuple
+) -> float:
+    """Max dets/sec over a suite's rows for one (n, N) shape and mode set."""
     rates = [
         float(r["dets_per_sec"])
         for r in rows
-        if r.get("suite") == "throughput"
-        and r.get("mode") == "batched"
+        if r.get("suite") == suite
+        and r.get("mode") in modes
         and r.get("n") == n
         and r.get("num_servers") == servers
     ]
     if not rates:
         raise SystemExit(
-            f"no batched throughput rows for n={n}, N={servers} — "
-            "did the throughput suite run?"
+            f"no {suite} rows with mode in {modes} for n={n}, N={servers} — "
+            f"did the {suite} suite run?"
         )
     return max(rates)
 
@@ -46,20 +54,44 @@ def main(argv: list[str] | None = None) -> int:
         default=2.0,
         help="maximum tolerated slowdown vs baseline (default 2.0x)",
     )
+    ap.add_argument(
+        "--suite",
+        choices=("throughput", "gateway"),
+        default="throughput",
+        help="which suite's rows to guard (gateway also checks the "
+        "gateway-beats-loop acceptance claim on the fresh run)",
+    )
     args = ap.parse_args(argv)
 
     fresh = json.loads(args.fresh.read_text())
     base = json.loads(args.baseline.read_text())
-    got = best_batched_dets_per_sec(fresh["rows"], args.n, args.servers)
-    want = best_batched_dets_per_sec(base["rows"], args.n, args.servers)
-    floor = want / args.factor
-    verdict = "OK" if got >= floor else "REGRESSION"
-    print(
-        f"throughput n={args.n} N={args.servers}: fresh {got:.1f} dets/sec "
-        f"vs baseline {want:.1f} (floor {floor:.1f} at {args.factor}x) "
-        f"-> {verdict}"
+    modes = ("batched",) if args.suite == "throughput" else ("gateway",)
+    got = best_dets_per_sec(
+        fresh["rows"], args.n, args.servers, suite=args.suite, modes=modes
     )
-    return 0 if got >= floor else 1
+    want = best_dets_per_sec(
+        base["rows"], args.n, args.servers, suite=args.suite, modes=modes
+    )
+    floor = want / args.factor
+    ok = got >= floor
+    print(
+        f"{args.suite} n={args.n} N={args.servers}: fresh {got:.1f} dets/sec "
+        f"vs baseline {want:.1f} (floor {floor:.1f} at {args.factor}x) "
+        f"-> {'OK' if ok else 'REGRESSION'}"
+    )
+    if args.suite == "gateway":
+        loop = best_dets_per_sec(
+            fresh["rows"], args.n, args.servers, suite="gateway",
+            modes=("loop",),
+        )
+        beats = got > loop
+        print(
+            f"gateway-beats-loop n={args.n} N={args.servers}: gateway "
+            f"{got:.1f} vs per-request {loop:.1f} dets/sec "
+            f"-> {'OK' if beats else 'FAIL'}"
+        )
+        ok = ok and beats
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":

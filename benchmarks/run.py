@@ -21,11 +21,16 @@ future PRs have a perf trajectory to beat.
   faults                 — fault-tolerant SPDC: localized-shard recovery
                            overhead vs the paper's only remedy (full
                            re-outsource), wire savings included
+  gateway                — micro-batching edge gateway (DESIGN.md §5):
+                           sustained dets/sec + p50/p99 latency vs offered
+                           load, against the per-request call baseline;
+                           rows land in BENCH_2.json (its own CI guard)
   extension_inverse      — paper §VII.B future work: secure inversion
 
 Usage: python benchmarks/run.py [suite ...] [--smoke] [--out PATH]
 (default: all suites; --smoke shrinks shapes for CI; --out writes the
-measured rows as JSON without touching the committed BENCH_1.json)
+measured rows as JSON without touching the committed BENCH_1.json /
+BENCH_2.json baselines)
 """
 from __future__ import annotations
 
@@ -323,6 +328,123 @@ def faults_suite(n: int = 64, N: int = 4):
     )
 
 
+def gateway_suite(n: int = 64, N: int = 2):
+    """Micro-batching gateway vs the per-request client pattern.
+
+    The acceptance claim of the serving layer (ISSUE 3 / ROADMAP): a
+    gateway coalescing single-matrix requests into batched sweeps sustains
+    MORE aggregate dets/sec at n=64, N=2 than clients calling
+    `outsource_determinant` one matrix at a time. Three measurement modes:
+
+      * loop      — the baseline: one warm single-matrix call, 1/t rate;
+      * gateway   — saturating open-loop arrivals (every request queued at
+                    once), flushed in max_batch sweeps; sustained rate and
+                    per-request p50/p99 from submit to verdict;
+      * paced     — open-loop arrivals at a multiple of the loop rate
+                    (the queueing-latency view of the same service).
+
+    All gateway runs are warmed first (the jit shape set a padded gateway
+    can produce), so rows measure steady-state serving, not compilation.
+    """
+    import asyncio
+
+    from repro.configs import SPDCConfig, SPDCGatewayConfig
+    from repro.core import outsource_determinant
+    from repro.launch.serve_spdc import run_workload
+    from repro.serve import AsyncSPDCGateway, SPDCGateway
+
+    requests = 32 if SMOKE else 64
+    batch_grid = (8,) if SMOKE else (8, 32)
+    paced_mults = (4.0,) if SMOKE else (2.0, 8.0)
+
+    rng = np.random.default_rng(7)
+    spdc = SPDCConfig(num_servers=N)
+
+    # baseline: the pre-gateway client pattern (same as throughput's loop)
+    single_m = _wellcond(n, seed=n + N)
+    t_single_us, res = _t(
+        lambda: outsource_determinant(single_m, N), reps=3, warmup=1
+    )
+    loop_rate = 1e6 / t_single_us
+    emit(f"gateway_loop_n{n}_N{N}", t_single_us, suite="gateway", n=n,
+         num_servers=N, mode="loop", dets_per_sec=round(loop_rate, 2),
+         verified=bool(res.verified))
+
+    def lat_ms(results, q):
+        return round(float(np.percentile(
+            [r.latency_s for r in results], q) * 1e3), 2)
+
+    for max_batch in batch_grid:
+        cfg = SPDCGatewayConfig(
+            name=f"bench-gw-B{max_batch}", buckets=(n,),
+            max_batch=max_batch, max_wait_us=2000.0, spdc=spdc,
+        )
+        gw = SPDCGateway(cfg)
+        gw.warmup()
+        mats = [_wellcond(n, seed=1000 + i) for i in range(requests)]
+        t0 = time.perf_counter()
+        for m in mats:
+            gw.submit(m)  # auto-flushes each time the bucket fills
+        gw.drain()
+        wall = time.perf_counter() - t0
+        served = [gw.take(rid) for rid in range(requests)]
+        assert all(r is not None for r in served), gw.stats.as_dict()
+        rate = requests / wall
+        emit(f"gateway_batched_n{n}_N{N}_B{max_batch}", wall * 1e6 / requests,
+             suite="gateway", n=n, num_servers=N, mode="gateway",
+             max_batch=max_batch, requests=requests,
+             dets_per_sec=round(rate, 2),
+             speedup_vs_loop=round(rate / loop_rate, 2),
+             p50_ms=lat_ms(served, 50), p99_ms=lat_ms(served, 99),
+             all_verified=bool(all(r.verified for r in served)))
+
+    # paced open-loop: offered load as a multiple of the loop-client rate
+    cfg = SPDCGatewayConfig(
+        name="bench-gw-paced", buckets=(n,), max_batch=8,
+        max_wait_us=2000.0, spdc=spdc,
+    )
+    SPDCGateway(cfg).warmup()  # shapes shared via the process jit cache
+    for mult in paced_mults:
+        offered = mult * loop_rate
+        mats = [_wellcond(n, seed=2000 + i) for i in range(requests)]
+        arrival_s = np.cumsum(
+            rng.exponential(1.0 / offered, requests)
+        )
+
+        async def drive():
+            async with AsyncSPDCGateway(cfg) as agw:
+                return await run_workload(agw, mats, arrival_s)
+
+        results, rejected, wall = asyncio.run(drive())
+        served = [r for r in results if r is not None]
+        emit(f"gateway_paced_n{n}_N{N}_x{mult:g}", wall * 1e6 / max(len(served), 1),
+             suite="gateway", n=n, num_servers=N, mode="paced",
+             offered_mult=mult, offered_per_sec=round(offered, 2),
+             requests=requests, rejected=rejected,
+             dets_per_sec=round(len(served) / wall, 2),
+             p50_ms=lat_ms(served, 50), p99_ms=lat_ms(served, 99),
+             all_verified=bool(all(r.verified for r in served)))
+
+    # mixed raw sizes coalesced in one bucket — the gateway's defining case
+    cfg = SPDCGatewayConfig(
+        name="bench-gw-mixed", buckets=(n,), max_batch=8,
+        max_wait_us=2000.0, spdc=spdc,
+    )
+    gw = SPDCGateway(cfg)
+    sizes = rng.integers(n // 2, n + 1, size=requests)
+    mats = [np.asarray(_wellcond(int(s), seed=3000 + i))
+            for i, s in enumerate(sizes)]
+    t0 = time.perf_counter()
+    rids = [gw.submit(m) for m in mats]
+    gw.drain()
+    wall = time.perf_counter() - t0
+    served = [gw.take(r) for r in rids]
+    emit(f"gateway_mixed_n{n // 2}-{n}_N{N}", wall * 1e6 / requests,
+         suite="gateway", n=n, num_servers=N, mode="gateway_mixed",
+         requests=requests, dets_per_sec=round(requests / wall, 2),
+         all_verified=bool(all(r.verified for r in served)))
+
+
 def extension_inverse(n: int = 128):
     """Paper §VII.B future work, implemented: secure outsourced inversion."""
     from repro.core import outsource_inverse
@@ -346,6 +468,7 @@ SUITES = {
     "comm": spdc_pipeline_comm,
     "throughput": throughput,
     "faults": faults_suite,
+    "gateway": gateway_suite,
     "inverse": extension_inverse,
 }
 
@@ -391,14 +514,25 @@ def main(argv: list[str] | None = None) -> None:
         out.write_text(json.dumps(record, indent=1) + "\n")
         print(f"# wrote {out} ({len(RESULTS)} rows)")
         return
-    if set(names) != set(SUITES) or SMOKE:
+    # the gateway suite owns its own committed baseline (BENCH_2.json, the
+    # serving-layer perf trajectory); everything else lives in BENCH_1.json
+    gw_rows = [r for r in RESULTS if r.get("suite") == "gateway"]
+    if "gateway" in names and not SMOKE:
+        out2 = ROOT / "BENCH_2.json"
+        record2 = dict(record, suites=["gateway"], rows=gw_rows)
+        out2.write_text(json.dumps(record2, indent=1) + "\n")
+        print(f"# wrote {out2} ({len(gw_rows)} rows)")
+    core_names = [s for s in names if s != "gateway"]
+    if set(core_names) != set(s for s in SUITES if s != "gateway") or SMOKE:
         # subset/smoke runs must not clobber the committed full baseline
         print("# partial suite run — BENCH_1.json left untouched "
               "(run with no args to refresh the baseline)")
         return
     out = ROOT / "BENCH_1.json"
-    out.write_text(json.dumps(record, indent=1) + "\n")
-    print(f"# wrote {out} ({len(RESULTS)} rows)")
+    record1 = dict(record, suites=core_names,
+                   rows=[r for r in RESULTS if r.get("suite") != "gateway"])
+    out.write_text(json.dumps(record1, indent=1) + "\n")
+    print(f"# wrote {out} ({len(record1['rows'])} rows)")
 
 
 if __name__ == "__main__":

@@ -117,6 +117,15 @@ def main():
               f"call ({dt:.3f}s, {args.batch / dt:.1f} dets/sec, "
               f"all verified)")
 
+        # mixed sizes? a list coalesces into ONE padded sweep (the gateway
+        # path — see examples/edge_gateway.py and repro.launch.serve_spdc)
+        mixed = [rng.standard_normal((k, k)) + k * np.eye(k)
+                 for k in (args.n // 2, args.n // 3, args.n)]
+        mres = outsource_determinant(mixed, args.servers)
+        assert mres.verified.all()
+        print(f"  mixed sizes {[m.shape[0] for m in mixed]} coalesced at "
+              f"n'={mres.pad_to}: all verified")
+
 
 if __name__ == "__main__":
     main()

@@ -51,3 +51,58 @@ SPDC_EDGE_HARDENED = SPDCConfig(
     name="spdc-edge-hardened", matrix_n=512, num_servers=4,
     standby=2, recover=True, straggler_deadline=8,
 )
+
+
+@dataclass(frozen=True)
+class SPDCGatewayConfig:
+    """Micro-batching gateway presets (DESIGN.md §5) — consumed by
+    repro.serve.spdc_gateway.SPDCGateway.
+
+    buckets: the padded sizes n' requests are coalesced at. A request of
+        raw size n lands in the smallest bucket >= n; each bucket flushes
+        as ONE mixed-size protocol sweep. Every bucket must satisfy
+        n' % num_servers == 0 and n' / num_servers > 1.
+    max_batch: flush a bucket the moment it holds this many requests.
+    max_wait_us: flush a partial bucket once its oldest request has waited
+        this long (latency bound for light traffic).
+    max_pending: backpressure — submissions beyond this many queued
+        requests raise GatewayOverloaded instead of growing the queue
+        without bound.
+    pad_batches: round every flushed batch up to the next power-of-two
+        (≤ max_batch) with discarded dummy matrices, so a bucket only ever
+        compiles log2(max_batch)+1 sweep shapes instead of one per
+        partial-flush size — a timeout flush of 3 requests must not pay a
+        fresh XLA compile in its latency.
+    warmup_batches: batch sizes pre-compiled per bucket by
+        SPDCGateway.warmup() so the first live flush doesn't pay jit cost
+        (empty = the pad_batches shape set).
+    spdc: the protocol parameters (server count, cipher mode, verification
+        method, recovery policy) every bucket runs with by default;
+        per-request overrides open extra buckets.
+    """
+
+    name: str = "spdc-gateway"
+    buckets: tuple[int, ...] = (64, 128, 256, 512, 1024)
+    max_batch: int = 32
+    max_wait_us: float = 2_000.0
+    max_pending: int = 4096
+    pad_batches: bool = True
+    warmup_batches: tuple[int, ...] = ()
+    spdc: SPDCConfig = SPDC_EDGE_SMALL
+
+
+SPDC_GATEWAY_DEFAULT = SPDCGatewayConfig()
+#: latency-biased: small batches, tight flush deadline
+SPDC_GATEWAY_LOWLAT = SPDCGatewayConfig(
+    name="spdc-gateway-lowlat", max_batch=8, max_wait_us=250.0,
+)
+#: throughput-biased: deep batches, generous coalescing window
+SPDC_GATEWAY_BULK = SPDCGatewayConfig(
+    name="spdc-gateway-bulk", max_batch=128, max_wait_us=20_000.0,
+    max_pending=16384,
+)
+#: untrusted-edge serving: every bucket sweep heals rejected verdicts in
+#: place with N+2 standby servers (DESIGN.md §4)
+SPDC_GATEWAY_HARDENED = SPDCGatewayConfig(
+    name="spdc-gateway-hardened", spdc=SPDC_EDGE_HARDENED,
+)

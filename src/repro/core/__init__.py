@@ -30,7 +30,13 @@ from .lu import (
     nserver_comm_model,
     slogdet_from_lu,
 )
-from .protocol import SPDCBatchResult, SPDCResult, outsource_determinant
+from .protocol import (
+    SPDCBatchResult,
+    SPDCResult,
+    common_padded_size,
+    outsource_determinant,
+    outsource_determinant_mixed,
+)
 from .prt import (
     quantize_seed,
     rot90_cw,
@@ -65,7 +71,8 @@ __all__ = [
     "CommLog", "det_from_lu", "lu_block_row", "lu_blocked", "lu_diag_factor",
     "lu_nserver", "lu_panel_blocked", "lu_unblocked", "nserver_comm_model",
     "slogdet_from_lu",
-    "SPDCBatchResult", "SPDCResult", "outsource_determinant",
+    "SPDCBatchResult", "SPDCResult", "common_padded_size",
+    "outsource_determinant", "outsource_determinant_mixed",
     "quantize_seed", "rot90_cw", "rotate_degree", "rotation_sign",
     "rotation_sign_paper", "sign_preserved",
     "checked_matmul", "freivalds_residual", "sdc_flag",

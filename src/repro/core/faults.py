@@ -78,6 +78,11 @@ class ServerFault:
             )
 
 
+#: A fault plan is a (possibly empty) tuple of ServerFaults — frozen and
+#: hashable so it can ride through jit as a static argument and serve as a
+#: compile-cache key. Build one with `normalize_plan(...)`, which accepts
+#: None, a bare ServerFault, or any iterable of them; protocol entry
+#: points (`outsource_determinant(faults=...)`) normalize for you.
 FaultPlan = tuple[ServerFault, ...]
 
 

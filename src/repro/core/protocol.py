@@ -24,12 +24,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .augment import augment_for_servers, padding_for_servers
+from .augment import augment, augment_for_servers, padding_for_servers
 from .cipher import CipherMeta, Mode, cipher, cipher_batch
 from .decipher import Determinant, decipher, decipher_batch
 from .faults import normalize_plan, resolve_delays
 from .keygen import keygen, keygen_batch
 from .lu import CommLog, lu_nserver, nserver_comm_model
+from .prt import rotate_degree
 from .seed import Seed, seedgen, seedgen_batch
 from .verify import Verdict, authenticate
 
@@ -56,6 +57,14 @@ class SPDCBatchResult:
 
     `verified`/`residual` are (B,) arrays — one accept/reject decision per
     matrix (a single tampered matrix in the batch is flagged individually).
+
+    `padding` is always a border *amount* (rows added), matching
+    SPDCResult. On the uniform (B, n, n) path it is the per-matrix amount
+    and `paddings`/`pad_to` are None. On the mixed-size path
+    (`outsource_determinant_mixed`, the gateway's coalescing primitive)
+    the amount differs per matrix: `paddings` lists them, `pad_to` is the
+    common padded size n' the stack ran at, and `padding` is 0 — there is
+    no single amount, so consumers of `n + padding` must use `pad_to`.
     """
 
     dets: list[Determinant]
@@ -68,6 +77,10 @@ class SPDCBatchResult:
     num_servers: int
     verdict: Verdict | None = None
     recovery: object | None = None
+    #: mixed-size path only: per-matrix border amounts
+    paddings: list[int] | None = None
+    #: mixed-size path only: the common padded size n' of the sweep
+    pad_to: int | None = None
 
     @property
     def batch(self) -> int:
@@ -79,8 +92,6 @@ def _augment_lu_batch(x, aug_key, *, num_servers, padding, faults=()):
     """Jitted server-side stage for the batched path: augment + one
     N-server schedule sweep over the whole stack. The fault plan is a
     static (hashable) argument — each distinct plan compiles once."""
-    from .augment import augment
-
     x_aug = augment(x, padding, key=aug_key)
     l, u, _ = lu_nserver(x_aug, num_servers, faults=faults)
     return x_aug, l, u
@@ -152,7 +163,6 @@ def _outsource_determinant_batch(
     # with the fault plan (untrusted-server models) applied in-line ---
     plan = resolve_delays(normalize_plan(faults), straggler_deadline)
     if distributed:
-        from .augment import augment
         from repro.distrib.spdc_pipeline import lu_nserver_shardmap
 
         x_aug = augment(x, padding, key=aug_key)
@@ -194,6 +204,186 @@ def _outsource_determinant_batch(
     )
 
 
+@partial(jax.jit, static_argnames=("num_servers", "faults"))
+def _lu_sweep(x_aug, *, num_servers, faults=()):
+    """Jitted server-side stage for pre-augmented stacks (the mixed-size
+    path): one N-server schedule sweep, fault plan static."""
+    l, u, _ = lu_nserver(x_aug, num_servers, faults=faults)
+    return l, u
+
+
+def _cipher_host(m: np.ndarray, v: np.ndarray, k: int, mode: Mode) -> np.ndarray:
+    """Host-side Cipher for the mixed-size path: EWO row scaling + k
+    clockwise quarter-turns, pure numpy.
+
+    The gateway serves arbitrary client sizes; routing each raw (n, n)
+    shape through the jnp cipher would compile a throwaway XLA program per
+    distinct size. The O(n²) elementwise/relayout work is a host
+    responsibility here (exactly the paper's client-side PMOP placement);
+    the device only ever sees the uniform stacked bucket shape. numpy f64
+    elementwise ops round identically to XLA-CPU f64, so results agree
+    with core.cipher.cipher to the last ulp.
+    """
+    if mode == "ewd":
+        x = m / v.reshape(-1, 1)
+    elif mode == "ewm":
+        x = m * v.reshape(-1, 1)
+    else:
+        raise ValueError(f"unknown EWO mode: {mode!r}")
+    return np.rot90(x, k=-(k % 4))  # cw k turns == ccw -k (core.prt.rot90_cw)
+
+
+def _augment_host(x: np.ndarray, p: int, rng: np.random.Generator) -> np.ndarray:
+    """Host-side det-preserving border for the mixed-size path:
+    [[X, 0], [R, I_p]] with R drawn from client-secret-keyed `rng`
+    (core.augment semantics, numpy execution — same per-shape-compile
+    rationale as _cipher_host)."""
+    if p == 0:
+        return x
+    n = x.shape[-1]
+    out = np.zeros((n + p, n + p), dtype=x.dtype)
+    out[:n, :n] = x
+    out[n:, :n] = rng.uniform(-1.0, 1.0, (p, n))
+    out[n:, n:] = np.eye(p, dtype=x.dtype)
+    return out
+
+
+def common_padded_size(sizes, num_servers: int) -> int:
+    """Smallest n' ≥ max(sizes) that the N-server schedule accepts
+    (n' % N == 0 and n'/N > 1) — the shared shape a mixed-size stack is
+    padded to before one coalesced sweep."""
+    n = max(int(s) for s in sizes)
+    return n + padding_for_servers(n, num_servers)
+
+
+def outsource_determinant_mixed(
+    ms,
+    num_servers: int,
+    *,
+    pad_to: int | None = None,
+    lambda1: int = 128,
+    lambda2: int = 128,
+    mode: Mode = "ewd",
+    method: str = "q3",
+    distributed: bool = False,
+    faithful_sign: bool = False,
+    tamper=None,
+    faults=None,
+    recover: bool = False,
+    standby: int = 0,
+    straggler_deadline: int | None = None,
+    dtype=jnp.float64,
+) -> SPDCBatchResult:
+    """Run the SPDC protocol for a *mixed-size* list of matrices in ONE
+    coalesced N-server sweep — the gateway's batching primitive.
+
+    Each matrix is ciphered at its own size (per-matrix Ψ, blinding vector,
+    rotation — the host-side PMOP stages are O(n²) and cheap), then its
+    ciphertext is padded post-cipher to the common size `pad_to` with the
+    determinant-preserving [[X, 0], [R, I]] border (core.augment) so the
+    whole stack shares one (B, n', n') shape and ONE jitted LU sweep, ONE
+    batched verification, and one relay-hop schedule amortize over all B
+    requests.
+
+    Padding MUST happen after Cipher: the PRT stage rotates the matrix by
+    a secret quarter-turn count, and any pre-cipher identity/zero border
+    lands in a rotated position where the no-pivot LU hits structurally
+    singular leading minors (see DESIGN.md §5.1). The post-cipher border
+    never rotates; its Schur complement is exactly I, so it adds no
+    element growth for any padding amount.
+
+    pad_to: common padded size (defaults to the smallest valid size for
+    the largest matrix, `common_padded_size`). Must satisfy
+    pad_to % num_servers == 0 and pad_to / num_servers > 1.
+    Remaining keywords match `outsource_determinant` (which routes list /
+    tuple inputs here); `faults=`/`recover=`/`standby=` give the whole
+    stack the fault-tolerance semantics of DESIGN.md §4.
+
+    Returns an SPDCBatchResult whose `pad_to` is the common n' and whose
+    `paddings` list the per-matrix border amounts.
+    """
+    # host-native from the start: this path's whole point is that raw-size
+    # client matrices never individually touch the device (DESIGN.md §5.1)
+    np_dtype = np.dtype(jnp.zeros((), dtype).dtype.name)
+    ms = [np.asarray(m, dtype=np_dtype) for m in ms]
+    if not ms:
+        raise ValueError("outsource_determinant_mixed needs >= 1 matrix")
+    for m in ms:
+        if m.ndim != 2 or m.shape[0] != m.shape[1]:
+            raise ValueError(f"expected square matrices, got shape {m.shape}")
+    sizes = [int(m.shape[0]) for m in ms]
+    if pad_to is None:
+        pad_to = common_padded_size(sizes, num_servers)
+    if pad_to % num_servers != 0 or pad_to // num_servers <= 1:
+        raise ValueError(
+            f"pad_to={pad_to} not servable by N={num_servers} "
+            "(need pad_to % N == 0 and pad_to / N > 1)"
+        )
+    if max(sizes) > pad_to:
+        raise ValueError(f"matrix of size {max(sizes)} exceeds pad_to={pad_to}")
+
+    # --- client: PMOP per matrix at its own size, entirely on host
+    # (hashes + numpy O(n²) cipher/border — no per-client-shape XLA
+    # compiles); the det-preserving border brings every ciphertext to the
+    # shared (n', n') shape before ONE host→device transfer of the stack ---
+    seeds, metas, xs, paddings = [], [], [], []
+    for m in ms:
+        n = int(m.shape[0])
+        seed = seedgen(lambda1, m)
+        key = keygen(lambda2, seed, n)
+        k = rotate_degree(seed.psi)
+        x = _cipher_host(m, np.asarray(key.v, dtype=np_dtype), k, mode)
+        aug_rng = np.random.default_rng(
+            int.from_bytes(seed.digest[8:16], "big") % (2**31)
+        )
+        p = pad_to - n
+        xs.append(_augment_host(x, p, aug_rng))
+        seeds.append(seed)
+        metas.append(CipherMeta(mode=mode, rotate_k=k, n=n))
+        paddings.append(p)
+    x_aug = jnp.asarray(np.stack(xs))
+
+    # --- servers: SPCP — one wavefront sweep over the coalesced stack ---
+    plan = resolve_delays(normalize_plan(faults), straggler_deadline)
+    if distributed:
+        from repro.distrib.spdc_pipeline import lu_nserver_shardmap
+
+        l, u = lu_nserver_shardmap(x_aug, num_servers, faults=plan)
+        comm = None
+    else:
+        l, u = _lu_sweep(x_aug, num_servers=num_servers, faults=plan)
+        comm = nserver_comm_model(pad_to, num_servers)
+
+    if tamper is not None:
+        l, u = tamper(l, u)
+
+    # --- client: RRVP — per-matrix accept/reject, localized healing ---
+    verdict = authenticate(
+        l, u, x_aug, num_servers=num_servers, method=method,
+        rng=_probe_rng(_batch_digest(seeds)),
+    )
+    l, u, verdict, report = _recover_if_needed(
+        l, u, x_aug, verdict, num_servers=num_servers, method=method,
+        recover=recover, standby=standby, digest=_batch_digest(seeds),
+        style="pipeline" if distributed else "nserver",
+    )
+    dets = decipher_batch(seeds, metas, l, u, faithful=faithful_sign)
+    return SPDCBatchResult(
+        dets=dets,
+        verified=np.atleast_1d(np.asarray(verdict.ok)),
+        residual=np.atleast_1d(np.asarray(verdict.residual)),
+        seeds=seeds,
+        metas=metas,
+        comm=comm,
+        padding=0,
+        num_servers=num_servers,
+        verdict=verdict,
+        recovery=report,
+        paddings=paddings,
+        pad_to=pad_to,
+    )
+
+
 def outsource_determinant(
     m: np.ndarray | jnp.ndarray,
     num_servers: int,
@@ -212,29 +402,73 @@ def outsource_determinant(
     straggler_deadline: int | None = None,
     dtype=jnp.float64,
 ) -> SPDCResult | SPDCBatchResult:
-    """Run the full SPDC protocol for one matrix or a (B, n, n) stack.
+    """Run the full SPDC protocol — the package's main entry point.
 
+    Accepts one matrix (n, n), a same-size stack (B, n, n), or a Python
+    list/tuple of mixed-size square matrices (routed through
+    `outsource_determinant_mixed`: one coalesced sweep at a shared padded
+    size — the gateway path, see repro.serve.spdc_gateway).
+
+    Keyword reference (every public kwarg):
+
+    num_servers: N, the edge-server count of the Parallelize stage. The
+        ciphertext is padded so N divides its size (paper §IV.D.1).
+    lambda1 / lambda2: security parameters of SeedGen / KeyGen — bits of
+        entropy behind the seed Ψ and the blinding vector v (paper §IV.A).
+    mode: element-wise obfuscation flavor, "ewd" (row-divide by v, the
+        paper's default) or "ewm" (row-multiply).
+    method: Authenticate residual — "q1" (Gao & Yu vector probe), "q2"
+        (paper's scalar probe), "q3" (deterministic diagonal check,
+        default), or "q3_literal" (paper's weaker literal form; see
+        DESIGN.md §1.1.4).
+    use_kernel: route Cipher through the fused Pallas CED kernel instead
+        of the jnp oracle (TPU target; interpret-mode on CPU).
+    distributed: route Parallelize through the shard_map pipeline — every
+        mesh device plays one edge server (requires >= num_servers JAX
+        devices); otherwise the faithful single-process simulation of
+        Algorithm 3 runs. See DESIGN.md §2.
+    faithful_sign: reproduce the paper's literal (−1)^k rotation sign in
+        Decipher instead of the Panth Rotation Theorem's case split —
+        wrong for n ≡ 0,1 (mod 4); kept for faithfulness studies
+        (DESIGN.md §1.1.3).
     tamper: optional fn (L, U) -> (L, U) applied to the servers' results
-    before authentication — models a malicious edge server (tests use it to
-    show Q2/Q3 reject tampered results, including a single bad matrix
-    inside a batch).
+        before authentication — models a malicious edge server (tests use
+        it to show Q2/Q3 reject tampered results, including a single bad
+        matrix inside a batch).
     faults: a core.faults FaultPlan (or one ServerFault) — the structured
-    untrusted-server model: per-server tamper/dropout/delay, batch-aware,
-    applied inside the Parallelize stage (in-band faults poison the relay
-    in the single-process simulation; the distributed pipeline injects at
-    the device output).
+        untrusted-server model: per-server tamper/dropout/delay,
+        batch-aware, applied inside the Parallelize stage (in-band faults
+        poison the relay in the single-process simulation; the distributed
+        pipeline injects at the device output).
     recover: on a rejected verdict, localize the faulty server (blocked-Q1
-    attribution) and re-dispatch ONLY its shard via distrib.recovery —
-    result.recovery holds the RecoveryReport. standby: provision N+r
-    spare servers for those re-dispatches. straggler_deadline: rounds after
-    which a delayed server is treated as dropped (None = wait forever).
-    distributed: route Parallelize through the shard_map pipeline (requires
-    the active process to have >= num_servers JAX devices); otherwise the
-    faithful single-process simulation of Algorithm 3 is used.
+        attribution) and re-dispatch ONLY its shard via distrib.recovery —
+        result.recovery holds the RecoveryReport.
+    standby: provision N+r spare servers for those re-dispatches
+        (distrib.recovery.ServerPool).
+    straggler_deadline: rounds after which a delayed server is treated as
+        dropped and its shard re-dispatched (None = wait forever).
+    dtype: compute dtype; the float64 default is what the rtol 1e-10
+        acceptance tests and the ε(N) thresholds are calibrated for.
 
     Returns SPDCResult for a single matrix, SPDCBatchResult (per-matrix
-    dets and verdicts) for a stack; both carry the structured Verdict.
+    dets and verdicts) for a stack or list; both carry the structured
+    Verdict and, when recover= fired, the RecoveryReport.
     """
+    if isinstance(m, (list, tuple)):
+        if use_kernel:
+            raise ValueError(
+                "use_kernel is not supported for mixed-size lists: the "
+                "mixed path ciphers each matrix on the host (DESIGN.md "
+                "§5.1); stack same-size matrices into a (B, n, n) array "
+                "for the Pallas CED kernel"
+            )
+        return outsource_determinant_mixed(
+            m, num_servers,
+            lambda1=lambda1, lambda2=lambda2, mode=mode, method=method,
+            distributed=distributed, faithful_sign=faithful_sign,
+            tamper=tamper, faults=faults, recover=recover, standby=standby,
+            straggler_deadline=straggler_deadline, dtype=dtype,
+        )
     m = jnp.asarray(m, dtype=dtype)
     if m.ndim == 3:
         return _outsource_determinant_batch(

@@ -1,6 +1,6 @@
 """Roofline analysis from compiled artifacts (no hardware required).
 
-Three terms per (arch × shape × mesh), all in seconds (DESIGN.md §6):
+Three terms per (arch × shape × mesh), all in seconds:
 
     compute    = HLO_flops_per_device / PEAK_FLOPS
     memory     = HLO_bytes_per_device / HBM_BW

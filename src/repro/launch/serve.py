@@ -1,7 +1,13 @@
-"""Serving launcher: batched greedy generation against the decode cache.
+"""LM-serving launcher (seed model-zoo stack): batched greedy generation
+against the decode cache.
 
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b --smoke \
         --batch 4 --prompt-len 16 --gen 32
+
+NOTE: this serves the seed's *language models*, not the paper's workload.
+The SPDC determinant service — the async micro-batching gateway over
+untrusted edge servers — is `python -m repro.launch.serve_spdc --help`
+(repro.serve.spdc_gateway, DESIGN.md §5).
 """
 from __future__ import annotations
 

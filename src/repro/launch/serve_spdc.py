@@ -1,0 +1,176 @@
+"""SPDC gateway launcher: drive the async micro-batching determinant
+service with a synthetic open-loop client workload.
+
+    PYTHONPATH=src python -m repro.launch.serve_spdc --smoke
+    PYTHONPATH=src python -m repro.launch.serve_spdc \
+        --servers 4 --requests 256 --rate 200 --sizes 24,48,96 \
+        --max-batch 32 --max-wait-us 2000
+
+Open-loop means arrivals are paced by the offered rate, not by service
+completions (`--rate 0` = saturating: all requests arrive at once), so
+queueing delay shows up in the reported p50/p99 latency exactly as it
+would for independent IoT clients. Each request draws its size from
+--sizes; the gateway buckets mixed sizes, coalesces each bucket into one
+batched protocol sweep, and answers with a per-request verdict.
+
+--check verifies every returned determinant against numpy slogdet at
+rtol 1e-10 (always on with --smoke, which is the CI docs-job entry).
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import sys
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+
+
+def parse_sizes(spec: str) -> tuple[int, ...]:
+    sizes = tuple(int(s) for s in spec.split(",") if s)
+    if not sizes or any(s < 2 for s in sizes):
+        raise argparse.ArgumentTypeError(f"bad --sizes {spec!r}")
+    return sizes
+
+
+def percentile_ms(lat_s: list[float], q: float) -> float:
+    return float(np.percentile(np.asarray(lat_s), q) * 1e3)
+
+
+async def run_workload(gw, mats, arrival_s):
+    """Submit each matrix at its open-loop arrival time; gather results."""
+    t0 = time.perf_counter()
+    results = [None] * len(mats)
+    rejected = 0
+
+    async def one(i):
+        nonlocal rejected
+        delay = arrival_s[i] - (time.perf_counter() - t0)
+        if delay > 0:
+            await asyncio.sleep(delay)
+        from repro.serve import GatewayOverloaded
+
+        try:
+            results[i] = await gw.submit(mats[i])
+        except GatewayOverloaded:
+            rejected += 1
+
+    await asyncio.gather(*(one(i) for i in range(len(mats))))
+    wall = time.perf_counter() - t0
+    return results, rejected, wall
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="SPDC micro-batching gateway + synthetic client swarm"
+    )
+    ap.add_argument("--servers", type=int, default=2,
+                    help="edge servers per sweep (N)")
+    ap.add_argument("--requests", type=int, default=128,
+                    help="total client requests to offer")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="offered load, requests/sec (0 = saturating)")
+    ap.add_argument("--sizes", type=parse_sizes, default=(24, 48, 96),
+                    help="comma-separated raw matrix sizes clients draw from")
+    ap.add_argument("--buckets", type=parse_sizes, default=None,
+                    help="bucket sizes (default: preset buckets)")
+    ap.add_argument("--max-batch", type=int, default=32)
+    ap.add_argument("--max-wait-us", type=float, default=2000.0)
+    ap.add_argument("--max-pending", type=int, default=4096)
+    ap.add_argument("--method", choices=["q1", "q2", "q3"], default="q3")
+    ap.add_argument("--mode", choices=["ewd", "ewm"], default="ewd")
+    ap.add_argument("--recover", action="store_true",
+                    help="heal rejected verdicts in place (DESIGN.md §4)")
+    ap.add_argument("--standby", type=int, default=0)
+    ap.add_argument("--no-warmup", dest="warmup", action="store_false",
+                    help="skip pre-compiling bucket sweeps")
+    ap.add_argument("--check", action="store_true",
+                    help="verify every det against numpy slogdet")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes + full checking (CI entry)")
+    args = ap.parse_args(argv)
+
+    from repro.configs import SPDCConfig, SPDCGatewayConfig
+    from repro.serve import AsyncSPDCGateway
+
+    if args.smoke:
+        args.requests = min(args.requests, 24)
+        args.sizes = (6, 10, 16)
+        args.buckets = args.buckets or (16, 32)
+        args.max_batch = min(args.max_batch, 8)
+        args.check = True
+
+    spdc = SPDCConfig(
+        num_servers=args.servers, mode=args.mode, method=args.method,
+        recover=args.recover, standby=args.standby,
+    )
+    cfg = SPDCGatewayConfig(
+        name="spdc-gateway-cli",
+        buckets=args.buckets or SPDCGatewayConfig.buckets,
+        max_batch=args.max_batch,
+        max_wait_us=args.max_wait_us,
+        max_pending=args.max_pending,
+        spdc=spdc,
+    )
+
+    rng = np.random.default_rng(args.seed)
+    sizes = rng.choice(args.sizes, size=args.requests)
+    mats = [rng.standard_normal((n, n)) + n * np.eye(n) for n in sizes]
+    if args.rate > 0:
+        arrival_s = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
+    else:
+        arrival_s = np.zeros(args.requests)
+
+    async def drive():
+        async with AsyncSPDCGateway(cfg) as gw:
+            if args.warmup:
+                t0 = time.perf_counter()
+                # only the batch shapes this workload can produce
+                compiled = await gw.warmup()
+                print(f"[warmup] {compiled} bucket programs compiled in "
+                      f"{time.perf_counter() - t0:.1f}s")
+            results, rejected, wall = await run_workload(gw, mats, arrival_s)
+            return results, rejected, wall, gw.stats.as_dict()
+
+    results, rejected, wall, stats = asyncio.run(drive())
+    served = [r for r in results if r is not None]
+    if not served:
+        print("no requests served")
+        return 1
+    lats = [r.latency_s for r in served]
+    rate_txt = f"{args.rate:.0f} req/s" if args.rate else "saturating"
+    print(f"[serve_spdc] N={args.servers} offered={rate_txt} "
+          f"requests={args.requests} sizes={tuple(args.sizes)}")
+    print(f"  served={len(served)} rejected={rejected} wall={wall:.2f}s "
+          f"sustained={len(served) / wall:.1f} dets/sec")
+    print(f"  latency p50={percentile_ms(lats, 50):.1f}ms "
+          f"p99={percentile_ms(lats, 99):.1f}ms "
+          f"max={max(lats) * 1e3:.1f}ms")
+    print(f"  flushes={stats['flushes']} (full={stats['flushes_full']} "
+          f"timeout={stats['flushes_timeout']} drain={stats['flushes_drain']}) "
+          f"recovered={stats['recovered_flushes']} direct={stats['direct']}")
+
+    failed = [r for r in served if not r.verified]
+    if failed:
+        print(f"  VERIFICATION FAILED for {len(failed)} requests")
+        return 1
+    if args.check:
+        for r, m in zip(results, mats):
+            if r is None:
+                continue
+            ws, wl = np.linalg.slogdet(m)
+            assert r.det.sign == ws and np.isclose(
+                r.det.logabs, wl, rtol=1e-10
+            ), f"det mismatch for request {r.rid} (n={r.n})"
+        print(f"  check: all {len(served)} dets match numpy slogdet "
+              "at rtol 1e-10")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

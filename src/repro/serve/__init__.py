@@ -1,1 +1,27 @@
-"""Serving substrate: KV/SSM caches, prefill/decode steps."""
+"""Serving layer.
+
+Two stacks live here:
+
+* **SPDC gateway** (`queue`, `spdc_gateway`) — the paper's workload as a
+  service: an async micro-batching determinant gateway that coalesces
+  single-matrix client requests into batched protocol sweeps
+  (DESIGN.md §5). Entry points: `SPDCGateway`, `AsyncSPDCGateway`,
+  `python -m repro.launch.serve_spdc`.
+* **LM serving substrate** (`kvcache`, `steps`) — KV/SSM caches and
+  prefill/decode steps inherited from the seed's language-model stack;
+  kept for the model-zoo scenarios (`python -m repro.launch.serve`).
+"""
+
+from .queue import (  # noqa: F401
+    BucketKey,
+    GatewayOverloaded,
+    GatewayStats,
+    MicroBatchQueue,
+    NoBucketFits,
+    bucket_size_for,
+)
+from .spdc_gateway import (  # noqa: F401
+    AsyncSPDCGateway,
+    GatewayResult,
+    SPDCGateway,
+)

@@ -1,0 +1,216 @@
+"""Micro-batch request queue for the SPDC edge gateway (DESIGN.md §5).
+
+The paper's deployment story is a stream of resource-constrained IoT
+clients each outsourcing ONE determinant at a time, while the repo's
+throughput lever (DESIGN.md §3) is the batched protocol sweep. This module
+is the piece between them: it holds in-flight single-matrix requests,
+groups them into *buckets* that can legally share one coalesced sweep, and
+decides when a bucket is ripe to flush.
+
+Bucketing rule: two requests may share a sweep iff they agree on every
+protocol parameter the sweep compiles against — the padded size n' and the
+full security config (server count, cipher mode, verification method,
+recovery policy). That tuple is the `BucketKey`; it doubles as the jit
+compile-cache key, so a warm gateway re-runs the same compiled program for
+every flush of a bucket.
+
+Flush policy (the gateway's latency/throughput dial):
+  * max_batch   — a full bucket flushes immediately (throughput bound);
+  * max_wait_us — a partial bucket flushes once its oldest request has
+                  waited this long (latency bound under light traffic);
+  * max_pending — total queued requests beyond this raise
+                  `GatewayOverloaded` at submit time (backpressure: shed
+                  load at the door instead of growing an unbounded queue).
+
+Pure bookkeeping — no jax, no clocks. The gateway injects `now` so tests
+drive flush timing deterministically with a virtual clock.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+
+
+class GatewayOverloaded(RuntimeError):
+    """Backpressure rejection: the gateway's pending queue is full.
+
+    Raised at submit time — the paper's edge clients are latency-bound, so
+    shedding a request immediately (letting the client retry against
+    another gateway) beats queueing it behind more work than the servers
+    can drain.
+    """
+
+
+class NoBucketFits(ValueError):
+    """The request's matrix is larger than every configured bucket size."""
+
+
+@dataclass(frozen=True)
+class BucketKey:
+    """Everything a coalesced sweep compiles against: the shared padded
+    size and the complete security configuration. Hashable — used both as
+    the queue index and (via the protocol's static jit arguments) the
+    compile-cache identity of the bucket's device program."""
+
+    pad_to: int
+    num_servers: int
+    mode: str = "ewd"
+    method: str = "q3"
+    lambda1: int = 128
+    lambda2: int = 128
+    recover: bool = False
+    standby: int = 0
+    straggler_deadline: int | None = None
+
+    def protocol_kwargs(self) -> dict:
+        """Keyword arguments for core.protocol.outsource_determinant_mixed."""
+        return dict(
+            pad_to=self.pad_to,
+            mode=self.mode,
+            method=self.method,
+            lambda1=self.lambda1,
+            lambda2=self.lambda2,
+            recover=self.recover,
+            standby=self.standby,
+            straggler_deadline=self.straggler_deadline,
+        )
+
+
+@dataclass
+class DetRequest:
+    """One client request: a single square matrix awaiting a verdict."""
+
+    rid: int
+    matrix: object  # (n, n) ndarray — kept framework-agnostic here
+    n: int
+    enqueued_at: float
+
+
+def bucket_size_for(n: int, buckets: tuple[int, ...], num_servers: int) -> int:
+    """Smallest configured bucket that can serve an (n, n) request.
+
+    A bucket n' is eligible when n' >= n and the N-server schedule accepts
+    it (n' % N == 0, n'/N > 1 — paper §IV.D.1). Raises NoBucketFits when
+    the matrix exceeds every bucket (the gateway then runs it as a direct
+    un-coalesced call).
+    """
+    for b in sorted(buckets):
+        if b >= n and b % num_servers == 0 and b // num_servers > 1:
+            return b
+    raise NoBucketFits(
+        f"no bucket in {sorted(buckets)} fits n={n} with N={num_servers}"
+    )
+
+
+@dataclass
+class _Bucket:
+    requests: list[DetRequest] = field(default_factory=list)
+
+    @property
+    def oldest_at(self) -> float:
+        return self.requests[0].enqueued_at
+
+    def __len__(self) -> int:
+        return len(self.requests)
+
+
+@dataclass
+class GatewayStats:
+    """Operational counters; surfaced by the CLI driver and benchmarks."""
+
+    submitted: int = 0
+    rejected: int = 0  # backpressure at submit time
+    direct: int = 0  # oversize requests served un-coalesced
+    served: int = 0  # requests answered through a coalesced flush
+    failed: int = 0  # requests whose sweep raised (per-request error result)
+    flushes: int = 0
+    flushes_full: int = 0  # max_batch reached
+    flushes_timeout: int = 0  # max_wait_us exceeded on a partial bucket
+    flushes_drain: int = 0  # explicit drain()
+    recovered_flushes: int = 0  # flushes whose verdict needed re-dispatch
+
+    def as_dict(self) -> dict:
+        return dict(self.__dict__)
+
+
+class MicroBatchQueue:
+    """Pending requests, grouped by BucketKey, FIFO within a bucket."""
+
+    def __init__(self, *, max_batch: int, max_wait_us: float,
+                 max_pending: int):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.max_batch = int(max_batch)
+        self.max_wait_us = float(max_wait_us)
+        self.max_pending = int(max_pending)
+        self._buckets: "OrderedDict[BucketKey, _Bucket]" = OrderedDict()
+        self._pending = 0
+
+    @property
+    def pending(self) -> int:
+        return self._pending
+
+    def push(self, key: BucketKey, req: DetRequest) -> bool:
+        """Enqueue; returns True when the bucket just reached max_batch.
+
+        Raises GatewayOverloaded when the gateway-wide pending total is at
+        max_pending — the caller surfaces that to the client unserved.
+        """
+        if self._pending >= self.max_pending:
+            raise GatewayOverloaded(
+                f"{self._pending} requests pending (max_pending="
+                f"{self.max_pending}); retry later"
+            )
+        bucket = self._buckets.setdefault(key, _Bucket())
+        bucket.requests.append(req)
+        self._pending += 1
+        return len(bucket) >= self.max_batch
+
+    def pop(self, key: BucketKey, limit: int | None = None) -> list[DetRequest]:
+        """Remove and return up to `limit` of a bucket's requests (FIFO).
+
+        The gateway flushes max_batch at a time even when a burst stacked
+        more than that into one bucket — each sweep stays at the warmed-up
+        (max_batch, n', n') shape instead of compiling a fresh program per
+        burst size.
+        """
+        bucket = self._buckets.get(key)
+        if bucket is None:
+            return []
+        if limit is None or len(bucket) <= limit:
+            del self._buckets[key]
+            taken = bucket.requests
+        else:
+            taken = bucket.requests[:limit]
+            bucket.requests = bucket.requests[limit:]
+        self._pending -= len(taken)
+        return taken
+
+    def due(self, now: float) -> list[tuple[BucketKey, str]]:
+        """(bucket, reason) pairs ripe to flush at `now` — "full"
+        (max_batch reached) or "timeout" (oldest request older than
+        max_wait_us). Ordered oldest-bucket-first."""
+        ready = []
+        for key, bucket in self._buckets.items():
+            if len(bucket) >= self.max_batch:
+                ready.append((bucket.oldest_at, key, "full"))
+            elif (now - bucket.oldest_at) * 1e6 >= self.max_wait_us:
+                ready.append((bucket.oldest_at, key, "timeout"))
+        ready.sort(key=lambda t: t[0])
+        return [(k, reason) for _, k, reason in ready]
+
+    def next_deadline(self, now: float) -> float | None:
+        """Seconds until the earliest pending timeout flush (None when
+        empty) — the async flusher's sleep bound."""
+        if not self._buckets:
+            return None
+        oldest = min(b.oldest_at for b in self._buckets.values())
+        return max(0.0, oldest + self.max_wait_us * 1e-6 - now)
+
+    def has_full(self) -> bool:
+        """True when some bucket already holds max_batch requests."""
+        return any(len(b) >= self.max_batch for b in self._buckets.values())
+
+    def keys(self) -> list[BucketKey]:
+        return list(self._buckets)

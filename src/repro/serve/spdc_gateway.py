@@ -1,0 +1,577 @@
+"""SPDC edge gateway — async micro-batching determinant service.
+
+This is the layer that turns the protocol reproduction into a *service*
+(ROADMAP north star; DESIGN.md §5): many clients each submit one matrix;
+the gateway coalesces them into the batched protocol sweeps that PR 1 made
+fast and PR 2 made fault-tolerant.
+
+    client ──submit(M)──▶ gateway ──bucket by (n', security config)──▶
+      ┌───────────────┐   flush on max_batch / max_wait_us
+      │ bucket n'=64  │──▶ ONE outsource_determinant_mixed sweep
+      │ bucket n'=256 │──▶   (one cipher+augment per request, one jitted
+      └───────────────┘      N-server LU, one batched verify, per-request
+                             Decipher) ──▶ per-request GatewayResult
+
+Two surfaces:
+
+  * ``SPDCGateway`` — the synchronous engine. `submit()` enqueues (and by
+    default flushes a bucket the instant it fills), `poll(now)` flushes
+    buckets whose oldest request exceeded the wait budget, `drain()`
+    flushes everything. The clock is injected, so tests drive flush
+    policy with virtual time.
+  * ``AsyncSPDCGateway`` — the asyncio service: ``await submit(m)``
+    resolves to that request's GatewayResult; a background flusher task
+    runs the device sweeps off the event loop thread.
+
+Faults and recovery are per-bucket: a tampering server poisons only the
+sweeps it participates in, and when a bucket's security config says
+`recover=True`, the verification-driven re-dispatch (DESIGN.md §4) heals
+that bucket's batch alone — co-batched requests in other buckets never
+pay for it (test_gateway.py::test_tampered_bucket_isolated).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.configs.spdc import SPDC_GATEWAY_DEFAULT, SPDCGatewayConfig
+from repro.core.protocol import outsource_determinant_mixed
+
+from .queue import (
+    BucketKey,
+    DetRequest,
+    GatewayOverloaded,
+    GatewayStats,
+    MicroBatchQueue,
+    NoBucketFits,
+    bucket_size_for,
+)
+
+__all__ = [
+    "GatewayResult",
+    "SPDCGateway",
+    "AsyncSPDCGateway",
+    "GatewayOverloaded",
+]
+
+#: per-request security-config overrides submit() accepts (the BucketKey
+#: fields minus pad_to, which bucketing derives)
+_OVERRIDE_KEYS = frozenset(
+    {"num_servers", "mode", "method", "lambda1", "lambda2", "recover",
+     "standby", "straggler_deadline"}
+)
+
+
+def allowed_batch_sizes(max_batch: int) -> tuple[int, ...]:
+    """The bounded set of sweep batch shapes under pad_batches: powers of
+    two up to max_batch, plus max_batch itself."""
+    sizes = []
+    b = 1
+    while b < max_batch:
+        sizes.append(b)
+        b *= 2
+    sizes.append(max_batch)
+    return tuple(sizes)
+
+
+@dataclass
+class GatewayResult:
+    """One client request's outcome, unpacked from its bucket's sweep.
+
+    `error` is set (with det=None, verified=False) when the request's
+    sweep raised instead of completing — co-batched requests each get
+    their own failed result rather than disappearing.
+    """
+
+    rid: int
+    det: object  # core.decipher.Determinant (None when error is set)
+    verified: bool
+    residual: float
+    n: int  # client's raw matrix size
+    pad_to: int  # bucket size the sweep ran at (== n for direct calls)
+    batch: int  # how many requests shared the sweep
+    flush_reason: str  # "full" | "timeout" | "drain" | "direct"
+    submitted_at: float
+    completed_at: float
+    recovery: object | None = None  # bucket's RecoveryReport, if it healed
+    error: str | None = None  # sweep failure, delivered per-request
+
+    @property
+    def latency_s(self) -> float:
+        return self.completed_at - self.submitted_at
+
+
+class SPDCGateway:
+    """Synchronous micro-batching engine (see module docstring).
+
+    config: an SPDCGatewayConfig preset (configs.spdc). Its `spdc` field
+        supplies each request's default security config; `submit()`
+        keyword overrides open separate buckets.
+    clock: monotonic-seconds source; injectable for deterministic tests.
+    faults_for: optional hook BucketKey -> FaultPlan | None injecting
+        misbehaving servers into chosen buckets' sweeps (benchmarks and
+        fault-isolation tests; a real deployment has real faults).
+    auto_flush: flush a bucket synchronously inside submit() the moment it
+        reaches max_batch. AsyncSPDCGateway disables this so sweeps always
+        run on its flusher thread.
+    """
+
+    def __init__(
+        self,
+        config: SPDCGatewayConfig = SPDC_GATEWAY_DEFAULT,
+        *,
+        clock=time.monotonic,
+        faults_for=None,
+        auto_flush: bool = True,
+    ):
+        servable = [
+            b for b in config.buckets
+            if b % config.spdc.num_servers == 0
+            and b // config.spdc.num_servers > 1
+        ]
+        if not servable:
+            # without this a non-divisible N silently sends EVERY request
+            # down the un-coalesced direct path — a gateway that "works"
+            # but never micro-batches
+            raise ValueError(
+                f"no bucket in {tuple(config.buckets)} is servable by "
+                f"num_servers={config.spdc.num_servers} (need "
+                "n' % N == 0 and n'/N > 1)"
+            )
+        self.config = config
+        self._clock = clock
+        self._faults_for = faults_for
+        self._auto_flush = auto_flush
+        self._queue = MicroBatchQueue(
+            max_batch=config.max_batch,
+            max_wait_us=config.max_wait_us,
+            max_pending=config.max_pending,
+        )
+        self._results: dict[int, GatewayResult] = {}
+        self._next_rid = 0
+        self.stats = GatewayStats()
+        #: guards queue/results/stats so AsyncSPDCGateway may run sweeps on
+        #: a worker thread while the event loop keeps submitting. Held for
+        #: bookkeeping only — never across a device sweep.
+        self._lock = threading.RLock()
+
+    # -- submission ---------------------------------------------------------
+
+    def _key_for(self, n: int, overrides: dict) -> BucketKey:
+        spdc = self.config.spdc
+        num_servers = overrides.get("num_servers", spdc.num_servers)
+        pad_to = bucket_size_for(n, self.config.buckets, num_servers)
+        return BucketKey(
+            pad_to=pad_to,
+            num_servers=num_servers,
+            mode=overrides.get("mode", spdc.mode),
+            method=overrides.get("method", spdc.method),
+            lambda1=overrides.get("lambda1", spdc.lambda1),
+            lambda2=overrides.get("lambda2", spdc.lambda2),
+            recover=overrides.get("recover", spdc.recover),
+            standby=overrides.get("standby", spdc.standby),
+            straggler_deadline=overrides.get(
+                "straggler_deadline", spdc.straggler_deadline
+            ),
+        )
+
+    def submit(self, matrix, *, now: float | None = None, **overrides) -> int:
+        """Enqueue one (n, n) matrix; returns its request id.
+
+        Raises GatewayOverloaded when max_pending requests are already
+        queued (backpressure — nothing is enqueued). A matrix larger than
+        every bucket is served immediately as a direct un-coalesced
+        protocol call (stats.direct). Keyword overrides (num_servers,
+        mode, method, recover, standby, straggler_deadline) place the
+        request in a bucket matching that security config.
+        """
+        unknown = set(overrides) - _OVERRIDE_KEYS
+        if unknown:
+            # a misspelled security override must fail loudly — silently
+            # serving under the gateway defaults would hand the client a
+            # weaker config than it asked for
+            raise TypeError(
+                f"unknown submit() overrides {sorted(unknown)}; "
+                f"allowed: {sorted(_OVERRIDE_KEYS)}"
+            )
+        matrix = np.asarray(matrix)
+        if matrix.ndim != 2 or matrix.shape[0] != matrix.shape[1]:
+            raise ValueError(f"expected one square matrix, got {matrix.shape}")
+        n = int(matrix.shape[0])
+        if n < 2:
+            raise ValueError("matrices must be at least 2x2 (KeyGen needs "
+                             "n >= 2 blinding elements)")
+        if not np.all(np.isfinite(matrix)):
+            raise ValueError("matrix contains non-finite entries")
+        now = self._clock() if now is None else now
+        with self._lock:
+            rid = self._next_rid
+            self._next_rid += 1
+            self.stats.submitted += 1
+            req = DetRequest(rid=rid, matrix=matrix, n=n, enqueued_at=now)
+            try:
+                key = self._key_for(n, overrides)
+            except NoBucketFits:
+                key = None
+            if key is not None:
+                try:
+                    full = self._queue.push(key, req)
+                except GatewayOverloaded:
+                    self.stats.submitted -= 1
+                    self.stats.rejected += 1
+                    raise
+        if key is None:
+            self._run_direct(req, overrides, now)
+        elif full and self._auto_flush:
+            self._flush(key, "full", now)
+        return rid
+
+    # -- flushing -----------------------------------------------------------
+
+    def poll(self, now: float | None = None) -> list[GatewayResult]:
+        """Flush every due bucket (full, or past the wait budget) and
+        return the newly completed results."""
+        now = self._clock() if now is None else now
+        out: list[GatewayResult] = []
+        while True:
+            with self._lock:
+                due = self._queue.due(now)
+            if not due:
+                return out
+            for key, reason in due:
+                out.extend(self._flush(key, reason, now))
+
+    def drain(self) -> list[GatewayResult]:
+        """Flush every bucket regardless of policy (shutdown / test sync),
+        still in max_batch chunks so sweeps reuse warm shapes."""
+        now = self._clock()
+        out: list[GatewayResult] = []
+        while True:
+            with self._lock:
+                keys = self._queue.keys()
+            if not keys:
+                return out
+            for key in keys:
+                out.extend(self._flush(key, "drain", now))
+
+    def next_deadline(self, now: float | None = None) -> float | None:
+        """Seconds until the earliest pending flush deadline (the async
+        flusher's sleep bound); None when no requests are queued."""
+        now = self._clock() if now is None else now
+        with self._lock:
+            return self._queue.next_deadline(now)
+
+    def has_full_bucket(self) -> bool:
+        with self._lock:
+            return self._queue.has_full()
+
+    @property
+    def pending(self) -> int:
+        return self._queue.pending
+
+    def take(self, rid: int) -> GatewayResult | None:
+        """Claim a completed result (None while its bucket is pending)."""
+        with self._lock:
+            return self._results.pop(rid, None)
+
+    def _flush(self, key: BucketKey, reason: str, now: float):
+        with self._lock:
+            reqs = self._queue.pop(key, limit=self.config.max_batch)
+            if not reqs:
+                return []
+            self.stats.flushes += 1
+            if reason == "full":
+                self.stats.flushes_full += 1
+            elif reason == "timeout":
+                self.stats.flushes_timeout += 1
+            else:
+                self.stats.flushes_drain += 1
+        mats = [r.matrix for r in reqs]
+        if self.config.pad_batches:
+            target = next(
+                b for b in allowed_batch_sizes(self.config.max_batch)
+                if b >= len(mats)
+            )
+            mats = mats + [
+                self._dummy(key.pad_to) for _ in range(target - len(mats))
+            ]
+        try:
+            faults = self._faults_for(key) if self._faults_for else None
+            res = outsource_determinant_mixed(
+                mats,
+                key.num_servers,
+                faults=faults,
+                **key.protocol_kwargs(),
+            )
+        except Exception as e:  # noqa: BLE001 — fail the requests, not the service
+            # the bucket is already popped: every co-batched request gets
+            # its own failed result instead of vanishing (and the async
+            # flusher keeps running)
+            return self._fail_requests(reqs, key, reason, f"{type(e).__name__}: {e}")
+        done = self._clock()
+        out = []
+        with self._lock:
+            if res.recovery is not None:
+                self.stats.recovered_flushes += 1
+            for i, req in enumerate(reqs):
+                gres = GatewayResult(
+                    rid=req.rid,
+                    det=res.dets[i],
+                    verified=bool(res.verified[i]),
+                    residual=float(res.residual[i]),
+                    n=req.n,
+                    pad_to=key.pad_to,
+                    batch=len(reqs),
+                    flush_reason=reason,
+                    submitted_at=req.enqueued_at,
+                    completed_at=done,
+                    recovery=res.recovery,
+                )
+                self._results[req.rid] = gres
+                out.append(gres)
+                self.stats.served += 1
+        return out
+
+    def _fail_requests(self, reqs, key: BucketKey, reason: str, error: str):
+        """Deliver a per-request failure result for a sweep that raised."""
+        done = self._clock()
+        out = []
+        with self._lock:
+            self.stats.failed += len(reqs)
+            for req in reqs:
+                gres = GatewayResult(
+                    rid=req.rid,
+                    det=None,
+                    verified=False,
+                    residual=float("nan"),
+                    n=req.n,
+                    pad_to=key.pad_to,
+                    batch=len(reqs),
+                    flush_reason=reason,
+                    submitted_at=req.enqueued_at,
+                    completed_at=done,
+                    error=error,
+                )
+                self._results[req.rid] = gres
+                out.append(gres)
+        return out
+
+    def _run_direct(self, req: DetRequest, overrides: dict, now: float):
+        """Oversize escape hatch: one un-coalesced protocol call."""
+        from repro.core.protocol import outsource_determinant
+
+        spdc = self.config.spdc
+        try:
+            res = outsource_determinant(
+                req.matrix,
+                overrides.get("num_servers", spdc.num_servers),
+                mode=overrides.get("mode", spdc.mode),
+                method=overrides.get("method", spdc.method),
+                lambda1=overrides.get("lambda1", spdc.lambda1),
+                lambda2=overrides.get("lambda2", spdc.lambda2),
+                recover=overrides.get("recover", spdc.recover),
+                standby=overrides.get("standby", spdc.standby),
+                straggler_deadline=overrides.get(
+                    "straggler_deadline", spdc.straggler_deadline
+                ),
+            )
+        except Exception as e:  # noqa: BLE001 — fail the request, not the service
+            key = BucketKey(pad_to=req.n, num_servers=spdc.num_servers)
+            self._fail_requests([req], key, "direct",
+                                f"{type(e).__name__}: {e}")
+            return
+        with self._lock:
+            self.stats.direct += 1
+            self._results[req.rid] = GatewayResult(
+                rid=req.rid,
+                det=res.det,
+                verified=res.verified,
+                residual=res.residual,
+                n=req.n,
+                pad_to=req.n + res.padding,
+                batch=1,
+                flush_reason="direct",
+                submitted_at=req.enqueued_at,
+                completed_at=self._clock(),
+                recovery=res.recovery,
+            )
+
+    def _dummy(self, n_bucket: int) -> np.ndarray:
+        """Client-profile filler matrix for batch padding: diag-dominant
+        noise, cached per bucket. (A bare scaled identity would rotate to
+        an exactly singular anti-diagonal under the cipher's PRT stage —
+        fillers must look like real client matrices.) Its result is
+        discarded; it exists so the sweep runs at a warmed batch shape."""
+        cached = getattr(self, "_dummies", None)
+        if cached is None:
+            cached = self._dummies = {}
+        if n_bucket not in cached:
+            rng = np.random.default_rng(n_bucket)
+            cached[n_bucket] = (
+                rng.standard_normal((n_bucket, n_bucket))
+                + n_bucket * np.eye(n_bucket)
+            )
+        return cached[n_bucket]
+
+    # -- warmup -------------------------------------------------------------
+
+    def warmup(self, batch_sizes: tuple[int, ...] | None = None) -> int:
+        """Pre-compile each bucket's sweep at the given batch sizes.
+
+        The coalesced sweep jit-compiles per (B, n', N, fault-plan) shape;
+        a cold bucket's first flush would otherwise pay seconds of XLA
+        compilation in a client's latency. The default shape set is
+        exactly what pad_batches can produce (allowed_batch_sizes), so a
+        warmed gateway never compiles during a flush. Returns the number
+        of programs compiled. Runs the protocol sweep directly on
+        well-conditioned dummy matrices — results are discarded and the
+        serving queue/stats are never touched.
+        """
+        sizes = batch_sizes or self.config.warmup_batches
+        if not sizes:
+            sizes = (
+                allowed_batch_sizes(self.config.max_batch)
+                if self.config.pad_batches
+                else (self.config.max_batch,)
+            )
+        spdc = self.config.spdc
+        compiled = 0
+        for n_bucket in self.config.buckets:
+            if (n_bucket % spdc.num_servers != 0
+                    or n_bucket // spdc.num_servers <= 1):
+                continue
+            for b in sizes:
+                # the same cached filler live batch padding uses, so warmup
+                # compiles against the exact matrix profile flushes see
+                dummies = [self._dummy(n_bucket)] * b
+                key = self._key_for(n_bucket, {})
+                res = outsource_determinant_mixed(
+                    dummies, key.num_servers, **key.protocol_kwargs()
+                )
+                assert bool(np.all(res.verified))
+                compiled += 1
+        return compiled
+
+
+class AsyncSPDCGateway:
+    """asyncio front-end: ``await submit(m)`` → GatewayResult.
+
+    A background flusher task wakes on the earliest flush deadline (or
+    immediately when a bucket fills) and runs the device sweep in a worker
+    thread, so the event loop keeps accepting submissions while the
+    servers factor the previous batch. Use as an async context manager:
+
+        async with AsyncSPDCGateway(cfg) as gw:
+            results = await asyncio.gather(*(gw.submit(m) for m in ms))
+    """
+
+    def __init__(self, config: SPDCGatewayConfig = SPDC_GATEWAY_DEFAULT,
+                 **kwargs):
+        kwargs.setdefault("auto_flush", False)
+        self._gw = SPDCGateway(config, **kwargs)
+        self._waiters: dict[int, object] = {}
+        self._task = None
+        self._kick = None
+        self._closed = False
+
+    @property
+    def stats(self) -> GatewayStats:
+        return self._gw.stats
+
+    @property
+    def pending(self) -> int:
+        return self._gw.pending
+
+    async def __aenter__(self):
+        import asyncio
+
+        self._kick = asyncio.Event()
+        self._task = asyncio.create_task(self._flusher())
+        return self
+
+    async def __aexit__(self, *exc):
+        await self.aclose()
+
+    async def aclose(self):
+        import asyncio
+
+        self._closed = True
+        if self._task is not None:
+            self._kick.set()
+            await self._task
+            self._task = None
+        if self._gw.pending:
+            await asyncio.to_thread(self._gw.drain)
+            self._deliver()
+
+    async def warmup(self, batch_sizes: tuple[int, ...] | None = None) -> int:
+        """Pre-compile bucket sweeps off the event loop (SPDCGateway.warmup)."""
+        import asyncio
+
+        return await asyncio.to_thread(self._gw.warmup, batch_sizes)
+
+    async def submit(self, matrix, **overrides) -> GatewayResult:
+        """Enqueue one matrix and wait for its bucket's sweep.
+
+        Raises GatewayOverloaded immediately (without queueing) when the
+        gateway is backpressured.
+        """
+        import asyncio
+
+        if self._task is None:
+            raise RuntimeError("use `async with AsyncSPDCGateway(...)`")
+        # to_thread keeps the event loop free even when submit() itself
+        # does device work (the oversize direct-call escape hatch)
+        rid = await asyncio.to_thread(self._gw.submit, matrix, **overrides)
+        ready = self._gw.take(rid)
+        if ready is not None:  # oversize direct call completed inline
+            return ready
+        fut = asyncio.get_running_loop().create_future()
+        self._waiters[rid] = fut
+        self._kick.set()
+        if self._closed:
+            # aclose() may have drained before our enqueue landed (its
+            # pending check raced our to_thread); flush ourselves so this
+            # future cannot be stranded
+            await asyncio.to_thread(self._gw.drain)
+            self._deliver()
+        return await fut
+
+    def _deliver(self):
+        for rid in list(self._waiters):
+            res = self._gw.take(rid)
+            if res is None:
+                continue
+            fut = self._waiters.pop(rid)
+            if not fut.done():
+                fut.set_result(res)
+
+    async def _flusher(self):
+        import asyncio
+
+        while not self._closed:
+            deadline = self._gw.next_deadline()
+            if not self._gw.has_full_bucket():
+                timeout = deadline if deadline is not None else 0.5
+                try:
+                    await asyncio.wait_for(
+                        self._kick.wait(), timeout=max(timeout, 1e-4)
+                    )
+                except asyncio.TimeoutError:
+                    pass
+                self._kick.clear()
+                if self._closed:
+                    break
+            if self._gw.pending:
+                # _flush already converts sweep failures into per-request
+                # error results; anything else must not kill the flusher
+                # (every later submission would hang on a dead task)
+                try:
+                    await asyncio.to_thread(self._gw.poll)
+                except Exception:  # noqa: BLE001
+                    pass
+                self._deliver()

@@ -1,12 +1,16 @@
-"""Serving steps: prefill (parallel forward over the prompt) and decode
-(one token against the caches). Factories mirror train/steps.py.
+"""LM-serving steps (seed model-zoo stack): prefill (parallel forward over
+the prompt) and decode (one token against the caches). Factories mirror
+train/steps.py.
+
+NOTE: this is NOT the SPDC determinant service. The paper's workload is
+served by the micro-batching gateway in `repro.serve.spdc_gateway`
+(`python -m repro.launch.serve_spdc --help`, DESIGN.md §5).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import positions_for
 from repro.models.lm import forward_hidden, lm_logits_last
 
 

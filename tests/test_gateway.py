@@ -1,0 +1,353 @@
+"""Gateway tests: mixed-size coalescing correctness, flush-policy edge
+cases (timeout on a partial bucket, backpressure rejection), and per-bucket
+fault isolation (a tampered server's recovery cost never leaks into other
+buckets). DESIGN.md §5.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import SPDCConfig, SPDCGatewayConfig
+from repro.core import (
+    ServerFault,
+    outsource_determinant,
+    outsource_determinant_mixed,
+)
+from repro.serve import (
+    GatewayOverloaded,
+    NoBucketFits,
+    SPDCGateway,
+    bucket_size_for,
+)
+from repro.serve.spdc_gateway import allowed_batch_sizes
+
+
+def _mat(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n, n)) + n * np.eye(n)
+
+
+def _cfg(**kw):
+    kw.setdefault("buckets", (8, 16))
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_wait_us", 1000.0)
+    kw.setdefault("spdc", SPDCConfig(num_servers=2))
+    return SPDCGatewayConfig(name="test-gw", **kw)
+
+
+class VirtualClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+# ---------------------------------------------------------------- bucketing
+
+
+def test_bucket_size_for_picks_smallest_legal():
+    assert bucket_size_for(5, (8, 16), 2) == 8
+    assert bucket_size_for(8, (8, 16), 2) == 8
+    assert bucket_size_for(9, (8, 16), 2) == 16
+    # 8 is not servable by N=8 (8/8 == 1 block); falls through to 16
+    assert bucket_size_for(5, (8, 16), 8) == 16
+    with pytest.raises(NoBucketFits):
+        bucket_size_for(17, (8, 16), 2)
+
+
+def test_gateway_rejects_unservable_bucket_config():
+    """A server count no bucket divides must fail at construction, not
+    silently route every request down the un-coalesced direct path."""
+    with pytest.raises(ValueError, match="servable"):
+        SPDCGateway(_cfg(spdc=SPDCConfig(num_servers=3)))
+
+
+def test_allowed_batch_sizes_bounded():
+    assert allowed_batch_sizes(32) == (1, 2, 4, 8, 16, 32)
+    assert allowed_batch_sizes(6) == (1, 2, 4, 6)
+    assert allowed_batch_sizes(1) == (1,)
+
+
+# ------------------------------------------------- mixed-size protocol sweep
+
+
+def test_mixed_sweep_matches_direct_calls():
+    """The coalesced mixed-size sweep returns, per request, the same
+    determinant the client would have gotten from its own direct
+    outsource_determinant call (rtol 1e-10)."""
+    ms = [_mat(n, seed=n) for n in (3, 7, 8, 5, 6, 2)]
+    res = outsource_determinant_mixed(ms, 2, pad_to=8)
+    assert res.verified.all()
+    assert res.pad_to == 8 and res.padding == 0
+    assert res.paddings == [5, 1, 0, 3, 2, 6]
+    for m, det in zip(ms, res.dets):
+        direct = outsource_determinant(m, 2)
+        assert direct.verified
+        assert det.sign == direct.det.sign
+        assert np.isclose(det.logabs, direct.det.logabs, rtol=1e-10)
+
+
+def test_mixed_sweep_rejects_bad_pad_to():
+    with pytest.raises(ValueError):
+        outsource_determinant_mixed([_mat(4)], 2, pad_to=7)  # 7 % 2 != 0
+    with pytest.raises(ValueError):
+        outsource_determinant_mixed([_mat(9)], 2, pad_to=8)  # too small
+    with pytest.raises(ValueError):
+        outsource_determinant_mixed([], 2)
+
+
+def test_outsource_determinant_routes_lists():
+    ms = [_mat(3, seed=1), _mat(6, seed=2)]
+    res = outsource_determinant(ms, 2)
+    assert res.batch == 2 and res.verified.all()
+    for m, det in zip(ms, res.dets):
+        ws, wl = np.linalg.slogdet(m)
+        assert det.sign == ws and np.isclose(det.logabs, wl, rtol=1e-10)
+
+
+def test_mixed_sweep_flags_single_tampered_matrix():
+    ms = [_mat(n, seed=10 + n) for n in (4, 6, 5)]
+    res = outsource_determinant_mixed(
+        ms, 2, pad_to=8,
+        faults=ServerFault(server=1, matrices=(1,)),
+    )
+    assert bool(res.verified[0]) and bool(res.verified[2])
+    assert not bool(res.verified[1])
+
+
+# --------------------------------------------------------- gateway semantics
+
+
+def test_gateway_mixed_interleaved_matches_direct():
+    """Interleaved mixed-size, mixed-bucket submissions: every result
+    matches the client's own direct call at rtol 1e-10."""
+    gw = SPDCGateway(_cfg(), clock=VirtualClock())
+    sizes = (3, 12, 5, 16, 8, 9, 4, 14)
+    mats = [_mat(n, seed=20 + n) for n in sizes]
+    rids = [gw.submit(m) for m in mats]
+    gw.drain()
+    for m, rid in zip(mats, rids):
+        r = gw.take(rid)
+        assert r is not None and r.verified
+        direct = outsource_determinant(m, 2)
+        assert r.det.sign == direct.det.sign
+        assert np.isclose(r.det.logabs, direct.det.logabs, rtol=1e-10)
+    assert gw.stats.served == len(sizes)
+    # sizes <= 8 share bucket 8; 9..16 share bucket 16
+    assert gw.stats.flushes >= 2
+
+
+def test_gateway_full_bucket_flushes_on_submit():
+    clock = VirtualClock()
+    gw = SPDCGateway(_cfg(max_batch=2), clock=clock)
+    r0 = gw.submit(_mat(5, seed=1))
+    assert gw.take(r0) is None and gw.pending == 1
+    r1 = gw.submit(_mat(6, seed=2))  # bucket reaches max_batch
+    res0, res1 = gw.take(r0), gw.take(r1)
+    assert res0 is not None and res1 is not None
+    assert res0.flush_reason == "full" and res0.batch == 2
+    assert gw.pending == 0 and gw.stats.flushes_full == 1
+
+
+def test_gateway_timeout_flushes_partial_bucket():
+    clock = VirtualClock()
+    gw = SPDCGateway(_cfg(max_wait_us=1000.0), clock=clock)
+    rid = gw.submit(_mat(5, seed=3))
+    # before the deadline nothing happens
+    clock.t = 0.0009
+    assert gw.poll() == [] and gw.take(rid) is None
+    # after max_wait_us the partial bucket (1 of 4) flushes
+    clock.t = 0.0011
+    out = gw.poll()
+    assert [r.rid for r in out] == [rid]
+    res = gw.take(rid)
+    assert res.flush_reason == "timeout" and res.batch == 1 and res.verified
+    assert gw.stats.flushes_timeout == 1
+
+
+def test_gateway_backpressure_rejects_at_submit():
+    clock = VirtualClock()
+    gw = SPDCGateway(
+        _cfg(max_batch=100, max_wait_us=1e9, max_pending=3), clock=clock
+    )
+    mats = [_mat(5, seed=30 + i) for i in range(3)]
+    rids = [gw.submit(m) for m in mats]
+    with pytest.raises(GatewayOverloaded):
+        gw.submit(_mat(5, seed=99))
+    assert gw.stats.rejected == 1 and gw.stats.submitted == 3
+    assert gw.pending == 3  # the rejected request was never enqueued
+    gw.drain()
+    for rid in rids:  # queued requests are unharmed
+        assert gw.take(rid).verified
+
+
+def test_gateway_oversize_runs_direct():
+    gw = SPDCGateway(_cfg(), clock=VirtualClock())
+    rid = gw.submit(_mat(20, seed=4))  # larger than every bucket
+    res = gw.take(rid)
+    assert res is not None and res.verified
+    assert res.flush_reason == "direct" and res.batch == 1
+    assert gw.stats.direct == 1 and gw.stats.flushes == 0
+    ws, wl = np.linalg.slogdet(_mat(20, seed=4))
+    assert res.det.sign == ws and np.isclose(res.det.logabs, wl, rtol=1e-10)
+
+
+def test_gateway_security_config_overrides_open_buckets():
+    """Requests with different security configs never share a sweep."""
+    gw = SPDCGateway(_cfg(max_batch=2, max_wait_us=1e9), clock=VirtualClock())
+    a = gw.submit(_mat(5, seed=5))
+    b = gw.submit(_mat(5, seed=6), method="q2")  # different bucket
+    c = gw.submit(_mat(5, seed=7), lambda1=64)  # security params count too
+    assert gw.take(a) is None and gw.take(b) is None and gw.pending == 3
+    gw.drain()
+    ra, rb, rc = gw.take(a), gw.take(b), gw.take(c)
+    assert ra.verified and rb.verified and rc.verified
+    assert gw.stats.flushes == 3  # one sweep per security config
+
+
+def test_bucket_key_carries_full_security_config():
+    """Every SPDCConfig protocol field the sweep honors must ride in the
+    BucketKey's kwargs — a gateway preset raising lambda1/lambda2 must not
+    be silently served at the defaults."""
+    from repro.serve import BucketKey
+
+    key = BucketKey(pad_to=8, num_servers=2, lambda1=256, lambda2=192)
+    kwargs = key.protocol_kwargs()
+    assert kwargs["lambda1"] == 256 and kwargs["lambda2"] == 192
+    spdc_fields = set(SPDCConfig().protocol_kwargs())
+    assert spdc_fields <= set(kwargs) | {"pad_to"}
+
+
+def test_gateway_burst_flushes_in_max_batch_chunks():
+    """A burst beyond max_batch is served in max_batch-sized sweeps (bounded
+    jit shapes), not one oversized sweep."""
+    gw = SPDCGateway(_cfg(max_batch=2, max_wait_us=1e9), clock=VirtualClock(),
+                     auto_flush=False)
+    rids = [gw.submit(_mat(5, seed=40 + i)) for i in range(5)]
+    gw.poll()  # flushes the full bucket twice (2 + 2), leaves 1 pending
+    assert gw.stats.flushes == 2 and gw.pending == 1
+    gw.drain()
+    assert gw.pending == 0
+    batches = sorted(gw.take(r).batch for r in rids)
+    assert batches == [1, 2, 2, 2, 2]
+
+
+def test_gateway_rejects_bad_submissions_loudly():
+    gw = SPDCGateway(_cfg(), clock=VirtualClock())
+    with pytest.raises(TypeError, match="unknown submit"):
+        gw.submit(_mat(5), recovery=True)  # typo for recover=
+    with pytest.raises(ValueError, match="square"):
+        gw.submit(np.ones((3, 4)))
+    with pytest.raises(ValueError, match="at least 2x2"):
+        gw.submit(np.ones((1, 1)))
+    with pytest.raises(ValueError, match="non-finite"):
+        gw.submit(np.full((4, 4), np.nan))
+    assert gw.pending == 0
+
+
+def test_gateway_sweep_failure_fails_requests_not_service():
+    """A sweep that raises delivers per-request error results; co-batched
+    requests never vanish and later submissions still work."""
+    gw = SPDCGateway(_cfg(max_batch=2), clock=VirtualClock(),
+                     faults_for=lambda key: (_ for _ in ()).throw(
+                         RuntimeError("injected sweep failure")))
+    r0 = gw.submit(_mat(5, seed=1))
+    r1 = gw.submit(_mat(6, seed=2))  # fills the bucket -> failing flush
+    res0, res1 = gw.take(r0), gw.take(r1)
+    assert res0 is not None and res1 is not None
+    assert not res0.verified and "injected sweep failure" in res0.error
+    assert res0.det is None and res1.det is None
+    assert gw.stats.failed == 2 and gw.pending == 0
+    # the gateway keeps serving once the failure source is gone
+    gw._faults_for = None
+    r2 = gw.submit(_mat(5, seed=3))
+    r3 = gw.submit(_mat(6, seed=4))
+    assert gw.take(r2).verified and gw.take(r3).verified
+
+
+def test_mixed_list_rejects_use_kernel():
+    with pytest.raises(ValueError, match="use_kernel"):
+        outsource_determinant([_mat(4), _mat(6)], 2, use_kernel=True)
+
+
+# ----------------------------------------------------------- fault isolation
+
+
+def test_tampered_bucket_pays_recovery_alone():
+    """A tampering server poisons one bucket's sweep; recovery heals that
+    bucket and the co-batched clean bucket never pays for it."""
+    cfg = _cfg(
+        max_batch=3, max_wait_us=1e9,
+        spdc=SPDCConfig(num_servers=2, recover=True, standby=1),
+    )
+
+    def faults_for(key):
+        return ServerFault(server=1) if key.pad_to == 8 else None
+
+    gw = SPDCGateway(cfg, clock=VirtualClock(), faults_for=faults_for)
+    small = [_mat(n, seed=50 + n) for n in (4, 6, 7)]  # bucket 8 (tampered)
+    big = [_mat(n, seed=60 + n) for n in (10, 14, 16)]  # bucket 16 (clean)
+    rids_s = [gw.submit(m) for m in small]
+    rids_b = [gw.submit(m) for m in big]
+    rs = [gw.take(r) for r in rids_s]
+    rb = [gw.take(r) for r in rids_b]
+
+    # tampered bucket: healed in place, exact dets, recovery report attached
+    for m, r in zip(small, rs):
+        assert r.verified and r.recovery is not None and r.recovery.ok
+        ws, wl = np.linalg.slogdet(m)
+        assert r.det.sign == ws and np.isclose(r.det.logabs, wl, rtol=1e-10)
+    # clean bucket: verified with NO recovery involvement
+    for m, r in zip(big, rb):
+        assert r.verified and r.recovery is None
+        ws, wl = np.linalg.slogdet(m)
+        assert r.det.sign == ws and np.isclose(r.det.logabs, wl, rtol=1e-10)
+    assert gw.stats.recovered_flushes == 1
+    assert gw.stats.flushes == 2
+
+
+# ------------------------------------------------------------- async surface
+
+
+def test_async_gateway_serves_concurrent_clients():
+    import asyncio
+
+    from repro.serve import AsyncSPDCGateway
+
+    cfg = _cfg(max_batch=4, max_wait_us=3000.0)
+    mats = [_mat(n, seed=70 + n) for n in (3, 12, 5, 16, 8, 9, 4, 14)]
+
+    async def main():
+        async with AsyncSPDCGateway(cfg) as gw:
+            return await asyncio.gather(*(gw.submit(m) for m in mats))
+
+    results = asyncio.run(main())
+    assert len(results) == len(mats)
+    for m, r in zip(mats, results):
+        assert r.verified
+        ws, wl = np.linalg.slogdet(m)
+        assert r.det.sign == ws and np.isclose(r.det.logabs, wl, rtol=1e-10)
+
+
+def test_async_gateway_backpressure_raises():
+    import asyncio
+
+    from repro.serve import AsyncSPDCGateway
+
+    cfg = _cfg(max_batch=100, max_wait_us=1e9, max_pending=2)
+
+    async def main():
+        async with AsyncSPDCGateway(cfg) as gw:
+            t1 = asyncio.ensure_future(gw.submit(_mat(5, seed=1)))
+            t2 = asyncio.ensure_future(gw.submit(_mat(5, seed=2)))
+            # submits enqueue on worker threads; wait until both landed
+            # (neither can flush: the bucket never fills nor times out)
+            while gw.pending < 2:
+                await asyncio.sleep(0.001)
+            with pytest.raises(GatewayOverloaded):
+                await gw.submit(_mat(5, seed=3))
+        # leaving the context drains the queue and resolves the waiters
+        return await asyncio.gather(t1, t2)
+
+    r1, r2 = asyncio.run(main())
+    assert r1.verified and r2.verified

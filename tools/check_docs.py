@@ -1,0 +1,128 @@
+"""Docs link-and-anchor checker (CI docs job).
+
+Validates the repo's documentation graph so README/DESIGN can be load-bearing:
+
+  1. every relative markdown link in README.md / DESIGN.md resolves to an
+     existing file;
+  2. every intra-document anchor link (`[...](#heading)` or
+     `[...](FILE.md#heading)`) matches a real heading's GitHub slug;
+  3. every `DESIGN.md §N[.M]` reference — in the markdown docs AND in
+     src/tests/benchmarks/examples source — names a section heading that
+     actually exists in DESIGN.md (section numbers are the repo's stable
+     cross-reference currency, so a dangling one is a doc bug);
+  4. README.md contains the required top-level sections (quickstart,
+     install/test, architecture).
+
+    python tools/check_docs.py        # exit 0 clean / 1 with findings
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+DOCS = ("README.md", "DESIGN.md")
+REQUIRED_README_HEADINGS = (
+    "quickstart",
+    "install and test",
+    "architecture",
+)
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*)$", re.M)
+SECTION_REF_RE = re.compile(r"DESIGN\.md[ §§]*§?\s*(\d+(?:\.\d+)?)")
+SECTION_HEAD_RE = re.compile(r"^#{2,6}\s+§(\d+(?:\.\d+)?)\b", re.M)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's heading → anchor slug (close enough for ASCII docs)."""
+    slug = heading.strip().lower()
+    slug = re.sub(r"[^\w\- ]", "", slug, flags=re.UNICODE)
+    return slug.replace(" ", "-")
+
+
+def headings_of(path: Path) -> list[str]:
+    return [m.group(2).strip() for m in HEADING_RE.finditer(path.read_text())]
+
+
+def check_links(problems: list[str]) -> None:
+    for doc in DOCS:
+        path = ROOT / doc
+        if not path.exists():
+            problems.append(f"{doc}: missing")
+            continue
+        text = path.read_text()
+        slugs = {github_slug(h) for h in headings_of(path)}
+        for m in LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            if target.startswith("#"):
+                if target[1:] not in slugs:
+                    problems.append(f"{doc}: dangling anchor {target}")
+                continue
+            file_part, _, anchor = target.partition("#")
+            dest = (path.parent / file_part).resolve()
+            if not dest.exists():
+                problems.append(f"{doc}: broken link {target}")
+                continue
+            if anchor and dest.suffix == ".md":
+                dest_slugs = {github_slug(h) for h in headings_of(dest)}
+                if anchor not in dest_slugs:
+                    problems.append(
+                        f"{doc}: dangling anchor #{anchor} in {file_part}"
+                    )
+
+
+def design_sections() -> set[str]:
+    text = (ROOT / "DESIGN.md").read_text()
+    return {m.group(1) for m in SECTION_HEAD_RE.finditer(text)}
+
+
+def check_section_refs(problems: list[str]) -> None:
+    sections = design_sections()
+    if not sections:
+        problems.append("DESIGN.md: no §-numbered sections found")
+        return
+    scan = [ROOT / d for d in DOCS]
+    for sub in ("src", "tests", "benchmarks", "examples"):
+        scan.extend((ROOT / sub).rglob("*.py"))
+    for path in scan:
+        text = path.read_text()
+        for m in SECTION_REF_RE.finditer(text):
+            ref = m.group(1)
+            # §N.M references resolve if §N.M or its parent §N exists
+            if ref in sections or ref.split(".")[0] in sections:
+                continue
+            problems.append(
+                f"{path.relative_to(ROOT)}: reference to DESIGN.md §{ref} "
+                "but no such section"
+            )
+
+
+def check_required_readme(problems: list[str]) -> None:
+    heads = [h.lower() for h in headings_of(ROOT / "README.md")]
+    for want in REQUIRED_README_HEADINGS:
+        if not any(want in h for h in heads):
+            problems.append(f"README.md: missing required section '{want}'")
+
+
+def main() -> int:
+    problems: list[str] = []
+    check_links(problems)
+    check_section_refs(problems)
+    check_required_readme(problems)
+    if problems:
+        print(f"check_docs: {len(problems)} problem(s)")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    print("check_docs: README.md + DESIGN.md links, anchors, and §-references OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
