@@ -12,6 +12,11 @@ shape must stay within `--factor` of the baseline's.
     # the serving layer's acceptance claim
     python benchmarks/check_regression.py BENCH_ci.json BENCH_2.json \
         --suite gateway --n 64 --servers 2 --factor 2.0
+    # precision guard (rows from the `precision` suite, BENCH_3): the f32
+    # protocol must sustain >= --f32-speedup x the fresh f64 rate at --n,
+    # and EVERY precision row must report a 100% Q3 verified-rate
+    python benchmarks/check_regression.py BENCH_ci.json BENCH_3.json \
+        --suite precision --n 256 --servers 4
 """
 
 from __future__ import annotations
@@ -23,7 +28,8 @@ from pathlib import Path
 
 
 def best_dets_per_sec(
-    rows: list[dict], n: int, servers: int, *, suite: str, modes: tuple
+    rows: list[dict], n: int, servers: int, *, suite: str, modes: tuple,
+    dtype: str | None = None,
 ) -> float:
     """Max dets/sec over a suite's rows for one (n, N) shape and mode set."""
     rates = [
@@ -33,6 +39,7 @@ def best_dets_per_sec(
         and r.get("mode") in modes
         and r.get("n") == n
         and r.get("num_servers") == servers
+        and (dtype is None or r.get("dtype") == dtype)
     ]
     if not rates:
         raise SystemExit(
@@ -40,6 +47,47 @@ def best_dets_per_sec(
             f"did the {suite} suite run?"
         )
     return max(rates)
+
+
+def check_precision(fresh_rows: list[dict], base_rows: list[dict], n: int,
+                    servers: int, f32_speedup: float) -> bool:
+    """The precision suite's acceptance claims.
+
+    The COMMITTED baseline must hold the sharp f32 ≥ 1.5× f64 claim at
+    (n, N) — it is a deterministic artifact, immune to CI-runner noise.
+    The FRESH run must show f32 ≥ --f32-speedup × f64 (the smoke leg runs
+    with a margin, same as the gateway guard's factor) and a 100% Q3
+    verified-rate on EVERY measured precision row — f32 is a first-class
+    verified dtype, not a fast-but-unverifiable mode.
+
+    Returns (ok, fresh_f32_rate, baseline_f32_rate) so the caller's
+    --factor floor reuses the same row selection."""
+    def ratio_of(rows, label, need):
+        f32 = best_dets_per_sec(rows, n, servers, suite="precision",
+                                modes=("batched",), dtype="float32")
+        f64 = best_dets_per_sec(rows, n, servers, suite="precision",
+                                modes=("batched",), dtype="float64")
+        r = f32 / f64
+        print(
+            f"precision[{label}] n={n} N={servers}: f32 {f32:.1f} vs f64 "
+            f"{f64:.1f} dets/sec = {r:.2f}x (need >= {need}x) "
+            f"-> {'OK' if r >= need else 'FAIL'}"
+        )
+        return r >= need, f32
+
+    base_ok, base_f32 = ratio_of(base_rows, "committed", 1.5)
+    fresh_ok, fresh_f32 = ratio_of(fresh_rows, "fresh", f32_speedup)
+    ok = base_ok and fresh_ok
+    unverified = [
+        r["name"] for r in fresh_rows
+        if r.get("suite") == "precision" and "verified_rate" in r
+        and float(r["verified_rate"]) < 1.0
+    ]
+    if unverified:
+        print(f"precision verified-rate < 100% on: {unverified} -> FAIL")
+    else:
+        print("precision verified-rate 100% on every row -> OK")
+    return ok and not unverified, fresh_f32, base_f32
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -56,15 +104,32 @@ def main(argv: list[str] | None = None) -> int:
     )
     ap.add_argument(
         "--suite",
-        choices=("throughput", "gateway"),
+        choices=("throughput", "gateway", "precision"),
         default="throughput",
         help="which suite's rows to guard (gateway also checks the "
-        "gateway-beats-loop acceptance claim on the fresh run)",
+        "gateway-beats-loop acceptance claim on the fresh run; precision "
+        "checks the f32-speedup and 100%%-verified claims)",
+    )
+    ap.add_argument(
+        "--f32-speedup",
+        type=float,
+        default=1.5,
+        help="precision suite: minimum fresh f32/f64 dets/sec ratio",
     )
     args = ap.parse_args(argv)
 
     fresh = json.loads(args.fresh.read_text())
     base = json.loads(args.baseline.read_text())
+    if args.suite == "precision":
+        ok, got, want = check_precision(fresh["rows"], base["rows"], args.n,
+                                        args.servers, args.f32_speedup)
+        floor = want / args.factor
+        print(
+            f"precision f32 n={args.n} N={args.servers}: fresh {got:.1f} "
+            f"vs baseline {want:.1f} dets/sec (floor {floor:.1f} at "
+            f"{args.factor}x) -> {'OK' if got >= floor else 'REGRESSION'}"
+        )
+        return 0 if ok and got >= floor else 1
     modes = ("batched",) if args.suite == "throughput" else ("gateway",)
     got = best_dets_per_sec(
         fresh["rows"], args.n, args.servers, suite=args.suite, modes=modes

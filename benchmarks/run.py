@@ -25,6 +25,12 @@ future PRs have a perf trajectory to beat.
                            sustained dets/sec + p50/p99 latency vs offered
                            load, against the per-request call baseline;
                            rows land in BENCH_2.json (its own CI guard)
+  precision              — f32 vs f64 protocol (DESIGN.md §6): dets/sec
+                           and verified-rate at n ∈ {64, 256, 1024}, plus
+                           the worst log-space det error vs f64 numpy
+                           references; rows land in BENCH_3.json, guarded
+                           by check_regression.py --suite precision
+                           (f32 ≥ 1.5× f64 at n=256, 100% Q3 verification)
   extension_inverse      — paper §VII.B future work: secure inversion
 
 Usage: python benchmarks/run.py [suite ...] [--smoke] [--out PATH]
@@ -445,6 +451,52 @@ def gateway_suite(n: int = 64, N: int = 2):
          all_verified=bool(all(r.verified for r in served)))
 
 
+def precision_suite(ns=(64, 256, 1024), N: int = 4, B: int = 8):
+    """float32 vs float64 protocol (DESIGN.md §6) — the edge/accelerator
+    precision profile's acceptance numbers.
+
+    Per (n, dtype): dets/sec of one warmed (B, n, n) batched sweep, the
+    Q3 verified-rate over the batch, and the worst per-matrix |Δ log|det||
+    against float64 numpy references. The CI guard asserts f32 ≥ 1.5× the
+    f64 rate at n = 256 with a 100% verified-rate — the claim that makes
+    float32 the default edge profile rather than a degraded mode.
+    """
+    from repro.core import outsource_determinant
+
+    if SMOKE:
+        ns = (64, 256)  # keep B=8: the n=256 f32/f64 ratio is the claim
+    for n in ns:
+        stack = _wellcond(n, seed=n, batch=B)
+        refs = [np.linalg.slogdet(stack[i]) for i in range(B)]
+        rates = {}
+        for dtype in ("float64", "float32"):
+            t_us, res = _t(
+                lambda d=dtype: outsource_determinant(stack, N, dtype=d),
+                reps=2, warmup=1,
+            )
+            rate = B * 1e6 / t_us
+            rates[dtype] = rate
+            ok = np.asarray(res.verified)
+            dlog = max(
+                abs(res.dets[i].logabs - refs[i][1]) for i in range(B)
+            )
+            sign_ok = all(res.dets[i].sign == refs[i][0] for i in range(B))
+            emit(
+                f"precision_{dtype}_n{n}_N{N}_B{B}", t_us,
+                suite="precision", n=n, num_servers=N, batch=B,
+                dtype=dtype, mode="batched",
+                dets_per_sec=round(rate, 2),
+                verified_rate=round(float(ok.mean()), 4),
+                max_abs_dlog=f"{dlog:.2e}",
+                sign_ok=bool(sign_ok),
+            )
+        emit(
+            f"precision_speedup_n{n}_N{N}_B{B}", 0.0,
+            suite="precision", n=n, num_servers=N, batch=B, mode="ratio",
+            f32_speedup=round(rates["float32"] / rates["float64"], 2),
+        )
+
+
 def extension_inverse(n: int = 128):
     """Paper §VII.B future work, implemented: secure outsourced inversion."""
     from repro.core import outsource_inverse
@@ -469,6 +521,7 @@ SUITES = {
     "throughput": throughput,
     "faults": faults_suite,
     "gateway": gateway_suite,
+    "precision": precision_suite,
     "inverse": extension_inverse,
 }
 
@@ -514,23 +567,29 @@ def main(argv: list[str] | None = None) -> None:
         out.write_text(json.dumps(record, indent=1) + "\n")
         print(f"# wrote {out} ({len(RESULTS)} rows)")
         return
-    # the gateway suite owns its own committed baseline (BENCH_2.json, the
-    # serving-layer perf trajectory); everything else lives in BENCH_1.json
-    gw_rows = [r for r in RESULTS if r.get("suite") == "gateway"]
-    if "gateway" in names and not SMOKE:
-        out2 = ROOT / "BENCH_2.json"
-        record2 = dict(record, suites=["gateway"], rows=gw_rows)
-        out2.write_text(json.dumps(record2, indent=1) + "\n")
-        print(f"# wrote {out2} ({len(gw_rows)} rows)")
-    core_names = [s for s in names if s != "gateway"]
-    if set(core_names) != set(s for s in SUITES if s != "gateway") or SMOKE:
+    # the gateway and precision suites own their own committed baselines
+    # (BENCH_2.json / BENCH_3.json — each with its own CI guard);
+    # everything else lives in BENCH_1.json
+    own_baseline = {"gateway": "BENCH_2.json", "precision": "BENCH_3.json"}
+    for suite, fname in own_baseline.items():
+        rows = [r for r in RESULTS if r.get("suite") == suite]
+        if suite in names and not SMOKE:
+            out_s = ROOT / fname
+            record_s = dict(record, suites=[suite], rows=rows)
+            out_s.write_text(json.dumps(record_s, indent=1) + "\n")
+            print(f"# wrote {out_s} ({len(rows)} rows)")
+    core_names = [s for s in names if s not in own_baseline]
+    if set(core_names) != set(s for s in SUITES if s not in own_baseline) \
+            or SMOKE:
         # subset/smoke runs must not clobber the committed full baseline
         print("# partial suite run — BENCH_1.json left untouched "
               "(run with no args to refresh the baseline)")
         return
     out = ROOT / "BENCH_1.json"
-    record1 = dict(record, suites=core_names,
-                   rows=[r for r in RESULTS if r.get("suite") != "gateway"])
+    record1 = dict(
+        record, suites=core_names,
+        rows=[r for r in RESULTS if r.get("suite") not in own_baseline],
+    )
     out.write_text(json.dumps(record1, indent=1) + "\n")
     print(f"# wrote {out} ({len(record1['rows'])} rows)")
 

@@ -40,6 +40,7 @@ class SPDCConfig:
             recover=self.recover,
             standby=self.standby,
             straggler_deadline=self.straggler_deadline,
+            dtype=self.dtype,
         )
 
 
@@ -50,6 +51,14 @@ SPDC_POD = SPDCConfig(name="spdc-pod", matrix_n=8192, num_servers=16)
 SPDC_EDGE_HARDENED = SPDCConfig(
     name="spdc-edge-hardened", matrix_n=512, num_servers=4,
     standby=2, recover=True, straggler_deadline=8,
+)
+#: accelerator/edge precision profile: float32 compute end-to-end — the
+#: only dtype real TPUs have, and ~2× the dets/sec (and half the wire
+#: bytes) of f64 everywhere else. The protocol auto-enables the
+#: growth-safe relayout + equilibration (DESIGN.md §6) and the ε(N)
+#: thresholds read the f32 unit roundoff.
+SPDC_EDGE_F32 = SPDCConfig(
+    name="spdc-edge-f32", matrix_n=512, num_servers=4, dtype="float32",
 )
 
 
@@ -105,4 +114,9 @@ SPDC_GATEWAY_BULK = SPDCGatewayConfig(
 #: place with N+2 standby servers (DESIGN.md §4)
 SPDC_GATEWAY_HARDENED = SPDCGatewayConfig(
     name="spdc-gateway-hardened", spdc=SPDC_EDGE_HARDENED,
+)
+#: float32 serving: every default bucket sweeps in f32 (f64 clients can
+#: still opt up per request via submit(dtype="float64"))
+SPDC_GATEWAY_F32 = SPDCGatewayConfig(
+    name="spdc-gateway-f32", spdc=SPDC_EDGE_F32,
 )

@@ -6,7 +6,14 @@ from .augment import (
     padding_for_servers,
     padding_to_even,
 )
-from .cipher import CipherMeta, cipher, cipher_batch, cipher_flops, ewo
+from .cipher import (
+    CipherMeta,
+    cipher,
+    cipher_batch,
+    cipher_flops,
+    equilibrate,
+    ewo,
+)
 from .decipher import Determinant, decipher, decipher_batch, decipher_flops
 from .faults import (
     FaultPlan,
@@ -29,6 +36,7 @@ from .lu import (
     lu_unblocked,
     nserver_comm_model,
     slogdet_from_lu,
+    slogdet_pair_from_lu,
 )
 from .protocol import (
     SPDCBatchResult,
@@ -36,8 +44,11 @@ from .protocol import (
     common_padded_size,
     outsource_determinant,
     outsource_determinant_mixed,
+    resolve_dtype,
 )
 from .prt import (
+    flip_sign,
+    growth_safe_sign,
     quantize_seed,
     rot90_cw,
     rotate_degree,
@@ -51,6 +62,7 @@ from .verify import (
     Verdict,
     authenticate,
     epsilon,
+    growth_estimate,
     localize,
     per_server_residuals,
     q1,
@@ -62,7 +74,8 @@ from .verify import (
 __all__ = [
     "augment", "augment_block_row", "augment_for_servers",
     "padding_for_servers", "padding_to_even",
-    "CipherMeta", "cipher", "cipher_batch", "cipher_flops", "ewo",
+    "CipherMeta", "cipher", "cipher_batch", "cipher_flops", "equilibrate",
+    "ewo",
     "Determinant", "decipher", "decipher_batch", "decipher_flops",
     "FaultPlan", "ServerFault", "apply_faults", "corrupt_strip",
     "normalize_plan", "resolve_delays",
@@ -70,13 +83,15 @@ __all__ = [
     "SPDCInverseResult", "outsource_inverse",
     "CommLog", "det_from_lu", "lu_block_row", "lu_blocked", "lu_diag_factor",
     "lu_nserver", "lu_panel_blocked", "lu_unblocked", "nserver_comm_model",
-    "slogdet_from_lu",
+    "slogdet_from_lu", "slogdet_pair_from_lu",
     "SPDCBatchResult", "SPDCResult", "common_padded_size",
-    "outsource_determinant", "outsource_determinant_mixed",
+    "outsource_determinant", "outsource_determinant_mixed", "resolve_dtype",
+    "flip_sign", "growth_safe_sign",
     "quantize_seed", "rot90_cw", "rotate_degree", "rotation_sign",
     "rotation_sign_paper", "sign_preserved",
     "checked_matmul", "freivalds_residual", "sdc_flag",
     "Seed", "seedgen", "seedgen_batch",
-    "Verdict", "authenticate", "epsilon", "localize", "per_server_residuals",
+    "Verdict", "authenticate", "epsilon", "growth_estimate", "localize",
+    "per_server_residuals",
     "q1", "q2", "q3", "q3_paper_literal",
 ]

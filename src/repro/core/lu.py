@@ -150,6 +150,7 @@ def lu_blocked(
     *,
     use_kernels: bool = False,
     interpret: bool = True,
+    acc_dtype=None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Right-looking block LU on (..., n, n). n must be divisible by block.
 
@@ -157,26 +158,40 @@ def lu_blocked(
       panel:  X_kk = L_kk U_kk              (blocked-panel factorization)
       trsm:   U_kj = L_kk^{-1} X_kj (j>k);  L_ik = X_ik U_kk^{-1} (i>k)
       schur:  X_ij -= L_ik U_kj             (i,j > k — the GEMM hot spot)
+
+    acc_dtype: optional wider accumulation dtype — the "mixed" variant
+    (DESIGN.md §6.4): float32 inputs/outputs with float64 accumulation of
+    the panel/TRSM/Schur arithmetic. On the jnp path the working matrix is
+    upcast once and the factors are cast back; the kernel path threads
+    acc_dtype through each Pallas kernel (each tile computes wide in VMEM,
+    stores narrow). float64 accumulation requires a backend with f64
+    support (CPU, GPU) — TPU callers stay at the storage dtype.
     """
     n = a.shape[-1]
     if n % block != 0:
         raise ValueError(f"n={n} not divisible by block={block}")
     nb = n // block
+    out_dtype = a.dtype
+    if acc_dtype is not None and not use_kernels:
+        a = a.astype(acc_dtype)
 
     if use_kernels:
         from repro.kernels import ops as kops
 
         def panel(x):
-            return kops.lu_panel(x, interpret=interpret)
+            return kops.lu_panel(x, interpret=interpret, acc_dtype=acc_dtype)
 
         def trsm_l(l, b):
-            return kops.trsm_lower(l, b, interpret=interpret)
+            return kops.trsm_lower(l, b, interpret=interpret,
+                                   acc_dtype=acc_dtype)
 
         def trsm_u(u, b):
-            return kops.trsm_upper_right(u, b, interpret=interpret)
+            return kops.trsm_upper_right(u, b, interpret=interpret,
+                                         acc_dtype=acc_dtype)
 
         def schur(c, l, u_):
-            return kops.schur_update(c, l, u_, interpret=interpret)
+            return kops.schur_update(c, l, u_, interpret=interpret,
+                                     acc_dtype=acc_dtype)
     else:
         panel = lu_diag_factor
 
@@ -221,6 +236,8 @@ def lu_blocked(
                 uout[i][j] = zero
     l = jnp.block(lout)
     u = jnp.block(uout)
+    if l.dtype != out_dtype:
+        l, u = l.astype(out_dtype), u.astype(out_dtype)
     return l, u
 
 
@@ -472,17 +489,62 @@ def lu_block_row(
 # ---------------------------------------------------------------------------
 # determinant from LU
 # ---------------------------------------------------------------------------
+def _neumaier_sum(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Compensated (Kahan–Babuška/Neumaier) sum over the LAST axis.
+
+    Returns the (hi, lo) pair whose exact value hi + lo carries the sum to
+    ~u² relative error — the lost low-order bits of every addition are
+    accumulated in lo instead of discarded. In float32 a naive sum of n
+    log terms loses ~n·u·|partial-sum| absolute accuracy, which at
+    n = 1024 can exceed the 1e-4 log-space budget; the compensated pair,
+    recombined in float64 on the host, does not. Batch-aware over leading
+    dims; differentiably irrelevant (used only for reporting).
+    """
+    xt = jnp.moveaxis(x, -1, 0)
+    zeros = jnp.zeros(xt.shape[1:], dtype=x.dtype)
+
+    def step(carry, xi):
+        s, c = carry
+        t = s + xi
+        # whichever operand is larger kept its bits; the smaller one's
+        # truncated tail is recovered exactly
+        c = c + jnp.where(jnp.abs(s) >= jnp.abs(xi),
+                          (s - t) + xi, (xi - t) + s)
+        return (t, c), None
+
+    (s, c), _ = lax.scan(step, (zeros, zeros), xt)
+    return s, c
+
+
+def slogdet_pair_from_lu(
+    l: jnp.ndarray, u: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(sign, logabs_hi, logabs_lo) from LU factors — the compensated form.
+
+    log|det| = hi + lo exactly (recombine in float64 on the host: a single
+    float32 cannot even REPRESENT log|det| ≈ 1000 to 1e-4 absolute — its
+    ulp there is 2^-23·1024 ≈ 1.2e-4 — so the split is load-bearing for
+    float32 compute, not an optimization). Decipher consumes this;
+    `slogdet_from_lu` keeps the legacy single-float API.
+    """
+    d = jnp.diagonal(l, axis1=-2, axis2=-1) * jnp.diagonal(u, axis1=-2, axis2=-1)
+    sign = jnp.prod(jnp.sign(d), axis=-1)
+    hi, lo = _neumaier_sum(jnp.log(jnp.abs(d)))
+    return sign, hi, lo
+
+
 def slogdet_from_lu(l: jnp.ndarray, u: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
     """(sign, log|det|) from LU factors — paper §IV.F.1 in overflow-safe form.
 
     det(X) = Π L_ii · Π U_ii; L is unit-diagonal in our construction but we
     include its diagonal anyway to match the paper's formula. Batch-aware:
-    (..., n, n) factors give (...,)-shaped sign and logabs.
+    (..., n, n) factors give (...,)-shaped sign and logabs. The log sum is
+    compensated (slogdet_pair_from_lu) so B×n=1024 float32 stacks don't
+    lose digits; here the pair is recombined in the compute dtype — use
+    the pair form when the caller can recombine in float64.
     """
-    d = jnp.diagonal(l, axis1=-2, axis2=-1) * jnp.diagonal(u, axis1=-2, axis2=-1)
-    sign = jnp.prod(jnp.sign(d), axis=-1)
-    logabs = jnp.sum(jnp.log(jnp.abs(d)), axis=-1)
-    return sign, logabs
+    sign, hi, lo = slogdet_pair_from_lu(l, u)
+    return sign, hi + lo
 
 
 def det_from_lu(l: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:

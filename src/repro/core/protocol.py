@@ -26,6 +26,7 @@ import numpy as np
 
 from .augment import augment, augment_for_servers, padding_for_servers
 from .cipher import CipherMeta, Mode, cipher, cipher_batch
+from .cipher import equilibrate as ced_equilibrate
 from .decipher import Determinant, decipher, decipher_batch
 from .faults import normalize_plan, resolve_delays
 from .keygen import keygen, keygen_batch
@@ -33,6 +34,43 @@ from .lu import CommLog, lu_nserver, nserver_comm_model
 from .prt import rotate_degree
 from .seed import Seed, seedgen, seedgen_batch
 from .verify import Verdict, authenticate
+
+
+def resolve_dtype(dtype) -> jnp.dtype:
+    """Canonical compute dtype for the protocol.
+
+    Accepts a jnp/np dtype object or a string ("float32"/"float64").
+    Canonicalization honors the x64 switch: with jax.enable_x64 OFF a
+    float64 request resolves to float32 (the only float the backend will
+    actually compute in) instead of warning per-array downstream.
+    """
+    if isinstance(dtype, str):
+        dtype = jnp.dtype(dtype)
+    return jax.dtypes.canonicalize_dtype(dtype)
+
+
+def _low_precision(dtype) -> bool:
+    """True for compute dtypes that need the growth-control stages."""
+    return jnp.dtype(dtype).itemsize < 8
+
+
+def _resolve_growth_controls(
+    dtype, growth_safe, equilibrate, faithful_sign
+) -> tuple[bool, bool]:
+    """Default growth_safe/equilibrate ON for sub-f64 compute (where the
+    no-pivot growth eats the mantissa — DESIGN.md §6), OFF for float64
+    (bit-compatible with the pre-f32 protocol). Explicit booleans win."""
+    auto = _low_precision(dtype)
+    growth_safe = auto if growth_safe is None else bool(growth_safe)
+    equilibrate = auto if equilibrate is None else bool(equilibrate)
+    if growth_safe and faithful_sign:
+        raise ValueError(
+            "faithful_sign reproduces the paper's literal (-1)^k Decipher "
+            "factor, which has no growth-safe-relayout analog; pass "
+            "growth_safe=False (and expect float32 accuracy loss) or drop "
+            "faithful_sign"
+        )
+    return growth_safe, equilibrate
 
 
 @dataclass
@@ -87,14 +125,21 @@ class SPDCBatchResult:
         return len(self.dets)
 
 
-@partial(jax.jit, static_argnames=("num_servers", "padding", "faults"))
-def _augment_lu_batch(x, aug_key, *, num_servers, padding, faults=()):
-    """Jitted server-side stage for the batched path: augment + one
-    N-server schedule sweep over the whole stack. The fault plan is a
-    static (hashable) argument — each distinct plan compiles once."""
+@partial(jax.jit,
+         static_argnames=("num_servers", "padding", "faults", "equilibrate"))
+def _augment_lu_batch(x, aug_key, *, num_servers, padding, faults=(),
+                      equilibrate=False):
+    """Jitted server-side stage for the batched path: (equilibrate +)
+    augment + one N-server schedule sweep over the whole stack. The fault
+    plan is a static (hashable) argument — each distinct plan compiles
+    once. Returns per-matrix equilibration exponents (zeros when off)."""
+    if equilibrate:
+        x, log2_scale = ced_equilibrate(x)
+    else:
+        log2_scale = jnp.zeros(x.shape[0], dtype=jnp.int32)
     x_aug = augment(x, padding, key=aug_key)
     l, u, _ = lu_nserver(x_aug, num_servers, faults=faults)
-    return x_aug, l, u
+    return x_aug, l, u, log2_scale
 
 
 def _probe_rng(digest: bytes) -> np.random.Generator:
@@ -145,6 +190,8 @@ def _outsource_determinant_batch(
     standby: int,
     straggler_deadline: int | None,
     dtype,
+    growth_safe: bool,
+    equilibrate: bool,
 ) -> SPDCBatchResult:
     B, n = int(m.shape[0]), int(m.shape[-1])
 
@@ -152,7 +199,8 @@ def _outsource_determinant_batch(
     # one cipher launch over the stack) ---
     seeds = seedgen_batch(lambda1, np.asarray(m))
     v = keygen_batch(lambda2, seeds, n)
-    x, metas = cipher_batch(m, v, seeds, mode=mode, use_kernel=use_kernel)
+    x, metas = cipher_batch(m, v, seeds, mode=mode, growth_safe=growth_safe,
+                            use_kernel=use_kernel)
 
     aug_key = jax.random.key(
         int.from_bytes(seeds[0].digest[8:16], "big") % (2**31)
@@ -165,12 +213,17 @@ def _outsource_determinant_batch(
     if distributed:
         from repro.distrib.spdc_pipeline import lu_nserver_shardmap
 
+        if equilibrate:
+            x, log2_scale = ced_equilibrate(x)
+        else:
+            log2_scale = jnp.zeros(B, dtype=jnp.int32)
         x_aug = augment(x, padding, key=aug_key)
         l, u = lu_nserver_shardmap(x_aug, num_servers, faults=plan)
         comm = None
     else:
-        x_aug, l, u = _augment_lu_batch(
-            x, aug_key, num_servers=num_servers, padding=padding, faults=plan
+        x_aug, l, u, log2_scale = _augment_lu_batch(
+            x, aug_key, num_servers=num_servers, padding=padding,
+            faults=plan, equilibrate=equilibrate,
         )
         comm = nserver_comm_model(n + padding, num_servers)
 
@@ -189,7 +242,8 @@ def _outsource_determinant_batch(
         digest=_batch_digest(seeds),
         style="pipeline" if distributed else "nserver",
     )
-    dets = decipher_batch(seeds, metas, l, u, faithful=faithful_sign)
+    dets = decipher_batch(seeds, metas, l, u, faithful=faithful_sign,
+                          log2_scale=np.asarray(log2_scale))
     return SPDCBatchResult(
         dets=dets,
         verified=np.asarray(verdict.ok),
@@ -212,7 +266,8 @@ def _lu_sweep(x_aug, *, num_servers, faults=()):
     return l, u
 
 
-def _cipher_host(m: np.ndarray, v: np.ndarray, k: int, mode: Mode) -> np.ndarray:
+def _cipher_host(m: np.ndarray, v: np.ndarray, k: int, mode: Mode,
+                 *, growth_safe: bool = False) -> np.ndarray:
     """Host-side Cipher for the mixed-size path: EWO row scaling + k
     clockwise quarter-turns, pure numpy.
 
@@ -222,7 +277,8 @@ def _cipher_host(m: np.ndarray, v: np.ndarray, k: int, mode: Mode) -> np.ndarray
     responsibility here (exactly the paper's client-side PMOP placement);
     the device only ever sees the uniform stacked bucket shape. numpy f64
     elementwise ops round identically to XLA-CPU f64, so results agree
-    with core.cipher.cipher to the last ulp.
+    with core.cipher.cipher to the last ulp. growth_safe composes odd
+    rotations with the exchange flip (core.cipher semantics).
     """
     if mode == "ewd":
         x = m / v.reshape(-1, 1)
@@ -230,7 +286,24 @@ def _cipher_host(m: np.ndarray, v: np.ndarray, k: int, mode: Mode) -> np.ndarray
         x = m * v.reshape(-1, 1)
     else:
         raise ValueError(f"unknown EWO mode: {mode!r}")
-    return np.rot90(x, k=-(k % 4))  # cw k turns == ccw -k (core.prt.rot90_cw)
+    x = np.rot90(x, k=-(k % 4))  # cw k turns == ccw -k (core.prt.rot90_cw)
+    if growth_safe and k % 2 == 1:
+        x = x[:, ::-1] if k % 4 == 1 else x[::-1, :]
+    return np.ascontiguousarray(x)
+
+
+def _equilibrate_host(x: np.ndarray) -> tuple[np.ndarray, int]:
+    """numpy twin of core.cipher.equilibrate for the mixed-size path:
+    power-of-two row then column scaling; returns (x_eq, log2_scale)."""
+    def pow2_exp(maxabs):
+        safe = np.where(maxabs > 0, maxabs, 1.0)
+        return np.round(np.log2(safe)).astype(np.int64)
+
+    e_r = pow2_exp(np.max(np.abs(x), axis=-1))
+    x = x * np.exp2(-e_r.astype(x.dtype))[:, None]
+    e_c = pow2_exp(np.max(np.abs(x), axis=-2))
+    x = x * np.exp2(-e_c.astype(x.dtype))[None, :]
+    return x, -int(e_r.sum() + e_c.sum())
 
 
 def _augment_host(x: np.ndarray, p: int, rng: np.random.Generator) -> np.ndarray:
@@ -272,7 +345,9 @@ def outsource_determinant_mixed(
     recover: bool = False,
     standby: int = 0,
     straggler_deadline: int | None = None,
-    dtype=jnp.float64,
+    dtype="float64",
+    growth_safe: bool | None = None,
+    equilibrate: bool | None = None,
 ) -> SPDCBatchResult:
     """Run the SPDC protocol for a *mixed-size* list of matrices in ONE
     coalesced N-server sweep — the gateway's batching primitive.
@@ -304,7 +379,11 @@ def outsource_determinant_mixed(
     """
     # host-native from the start: this path's whole point is that raw-size
     # client matrices never individually touch the device (DESIGN.md §5.1)
-    np_dtype = np.dtype(jnp.zeros((), dtype).dtype.name)
+    dtype = resolve_dtype(dtype)
+    growth_safe, equilibrate = _resolve_growth_controls(
+        dtype, growth_safe, equilibrate, faithful_sign
+    )
+    np_dtype = np.dtype(dtype.name)
     ms = [np.asarray(m, dtype=np_dtype) for m in ms]
     if not ms:
         raise ValueError("outsource_determinant_mixed needs >= 1 matrix")
@@ -326,21 +405,28 @@ def outsource_determinant_mixed(
     # (hashes + numpy O(n²) cipher/border — no per-client-shape XLA
     # compiles); the det-preserving border brings every ciphertext to the
     # shared (n', n') shape before ONE host→device transfer of the stack ---
-    seeds, metas, xs, paddings = [], [], [], []
+    seeds, metas, xs, paddings, log2_scales = [], [], [], [], []
     for m in ms:
         n = int(m.shape[0])
         seed = seedgen(lambda1, m)
         key = keygen(lambda2, seed, n)
         k = rotate_degree(seed.psi)
-        x = _cipher_host(m, np.asarray(key.v, dtype=np_dtype), k, mode)
+        x = _cipher_host(m, np.asarray(key.v, dtype=np_dtype), k, mode,
+                         growth_safe=growth_safe)
+        if equilibrate:
+            x, ls = _equilibrate_host(x)
+        else:
+            ls = 0
         aug_rng = np.random.default_rng(
             int.from_bytes(seed.digest[8:16], "big") % (2**31)
         )
         p = pad_to - n
         xs.append(_augment_host(x, p, aug_rng))
         seeds.append(seed)
-        metas.append(CipherMeta(mode=mode, rotate_k=k, n=n))
+        metas.append(CipherMeta(mode=mode, rotate_k=k, n=n,
+                                flipped=growth_safe and k % 2 == 1))
         paddings.append(p)
+        log2_scales.append(ls)
     x_aug = jnp.asarray(np.stack(xs))
 
     # --- servers: SPCP — one wavefront sweep over the coalesced stack ---
@@ -367,7 +453,8 @@ def outsource_determinant_mixed(
         recover=recover, standby=standby, digest=_batch_digest(seeds),
         style="pipeline" if distributed else "nserver",
     )
-    dets = decipher_batch(seeds, metas, l, u, faithful=faithful_sign)
+    dets = decipher_batch(seeds, metas, l, u, faithful=faithful_sign,
+                          log2_scale=np.asarray(log2_scales))
     return SPDCBatchResult(
         dets=dets,
         verified=np.atleast_1d(np.asarray(verdict.ok)),
@@ -400,7 +487,9 @@ def outsource_determinant(
     recover: bool = False,
     standby: int = 0,
     straggler_deadline: int | None = None,
-    dtype=jnp.float64,
+    dtype="float64",
+    growth_safe: bool | None = None,
+    equilibrate: bool | None = None,
 ) -> SPDCResult | SPDCBatchResult:
     """Run the full SPDC protocol — the package's main entry point.
 
@@ -447,8 +536,22 @@ def outsource_determinant(
         (distrib.recovery.ServerPool).
     straggler_deadline: rounds after which a delayed server is treated as
         dropped and its shard re-dispatched (None = wait forever).
-    dtype: compute dtype; the float64 default is what the rtol 1e-10
-        acceptance tests and the ε(N) thresholds are calibrated for.
+    dtype: compute dtype — "float64" (default; what the rtol 1e-10
+        acceptance tests are calibrated for) or "float32" (the edge /
+        accelerator profile — TPUs have no f64 and GPU f64 runs at 1/32
+        rate). Strings or dtype objects accepted; with jax.enable_x64
+        OFF, float64 resolves to float32. The ε(N) thresholds read the
+        compute dtype's unit roundoff, so verification is calibrated for
+        either (DESIGN.md §6).
+    growth_safe: compose odd PRT rotations with a det-tracked exchange
+        flip so a diagonally dominant input stays diagonally dominant
+        under the no-pivot LU (None = auto: on for sub-f64 compute, off
+        for float64). See DESIGN.md §6.1 for the precision/obfuscation
+        trade.
+    equilibrate: two-sided power-of-two scaling of the ciphertext, folded
+        into Decipher exactly (None = same auto rule). Lossless in any
+        binary float format; keeps ‖X‖-driven rounding flat (DESIGN.md
+        §6.2).
 
     Returns SPDCResult for a single matrix, SPDCBatchResult (per-matrix
     dets and verdicts) for a stack or list; both carry the structured
@@ -468,7 +571,12 @@ def outsource_determinant(
             distributed=distributed, faithful_sign=faithful_sign,
             tamper=tamper, faults=faults, recover=recover, standby=standby,
             straggler_deadline=straggler_deadline, dtype=dtype,
+            growth_safe=growth_safe, equilibrate=equilibrate,
         )
+    dtype = resolve_dtype(dtype)
+    growth_safe, equilibrate = _resolve_growth_controls(
+        dtype, growth_safe, equilibrate, faithful_sign
+    )
     m = jnp.asarray(m, dtype=dtype)
     if m.ndim == 3:
         return _outsource_determinant_batch(
@@ -478,13 +586,20 @@ def outsource_determinant(
             faithful_sign=faithful_sign, tamper=tamper, faults=faults,
             recover=recover, standby=standby,
             straggler_deadline=straggler_deadline, dtype=dtype,
+            growth_safe=growth_safe, equilibrate=equilibrate,
         )
     n = int(m.shape[0])
 
     # --- client: PMOP (privacy-preserving matrix obfuscation protocol) ---
     seed = seedgen(lambda1, np.asarray(m))
     key = keygen(lambda2, seed, n)
-    x, meta = cipher(m, key, seed, mode=mode, use_kernel=use_kernel)
+    x, meta = cipher(m, key, seed, mode=mode, growth_safe=growth_safe,
+                     use_kernel=use_kernel)
+    if equilibrate:
+        x, log2_scale = ced_equilibrate(x)
+        log2_scale = float(log2_scale)
+    else:
+        log2_scale = 0.0
 
     # augmentation (only when needed — paper Table IV) with random R block
     aug_key = jax.random.key(
@@ -517,7 +632,8 @@ def outsource_determinant(
         recover=recover, standby=standby, digest=seed.digest,
         style="pipeline" if distributed else "nserver",
     )
-    det = decipher(seed, meta, l, u, faithful=faithful_sign)
+    det = decipher(seed, meta, l, u, faithful=faithful_sign,
+                   log2_scale=log2_scale)
     return SPDCResult(
         det=det,
         verified=bool(np.all(verdict.ok)),

@@ -43,6 +43,31 @@ def rotation_sign_paper(k: int) -> int:
     return (-1) ** (k % 4)
 
 
+def flip_sign(n: int) -> int:
+    """Determinant sign of the n×n exchange (anti-identity) matrix J:
+    det(J) = (-1)^{floor(n/2)} — one column flip is floor(n/2) swaps."""
+    return (-1) ** (n // 2)
+
+
+def growth_safe_sign(n: int, k: int) -> int:
+    """Determinant sign of the growth-safe relayout (DESIGN.md §6.1).
+
+    The growth-safe cipher composes rot90_cw^k with an exchange flip for
+    odd k (column flip for k=1, row flip for k=3), so the composite map is
+    a plain transpose — the main diagonal stays on the main diagonal and a
+    diagonally dominant input keeps the no-pivot LU's element growth ~1.
+    det is transpose-invariant, so the odd-k sign factor is exactly +1;
+    even k falls back to the rotation sign (180° preserves dominance and
+    needs no flip):
+
+        k odd:  rotation_sign(n, k) * flip_sign(n) = ((-1)^{n//2})^2 = +1
+        k even: rotation_sign(n, k)
+    """
+    if k % 2 == 1:
+        return 1
+    return rotation_sign(n, k)
+
+
 def sign_preserved(n: int, k: int) -> bool:
     """True iff a k-quarter-turn rotation preserves det sign for size n.
 

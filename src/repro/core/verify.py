@@ -18,6 +18,17 @@ rounding; the paper validates |Q| ≤ ε(N) with ε growing in N. We model
 ε(N) = c · (1 + N) · n · u · scale(X) with u the unit roundoff of the
 compute dtype and scale(X) = ‖X‖_F / √n (RMS magnitude) — first-order error
 analysis of an n-step elimination distributed over N pipeline stages.
+`authenticate` additionally widens ε by the *observed element growth*
+max|U| / max|X| (clamped ≥ 1): the no-pivot schedule's rounding is
+proportional to the largest intermediate the elimination produced, which
+the returned factors expose. The growth term is what makes the threshold
+dtype-portable — an equilibrated float32 ciphertext whose factorization
+grew by g carries residual ~g·n·u, and a scale-only model either
+false-alarms on it (scale clamps to 1) or needs a dtype-tuned fudge
+(DESIGN.md §6.3). A server cannot usefully inflate the term: widening ε
+by reporting huge factors only admits results whose backward error is
+small relative to those factors — i.e. exact factorizations of a nearby
+matrix, whose determinant is the right answer anyway.
 
 Localization: Algorithm 3 gives server i ownership of block row i of both
 factors, so a verification failure is *attributable*. Blocking the Q1
@@ -101,6 +112,23 @@ def epsilon(
     else:
         scale = jnp.asarray(1.0)
     out = c * (1.0 + num_servers) * n * u * jnp.maximum(scale, 1.0) ** 2
+    if out.ndim == 0:
+        return float(out)
+    return np.asarray(out)
+
+
+def growth_estimate(u_factor: jnp.ndarray, x: jnp.ndarray):
+    """Observed element growth of the no-pivot elimination, clamped ≥ 1:
+    max|U| / max|X| per matrix (scalar, or (B,) for a stack).
+
+    This is the classical growth factor ρ of the factorization the client
+    actually received — the multiplier on the u·n rounding model that the
+    value-independent (pivot-free) schedule cannot bound a priori.
+    """
+    num = jnp.max(jnp.abs(u_factor), axis=(-2, -1))
+    den = jnp.maximum(jnp.max(jnp.abs(x), axis=(-2, -1)),
+                      jnp.finfo(x.dtype).tiny)
+    out = jnp.maximum(num / den, 1.0)
     if out.ndim == 0:
         return float(out)
     return np.asarray(out)
@@ -215,6 +243,7 @@ def localize(
     n = x.shape[-1]
     if eps is None:
         eps = epsilon(num_servers, n, x, dtype=x.dtype)
+        eps = eps * growth_estimate(u, x)
     sres = per_server_residuals(l, u, x, num_servers=num_servers, rng=rng)
     eps_col = np.asarray(eps)[..., None] if np.ndim(eps) else eps
     sok = sres <= eps_col
@@ -255,8 +284,14 @@ def authenticate(
     """
     n = x.shape[-1]
     batched = x.ndim == 3
+    widened_eps = None
     if eps is None:
-        eps = epsilon(num_servers, n, x, dtype=x.dtype)
+        # scale-model ε widened by the observed element growth of the
+        # returned factors (module docstring — the dtype-portable term);
+        # computed once and shared with the localization pass below
+        widened_eps = epsilon(num_servers, n, x, dtype=x.dtype) \
+            * growth_estimate(u, x)
+        eps = widened_eps
     if method in ("q1", "q2"):
         rng = rng or np.random.default_rng(0)
         r_shape = (x.shape[0], n) if batched else (n,)
@@ -293,8 +328,12 @@ def authenticate(
     )
     if wanted and n % num_servers == 0:
         # localization eps: the blocked check is Q1-shaped, so use the raw
-        # ε(N) (no Q2 widening)
-        loc_eps = epsilon(num_servers, n, x, dtype=x.dtype)
+        # growth-widened ε(N) (no Q2 widening) — already computed above
+        # unless the caller supplied an explicit eps
+        if widened_eps is None:
+            widened_eps = epsilon(num_servers, n, x, dtype=x.dtype) \
+                * growth_estimate(u, x)
+        loc_eps = widened_eps
         sres, sok, culprit = localize(
             l, u, x, num_servers=num_servers, eps=loc_eps, rng=rng
         )

@@ -28,18 +28,26 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _ced_kernel(m_ref, v_ref, o_ref, *, k: int, mode: str):
+def _ced_kernel(m_ref, v_ref, o_ref, *, k: int, mode: str,
+                growth_safe: bool):
     tile = m_ref[...]
     vcol = v_ref[...]  # (b, 1) slice of the blinding vector for these rows
     scaled = tile / vcol if mode == "ewd" else tile * vcol
-    o_ref[...] = jnp.rot90(
-        scaled, k=-(k % 4), axes=(tile.ndim - 2, tile.ndim - 1)
-    )
+    axes = (tile.ndim - 2, tile.ndim - 1)
+    if growth_safe and k % 2 == 1:
+        # odd rotation ∘ exchange flip = transpose, in-tile and in the
+        # index map alike (core.cipher growth-safe relayout)
+        o_ref[...] = jnp.swapaxes(scaled, *axes)
+    else:
+        o_ref[...] = jnp.rot90(scaled, k=-(k % 4), axes=axes)
 
 
-def _out_index_map(k: int, nb: int, *, batched: bool):
+def _out_index_map(k: int, nb: int, *, batched: bool, growth_safe: bool):
     k = k % 4
-    if k == 1:  # block (i,j) -> (j, nb-1-i)
+    if growth_safe and k % 2 == 1:  # transpose: block (i,j) -> (j,i)
+        def rot(i, j):
+            return (j, i)
+    elif k == 1:  # block (i,j) -> (j, nb-1-i)
         def rot(i, j):
             return (j, nb - 1 - i)
     elif k == 2:  # -> (nb-1-i, nb-1-j)
@@ -56,7 +64,8 @@ def _out_index_map(k: int, nb: int, *, batched: bool):
     return rot
 
 
-@partial(jax.jit, static_argnames=("k", "mode", "block", "interpret"))
+@partial(jax.jit,
+         static_argnames=("k", "mode", "block", "interpret", "growth_safe"))
 def ced(
     m: jnp.ndarray,
     v: jnp.ndarray,
@@ -65,11 +74,15 @@ def ced(
     mode: str = "ewd",
     block: int = 128,
     interpret: bool = True,
+    growth_safe: bool = False,
 ) -> jnp.ndarray:
     """Fused Cipher: rot90_cw^k(EWO(m, v)) for (n, n) or (B, n, n).
 
     n must be divisible by block (callers pad via core.augment first when
     needed); otherwise the largest power-of-two divisor is used.
+    growth_safe composes odd rotations with the exchange flip (the
+    composite is a transpose — still a single fused HBM pass, the index
+    map just changes; core.cipher semantics, DESIGN.md §6.1).
     """
     n = m.shape[-1]
     if n % block != 0:
@@ -96,12 +109,13 @@ def ced(
         out_shape = jax.ShapeDtypeStruct((n, n), m.dtype)
         vv = v.reshape(n, 1).astype(m.dtype)
     return pl.pallas_call(
-        partial(_ced_kernel, k=k, mode=mode),
+        partial(_ced_kernel, k=k, mode=mode, growth_safe=growth_safe),
         out_shape=out_shape,
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec(
-            in_specs[0].block_shape, _out_index_map(k, nb, batched=batched)
+            in_specs[0].block_shape,
+            _out_index_map(k, nb, batched=batched, growth_safe=growth_safe),
         ),
         interpret=interpret,
     )(m, vv)

@@ -42,7 +42,7 @@ def _fit_block(n: int, want: int) -> int:
     return max(b, 1)
 
 
-@partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+@partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret", "acc_dtype"))
 def schur_update(
     c: jnp.ndarray,
     a: jnp.ndarray,
@@ -52,14 +52,25 @@ def schur_update(
     bn: int = 128,
     bk: int = 128,
     interpret: bool = True,
+    acc_dtype=None,
 ) -> jnp.ndarray:
-    """C − A @ B with (M,K)@(K,N) tiling; batched over a leading stack dim."""
+    """C − A @ B with (M,K)@(K,N) tiling; batched over a leading stack dim.
+
+    acc_dtype: accumulation dtype override. Default (None) widens bf16/f16
+    inputs to f32 and keeps f32/f64 inputs at their own dtype; passing
+    jnp.float64 on f32 inputs selects the "mixed" variant (DESIGN.md §6.4)
+    — each tile's contraction accumulates wide, the output stores narrow.
+    f64 accumulation needs a backend with f64 support (CPU/GPU, or
+    interpret mode); TPU Mosaic callers should stay ≤ f32.
+    """
     m, kdim = a.shape[-2:]
     n = b.shape[-1]
     bm = _fit_block(m, bm)
     bn = _fit_block(n, bn)
     bk = _fit_block(kdim, bk)
-    acc_dtype = jnp.float32 if c.dtype in (jnp.bfloat16, jnp.float16) else c.dtype
+    if acc_dtype is None:
+        acc_dtype = (jnp.float32 if c.dtype in (jnp.bfloat16, jnp.float16)
+                     else c.dtype)
     batched = c.ndim == 3
     if batched:
         B = c.shape[0]

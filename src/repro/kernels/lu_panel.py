@@ -19,8 +19,10 @@ from jax import lax
 from jax.experimental import pallas as pl
 
 
-def _lu_panel_kernel(x_ref, o_ref):
+def _lu_panel_kernel(x_ref, o_ref, *, acc_dtype=None):
     a = x_ref[...]
+    if acc_dtype is not None:  # mixed variant: eliminate wide, store narrow
+        a = a.astype(acc_dtype)
     squeeze = a.ndim == 3  # batched launch: one (1, b, b) tile per program
     if squeeze:
         a = a[0]
@@ -43,19 +45,24 @@ def _lu_panel_kernel(x_ref, o_ref):
         a = jnp.where((cols == k) & (rows > k), lcol[:, None], a)
         return a
 
-    out = lax.fori_loop(0, b, body, a)
+    out = lax.fori_loop(0, b, body, a).astype(o_ref.dtype)
     o_ref[...] = out[None] if squeeze else out
 
 
-@partial(jax.jit, static_argnames=("interpret",))
-def lu_panel_compact(x: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+@partial(jax.jit, static_argnames=("interpret", "acc_dtype"))
+def lu_panel_compact(x: jnp.ndarray, *, interpret: bool = True,
+                     acc_dtype=None) -> jnp.ndarray:
     """Compact LU of one panel, or of a (B, b, b) stack via a batch grid
-    axis (one panel per program instance — DESIGN.md §3)."""
+    axis (one panel per program instance — DESIGN.md §3). acc_dtype
+    selects the mixed variant: the b-step elimination runs in the wider
+    dtype in VMEM and the compact form stores at x.dtype (DESIGN.md §6.4;
+    f64 accumulation needs a f64-capable backend or interpret mode)."""
     b = x.shape[-1]
+    kern = partial(_lu_panel_kernel, acc_dtype=acc_dtype)
     if x.ndim == 3:
         B = x.shape[0]
         return pl.pallas_call(
-            _lu_panel_kernel,
+            kern,
             out_shape=jax.ShapeDtypeStruct((B, b, b), x.dtype),
             grid=(B,),
             in_specs=[pl.BlockSpec((1, b, b), lambda i: (i, 0, 0))],
@@ -63,7 +70,7 @@ def lu_panel_compact(x: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
             interpret=interpret,
         )(x)
     return pl.pallas_call(
-        _lu_panel_kernel,
+        kern,
         out_shape=jax.ShapeDtypeStruct((b, b), x.dtype),
         in_specs=[pl.BlockSpec((b, b), lambda: (0, 0))],
         out_specs=pl.BlockSpec((b, b), lambda: (0, 0)),

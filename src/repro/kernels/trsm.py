@@ -19,9 +19,11 @@ from jax import lax
 from jax.experimental import pallas as pl
 
 
-def _trsm_lower_kernel(l_ref, b_ref, o_ref):
+def _trsm_lower_kernel(l_ref, b_ref, o_ref, *, acc_dtype=None):
     l = l_ref[...]
     x = b_ref[...]
+    if acc_dtype is not None:  # mixed variant: solve wide, store narrow
+        l, x = l.astype(acc_dtype), x.astype(acc_dtype)
     squeeze = l.ndim == 3  # batched launch: (1, n, n) / (1, n, cb) blocks
     if squeeze:
         l, x = l[0], x[0]
@@ -37,13 +39,15 @@ def _trsm_lower_kernel(l_ref, b_ref, o_ref):
         lcol = jnp.where(jnp.arange(b) > k, lcol, 0.0)
         return x - lcol[:, None] * row_k[None, :]
 
-    out = lax.fori_loop(0, b, body, x)
+    out = lax.fori_loop(0, b, body, x).astype(o_ref.dtype)
     o_ref[...] = out[None] if squeeze else out
 
 
-def _trsm_upper_right_kernel(u_ref, b_ref, o_ref):
+def _trsm_upper_right_kernel(u_ref, b_ref, o_ref, *, acc_dtype=None):
     u = u_ref[...]
     x = b_ref[...]
+    if acc_dtype is not None:  # mixed variant: solve wide, store narrow
+        u, x = u.astype(acc_dtype), x.astype(acc_dtype)
     squeeze = u.ndim == 3  # batched launch: (1, n, n) / (1, rb, n) blocks
     if squeeze:
         u, x = u[0], x[0]
@@ -62,24 +66,28 @@ def _trsm_upper_right_kernel(u_ref, b_ref, o_ref):
         iscol = lax.broadcasted_iota(jnp.int32, x.shape, 1) == k
         return jnp.where(iscol, col_k[:, None], x)
 
-    out = lax.fori_loop(0, b, body, x)
+    out = lax.fori_loop(0, b, body, x).astype(o_ref.dtype)
     o_ref[...] = out[None] if squeeze else out
 
 
-@partial(jax.jit, static_argnames=("col_block", "interpret"))
+@partial(jax.jit, static_argnames=("col_block", "interpret", "acc_dtype"))
 def trsm_lower(
-    l: jnp.ndarray, b: jnp.ndarray, *, col_block: int = 256, interpret: bool = True
+    l: jnp.ndarray, b: jnp.ndarray, *, col_block: int = 256,
+    interpret: bool = True, acc_dtype=None,
 ) -> jnp.ndarray:
     """Solve L X = B for X; grid over column tiles of B. A (B, n, n) /
-    (B, n, m) stack adds a leading batch grid axis (DESIGN.md §3)."""
+    (B, n, m) stack adds a leading batch grid axis (DESIGN.md §3).
+    acc_dtype selects the mixed variant: the elimination runs in the wider
+    dtype in VMEM, the output tile stores at b.dtype (DESIGN.md §6.4)."""
     n, m = b.shape[-2:]
     cb = min(col_block, m)
     while m % cb != 0:
         cb //= 2
+    kern = partial(_trsm_lower_kernel, acc_dtype=acc_dtype)
     if b.ndim == 3:
         batch = b.shape[0]
         return pl.pallas_call(
-            _trsm_lower_kernel,
+            kern,
             out_shape=jax.ShapeDtypeStruct((batch, n, m), b.dtype),
             grid=(batch, m // cb),
             in_specs=[
@@ -90,7 +98,7 @@ def trsm_lower(
             interpret=interpret,
         )(l, b)
     return pl.pallas_call(
-        _trsm_lower_kernel,
+        kern,
         out_shape=jax.ShapeDtypeStruct((n, m), b.dtype),
         grid=(m // cb,),
         in_specs=[
@@ -102,20 +110,23 @@ def trsm_lower(
     )(l, b)
 
 
-@partial(jax.jit, static_argnames=("row_block", "interpret"))
+@partial(jax.jit, static_argnames=("row_block", "interpret", "acc_dtype"))
 def trsm_upper_right(
-    u: jnp.ndarray, b: jnp.ndarray, *, row_block: int = 256, interpret: bool = True
+    u: jnp.ndarray, b: jnp.ndarray, *, row_block: int = 256,
+    interpret: bool = True, acc_dtype=None,
 ) -> jnp.ndarray:
     """Solve Z U = B for Z; grid over row tiles of B. A (B, n, n) /
-    (B, m, n) stack adds a leading batch grid axis (DESIGN.md §3)."""
+    (B, m, n) stack adds a leading batch grid axis (DESIGN.md §3).
+    acc_dtype: mixed variant, as trsm_lower."""
     m, n = b.shape[-2:]
     rb = min(row_block, m)
     while m % rb != 0:
         rb //= 2
+    kern = partial(_trsm_upper_right_kernel, acc_dtype=acc_dtype)
     if b.ndim == 3:
         batch = b.shape[0]
         return pl.pallas_call(
-            _trsm_upper_right_kernel,
+            kern,
             out_shape=jax.ShapeDtypeStruct((batch, m, n), b.dtype),
             grid=(batch, m // rb),
             in_specs=[
@@ -126,7 +137,7 @@ def trsm_upper_right(
             interpret=interpret,
         )(u, b)
     return pl.pallas_call(
-        _trsm_upper_right_kernel,
+        kern,
         out_shape=jax.ShapeDtypeStruct((m, n), b.dtype),
         grid=(m // rb,),
         in_specs=[

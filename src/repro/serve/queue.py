@@ -43,7 +43,8 @@ class GatewayOverloaded(RuntimeError):
 
 
 class NoBucketFits(ValueError):
-    """The request's matrix is larger than every configured bucket size."""
+    """The request's matrix is larger than every configured bucket size
+    (the gateway then serves it as a direct un-coalesced call)."""
 
 
 @dataclass(frozen=True)
@@ -62,6 +63,10 @@ class BucketKey:
     recover: bool = False
     standby: int = 0
     straggler_deadline: int | None = None
+    #: compute dtype of the bucket's sweep. Part of the key so float32 and
+    #: float64 clients never share a compiled program, a warmup cache, or
+    #: an ε(N) calibration — a coalesced sweep has ONE device dtype.
+    dtype: str = "float64"
 
     def protocol_kwargs(self) -> dict:
         """Keyword arguments for core.protocol.outsource_determinant_mixed."""
@@ -74,6 +79,7 @@ class BucketKey:
             recover=self.recover,
             standby=self.standby,
             straggler_deadline=self.straggler_deadline,
+            dtype=self.dtype,
         )
 
 
@@ -87,20 +93,46 @@ class DetRequest:
     enqueued_at: float
 
 
+def smallest_servable_size(n: int, num_servers: int) -> int:
+    """Smallest n' ≥ n the N-server schedule accepts (n' % N == 0,
+    n'/N > 1 — paper §IV.D.1). Pure-int twin of
+    core.augment.padding_for_servers, kept local so this module stays
+    jax-free."""
+    if num_servers < 1:
+        raise ValueError("num_servers must be >= 1")
+    p = 0
+    while (n + p) % num_servers != 0 or (n + p) // num_servers <= 1:
+        p += 1
+    return n + p
+
+
 def bucket_size_for(n: int, buckets: tuple[int, ...], num_servers: int) -> int:
     """Smallest configured bucket that can serve an (n, n) request.
 
     A bucket n' is eligible when n' >= n and the N-server schedule accepts
-    it (n' % N == 0, n'/N > 1 — paper §IV.D.1). Raises NoBucketFits when
-    the matrix exceeds every bucket (the gateway then runs it as a direct
-    un-coalesced call).
+    it (n' % N == 0, n'/N > 1 — paper §IV.D.1).
+
+    When a large-enough bucket exists but EVERY one fails the divisibility
+    test (e.g. the default {64..1024} power-of-two buckets with a
+    num_servers=3 override), a valid padded size still exists — the
+    smallest servable n' ≥ n is synthesized as a fallback bucket, so such
+    requests keep coalescing with each other instead of erroring. (The
+    pre-fix behavior raised NoBucketFits, silently demoting every such
+    request to the un-coalesced direct path.)
+
+    Raises NoBucketFits only when the matrix exceeds every configured
+    bucket — the genuine oversize case the gateway serves as a direct
+    un-coalesced call.
     """
-    for b in sorted(buckets):
-        if b >= n and b % num_servers == 0 and b // num_servers > 1:
+    eligible = [b for b in buckets if b >= n]
+    for b in sorted(eligible):
+        if b % num_servers == 0 and b // num_servers > 1:
             return b
-    raise NoBucketFits(
-        f"no bucket in {sorted(buckets)} fits n={n} with N={num_servers}"
-    )
+    if not eligible:
+        raise NoBucketFits(
+            f"no bucket in {sorted(buckets)} fits n={n} with N={num_servers}"
+        )
+    return smallest_servable_size(n, num_servers)
 
 
 @dataclass

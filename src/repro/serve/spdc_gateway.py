@@ -62,7 +62,7 @@ __all__ = [
 #: fields minus pad_to, which bucketing derives)
 _OVERRIDE_KEYS = frozenset(
     {"num_servers", "mode", "method", "lambda1", "lambda2", "recover",
-     "standby", "straggler_deadline"}
+     "standby", "straggler_deadline", "dtype"}
 )
 
 
@@ -128,20 +128,22 @@ class SPDCGateway:
         faults_for=None,
         auto_flush: bool = True,
     ):
-        servable = [
-            b for b in config.buckets
-            if b % config.spdc.num_servers == 0
-            and b // config.spdc.num_servers > 1
-        ]
-        if not servable:
-            # without this a non-divisible N silently sends EVERY request
-            # down the un-coalesced direct path — a gateway that "works"
-            # but never micro-batches
-            raise ValueError(
-                f"no bucket in {tuple(config.buckets)} is servable by "
-                f"num_servers={config.spdc.num_servers} (need "
-                "n' % N == 0 and n'/N > 1)"
-            )
+        if not config.buckets:
+            raise ValueError("gateway config needs at least one bucket size")
+        # validate the preset bucket list against the default server count
+        # up front, naming the offending bucket: a bucket that fails the
+        # schedule's divisibility rule is a config bug, and catching it at
+        # construction beats every request of that size silently riding
+        # the synthesized-fallback (or, pre-fix, the direct) path
+        for b in config.buckets:
+            if b % config.spdc.num_servers != 0 \
+                    or b // config.spdc.num_servers <= 1:
+                raise ValueError(
+                    f"bucket {b} in {tuple(config.buckets)} is not "
+                    f"servable by num_servers={config.spdc.num_servers} "
+                    "(need n' % N == 0 and n'/N > 1); fix the preset's "
+                    "buckets or its spdc.num_servers"
+                )
         self.config = config
         self._clock = clock
         self._faults_for = faults_for
@@ -177,6 +179,7 @@ class SPDCGateway:
             straggler_deadline=overrides.get(
                 "straggler_deadline", spdc.straggler_deadline
             ),
+            dtype=overrides.get("dtype", spdc.dtype),
         )
 
     def submit(self, matrix, *, now: float | None = None, **overrides) -> int:
@@ -186,8 +189,9 @@ class SPDCGateway:
         queued (backpressure — nothing is enqueued). A matrix larger than
         every bucket is served immediately as a direct un-coalesced
         protocol call (stats.direct). Keyword overrides (num_servers,
-        mode, method, recover, standby, straggler_deadline) place the
-        request in a bucket matching that security config.
+        mode, method, recover, standby, straggler_deadline, dtype) place
+        the request in a bucket matching that security/precision config —
+        an f32 client never shares a compiled sweep with f64 clients.
         """
         unknown = set(overrides) - _OVERRIDE_KEYS
         if unknown:
@@ -378,6 +382,7 @@ class SPDCGateway:
                 straggler_deadline=overrides.get(
                     "straggler_deadline", spdc.straggler_deadline
                 ),
+                dtype=overrides.get("dtype", spdc.dtype),
             )
         except Exception as e:  # noqa: BLE001 — fail the request, not the service
             key = BucketKey(pad_to=req.n, num_servers=spdc.num_servers)

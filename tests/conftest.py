@@ -1,6 +1,11 @@
 """Test session config: 8 fake CPU devices for sharding tests (NOT 512 —
 the production-mesh dry-run has its own entrypoint), x64 for the SPDC
 protocol's float64 paths.
+
+JAX_ENABLE_X64=0 runs the x64-disabled float32 leg (the CI job that
+proves the protocol works on backends without f64): only the precision
+test module is expected to pass there — the f64-calibrated suites assume
+x64. Default (unset or 1) keeps x64 on.
 """
 import os
 
@@ -8,7 +13,10 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import jax
 
-jax.config.update("jax_enable_x64", True)
+jax.config.update(
+    "jax_enable_x64",
+    os.environ.get("JAX_ENABLE_X64", "1").lower() not in ("0", "false"),
+)
 
 import sys
 from pathlib import Path

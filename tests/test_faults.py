@@ -237,6 +237,7 @@ def test_verdict_attribute_flag_skips_localization(honest_lu):
 TAMPER_MODES = ["single", "sign_flip", "block"]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("method", ["q2", "q3"])
 def test_false_reject_rate_is_zero_on_honest_runs(method):
     """FR: honest factorizations must never be rejected (20 trials/server
@@ -251,11 +252,13 @@ def test_false_reject_rate_is_zero_on_honest_runs(method):
     assert rejects == 0
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("method", ["q2", "q3"])
 @pytest.mark.parametrize("mode", TAMPER_MODES)
 def test_false_accept_rate_per_server(method, mode):
     """FA: tampered results must be rejected — measured over every server ×
-    10 trials with fresh matrices and fresh tamper positions."""
+    10 trials with fresh matrices and fresh tamper positions. (Slow tier:
+    the per-matrix batch variant below keeps FA coverage in tier-1.)"""
     accepts = 0
     trials = 10
     for s in range(N):

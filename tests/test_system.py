@@ -47,6 +47,7 @@ def test_spdc_system_inverse_extension():
                                atol=1e-8)
 
 
+@pytest.mark.slow
 def test_lm_framework_end_to_end_smoke():
     """The LM side: one train step + one decode step of one arch through
     the public API (deep coverage lives in the dedicated test files)."""

@@ -209,6 +209,7 @@ def test_loop_straggler_detection():
         assert any(s == 9 for s, _, _ in rep.straggler_events)
 
 
+@pytest.mark.slow
 def test_loop_fresh_vs_resumed_equivalence():
     """Crash/resume must land on the same params as an uninterrupted run
     (determinism of data + replay from checkpoint)."""
