@@ -14,7 +14,8 @@ shape must stay within `--factor` of the baseline's.
         --suite gateway --n 64 --servers 2 --factor 2.0
     # precision guard (rows from the `precision` suite, BENCH_3): the f32
     # protocol must sustain >= --f32-speedup x the fresh f64 rate at --n,
-    # and EVERY precision row must report a 100% Q3 verified-rate
+    # and EVERY precision row must report a 100% Q3 verified-rate, worst
+    # |dlog| <= 1e-4 vs the f64 references, and exact signs
     python benchmarks/check_regression.py BENCH_ci.json BENCH_3.json \
         --suite precision --n 256 --servers 4
 """
@@ -49,19 +50,30 @@ def best_dets_per_sec(
     return max(rates)
 
 
-def check_precision(fresh_rows: list[dict], base_rows: list[dict], n: int,
-                    servers: int, f32_speedup: float) -> bool:
+def check_precision(
+    fresh_rows: list[dict],
+    base_rows: list[dict],
+    n: int,
+    servers: int,
+    f32_speedup: float,
+) -> tuple[bool, float, float]:
     """The precision suite's acceptance claims.
 
     The COMMITTED baseline must hold the sharp f32 ≥ 1.5× f64 claim at
     (n, N) — it is a deterministic artifact, immune to CI-runner noise.
     The FRESH run must show f32 ≥ --f32-speedup × f64 (the smoke leg runs
-    with a margin, same as the gateway guard's factor) and a 100% Q3
+    with a margin, same as the gateway guard's factor), a 100% Q3
     verified-rate on EVERY measured precision row — f32 is a first-class
-    verified dtype, not a fast-but-unverifiable mode.
+    verified dtype, not a fast-but-unverifiable mode — and the accuracy
+    claim itself: every row's worst |Δ log|det|| vs the f64 references
+    stays ≤ 1e-4 with exact signs (speed that costs digits is a
+    regression, not a win).
 
-    Returns (ok, fresh_f32_rate, baseline_f32_rate) so the caller's
-    --factor floor reuses the same row selection."""
+    Returns:
+        (ok, fresh_f32_rate, baseline_f32_rate) — the f32 rates are
+        returned so the caller's --factor floor reuses the same row
+        selection.
+    """
     def ratio_of(rows, label, need):
         f32 = best_dets_per_sec(rows, n, servers, suite="precision",
                                 modes=("batched",), dtype="float32")
@@ -87,7 +99,17 @@ def check_precision(fresh_rows: list[dict], base_rows: list[dict], n: int,
         print(f"precision verified-rate < 100% on: {unverified} -> FAIL")
     else:
         print("precision verified-rate 100% on every row -> OK")
-    return ok and not unverified, fresh_f32, base_f32
+    inaccurate = [
+        r["name"] for r in fresh_rows
+        if r.get("suite") == "precision"
+        and (float(r.get("max_abs_dlog", 0.0)) > 1e-4
+             or r.get("sign_ok") is False)
+    ]
+    if inaccurate:
+        print(f"precision |dlog| > 1e-4 or wrong sign on: {inaccurate} -> FAIL")
+    else:
+        print("precision |dlog| <= 1e-4 with exact signs on every row -> OK")
+    return ok and not unverified and not inaccurate, fresh_f32, base_f32
 
 
 def main(argv: list[str] | None = None) -> int:

@@ -487,7 +487,7 @@ def precision_suite(ns=(64, 256, 1024), N: int = 4, B: int = 8):
                 dtype=dtype, mode="batched",
                 dets_per_sec=round(rate, 2),
                 verified_rate=round(float(ok.mean()), 4),
-                max_abs_dlog=f"{dlog:.2e}",
+                max_abs_dlog=float(f"{dlog:.2e}"),
                 sign_ok=bool(sign_ok),
             )
         emit(

@@ -25,10 +25,25 @@ the returned factors expose. The growth term is what makes the threshold
 dtype-portable — an equilibrated float32 ciphertext whose factorization
 grew by g carries residual ~g·n·u, and a scale-only model either
 false-alarms on it (scale clamps to 1) or needs a dtype-tuned fudge
-(DESIGN.md §6.3). A server cannot usefully inflate the term: widening ε
-by reporting huge factors only admits results whose backward error is
-small relative to those factors — i.e. exact factorizations of a nearby
-matrix, whose determinant is the right answer anyway.
+(DESIGN.md §6.3).
+
+How much widening a server may claim depends on whether the residual can
+SEE the factors the growth is measured from. For the secret-probed Q1/Q2
+residuals inflation is self-defeating: huge planted entries in U blow up
+U·r with probability 1 over the client-held probe, so a result that
+passes the widened check has small backward error relative to its own
+factors — an exact factorization of a nearby matrix, whose determinant
+is the right answer anyway. The diagonal-only Q3 residual has no such
+property: a pair of huge strictly-upper entries U[j,i], U[j',i] chosen so
+L[i,j]·U[j,i] + L[i,j']·U[j',i] = 0 cancels out of every diagonal term,
+inflating max|U| (and hence ε) by an arbitrary factor G while leaving the
+residual untouched — the server could then bias diagonal entries by
+~ε·G and still verify. Q3/Q3-literal therefore clamp the widening at
+`q3_growth_cap(n)` = c·n: the acceptance tolerance stays a client-chosen
+bound, and honest runs keep ≥ 25× margin under it in every supported
+configuration (the only config that needs widening at all — equilibrated
+scale ≈ 1 with the growth-safe relayout disabled — needs ~10× at
+n ≤ 256; see tests/test_precision.py and DESIGN.md §6.3).
 
 Localization: Algorithm 3 gives server i ownership of block row i of both
 factors, so a verification failure is *attributable*. Blocking the Q1
@@ -132,6 +147,22 @@ def growth_estimate(u_factor: jnp.ndarray, x: jnp.ndarray):
     if out.ndim == 0:
         return float(out)
     return np.asarray(out)
+
+
+def q3_growth_cap(n: int, *, c: float = 4.0) -> float:
+    """Ceiling on the ε-widening a diagonal-only (Q3) residual may claim.
+
+    The observed growth is computed from the server-supplied U, and Q3
+    never probes the strictly-upper entries it is largest over — planted
+    mutually-cancelling entries inflate it for free (module docstring).
+    Clamping at c·n keeps the acceptance tolerance client-chosen: honest
+    factorizations that genuinely need widening (equilibrated input, no
+    growth-safe relayout) stay ≥ 25× under the cap, while a malicious
+    server's tolerance inflation is bounded by c·n instead of unbounded.
+    The secret-probed Q1/Q2 residuals use the raw growth — there the
+    widening is self-defeating to inflate.
+    """
+    return c * n
 
 
 def per_server_residuals(
@@ -287,11 +318,19 @@ def authenticate(
     widened_eps = None
     if eps is None:
         # scale-model ε widened by the observed element growth of the
-        # returned factors (module docstring — the dtype-portable term);
-        # computed once and shared with the localization pass below
-        widened_eps = epsilon(num_servers, n, x, dtype=x.dtype) \
-            * growth_estimate(u, x)
-        eps = widened_eps
+        # returned factors (module docstring — the dtype-portable term).
+        # The raw widening is reserved for residuals that SEE the factors
+        # it is measured from: the secret-probed q1/q2 here, and the
+        # Q1-shaped localization pass below. The diagonal-only q3 forms
+        # clamp it at q3_growth_cap(n) — otherwise planted cancelling
+        # strictly-upper entries hand the server an arbitrarily wide ε.
+        base_eps = epsilon(num_servers, n, x, dtype=x.dtype)
+        growth = growth_estimate(u, x)
+        widened_eps = base_eps * growth
+        if method in ("q3", "q3_literal"):
+            eps = base_eps * np.minimum(growth, q3_growth_cap(n))
+        else:
+            eps = widened_eps
     if method in ("q1", "q2"):
         rng = rng or np.random.default_rng(0)
         r_shape = (x.shape[0], n) if batched else (n,)

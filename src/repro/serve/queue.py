@@ -93,17 +93,17 @@ class DetRequest:
     enqueued_at: float
 
 
-def smallest_servable_size(n: int, num_servers: int) -> int:
-    """Smallest n' ≥ n the N-server schedule accepts (n' % N == 0,
-    n'/N > 1 — paper §IV.D.1). Pure-int twin of
-    core.augment.padding_for_servers, kept local so this module stays
-    jax-free."""
-    if num_servers < 1:
-        raise ValueError("num_servers must be >= 1")
-    p = 0
-    while (n + p) % num_servers != 0 or (n + p) // num_servers <= 1:
-        p += 1
-    return n + p
+#: Granularity of synthesized fallback buckets: sizes are rounded up to
+#: the next multiple of num_servers * SYNTH_GRID. Synthesizing the exact
+#: smallest servable n' per request would open one bucket — one jitted
+#: sweep plus warmup — per distinct request size, silently unbounding the
+#: gateway's compile set under a diverse (or adversarial) size
+#: distribution. The grid caps the synthesized-bucket count at
+#: ~max(buckets)/(N·SYNTH_GRID) at the price of up to N·SYNTH_GRID − 1
+#: extra padding rows (identity-extension rows are protocol-exact, so the
+#: cost is compute only, and it is largest in relative terms exactly where
+#: matrices are cheapest).
+SYNTH_GRID = 16
 
 
 def bucket_size_for(n: int, buckets: tuple[int, ...], num_servers: int) -> int:
@@ -114,15 +114,21 @@ def bucket_size_for(n: int, buckets: tuple[int, ...], num_servers: int) -> int:
 
     When a large-enough bucket exists but EVERY one fails the divisibility
     test (e.g. the default {64..1024} power-of-two buckets with a
-    num_servers=3 override), a valid padded size still exists — the
-    smallest servable n' ≥ n is synthesized as a fallback bucket, so such
-    requests keep coalescing with each other instead of erroring. (The
-    pre-fix behavior raised NoBucketFits, silently demoting every such
-    request to the un-coalesced direct path.)
+    num_servers=3 override), a valid padded size still exists — a fallback
+    bucket is synthesized on a coarse grid (next multiple of
+    num_servers·SYNTH_GRID ≥ n, always servable: divisible by N with
+    n'/N ≥ SYNTH_GRID > 1), so such requests keep coalescing with each
+    other instead of erroring while the set of synthesized bucket sizes
+    stays bounded (see SYNTH_GRID). (The pre-fix behavior raised
+    NoBucketFits, silently demoting every such request to the un-coalesced
+    direct path.) A synthesized size never exceeds max(buckets) — the
+    operator's configured size cap bounds every coalesced sweep, so a
+    request whose grid round-up would overshoot it falls to the direct
+    path like any oversize request.
 
-    Raises NoBucketFits only when the matrix exceeds every configured
-    bucket — the genuine oversize case the gateway serves as a direct
-    un-coalesced call.
+    Raises NoBucketFits when the matrix exceeds every configured bucket,
+    or when the synthesized grid size would — both land on the gateway's
+    direct un-coalesced call.
     """
     eligible = [b for b in buckets if b >= n]
     for b in sorted(eligible):
@@ -132,7 +138,15 @@ def bucket_size_for(n: int, buckets: tuple[int, ...], num_servers: int) -> int:
         raise NoBucketFits(
             f"no bucket in {sorted(buckets)} fits n={n} with N={num_servers}"
         )
-    return smallest_servable_size(n, num_servers)
+    step = num_servers * SYNTH_GRID
+    synth = ((n + step - 1) // step) * step
+    if synth > max(buckets):
+        raise NoBucketFits(
+            f"synthesized fallback n'={synth} (grid N·{SYNTH_GRID}) exceeds "
+            f"the largest configured bucket {max(buckets)} for n={n} with "
+            f"N={num_servers}"
+        )
+    return synth
 
 
 @dataclass

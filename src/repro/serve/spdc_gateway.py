@@ -39,7 +39,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.configs.spdc import SPDC_GATEWAY_DEFAULT, SPDCGatewayConfig
-from repro.core.protocol import outsource_determinant_mixed
+from repro.core.protocol import outsource_determinant_mixed, resolve_dtype
 
 from .queue import (
     BucketKey,
@@ -179,7 +179,11 @@ class SPDCGateway:
             straggler_deadline=overrides.get(
                 "straggler_deadline", spdc.straggler_deadline
             ),
-            dtype=overrides.get("dtype", spdc.dtype),
+            # resolve_dtype folds spelling variants (np.float32, "float32",
+            # jnp dtypes) AND the x64-off float64→float32 resolution into
+            # one canonical name — equal compute dtypes must share one
+            # bucket, one compiled sweep, and one warmup cache
+            dtype=resolve_dtype(overrides.get("dtype", spdc.dtype)).name,
         )
 
     def submit(self, matrix, *, now: float | None = None, **overrides) -> int:
@@ -187,8 +191,9 @@ class SPDCGateway:
 
         Raises GatewayOverloaded when max_pending requests are already
         queued (backpressure — nothing is enqueued). A matrix larger than
-        every bucket is served immediately as a direct un-coalesced
-        protocol call (stats.direct). Keyword overrides (num_servers,
+        every bucket — or whose synthesized fallback size would exceed the
+        largest configured bucket — is served immediately as a direct
+        un-coalesced protocol call (stats.direct). Keyword overrides (num_servers,
         mode, method, recover, standby, straggler_deadline, dtype) place
         the request in a bucket matching that security/precision config —
         an f32 client never shares a compiled sweep with f64 clients.
@@ -445,10 +450,9 @@ class SPDCGateway:
             )
         spdc = self.config.spdc
         compiled = 0
+        # every configured bucket is servable — __init__ validates the
+        # preset against spdc.num_servers and raises otherwise
         for n_bucket in self.config.buckets:
-            if (n_bucket % spdc.num_servers != 0
-                    or n_bucket // spdc.num_servers <= 1):
-                continue
             for b in sizes:
                 # the same cached filler live batch padding uses, so warmup
                 # compiles against the exact matrix profile flushes see

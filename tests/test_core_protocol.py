@@ -184,6 +184,49 @@ def test_q3_literal_cancellation_weakness():
     assert lit < strict / 100    # literal form nearly blind to it
 
 
+def test_q3_growth_widening_is_not_attacker_inflatable():
+    """Adaptive attack on the growth-widened ε: plant a pair of huge
+    strictly-upper entries in U whose diagonal contributions cancel
+    (L[i,j]·Δ + L[i,j']·δ = 0) — Q3's residual is untouched while
+    max|U| (hence growth_estimate, hence ε) inflates by ~1e8 — then bias
+    a diagonal entry by far more than the honest tolerance. Pre-fix,
+    authenticate(method="q3") accepted the biased determinant; the
+    q3_growth_cap clamp must reject it.
+    """
+    from repro.core.verify import (
+        authenticate, epsilon, growth_estimate, q3_growth_cap,
+    )
+
+    n, servers = 32, 4
+    a = jnp.asarray(_wellcond(n))
+    l, u = lu_unblocked(a)
+    assert authenticate(l, u, a, num_servers=servers, method="q3").ok
+
+    # cancelling pair in column n-1: Δ·L[i,0] + δ·L[i,1] = 0
+    i = n - 1
+    scale = 1e8 * float(jnp.max(jnp.abs(a))) / float(jnp.abs(l[i, 1]))
+    u_adv = u.at[0, i].add(float(l[i, 1]) * scale)
+    u_adv = u_adv.at[1, i].add(-float(l[i, 0]) * scale)
+    inflation = growth_estimate(u_adv, a) / growth_estimate(u, a)
+    assert inflation > 1e6  # the planted entries dominate max|U|
+
+    # diagonal bias: residual ≈ |U[k,k]|·τ sits far above the clamped ε
+    # but far below the raw growth-widened ε the pre-fix code used
+    base_eps = epsilon(servers, n, a, dtype=a.dtype)
+    k = 3
+    tau = 100.0 * base_eps * q3_growth_cap(n) / abs(float(u[k, k]))
+    u_adv = u_adv.at[k, k].multiply(1.0 + tau)
+
+    verdict = authenticate(l, u_adv, a, num_servers=servers, method="q3")
+    assert verdict.residual < base_eps * growth_estimate(u_adv, a)
+    assert not verdict.ok  # pre-fix: accepted (ok == residual <= raw ε)
+    # the secret-probed Q1 form sees the planted entries outright
+    rng = np.random.default_rng(7)
+    assert not authenticate(
+        l, u_adv, a, num_servers=servers, method="q1", rng=rng
+    ).ok
+
+
 # ------------------------------------------------------------ end-to-end
 @pytest.mark.parametrize("mode", ["ewd", "ewm"])
 @pytest.mark.parametrize("method", ["q1", "q2", "q3"])

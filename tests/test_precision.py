@@ -381,16 +381,44 @@ def test_gateway_dtype_override_opens_separate_bucket():
 def test_bucket_size_for_synthesizes_when_divisibility_fails():
     """Pre-fix: every bucket failing n' % N == 0 raised NoBucketFits even
     though a valid padded size exists (default power-of-two buckets with
-    num_servers=3)."""
+    num_servers=3). Synthesized sizes land on the coarse N·SYNTH_GRID
+    grid, not the per-request minimum — see the bounded-compile-set test
+    below."""
     from repro.serve.queue import NoBucketFits, bucket_size_for
 
-    assert bucket_size_for(50, (64, 128, 256, 512, 1024), 3) == 51
-    assert bucket_size_for(2, (64,), 3) == 6  # n'/N > 1 still enforced
+    assert bucket_size_for(50, (64, 128, 256, 512, 1024), 3) == 96
+    assert bucket_size_for(2, (64,), 3) == 48  # servable: 48/3 = 16 > 1
     # a servable configured bucket still wins over synthesis
     assert bucket_size_for(50, (64, 128), 4) == 64
     # genuine oversize still raises → the gateway's direct escape hatch
     with pytest.raises(NoBucketFits):
         bucket_size_for(2000, (64, 128, 256, 512, 1024), 4)
+    # synthesis honors the operator's size cap: grid round-up of n=50 is
+    # 96 > max(buckets)=64, so the request directs instead of running a
+    # sweep larger than any configured bucket
+    with pytest.raises(NoBucketFits):
+        bucket_size_for(50, (64,), 3)
+
+
+def test_synthesized_buckets_stay_bounded():
+    """Pre-fix (of the fallback itself): each distinct request size
+    synthesized its own bucket, so a diverse or adversarial size
+    distribution grew the gateway's jit-compile set without bound. The
+    grid caps the synthesized sizes at ~max(buckets)/(N·SYNTH_GRID)."""
+    from repro.serve.queue import NoBucketFits, SYNTH_GRID, bucket_size_for
+
+    buckets, servers = (64, 128, 256, 512, 1024), 3
+    sizes, direct = set(), 0
+    for n in range(2, 1025):
+        try:
+            sizes.add(bucket_size_for(n, buckets, servers))
+        except NoBucketFits:
+            direct += 1  # grid round-up would exceed max(buckets)
+    assert all(s % servers == 0 and s // servers > 1 for s in sizes)
+    assert max(sizes) <= max(buckets)  # operator size cap holds
+    assert len(sizes) <= 1024 // (servers * SYNTH_GRID) + 1
+    # only the thin band above the last grid line under the cap directs
+    assert direct < servers * SYNTH_GRID
 
 
 def test_gateway_submit_override_rides_synthesized_bucket():
@@ -409,7 +437,7 @@ def test_gateway_submit_override_rides_synthesized_bucket():
     results = [gw.take(r) for r in rids]
     assert all(r is not None and r.verified for r in results)
     assert results[0].batch == 2  # coalesced, not direct
-    assert results[0].pad_to == 21  # synthesized smallest valid n' ≥ 20
+    assert results[0].pad_to == 48  # synthesized: next N·SYNTH_GRID ≥ 20
     assert gw.stats.direct == 0
 
 
