@@ -18,6 +18,11 @@ shape must stay within `--factor` of the baseline's.
     # |dlog| <= 1e-4 vs the f64 references, and exact signs
     python benchmarks/check_regression.py BENCH_ci.json BENCH_3.json \
         --suite precision --n 256 --servers 4
+    # transports guard (rows from the `transports` suite, BENCH_4): the
+    # inline (fused) path of the role-split API must stay within --factor
+    # of the committed baseline — the role split may not tax the fast path
+    python benchmarks/check_regression.py BENCH_ci.json BENCH_4.json \
+        --suite transports --n 256 --servers 4 --factor 1.5
 """
 
 from __future__ import annotations
@@ -126,11 +131,12 @@ def main(argv: list[str] | None = None) -> int:
     )
     ap.add_argument(
         "--suite",
-        choices=("throughput", "gateway", "precision"),
+        choices=("throughput", "gateway", "precision", "transports"),
         default="throughput",
         help="which suite's rows to guard (gateway also checks the "
         "gateway-beats-loop acceptance claim on the fresh run; precision "
-        "checks the f32-speedup and 100%%-verified claims)",
+        "checks the f32-speedup and 100%%-verified claims; transports "
+        "guards the role-split inline fast path)",
     )
     ap.add_argument(
         "--f32-speedup",
@@ -152,7 +158,11 @@ def main(argv: list[str] | None = None) -> int:
             f"{args.factor}x) -> {'OK' if got >= floor else 'REGRESSION'}"
         )
         return 0 if ok and got >= floor else 1
-    modes = ("batched",) if args.suite == "throughput" else ("gateway",)
+    modes = {
+        "throughput": ("batched",),
+        "gateway": ("gateway",),
+        "transports": ("inline",),
+    }[args.suite]
     got = best_dets_per_sec(
         fresh["rows"], args.n, args.servers, suite=args.suite, modes=modes
     )

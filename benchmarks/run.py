@@ -31,6 +31,14 @@ future PRs have a perf trajectory to beat.
                            references; rows land in BENCH_3.json, guarded
                            by check_regression.py --suite precision
                            (f32 ≥ 1.5× f64 at n=256, 100% Q3 verification)
+  transports             — role-split API (DESIGN.md §7): dets/sec of the
+                           SAME batched sweep over inline (fused fast
+                           path) vs threadpool vs multiprocess (spawned
+                           workers, wire-codec bytes on an OS pipe) at
+                           n=256; rows land in BENCH_4.json with a
+                           check_regression.py --suite transports guard
+                           that inline stays within noise of the
+                           pre-role-split throughput
   extension_inverse      — paper §VII.B future work: secure inversion
 
 Usage: python benchmarks/run.py [suite ...] [--smoke] [--out PATH]
@@ -497,6 +505,40 @@ def precision_suite(ns=(64, 256, 1024), N: int = 4, B: int = 8):
         )
 
 
+def transports_suite(n: int = 256, N: int = 4, B: int = 8):
+    """Role-split transports (DESIGN.md §7): one warmed (B, n, n) batched
+    sweep per transport. inline is the fused fast path the gateway serves
+    on — its rate is the regression claim (`--suite transports` guard:
+    within noise of the committed baseline, i.e. of the pre-role-split
+    protocol). threadpool/multiprocess quantify what a REAL execution
+    boundary costs: per-server message dispatch, the sequential relay,
+    and (multiprocess) wire-codec bytes over an OS pipe — the honest
+    price of the paper's actual deployment shape, reported so nobody
+    mistakes the simulation's throughput for it."""
+    from repro.api import close_all
+    from repro.core import outsource_determinant
+
+    if SMOKE:
+        B = 4
+    stack = _wellcond(n, seed=n, batch=B)
+    rates = {}
+    for name in ("inline", "threadpool", "multiprocess"):
+        t_us, res = _t(
+            lambda tr=name: outsource_determinant(stack, N, transport=tr),
+            reps=2, warmup=1,
+        )
+        rate = B * 1e6 / t_us
+        rates[name] = rate
+        emit(
+            f"transports_{name}_n{n}_N{N}_B{B}", t_us,
+            suite="transports", n=n, num_servers=N, batch=B, mode=name,
+            dets_per_sec=round(rate, 2),
+            vs_inline=round(rate / rates["inline"], 3),
+            all_verified=bool(np.asarray(res.verified).all()),
+        )
+    close_all()  # shut the spawned workers down before the next suite
+
+
 def extension_inverse(n: int = 128):
     """Paper §VII.B future work, implemented: secure outsourced inversion."""
     from repro.core import outsource_inverse
@@ -522,6 +564,7 @@ SUITES = {
     "faults": faults_suite,
     "gateway": gateway_suite,
     "precision": precision_suite,
+    "transports": transports_suite,
     "inverse": extension_inverse,
 }
 
@@ -567,10 +610,11 @@ def main(argv: list[str] | None = None) -> None:
         out.write_text(json.dumps(record, indent=1) + "\n")
         print(f"# wrote {out} ({len(RESULTS)} rows)")
         return
-    # the gateway and precision suites own their own committed baselines
-    # (BENCH_2.json / BENCH_3.json — each with its own CI guard);
-    # everything else lives in BENCH_1.json
-    own_baseline = {"gateway": "BENCH_2.json", "precision": "BENCH_3.json"}
+    # the gateway, precision, and transports suites own their own
+    # committed baselines (BENCH_2/3/4.json — each with its own CI
+    # guard); everything else lives in BENCH_1.json
+    own_baseline = {"gateway": "BENCH_2.json", "precision": "BENCH_3.json",
+                    "transports": "BENCH_4.json"}
     for suite, fname in own_baseline.items():
         rows = [r for r in RESULTS if r.get("suite") == suite]
         if suite in names and not SMOKE:

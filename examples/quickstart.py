@@ -95,6 +95,15 @@ def main():
     print(f"  straggler (9 rounds late, deadline 4): shard re-dispatched, "
           f"verified={slow.verified}")
 
+    # role-split transports (DESIGN.md §7): the same protocol with the
+    # client and the untrusted workers as separate objects — here on a
+    # thread pool; transport="multiprocess" spawns real worker processes
+    # (see examples/role_split.py for the full role API)
+    role = outsource_determinant(m, args.servers, transport="threadpool")
+    assert role.verified and role.det.sign == want_sign
+    assert np.isclose(role.det.logabs, want_log, rtol=1e-9)
+    print("  role-split threadpool transport: verified, same determinant")
+
     if args.batch:
         # batch-first: a (B, n, n) stack goes through the identical protocol
         # in ONE call — per-matrix seeds/keys/rotations/verdicts, one sweep

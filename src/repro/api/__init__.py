@@ -1,0 +1,43 @@
+"""Role-split SPDC API — client, edge servers, wire, transports.
+
+The paper's protocol is defined by a trust boundary; this package makes
+the boundary the shape of the code (DESIGN.md §7):
+
+  * `SPDCClient` / `Session` (client.py) — the trusted role: KeyGen /
+    Cipher / Authenticate / Decipher, plus client-driven recovery.
+  * `EdgeServer` (server.py)            — the untrusted role: a stateless
+    `run(ShardTask) → ShardResult` worker.
+  * `ShardTask` / `ShardResult` (messages.py) and the codec (wire.py) —
+    the ONLY things that cross the boundary, serializable to versioned
+    pickle-free byte frames.
+  * transports (transport.py)           — inline (fused fast path),
+    shardmap (mesh pipeline), threadpool, multiprocess (real process
+    boundary, bytes on the wire).
+
+`core.protocol.outsource_determinant` remains the one-call facade over
+exactly these objects.
+"""
+from .client import BoundaryViolation, Session, SPDCClient
+from .messages import FaultPlanFrame, ShardResult, ShardTask
+from .server import EdgeServer
+from .transport import (
+    InlineTransport,
+    MultiprocessTransport,
+    ShardMapTransport,
+    ThreadPoolTransport,
+    Transport,
+    TransportError,
+    close_all,
+    resolve_transport,
+)
+from .wire import WireError, decode_message
+
+__all__ = [
+    "SPDCClient", "Session", "BoundaryViolation",
+    "EdgeServer",
+    "ShardTask", "ShardResult", "FaultPlanFrame",
+    "Transport", "TransportError", "InlineTransport", "ShardMapTransport",
+    "ThreadPoolTransport", "MultiprocessTransport", "resolve_transport",
+    "close_all",
+    "WireError", "decode_message",
+]

@@ -1,0 +1,552 @@
+"""SPDCClient / Session — the trusted-client role of the SPDC protocol.
+
+The paper's trust boundary (§III–IV) splits the six-algorithm tuple in
+two: SeedGen, KeyGen, Cipher, Authenticate, and Decipher run on the
+constrained CLIENT; only the Parallelize stage (the N-server LU) runs on
+untrusted edge hardware. This module is everything on the client side of
+that line, as an object API:
+
+    client  = SPDCClient(method="q3", dtype="float64", recover=True)
+    session = client.open_session(m, num_servers=4)      # PMOP runs here
+    result  = session.run(transport)                     # SPCP + RRVP
+
+`open_session` performs the full PMOP (seed → key → cipher → equilibrate
+→ det-preserving border) and captures every secret the protocol needs —
+seeds, blinding keys, rotation metadata, the augmented ciphertext the
+probes verify against. What leaves the session is only what
+`Session.tasks()` emits: per-server ShardTasks holding encrypted block
+rows and dispatch sub-seeds (messages.ShardTask; the boundary is checked
+at task-build time and adversarially in tests/test_api.py).
+
+`Session.collect()` is the RRVP tail: Authenticate over the assembled
+factors with a secret-keyed probe, then — when the client opted into
+recovery — the verification-driven re-dispatch loop, expressed as the
+session emitting NEW ShardTasks for blamed servers (fresh sub-seed per
+attempt, verified upstream rows attached) through the same transport.
+The one-way model survives recovery: servers still never talk backwards,
+the client re-issues work instead.
+
+The module-level `outsource_determinant` facades in core.protocol are
+thin wrappers over exactly this flow and remain the stable entry point;
+this API is for callers that need the roles separated — multi-process
+serving, real remote workers, or security tests that must see the wire.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.augment import augment, padding_for_servers
+from repro.core.cipher import CipherMeta, cipher, cipher_batch
+from repro.core.cipher import equilibrate as ced_equilibrate
+from repro.core.decipher import decipher, decipher_batch
+from repro.core.faults import normalize_plan, resolve_delays
+from repro.core.keygen import keygen, keygen_batch
+from repro.core.lu import nserver_comm_model
+from repro.core.prt import rotate_degree
+from repro.core.seed import Seed, seedgen, seedgen_batch
+from repro.core.verify import authenticate
+
+from .messages import ShardResult, ShardTask
+from .transport import resolve_transport
+
+__all__ = ["SPDCClient", "Session", "BoundaryViolation"]
+
+
+class BoundaryViolation(AssertionError):
+    """A ShardTask was about to carry plaintext or key material."""
+
+
+#: everything a ShardTask is allowed to hold — a new field on the message
+#: is a deliberate API change, not something a refactor may smuggle in
+_TASK_FIELDS = frozenset(
+    {"server", "num_servers", "x_row", "subseed", "style", "attempt",
+     "u_upstream", "session_id"}
+)
+
+#: auto boundary check: full entry-level plaintext-disjointness screening
+#: up to this many payload elements per sweep (beyond it the structural
+#: checks still run; tests force the full check at every size)
+_FULL_CHECK_ELEMS = 1 << 20
+
+
+@partial(jax.jit, static_argnames=("padding", "equilibrate"))
+def _equilibrate_augment_jit(x, aug_key, *, padding, equilibrate):
+    if equilibrate:
+        x, log2_scale = ced_equilibrate(x)
+    else:
+        log2_scale = jnp.zeros(x.shape[:-2], dtype=jnp.int32)
+    return augment(x, padding, key=aug_key), log2_scale
+
+
+def _equilibrate_augment(x, aug_key, *, padding, equilibrate):
+    """PMOP tail for device ciphertexts: optional two-sided power-of-two
+    equilibration, then the det-preserving [[X,0],[R,I]] border. Both
+    transforms are exact in floating point, so running them here (vs
+    fused into the old monolithic sweep) is value-identical. When both
+    stages are no-ops (p = 0, no equilibration — every n divisible by N)
+    the jit is skipped entirely: an identity program would still cost a
+    dispatch plus a full ciphertext copy per sweep on the gateway's hot
+    path."""
+    if padding == 0 and not equilibrate:
+        # host zeros, not device zeros: converting a device array back to
+        # numpy at session-build time would SYNC the CPU stream and
+        # serialize the still-in-flight cipher program behind it
+        return x, np.zeros(x.shape[:-2], dtype=np.int32)
+    return _equilibrate_augment_jit(x, aug_key, padding=padding,
+                                    equilibrate=equilibrate)
+
+
+@dataclass
+class SPDCClient:
+    """The trusted client role: holds the security configuration and
+    mints Sessions. One client may run many concurrent sessions; all
+    per-matrix secrets live on the Session, not here.
+
+    Parameters mirror `core.protocol.outsource_determinant` (that facade
+    constructs one of these); see its docstring for the full reference.
+    """
+
+    lambda1: int = 128
+    lambda2: int = 128
+    mode: str = "ewd"
+    method: str = "q3"
+    use_kernel: bool = False
+    faithful_sign: bool = False
+    recover: bool = False
+    standby: int = 0
+    straggler_deadline: int | None = None
+    dtype: Any = "float64"
+    growth_safe: bool | None = None
+    equilibrate: bool | None = None
+
+    def __post_init__(self):
+        from repro.core.protocol import (
+            _resolve_growth_controls, resolve_dtype,
+        )
+
+        self.dtype = resolve_dtype(self.dtype)
+        self.growth_safe, self.equilibrate = _resolve_growth_controls(
+            self.dtype, self.growth_safe, self.equilibrate,
+            self.faithful_sign,
+        )
+
+    # -- PMOP: everything before any server is involved ---------------------
+
+    def open_session(
+        self,
+        m,
+        num_servers: int,
+        *,
+        faults=None,
+        tamper=None,
+        pad_to: int | None = None,
+    ) -> "Session":
+        """Run the client-side PMOP and return the dispatchable Session.
+
+        m: one (n, n) matrix, a (B, n, n) stack, or a list/tuple of
+        mixed-size square matrices (coalesced at a shared padded size —
+        `pad_to` applies only there). faults/tamper configure SIMULATED
+        misbehavior: faults ride to the Parallelize stage (in-sweep for
+        fused transports, worker-side for message transports); tamper is
+        a client-side hook on the assembled factors.
+        """
+        plan = resolve_delays(normalize_plan(faults),
+                              self.straggler_deadline)
+        if isinstance(m, (list, tuple)):
+            return self._open_mixed(m, num_servers, plan, tamper, pad_to)
+        if pad_to is not None:
+            raise ValueError("pad_to applies to mixed-size lists only")
+        m = jnp.asarray(m, dtype=self.dtype)
+        if m.ndim == 3:
+            return self._open_batch(m, num_servers, plan, tamper)
+        if m.ndim != 2 or m.shape[0] != m.shape[1]:
+            raise ValueError(f"expected a square matrix, got {m.shape}")
+        return self._open_single(m, num_servers, plan, tamper)
+
+    def _open_single(self, m, num_servers, plan, tamper) -> "Session":
+        n = int(m.shape[0])
+        m_host = np.asarray(m)
+        seed = seedgen(self.lambda1, m_host)
+        key = keygen(self.lambda2, seed, n)
+        x, meta = cipher(m, key, seed, mode=self.mode,
+                         growth_safe=self.growth_safe,
+                         use_kernel=self.use_kernel)
+        if self.equilibrate:
+            x, log2_scale = ced_equilibrate(x)
+            log2_scale = float(log2_scale)
+        else:
+            log2_scale = 0.0
+        aug_key = jax.random.key(
+            int.from_bytes(seed.digest[8:16], "big") % (2**31)
+        )
+        padding = padding_for_servers(n, num_servers)
+        x_aug = augment(x, padding, key=aug_key)
+        return Session(
+            client=self, kind="single", num_servers=num_servers,
+            x_aug=x_aug, seeds=[seed], metas=[meta],
+            log2_scale=log2_scale, n=n, padding=padding,
+            digest=seed.digest, plan=plan, tamper=tamper,
+            _m_host=m_host,
+        )
+
+    def _open_batch(self, m, num_servers, plan, tamper) -> "Session":
+        from repro.core.protocol import _batch_digest
+
+        n = int(m.shape[-1])
+        m_host = np.asarray(m)
+        seeds = seedgen_batch(self.lambda1, m_host)
+        v = keygen_batch(self.lambda2, seeds, n)
+        x, metas = cipher_batch(m, v, seeds, mode=self.mode,
+                                growth_safe=self.growth_safe,
+                                use_kernel=self.use_kernel)
+        aug_key = jax.random.key(
+            int.from_bytes(seeds[0].digest[8:16], "big") % (2**31)
+        )
+        padding = padding_for_servers(n, num_servers)
+        x_aug, log2_scale = _equilibrate_augment(
+            x, aug_key, padding=padding, equilibrate=self.equilibrate
+        )
+        # log2_scale may still be a device array here; collect() converts
+        # it at Decipher time (the old fused path's sync point) — forcing
+        # it now would stall the session behind the cipher program
+        return Session(
+            client=self, kind="batch", num_servers=num_servers,
+            x_aug=x_aug, seeds=seeds, metas=metas,
+            log2_scale=log2_scale, n=n, padding=padding,
+            digest=_batch_digest(seeds), plan=plan, tamper=tamper,
+            _m_host=m_host,
+        )
+
+    def _open_mixed(self, ms, num_servers, plan, tamper, pad_to) -> "Session":
+        # host-native from the start: raw-size client matrices must never
+        # individually touch the device (DESIGN.md §5.1)
+        from repro.core.protocol import (
+            _augment_host, _batch_digest, _cipher_host, _equilibrate_host,
+            common_padded_size,
+        )
+
+        np_dtype = np.dtype(self.dtype.name)
+        ms = [np.asarray(mi, dtype=np_dtype) for mi in ms]
+        if not ms:
+            raise ValueError("outsource_determinant_mixed needs >= 1 matrix")
+        for mi in ms:
+            if mi.ndim != 2 or mi.shape[0] != mi.shape[1]:
+                raise ValueError(
+                    f"expected square matrices, got shape {mi.shape}"
+                )
+        sizes = [int(mi.shape[0]) for mi in ms]
+        if pad_to is None:
+            pad_to = common_padded_size(sizes, num_servers)
+        if pad_to % num_servers != 0 or pad_to // num_servers <= 1:
+            raise ValueError(
+                f"pad_to={pad_to} not servable by N={num_servers} "
+                "(need pad_to % N == 0 and pad_to / N > 1)"
+            )
+        if max(sizes) > pad_to:
+            raise ValueError(
+                f"matrix of size {max(sizes)} exceeds pad_to={pad_to}"
+            )
+        seeds, metas, xs, paddings, log2_scales = [], [], [], [], []
+        for mi in ms:
+            n = int(mi.shape[0])
+            seed = seedgen(self.lambda1, mi)
+            key = keygen(self.lambda2, seed, n)
+            k = rotate_degree(seed.psi)
+            x = _cipher_host(mi, np.asarray(key.v, dtype=np_dtype), k,
+                             self.mode, growth_safe=self.growth_safe)
+            if self.equilibrate:
+                x, ls = _equilibrate_host(x)
+            else:
+                ls = 0
+            aug_rng = np.random.default_rng(
+                int.from_bytes(seed.digest[8:16], "big") % (2**31)
+            )
+            xs.append(_augment_host(x, pad_to - n, aug_rng))
+            seeds.append(seed)
+            metas.append(CipherMeta(mode=self.mode, rotate_k=k, n=n,
+                                    flipped=self.growth_safe and k % 2 == 1))
+            paddings.append(pad_to - n)
+            log2_scales.append(ls)
+        return Session(
+            client=self, kind="mixed", num_servers=num_servers,
+            x_aug=jnp.asarray(np.stack(xs)), seeds=seeds, metas=metas,
+            log2_scale=np.asarray(log2_scales), n=pad_to, padding=0,
+            digest=_batch_digest(seeds), plan=plan, tamper=tamper,
+            paddings=paddings, pad_to=pad_to,
+            _m_host=None, _m_hosts=ms,
+        )
+
+
+@dataclass
+class Session:
+    """One protocol run: the client's secrets + the dispatchable state.
+
+    Everything here except `tasks()`'s output is client-private. The
+    life cycle is tasks → (transport) → collect, or just `run(transport)`
+    which does both and prefers the fused sweep on fused transports.
+    """
+
+    client: SPDCClient
+    kind: str  # "single" | "batch" | "mixed"
+    num_servers: int
+    x_aug: jnp.ndarray  # (…, n', n') augmented CIPHERTEXT (client-held)
+    seeds: list[Seed]
+    metas: list[CipherMeta]
+    log2_scale: Any
+    n: int  # raw size (single/batch) or the common n' (mixed)
+    padding: int
+    digest: bytes
+    plan: tuple = ()
+    tamper: Any = None
+    paddings: list[int] | None = None
+    pad_to: int | None = None
+    _m_host: np.ndarray | None = None
+    _m_hosts: list[np.ndarray] = field(default_factory=list)
+
+    def __post_init__(self):
+        from repro.distrib.recovery import dispatch_subseed
+
+        # opaque routing tag: one-way derived from the secret digest so it
+        # can be logged/echoed without leaking probe or channel material
+        self.session_id = dispatch_subseed(self.digest, -1, -1)[:8].hex()
+
+    # -- geometry ------------------------------------------------------------
+
+    @property
+    def n_aug(self) -> int:
+        return int(self.x_aug.shape[-1])
+
+    @property
+    def block(self) -> int:
+        return self.n_aug // self.num_servers
+
+    @property
+    def batch(self) -> int | None:
+        return int(self.x_aug.shape[0]) if self.x_aug.ndim == 3 else None
+
+    # -- dispatch ------------------------------------------------------------
+
+    def tasks(self, *, check_boundary: bool | None = None) -> list[ShardTask]:
+        """The N initial ShardTasks — one encrypted block row + dispatch
+        sub-seed per server. u_upstream is left to the transport's relay.
+
+        check_boundary: None (default) runs the structural boundary
+        checks always and the full entry-level plaintext screening up to
+        ~1M payload elements; True forces the full screening at any size;
+        False runs structural checks only.
+        """
+        from repro.distrib.recovery import dispatch_subseed
+
+        b = self.block
+        out = []
+        for i in range(self.num_servers):
+            out.append(
+                ShardTask(
+                    server=i,
+                    num_servers=self.num_servers,
+                    x_row=np.asarray(
+                        self.x_aug[..., i * b : (i + 1) * b, :]
+                    ),
+                    subseed=dispatch_subseed(self.digest, i, 0),
+                    style="nserver",
+                    session_id=self.session_id,
+                )
+            )
+        self._assert_boundary(out, check_boundary)
+        return out
+
+    def _repair_task(self, server: int, attempt: int, u) -> ShardTask:
+        """A verification-driven re-issue for one blamed server: fresh
+        dispatch sub-seed, verified upstream U rows attached (the
+        replacement is stateless and the culprit's relay is untrusted)."""
+        from repro.distrib.recovery import dispatch_subseed
+
+        b, s0 = self.block, server * self.block
+        return ShardTask(
+            server=server,
+            num_servers=self.num_servers,
+            x_row=np.asarray(self.x_aug[..., s0 : s0 + b, :]),
+            subseed=dispatch_subseed(self.digest, server, attempt),
+            style=self._style,
+            attempt=attempt,
+            u_upstream=np.asarray(u[..., :s0, :]),
+            session_id=self.session_id,
+        )
+
+    def _assert_boundary(self, tasks, check_boundary) -> None:
+        """No plaintext, no key material, no unexpected fields — checked
+        at the moment messages are minted, not left to code review."""
+        plaintexts = (
+            self._m_hosts if self._m_hosts
+            else ([self._m_host] if self._m_host is not None else [])
+        )
+        total = sum(t.x_row.size for t in tasks)
+        full = check_boundary or (
+            check_boundary is None and total <= _FULL_CHECK_ELEMS
+        )
+        secrets = np.asarray([s.psi for s in self.seeds])
+
+        def informative(a):
+            # exact 0/±1 entries are structural constants (zero border,
+            # identity block) that carry no client information — screening
+            # them would false-alarm on sparse client matrices
+            a = np.asarray(a).ravel()
+            return a[(a != 0.0) & (np.abs(a) != 1.0)]
+
+        # the plaintext side of the screen is loop-invariant: filter and
+        # sort it once, not once per task
+        plain_sorted = [np.sort(informative(m)) for m in plaintexts] \
+            if full else []
+
+        def leaks(payload, reference_sorted):
+            if not reference_sorted.size or not payload.size:
+                return False
+            idx = np.clip(np.searchsorted(reference_sorted, payload),
+                          0, reference_sorted.size - 1)
+            return bool(np.any(reference_sorted[idx] == payload))
+
+        for t in tasks:
+            extra = set(vars(t)) - _TASK_FIELDS
+            if extra:
+                raise BoundaryViolation(
+                    f"ShardTask grew unreviewed fields {sorted(extra)}"
+                )
+            if not (isinstance(t.subseed, bytes) and len(t.subseed) == 32):
+                raise BoundaryViolation("subseed must be a 32-byte digest")
+            for m in plaintexts:
+                if np.shares_memory(t.x_row, m):
+                    raise BoundaryViolation(
+                        "ShardTask payload aliases the plaintext buffer"
+                    )
+            if full:
+                payload = informative(t.x_row)
+                for ref in plain_sorted:
+                    if leaks(payload, ref):
+                        raise BoundaryViolation(
+                            "ShardTask payload contains verbatim plaintext "
+                            "entries — cipher did not run?"
+                        )
+                if leaks(payload, np.sort(secrets)):
+                    raise BoundaryViolation(
+                        "ShardTask payload contains client key material"
+                    )
+
+    # -- execution -----------------------------------------------------------
+
+    _style: str = "nserver"
+
+    def run(self, transport=None):
+        """Dispatch + collect through a transport (default inline)."""
+        transport = resolve_transport(transport)
+        self._style = transport.style
+        if transport.fused:
+            l, u = transport.sweep(self.x_aug, self.num_servers,
+                                   faults=self.plan)
+        else:
+            results = transport.factor(self.tasks(), faults=self.plan)
+            l, u = self._assemble(results)
+        return self.collect((l, u), transport=transport)
+
+    def _assemble(self, results) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Stack per-server strips into full (…, n', n') factors."""
+        byid = {r.server: r for r in results}
+        if sorted(byid) != list(range(self.num_servers)):
+            raise ValueError(
+                f"need one ShardResult per server, got {sorted(byid)}"
+            )
+        l = np.concatenate(
+            [np.asarray(byid[i].l_row) for i in range(self.num_servers)],
+            axis=-2,
+        )
+        u = np.concatenate(
+            [np.asarray(byid[i].u_row) for i in range(self.num_servers)],
+            axis=-2,
+        )
+        dt = self.x_aug.dtype
+        return jnp.asarray(l, dtype=dt), jnp.asarray(u, dtype=dt)
+
+    # -- RRVP: verify, heal, decipher ---------------------------------------
+
+    def collect(self, results, *, transport=None):
+        """Authenticate → (recovery) → Decipher.
+
+        results: an (L, U) pair of full factors, or a list of
+        ShardResults to assemble. Returns core.protocol.SPDCResult /
+        SPDCBatchResult exactly as the facades always have.
+        """
+        from repro.core.protocol import (
+            SPDCBatchResult, SPDCResult, _probe_rng,
+        )
+        from repro.distrib.recovery import recover_lu
+
+        transport = resolve_transport(transport)
+        self._style = transport.style
+        if (isinstance(results, tuple) and len(results) == 2
+                and not isinstance(results[0], ShardResult)):
+            l, u = results
+        else:
+            l, u = self._assemble(results)
+        if self.tamper is not None:
+            l, u = self.tamper(l, u)
+        verdict = authenticate(
+            l, u, self.x_aug, num_servers=self.num_servers,
+            method=self.client.method, rng=_probe_rng(self.digest),
+        )
+        report = None
+        if self.client.recover and not bool(np.all(verdict.ok)):
+            def dispatch(x, u_now, server, attempt, replacement):
+                task = self._repair_task(server, attempt, u_now)
+                res = transport.repair(task, replacement=replacement)
+                dt = self.x_aug.dtype
+                return (jnp.asarray(res.l_row, dtype=dt),
+                        jnp.asarray(res.u_row, dtype=dt))
+
+            l, u, verdict, report = recover_lu(
+                l, u, self.x_aug, num_servers=self.num_servers,
+                method=self.client.method, standby=self.client.standby,
+                digest=self.digest, style=self._style, verdict=verdict,
+                dispatch=dispatch,
+            )
+        comm = (
+            None if transport.style == "pipeline"
+            else nserver_comm_model(self.n_aug, self.num_servers)
+        )
+        if self.kind == "single":
+            det = decipher(self.seeds[0], self.metas[0], l, u,
+                           faithful=self.client.faithful_sign,
+                           log2_scale=self.log2_scale)
+            return SPDCResult(
+                det=det,
+                verified=bool(np.all(verdict.ok)),
+                residual=verdict.residual,
+                seed=self.seeds[0],
+                meta=self.metas[0],
+                comm=comm,
+                padding=self.padding,
+                num_servers=self.num_servers,
+                verdict=verdict,
+                recovery=report,
+            )
+        dets = decipher_batch(self.seeds, self.metas, l, u,
+                              faithful=self.client.faithful_sign,
+                              log2_scale=np.asarray(self.log2_scale))
+        return SPDCBatchResult(
+            dets=dets,
+            verified=np.atleast_1d(np.asarray(verdict.ok)),
+            residual=np.atleast_1d(np.asarray(verdict.residual)),
+            seeds=self.seeds,
+            metas=self.metas,
+            comm=comm,
+            padding=self.padding,
+            num_servers=self.num_servers,
+            verdict=verdict,
+            recovery=report,
+            paddings=self.paddings,
+            pad_to=self.pad_to,
+        )

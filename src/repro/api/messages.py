@@ -1,0 +1,230 @@
+"""Protocol messages of the role-split SPDC API (DESIGN.md §7).
+
+Exactly four object kinds exist at the client ↔ edge-server boundary, and
+only the first two ever cross it:
+
+  * ``ShardTask``   — client → server. One server's unit of work: its
+    ENCRYPTED block row of the augmented ciphertext, the dispatch-channel
+    sub-seed keying this (re-)issue, and — for repair tasks or transports
+    that materialize the relay — the upstream U rows it would have
+    received over the one-way chain. Nothing else: no plaintext entries,
+    no blinding vector, no Ψ, no probe material (the boundary the paper's
+    security analysis assumes; enforced by `Session.tasks()` and the
+    negative tests in tests/test_api.py).
+  * ``ShardResult`` — server → client. The (L strip, U strip) the server
+    claims, echoing the task's sub-seed so the client can match a result
+    to the dispatch that requested it (a stale strip from a retired
+    server cannot impersonate a re-dispatch).
+  * ``Verdict`` / ``Determinant`` (core.verify / core.decipher) — stay on
+    the client side of the boundary but serialize with the same codec so
+    gateways and archives can move them between processes.
+
+``FaultPlanFrame`` is NOT a protocol message: it is the simulation
+control frame transports use to tell a worker which misbehavior to play
+(core.faults semantics) — a real deployment has real faults instead.
+
+All wire frames use repro.api.wire (versioned, pickle-free — see that
+module's docstring for why).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import numpy as np
+
+from repro.core.faults import FaultPlan, ServerFault, normalize_plan
+
+from . import wire
+
+__all__ = ["ShardTask", "ShardResult", "FaultPlanFrame"]
+
+
+def _np_or_none(a):
+    return None if a is None else np.asarray(a)
+
+
+@wire.register("ShardTask")
+@dataclass(frozen=True, eq=False)
+class ShardTask:
+    """One server's unit of work — the only client → server message.
+
+    x_row: the server's (…, b, n') block row of the augmented CIPHERTEXT
+        (post-EWO, post-PRT, post-border). A leading batch dim means the
+        whole stack's strip ships in one task (DESIGN.md §3).
+    u_upstream: the (…, s0, n') U rows of the servers above — what the
+        one-way relay S_{i-1} → S_i delivers. None on initial dispatch
+        when the transport itself threads the relay; always present on
+        repair tasks (the replacement is stateless and the culprit's
+        relay cannot be trusted).
+    subseed: H(Ψ-digest ‖ server ‖ attempt) — the dispatch-channel key.
+        Derived from the client secret but reveals nothing about it
+        (SHA-256 preimage); it is the re-keying that stops a replayed
+        strip from the original server impersonating a re-dispatch.
+    style: operation order the result must match ("nserver" | "pipeline",
+        core.lu.lu_block_row) so a recomputed strip splices bit-cleanly.
+    attempt: 0 = initial dispatch; > 0 = verification-driven re-issue.
+    session_id: opaque routing tag (hex), NOT secret material.
+    """
+
+    server: int
+    num_servers: int
+    x_row: np.ndarray
+    subseed: bytes
+    style: str = "nserver"
+    attempt: int = 0
+    u_upstream: np.ndarray | None = None
+    session_id: str = ""
+
+    @property
+    def n(self) -> int:
+        """Padded sweep size n' (the full matrix the strips tile)."""
+        return int(self.x_row.shape[-1])
+
+    @property
+    def block(self) -> int:
+        return int(self.x_row.shape[-2])
+
+    def with_upstream(self, u_upstream) -> "ShardTask":
+        return replace(self, u_upstream=_np_or_none(u_upstream))
+
+    def to_bytes(self) -> bytes:
+        return wire.encode(
+            "ShardTask",
+            {
+                "server": self.server,
+                "num_servers": self.num_servers,
+                "subseed": self.subseed,
+                "style": self.style,
+                "attempt": self.attempt,
+                "session_id": self.session_id,
+            },
+            {"x_row": self.x_row, "u_upstream": self.u_upstream},
+        )
+
+    @classmethod
+    def _from_wire(cls, scalars, arrays):
+        return cls(
+            server=int(scalars["server"]),
+            num_servers=int(scalars["num_servers"]),
+            x_row=arrays["x_row"],
+            subseed=scalars["subseed"],
+            style=scalars["style"],
+            attempt=int(scalars["attempt"]),
+            u_upstream=arrays["u_upstream"],
+            session_id=scalars["session_id"],
+        )
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "ShardTask":
+        kind, scalars, arrays = wire.decode(data)
+        if kind != "ShardTask":
+            raise wire.WireError(f"expected ShardTask frame, got {kind!r}")
+        return cls._from_wire(scalars, arrays)
+
+
+@wire.register("ShardResult")
+@dataclass(frozen=True, eq=False)
+class ShardResult:
+    """One server's reported strips — the only server → client message.
+
+    l_row / u_row: the (…, b, n') L and U strips of the server's block
+    row. The client trusts NOTHING here until Authenticate accepts it.
+    subseed/attempt echo the ShardTask so the client can bind the result
+    to a specific dispatch.
+    """
+
+    server: int
+    l_row: np.ndarray
+    u_row: np.ndarray
+    subseed: bytes = b""
+    attempt: int = 0
+    session_id: str = ""
+
+    def to_bytes(self) -> bytes:
+        return wire.encode(
+            "ShardResult",
+            {
+                "server": self.server,
+                "subseed": self.subseed,
+                "attempt": self.attempt,
+                "session_id": self.session_id,
+            },
+            {"l_row": self.l_row, "u_row": self.u_row},
+        )
+
+    @classmethod
+    def _from_wire(cls, scalars, arrays):
+        return cls(
+            server=int(scalars["server"]),
+            l_row=arrays["l_row"],
+            u_row=arrays["u_row"],
+            subseed=scalars["subseed"],
+            attempt=int(scalars["attempt"]),
+            session_id=scalars["session_id"],
+        )
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "ShardResult":
+        kind, scalars, arrays = wire.decode(data)
+        if kind != "ShardResult":
+            raise wire.WireError(f"expected ShardResult frame, got {kind!r}")
+        return cls._from_wire(scalars, arrays)
+
+
+@wire.register("FaultPlanFrame")
+@dataclass(frozen=True)
+class FaultPlanFrame:
+    """Simulation control frame: configure a worker's misbehavior.
+
+    Carries a core.faults FaultPlan as plain data (no pickle — a worker
+    decodes field dicts and rebuilds frozen ServerFaults). Sent by
+    transports before a sweep whose session requested fault injection;
+    real deployments never send one.
+    """
+
+    plan: FaultPlan = ()
+
+    def to_bytes(self) -> bytes:
+        faults = []
+        for f in self.plan:
+            d = {
+                "server": f.server, "kind": f.kind, "mode": f.mode,
+                "target": f.target, "magnitude": f.magnitude,
+                "delay_rounds": f.delay_rounds,
+                "matrices": None if f.matrices is None else list(f.matrices),
+                "in_band": f.in_band, "seed": f.seed,
+            }
+            faults.append(d)
+        return wire.encode("FaultPlanFrame", {"faults": faults}, {})
+
+    @classmethod
+    def _from_wire(cls, scalars, arrays):
+        plan = []
+        for d in scalars["faults"]:
+            mats = d.pop("matrices")
+            plan.append(
+                ServerFault(matrices=None if mats is None else tuple(mats),
+                            **d)
+            )
+        return cls(plan=normalize_plan(plan))
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "FaultPlanFrame":
+        kind, scalars, arrays = wire.decode(data)
+        if kind != "FaultPlanFrame":
+            raise wire.WireError(f"expected FaultPlanFrame, got {kind!r}")
+        return cls._from_wire(scalars, arrays)
+
+
+# Verdict and Determinant live in core (they predate the role split) but
+# speak the same codec; register them so decode_message dispatches all
+# four protocol-adjacent kinds.
+def _register_core_kinds() -> None:
+    from repro.core.decipher import Determinant
+    from repro.core.verify import Verdict
+
+    wire.MESSAGE_KINDS.setdefault("Verdict", Verdict)
+    wire.MESSAGE_KINDS.setdefault("Determinant", Determinant)
+
+
+_register_core_kinds()

@@ -1,0 +1,131 @@
+"""EdgeServer — the untrusted worker role of the SPDC protocol.
+
+A stateless executor of ShardTasks: given its encrypted block row and the
+U rows relayed from upstream, it computes the (L strip, U strip) of paper
+Algorithm 3's block row `task.server` and reports them back. It holds NO
+session state between tasks, sees ONLY ciphertext (the trust boundary —
+DESIGN.md §7), and its arithmetic is exactly `core.lu.lu_block_row` in
+the task's declared operation order, so an honest EdgeServer's strips are
+bit-identical to the strips the fused single-process sweep produces for
+the same inputs.
+
+Misbehavior is first-class but OPT-IN: `run(task, faults=plan)` applies
+the core.faults model to the strips this server reports — tampering its
+own block row before the relay hop forwards it, which is precisely the
+paper's in-band threat (downstream servers consume the poisoned rows).
+Faults bind to the initial assignment (attempt 0): verification-driven
+re-dispatches go to replacement servers the pool chose specifically for
+not being the culprit, so repair tasks always execute honestly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.faults import corrupt_strip, normalize_plan
+from repro.core.lu import lu_block_row
+
+from .messages import ShardResult, ShardTask
+
+__all__ = ["EdgeServer"]
+
+#: jitted strip recompute for (B, n, n) stacks — host dispatch would
+#: dominate otherwise; single matrices stay eager so the arithmetic
+#: bit-matches the eager lu_nserver simulation (core.lu.lu_block_row).
+_block_row_batched = jax.jit(
+    lu_block_row, static_argnums=(2, 3), static_argnames=("style",)
+)
+
+
+def _embed_rows(zeros, strip, row0, rows):
+    """Place a (…, rows, n) strip into a zero (…, n, n) frame (eager —
+    values only; lu_block_row never reads outside the strip)."""
+    return zeros.at[..., row0 : row0 + rows, :].set(strip)
+
+
+class EdgeServer:
+    """One untrusted edge worker (see module docstring).
+
+    worker_id identifies the PHYSICAL worker (process/thread slot) — it
+    is labelling for logs and fault routing, not protocol state.
+    """
+
+    def __init__(self, worker_id: int | None = None):
+        self.worker_id = worker_id
+
+    def run(self, task: ShardTask, faults=()) -> ShardResult:
+        """Execute one ShardTask → ShardResult.
+
+        The task's strips are embedded into zero-filled (…, n', n')
+        frames because `lu_block_row` is written against full-matrix
+        coordinates; it only ever READS block row `task.server` of x and
+        the rows above `task.server` of u, so the zeros are never
+        consumed and the embedding changes no arithmetic.
+        """
+        if task.style not in ("nserver", "pipeline"):
+            raise ValueError(f"unknown task style {task.style!r}")
+        n, b, s0 = task.n, task.block, task.server * task.block
+        if b * task.num_servers != n:
+            raise ValueError(
+                f"task block {b}×{task.num_servers} servers does not tile "
+                f"n'={n}"
+            )
+        x_row = jnp.asarray(task.x_row)
+        lead = x_row.shape[:-2]
+        zeros = jnp.zeros((*lead, n, n), dtype=x_row.dtype)
+        x = _embed_rows(zeros, x_row, s0, b)
+        if task.u_upstream is not None and task.u_upstream.shape[-2]:
+            u_up = jnp.asarray(task.u_upstream, dtype=x_row.dtype)
+            u = _embed_rows(zeros, u_up, 0, int(u_up.shape[-2]))
+        else:
+            if task.server != 0:
+                raise ValueError(
+                    f"server {task.server} needs upstream U rows; the "
+                    "transport must thread the one-way relay"
+                )
+            u = zeros
+        row_fn = _block_row_batched if x.ndim == 3 else lu_block_row
+        l_row, u_row = row_fn(x, u, task.server, task.num_servers,
+                              style=task.style)
+        l_row, u_row = self._misbehave(task, l_row, u_row, faults)
+        return ShardResult(
+            server=task.server,
+            l_row=np.asarray(l_row),
+            u_row=np.asarray(u_row),
+            subseed=task.subseed,
+            attempt=task.attempt,
+            session_id=task.session_id,
+        )
+
+    def _misbehave(self, task, l_row, u_row, faults):
+        """Apply the simulated fault model to this server's reported strips.
+
+        Only faults naming this task's block row fire, and only on the
+        initial dispatch (module docstring). Because message transports
+        forward the reported U row down the relay, every tamper here is
+        effectively in-band — the cascading-poison threat model.
+        """
+        plan = [
+            f for f in normalize_plan(faults)
+            if f.server == task.server and task.attempt == 0
+            and f.kind != "delay"
+        ]
+        if not plan:
+            return l_row, u_row
+        batched = l_row.ndim == 3
+        for f in plan:
+            targets = ("l", "u") if f.kind == "dropout" else tuple(f.target)
+
+            def hit(orig, factor, f=f):
+                bad = corrupt_strip(orig, f, n=task.n, factor=factor)
+                if f.matrices is not None and batched:
+                    idx = np.asarray(f.matrices, dtype=np.int32)
+                    bad = orig.at[idx].set(bad[idx])
+                return bad
+
+            if "l" in targets:
+                l_row = hit(l_row, "l")
+            if "u" in targets:
+                u_row = hit(u_row, "u")
+        return l_row, u_row

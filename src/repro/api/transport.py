@@ -1,0 +1,416 @@
+"""Transports — how ShardTasks reach edge servers and results come back.
+
+A Transport is the pluggable boundary between the SPDC client role and
+the N untrusted workers. All transports execute the SAME protocol
+messages; they differ in what the wire physically is:
+
+  * ``InlineTransport``      — client and servers share one process and
+    the "wire" is elided: the fused, jitted single-sweep fast path of the
+    pre-split protocol (bit-identical to it, and the gateway's
+    throughput path). ShardTasks still exist (`Session.tasks()`), the
+    fused path just never materializes them.
+  * ``ShardMapTransport``    — the distrib.spdc_pipeline shard_map
+    program: one JAX mesh device per server, the relay a real
+    `lax.ppermute`. Fused like inline (the sweep is one SPMD program).
+  * ``ThreadPoolTransport``  — one EdgeServer object per worker slot,
+    tasks executed on a thread pool, the relay threaded between them as
+    in-memory messages. The cheapest transport with a real
+    scheduler-visible boundary.
+  * ``MultiprocessTransport``— spawned worker PROCESSES; every message
+    crosses the boundary as `to_bytes()` frames over an OS pipe and is
+    decoded with `from_bytes()` on the far side. This is the transport
+    the wire format exists for: nothing but bytes connects client and
+    server, so whatever the codec does not carry, the server provably
+    does not have.
+
+One-way model: for the sequential (message) transports the relay is run
+by the transport — task i executes only after i−1's result, and its
+``u_upstream`` is exactly the U rows servers 0..i−1 reported, i.e. the
+content of the paper's single S_{i-1} → S_i send. No server ever
+receives anything from downstream, and the client never ships plaintext
+or key material (messages.ShardTask).
+
+Fault simulation: ``factor(tasks, faults=plan)`` plays core.faults
+misbehavior on the matching workers (a FaultPlanFrame control message on
+the multiprocess transport). Faults bind to initial dispatches; repairs
+run honestly on replacement workers (api.server docstring).
+
+Process-wide shared instances (`resolve_transport("threadpool")`, …) are
+cached so repeated protocol calls — and every gateway flush — reuse one
+warm pool instead of respawning workers per call; `close_all()` runs at
+interpreter exit.
+"""
+from __future__ import annotations
+
+import atexit
+import threading
+from functools import partial
+
+import jax
+import numpy as np
+
+from repro.core.lu import lu_nserver
+
+from .messages import FaultPlanFrame, ShardResult, ShardTask
+from .server import EdgeServer
+
+__all__ = [
+    "Transport",
+    "TransportError",
+    "InlineTransport",
+    "ShardMapTransport",
+    "ThreadPoolTransport",
+    "MultiprocessTransport",
+    "resolve_transport",
+    "close_all",
+]
+
+
+class TransportError(RuntimeError):
+    """A worker died, timed out, or replied with a malformed frame."""
+
+
+@partial(jax.jit, static_argnames=("num_servers", "faults"))
+def _lu_sweep(x_aug, *, num_servers, faults=()):
+    """Jitted fused sweep for (B, n', n') stacks — ONE device program per
+    (shape, N, fault-plan), the throughput lever the inline transport
+    exists to keep (DESIGN.md §3)."""
+    l, u, _ = lu_nserver(x_aug, num_servers, faults=faults)
+    return l, u
+
+
+class Transport:
+    """Base transport: the message-executing interface.
+
+    fused: True when `sweep()` runs the whole factorization as one fused
+        program and `Session` should skip task materialization.
+    style: the core.lu.lu_block_row operation order this transport's
+        factors follow — what repair recomputes must replay.
+    """
+
+    name = "abstract"
+    fused = False
+    style = "nserver"
+
+    def factor(self, tasks, faults=()) -> list[ShardResult]:
+        """Run one session's initial ShardTasks (the full sweep)."""
+        raise NotImplementedError
+
+    def repair(self, task: ShardTask, *, replacement: int) -> ShardResult:
+        """Run one verification-driven re-dispatch on `replacement`."""
+        raise NotImplementedError
+
+    def close(self) -> None:  # noqa: B027 — optional hook
+        """Release workers/pools; shared instances are closed at exit."""
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+class InlineTransport(Transport):
+    """Degenerate (single-process) transport: today's jitted fast path.
+
+    `sweep()` IS the pre-split protocol's server stage — eager lu_nserver
+    for one matrix (bit-matching the recovery recompute), one jitted
+    program for a stack — so results are bit-identical to the monolithic
+    `outsource_determinant` this API replaced. The message methods exist
+    for uniformity (tests drive them); the Session prefers `sweep()`.
+    """
+
+    name = "inline"
+    fused = True
+
+    def sweep(self, x_aug, num_servers: int, faults=()):
+        if x_aug.ndim == 2:
+            l, u, _ = lu_nserver(x_aug, num_servers, faults=faults)
+            return l, u
+        return _lu_sweep(x_aug, num_servers=num_servers, faults=faults)
+
+    def factor(self, tasks, faults=()):
+        return _run_relay(tasks, lambda t, wid: EdgeServer(wid).run(t, faults))
+
+    def repair(self, task, *, replacement):
+        return EdgeServer(replacement).run(task)
+
+
+class ShardMapTransport(Transport):
+    """distrib.spdc_pipeline as a transport: one mesh device per server,
+    the relay a real lax.ppermute (DESIGN.md §2). Fused — the sweep is a
+    single SPMD program; repairs recompute host-side in the pipeline's
+    operation order ("pipeline" style), exactly as recovery always has.
+    """
+
+    name = "shardmap"
+    fused = True
+    style = "pipeline"
+
+    def __init__(self, program: str = "baseline"):
+        self.program = program
+
+    def sweep(self, x_aug, num_servers: int, faults=()):
+        from repro.distrib.spdc_pipeline import lu_nserver_shardmap
+
+        return lu_nserver_shardmap(
+            x_aug, num_servers, program=self.program, faults=faults
+        )
+
+    def repair(self, task, *, replacement):
+        return EdgeServer(replacement).run(task)
+
+
+def _run_relay(tasks, execute) -> list[ShardResult]:
+    """The one-way relay schedule over single-shot workers: execute task i
+    with u_upstream = the U rows servers 0..i−1 reported. `execute(task,
+    worker_id)` runs one task on one worker."""
+    tasks = sorted(tasks, key=lambda t: t.server)
+    if [t.server for t in tasks] != list(range(len(tasks))):
+        raise ValueError(
+            f"factor() needs exactly one task per server 0..N-1, got "
+            f"{[t.server for t in tasks]}"
+        )
+    results: list[ShardResult] = []
+    u_rows: list[np.ndarray] = []
+    for t in tasks:
+        if t.server > 0:
+            t = t.with_upstream(np.concatenate(u_rows, axis=-2))
+        r = execute(t, t.server)
+        results.append(r)
+        u_rows.append(np.asarray(r.u_row))
+    return results
+
+
+class ThreadPoolTransport(Transport):
+    """EdgeServers on a thread pool: in-memory messages, real scheduler
+    boundary, zero serialization cost. The relay is sequential per sweep
+    (the one-way chain is a data dependency); concurrency comes from
+    independent sessions sharing the pool — and from jitted strip
+    programs releasing the GIL while they run."""
+
+    name = "threadpool"
+
+    def __init__(self, max_workers: int | None = None):
+        from concurrent.futures import ThreadPoolExecutor
+
+        self._pool = ThreadPoolExecutor(
+            max_workers=max_workers, thread_name_prefix="spdc-edge"
+        )
+        self._edges: dict[int, EdgeServer] = {}
+        self._lock = threading.Lock()
+
+    def _edge(self, worker_id: int) -> EdgeServer:
+        with self._lock:
+            if worker_id not in self._edges:
+                self._edges[worker_id] = EdgeServer(worker_id)
+            return self._edges[worker_id]
+
+    def factor(self, tasks, faults=()):
+        def execute(t, wid):
+            return self._pool.submit(self._edge(wid).run, t, faults).result()
+
+        return _run_relay(tasks, execute)
+
+    def repair(self, task, *, replacement):
+        return self._pool.submit(self._edge(replacement).run, task).result()
+
+    def close(self):
+        self._pool.shutdown(wait=True)
+
+
+def _edge_worker_main(conn, worker_id: int, enable_x64: bool) -> None:
+    """Entry point of one spawned edge-server process.
+
+    Strict request-reply: EVERY frame gets exactly one reply — ShardTask
+    → ShardResult bytes, FaultPlanFrame → b"ACK", anything that fails
+    (including a frame that does not decode) → an ERR frame. One reply
+    per request keeps the pipe in lock-step, so a failure can never
+    desynchronize later requests' replies; an empty frame is the
+    shutdown sentinel. Everything in and out is the wire codec — no
+    pickle of task data crosses the boundary.
+    """
+    import jax as _jax
+
+    _jax.config.update("jax_enable_x64", bool(enable_x64))
+    from repro.api.messages import FaultPlanFrame as _FPF
+    from repro.api.server import EdgeServer as _Edge
+    from repro.api.wire import decode_message as _decode
+
+    edge = _Edge(worker_id)
+    plan = ()
+    while True:
+        try:
+            data = conn.recv_bytes()
+        except (EOFError, OSError):
+            return
+        if not data:
+            return
+        try:  # noqa: SIM105 — report every failure, don't die silently
+            msg = _decode(data)
+            if isinstance(msg, _FPF):
+                plan = msg.plan
+                reply = b"ACK"
+            else:
+                reply = edge.run(msg, faults=plan).to_bytes()
+        except Exception as e:  # noqa: BLE001
+            reply = b"ERR:" + repr(e).encode()
+        conn.send_bytes(reply)
+
+
+class MultiprocessTransport(Transport):
+    """Spawned worker processes; ShardTask/ShardResult cross as bytes.
+
+    Workers spawn lazily per worker id (first dispatch pays the process +
+    jax import + jit cost; a shared instance amortizes it across every
+    later sweep) and inherit the parent's x64 setting. `timeout` bounds
+    each request round-trip so a hung worker fails the sweep instead of
+    the suite.
+    """
+
+    name = "multiprocess"
+
+    def __init__(self, *, timeout: float = 600.0):
+        import multiprocessing as mp
+
+        self._ctx = mp.get_context("spawn")
+        self._conns: dict[int, object] = {}
+        self._procs: dict[int, object] = {}
+        self._sent_plan: dict[int, tuple] = {}
+        self._lock = threading.RLock()
+        self.timeout = float(timeout)
+
+    @property
+    def workers(self) -> tuple[int, ...]:
+        return tuple(sorted(self._procs))
+
+    def _conn(self, worker_id: int):
+        with self._lock:
+            conn = self._conns.get(worker_id)
+            if conn is not None and self._procs[worker_id].is_alive():
+                return conn
+            parent, child = self._ctx.Pipe()
+            proc = self._ctx.Process(
+                target=_edge_worker_main,
+                args=(child, worker_id,
+                      bool(jax.config.jax_enable_x64)),
+                daemon=True,
+                name=f"spdc-edge-{worker_id}",
+            )
+            proc.start()
+            child.close()
+            self._conns[worker_id] = parent
+            self._procs[worker_id] = proc
+            self._sent_plan[worker_id] = ()
+            return parent
+
+    def _request(self, worker_id: int, frame: bytes) -> bytes:
+        """One lock-step request-reply round trip (raw reply bytes)."""
+        conn = self._conn(worker_id)
+        conn.send_bytes(frame)
+        if not conn.poll(self.timeout):
+            raise TransportError(
+                f"edge worker {worker_id} timed out after {self.timeout}s"
+            )
+        try:
+            data = conn.recv_bytes()
+        except (EOFError, OSError) as e:
+            raise TransportError(f"edge worker {worker_id} died: {e}") from e
+        if data[:4] == b"ERR:":
+            raise TransportError(
+                f"edge worker {worker_id} failed: {data[4:].decode()}"
+            )
+        return data
+
+    def _configure_faults(self, worker_id: int, faults) -> None:
+        plan = tuple(faults)
+        if self._sent_plan.get(worker_id) == plan:
+            return
+        ack = self._request(worker_id, FaultPlanFrame(plan).to_bytes())
+        if ack != b"ACK":
+            raise TransportError(
+                f"edge worker {worker_id} mis-acknowledged a fault-plan "
+                f"frame: {ack[:32]!r}"
+            )
+        self._sent_plan[worker_id] = plan
+
+    def _run_on(self, task: ShardTask, worker_id: int, faults=()):
+        with self._lock:
+            self._configure_faults(worker_id, faults)
+            return ShardResult.from_bytes(
+                self._request(worker_id, task.to_bytes())
+            )
+
+    def factor(self, tasks, faults=()):
+        return _run_relay(tasks, lambda t, wid: self._run_on(t, wid, faults))
+
+    def repair(self, task, *, replacement):
+        return self._run_on(task, replacement)
+
+    def close(self):
+        with self._lock:
+            for wid, conn in self._conns.items():
+                try:
+                    conn.send_bytes(b"")
+                    conn.close()
+                except (OSError, ValueError):
+                    pass
+            for proc in self._procs.values():
+                proc.join(timeout=5)
+                if proc.is_alive():
+                    proc.terminate()
+            self._conns.clear()
+            self._procs.clear()
+            self._sent_plan.clear()
+
+
+_SHARED: dict[str, Transport] = {}
+_SHARED_LOCK = threading.Lock()
+
+_FACTORIES = {
+    "inline": InlineTransport,
+    "shardmap": ShardMapTransport,
+    "threadpool": ThreadPoolTransport,
+    "multiprocess": MultiprocessTransport,
+}
+
+
+def resolve_transport(spec=None, *, distributed: bool = False) -> Transport:
+    """Resolve a transport spec: None (→ inline, or shardmap when the
+    legacy `distributed=True` flag is set), a name from
+    {"inline", "shardmap", "threadpool", "multiprocess"} (→ the shared
+    process-wide instance), or a Transport object (returned as-is)."""
+    if isinstance(spec, Transport):
+        if distributed and spec.name != "shardmap":
+            raise ValueError(
+                "distributed=True conflicts with an explicit non-shardmap "
+                f"transport ({spec.name!r}); drop one of the two"
+            )
+        return spec
+    if spec is None:
+        spec = "shardmap" if distributed else "inline"
+    elif distributed and spec != "shardmap":
+        raise ValueError(
+            f"distributed=True conflicts with transport={spec!r}; "
+            "pass transport='shardmap' (or drop distributed)"
+        )
+    if spec not in _FACTORIES:
+        raise ValueError(
+            f"unknown transport {spec!r}; expected one of "
+            f"{sorted(_FACTORIES)} or a Transport instance"
+        )
+    with _SHARED_LOCK:
+        if spec not in _SHARED:
+            _SHARED[spec] = _FACTORIES[spec]()
+        return _SHARED[spec]
+
+
+def close_all() -> None:
+    """Close every shared transport (atexit; tests may call it)."""
+    with _SHARED_LOCK:
+        for t in _SHARED.values():
+            t.close()
+        _SHARED.clear()
+
+
+atexit.register(close_all)

@@ -19,6 +19,10 @@ class SPDCConfig:
     lambda1: int = 128
     lambda2: int = 128
     dtype: str = "float64"
+    # precision growth controls (DESIGN.md §6): None = the protocol's
+    # dtype-keyed auto rule (on for sub-f64 compute, off for float64)
+    growth_safe: bool | None = None
+    equilibrate: bool | None = None
     block: int = 256  # per-server blocked-LU tile
     # fault tolerance (DESIGN.md §4): N+r standby servers provisioned for
     # localized-shard re-dispatch, whether the client heals rejected
@@ -27,11 +31,17 @@ class SPDCConfig:
     standby: int = 0
     recover: bool = False
     straggler_deadline: int | None = None
+    # execution boundary of the Parallelize stage (DESIGN.md §7):
+    # "inline" (fused fast path) | "shardmap" | "threadpool" |
+    # "multiprocess" (spawned workers, wire-codec messages)
+    transport: str = "inline"
 
     def protocol_kwargs(self) -> dict:
         """Keyword arguments for core.protocol.outsource_determinant —
         the bridge that keeps these fields from drifting away from the
-        protocol's actual signature (exercised in tests/test_recovery.py)."""
+        protocol's actual signature. Emits the FULL keyword set the config
+        models; a reflection test (tests/test_api.py) asserts every key
+        stays a real `outsource_determinant` parameter."""
         return dict(
             lambda1=self.lambda1,
             lambda2=self.lambda2,
@@ -41,6 +51,9 @@ class SPDCConfig:
             standby=self.standby,
             straggler_deadline=self.straggler_deadline,
             dtype=self.dtype,
+            growth_safe=self.growth_safe,
+            equilibrate=self.equilibrate,
+            transport=self.transport,
         )
 
 
@@ -59,6 +72,18 @@ SPDC_EDGE_HARDENED = SPDCConfig(
 #: thresholds read the f32 unit roundoff.
 SPDC_EDGE_F32 = SPDCConfig(
     name="spdc-edge-f32", matrix_n=512, num_servers=4, dtype="float32",
+)
+#: role-split transports (DESIGN.md §7): same protocol, real execution
+#: boundaries. threadpool = in-process workers with message dispatch;
+#: multiprocess = spawned worker processes, ShardTask/ShardResult bytes
+#: crossing an OS pipe — the closest profile to real remote edge servers.
+SPDC_EDGE_THREADS = SPDCConfig(
+    name="spdc-edge-threads", matrix_n=512, num_servers=4,
+    transport="threadpool",
+)
+SPDC_EDGE_MP = SPDCConfig(
+    name="spdc-edge-mp", matrix_n=256, num_servers=4,
+    transport="multiprocess", standby=1, recover=True,
 )
 
 
@@ -119,4 +144,10 @@ SPDC_GATEWAY_HARDENED = SPDCGatewayConfig(
 #: still opt up per request via submit(dtype="float64"))
 SPDC_GATEWAY_F32 = SPDCGatewayConfig(
     name="spdc-gateway-f32", spdc=SPDC_EDGE_F32,
+)
+#: gateway over the threadpool transport: every bucket sweep dispatches
+#: ShardTasks to in-process edge workers (per-request transport overrides
+#: can still opt back to "inline")
+SPDC_GATEWAY_THREADS = SPDCGatewayConfig(
+    name="spdc-gateway-threads", spdc=SPDC_EDGE_THREADS,
 )

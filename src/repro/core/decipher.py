@@ -117,6 +117,32 @@ class Determinant:
             abs(self.logabs - other.logabs) <= float(np.log1p(rtol)) + atol
         )
 
+    def to_bytes(self) -> bytes:
+        """Serialize with the role-split wire codec (repro.api.wire) —
+        (sign, logabs) round-trip bit-exactly, ±inf included."""
+        from repro.api import wire
+
+        return wire.encode(
+            "Determinant",
+            {"sign": float(self.sign), "logabs": float(self.logabs),
+             "dtype": self.dtype},
+            {},
+        )
+
+    @classmethod
+    def _from_wire(cls, scalars, arrays):
+        return cls(sign=scalars["sign"], logabs=scalars["logabs"],
+                   dtype=scalars["dtype"])
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "Determinant":
+        from repro.api import wire
+
+        kind, scalars, arrays = wire.decode(data)
+        if kind != "Determinant":
+            raise wire.WireError(f"expected Determinant frame, got {kind!r}")
+        return cls._from_wire(scalars, arrays)
+
 
 def _assemble(
     sign_x: float,

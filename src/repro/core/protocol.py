@@ -1,11 +1,18 @@
 """SPDC end-to-end protocol — the paper's six-algorithm tuple
 (SeedGen, KeyGen, Cipher, Parallelize, Authenticate, Decipher), §III–§IV.
 
-This is the client-side orchestration: everything the client does locally
-(seed/key/cipher/augment/verify/decipher) plus the dispatch of the ciphered
-blocks to the "edge servers" — either the faithful single-process simulation
-(core.lu.lu_nserver) or the real distributed shard_map pipeline
-(distrib.spdc_pipeline) where each mesh device plays one server.
+As of the role-split redesign (DESIGN.md §7) this module is the stable
+one-call FACADE over the role objects in `repro.api`:
+
+    outsource_determinant(m, N)            # == SPDCClient(...).open_session(m, N).run(InlineTransport)
+
+`repro.api.SPDCClient` owns the client-side PMOP (seed/key/cipher/
+equilibrate/border) and the RRVP tail (verify/localize/recover/decipher);
+`repro.api.EdgeServer` is the untrusted worker; a `Transport` carries the
+`ShardTask`/`ShardResult` messages between them. The facades here keep
+the historical signatures and result dataclasses unchanged, defaulting to
+the fused inline transport — bit-identical to the pre-split protocol and
+still the gateway's throughput path.
 
 Batch-first (DESIGN.md §3): `outsource_determinant` accepts one matrix
 (n, n) or a stack (B, n, n). The batched path runs every per-matrix stage
@@ -18,22 +25,16 @@ benchmarks/run.py:throughput).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .augment import augment, augment_for_servers, padding_for_servers
-from .cipher import CipherMeta, Mode, cipher, cipher_batch
-from .cipher import equilibrate as ced_equilibrate
-from .decipher import Determinant, decipher, decipher_batch
-from .faults import normalize_plan, resolve_delays
-from .keygen import keygen, keygen_batch
-from .lu import CommLog, lu_nserver, nserver_comm_model
-from .prt import rotate_degree
-from .seed import Seed, seedgen, seedgen_batch
-from .verify import Verdict, authenticate
+from .cipher import CipherMeta, Mode
+from .decipher import Determinant
+from .lu import CommLog
+from .seed import Seed
+from .verify import Verdict
 
 
 def resolve_dtype(dtype) -> jnp.dtype:
@@ -125,23 +126,6 @@ class SPDCBatchResult:
         return len(self.dets)
 
 
-@partial(jax.jit,
-         static_argnames=("num_servers", "padding", "faults", "equilibrate"))
-def _augment_lu_batch(x, aug_key, *, num_servers, padding, faults=(),
-                      equilibrate=False):
-    """Jitted server-side stage for the batched path: (equilibrate +)
-    augment + one N-server schedule sweep over the whole stack. The fault
-    plan is a static (hashable) argument — each distinct plan compiles
-    once. Returns per-matrix equilibration exponents (zeros when off)."""
-    if equilibrate:
-        x, log2_scale = ced_equilibrate(x)
-    else:
-        log2_scale = jnp.zeros(x.shape[0], dtype=jnp.int32)
-    x_aug = augment(x, padding, key=aug_key)
-    l, u, _ = lu_nserver(x_aug, num_servers, faults=faults)
-    return x_aug, l, u, log2_scale
-
-
 def _probe_rng(digest: bytes) -> np.random.Generator:
     """Verification-probe generator keyed to client-secret material."""
     return np.random.default_rng(int.from_bytes(digest[:8], "big"))
@@ -157,113 +141,6 @@ def _batch_digest(seeds: list[Seed]) -> bytes:
     for s in seeds:
         h.update(s.digest)
     return h.digest()
-
-
-def _recover_if_needed(l, u, x_aug, verdict, *, num_servers, method, recover,
-                       standby, digest, style):
-    """Shared RRVP tail: on a rejected verdict, run the verification-driven
-    re-dispatch loop (distrib.recovery) and re-authenticate."""
-    if not recover or bool(np.all(verdict.ok)):
-        return l, u, verdict, None
-    from repro.distrib.recovery import recover_lu
-
-    return recover_lu(
-        l, u, x_aug, num_servers=num_servers, method=method,
-        standby=standby, digest=digest, style=style, verdict=verdict,
-    )
-
-
-def _outsource_determinant_batch(
-    m: jnp.ndarray,
-    num_servers: int,
-    *,
-    lambda1: int,
-    lambda2: int,
-    mode: Mode,
-    method: str,
-    use_kernel: bool,
-    distributed: bool,
-    faithful_sign: bool,
-    tamper,
-    faults,
-    recover: bool,
-    standby: int,
-    straggler_deadline: int | None,
-    dtype,
-    growth_safe: bool,
-    equilibrate: bool,
-) -> SPDCBatchResult:
-    B, n = int(m.shape[0]), int(m.shape[-1])
-
-    # --- client: PMOP, batched (host does B cheap hashes; the device does
-    # one cipher launch over the stack) ---
-    seeds = seedgen_batch(lambda1, np.asarray(m))
-    v = keygen_batch(lambda2, seeds, n)
-    x, metas = cipher_batch(m, v, seeds, mode=mode, growth_safe=growth_safe,
-                            use_kernel=use_kernel)
-
-    aug_key = jax.random.key(
-        int.from_bytes(seeds[0].digest[8:16], "big") % (2**31)
-    )
-    padding = padding_for_servers(n, num_servers)
-
-    # --- servers: SPCP — one wavefront sweep factors the whole stack,
-    # with the fault plan (untrusted-server models) applied in-line ---
-    plan = resolve_delays(normalize_plan(faults), straggler_deadline)
-    if distributed:
-        from repro.distrib.spdc_pipeline import lu_nserver_shardmap
-
-        if equilibrate:
-            x, log2_scale = ced_equilibrate(x)
-        else:
-            log2_scale = jnp.zeros(B, dtype=jnp.int32)
-        x_aug = augment(x, padding, key=aug_key)
-        l, u = lu_nserver_shardmap(x_aug, num_servers, faults=plan)
-        comm = None
-    else:
-        x_aug, l, u, log2_scale = _augment_lu_batch(
-            x, aug_key, num_servers=num_servers, padding=padding,
-            faults=plan, equilibrate=equilibrate,
-        )
-        comm = nserver_comm_model(n + padding, num_servers)
-
-    if tamper is not None:
-        l, u = tamper(l, u)
-
-    # --- client: RRVP — per-matrix accept/reject + per-matrix determinant,
-    # healing localized faults by re-dispatching single shards ---
-    verdict = authenticate(
-        l, u, x_aug, num_servers=num_servers, method=method,
-        rng=_probe_rng(_batch_digest(seeds)),
-    )
-    l, u, verdict, report = _recover_if_needed(
-        l, u, x_aug, verdict, num_servers=num_servers, method=method,
-        recover=recover, standby=standby,
-        digest=_batch_digest(seeds),
-        style="pipeline" if distributed else "nserver",
-    )
-    dets = decipher_batch(seeds, metas, l, u, faithful=faithful_sign,
-                          log2_scale=np.asarray(log2_scale))
-    return SPDCBatchResult(
-        dets=dets,
-        verified=np.asarray(verdict.ok),
-        residual=np.asarray(verdict.residual),
-        seeds=seeds,
-        metas=metas,
-        comm=comm,
-        padding=padding,
-        num_servers=num_servers,
-        verdict=verdict,
-        recovery=report,
-    )
-
-
-@partial(jax.jit, static_argnames=("num_servers", "faults"))
-def _lu_sweep(x_aug, *, num_servers, faults=()):
-    """Jitted server-side stage for pre-augmented stacks (the mixed-size
-    path): one N-server schedule sweep, fault plan static."""
-    l, u, _ = lu_nserver(x_aug, num_servers, faults=faults)
-    return l, u
 
 
 def _cipher_host(m: np.ndarray, v: np.ndarray, k: int, mode: Mode,
@@ -325,8 +202,25 @@ def common_padded_size(sizes, num_servers: int) -> int:
     """Smallest n' ≥ max(sizes) that the N-server schedule accepts
     (n' % N == 0 and n'/N > 1) — the shared shape a mixed-size stack is
     padded to before one coalesced sweep."""
+    from .augment import padding_for_servers
+
     n = max(int(s) for s in sizes)
     return n + padding_for_servers(n, num_servers)
+
+
+def _make_client(
+    *, lambda1, lambda2, mode, method, use_kernel, faithful_sign,
+    recover, standby, straggler_deadline, dtype, growth_safe, equilibrate,
+):
+    from repro.api import SPDCClient
+
+    return SPDCClient(
+        lambda1=lambda1, lambda2=lambda2, mode=mode, method=method,
+        use_kernel=use_kernel, faithful_sign=faithful_sign,
+        recover=recover, standby=standby,
+        straggler_deadline=straggler_deadline, dtype=dtype,
+        growth_safe=growth_safe, equilibrate=equilibrate,
+    )
 
 
 def outsource_determinant_mixed(
@@ -348,6 +242,7 @@ def outsource_determinant_mixed(
     dtype="float64",
     growth_safe: bool | None = None,
     equilibrate: bool | None = None,
+    transport=None,
 ) -> SPDCBatchResult:
     """Run the SPDC protocol for a *mixed-size* list of matrices in ONE
     coalesced N-server sweep — the gateway's batching primitive.
@@ -372,103 +267,24 @@ def outsource_determinant_mixed(
     pad_to % num_servers == 0 and pad_to / num_servers > 1.
     Remaining keywords match `outsource_determinant` (which routes list /
     tuple inputs here); `faults=`/`recover=`/`standby=` give the whole
-    stack the fault-tolerance semantics of DESIGN.md §4.
+    stack the fault-tolerance semantics of DESIGN.md §4, and `transport=`
+    selects the execution boundary (DESIGN.md §7).
 
     Returns an SPDCBatchResult whose `pad_to` is the common n' and whose
     `paddings` list the per-matrix border amounts.
     """
-    # host-native from the start: this path's whole point is that raw-size
-    # client matrices never individually touch the device (DESIGN.md §5.1)
-    dtype = resolve_dtype(dtype)
-    growth_safe, equilibrate = _resolve_growth_controls(
-        dtype, growth_safe, equilibrate, faithful_sign
+    from repro.api import resolve_transport
+
+    client = _make_client(
+        lambda1=lambda1, lambda2=lambda2, mode=mode, method=method,
+        use_kernel=False, faithful_sign=faithful_sign, recover=recover,
+        standby=standby, straggler_deadline=straggler_deadline,
+        dtype=dtype, growth_safe=growth_safe, equilibrate=equilibrate,
     )
-    np_dtype = np.dtype(dtype.name)
-    ms = [np.asarray(m, dtype=np_dtype) for m in ms]
-    if not ms:
-        raise ValueError("outsource_determinant_mixed needs >= 1 matrix")
-    for m in ms:
-        if m.ndim != 2 or m.shape[0] != m.shape[1]:
-            raise ValueError(f"expected square matrices, got shape {m.shape}")
-    sizes = [int(m.shape[0]) for m in ms]
-    if pad_to is None:
-        pad_to = common_padded_size(sizes, num_servers)
-    if pad_to % num_servers != 0 or pad_to // num_servers <= 1:
-        raise ValueError(
-            f"pad_to={pad_to} not servable by N={num_servers} "
-            "(need pad_to % N == 0 and pad_to / N > 1)"
-        )
-    if max(sizes) > pad_to:
-        raise ValueError(f"matrix of size {max(sizes)} exceeds pad_to={pad_to}")
-
-    # --- client: PMOP per matrix at its own size, entirely on host
-    # (hashes + numpy O(n²) cipher/border — no per-client-shape XLA
-    # compiles); the det-preserving border brings every ciphertext to the
-    # shared (n', n') shape before ONE host→device transfer of the stack ---
-    seeds, metas, xs, paddings, log2_scales = [], [], [], [], []
-    for m in ms:
-        n = int(m.shape[0])
-        seed = seedgen(lambda1, m)
-        key = keygen(lambda2, seed, n)
-        k = rotate_degree(seed.psi)
-        x = _cipher_host(m, np.asarray(key.v, dtype=np_dtype), k, mode,
-                         growth_safe=growth_safe)
-        if equilibrate:
-            x, ls = _equilibrate_host(x)
-        else:
-            ls = 0
-        aug_rng = np.random.default_rng(
-            int.from_bytes(seed.digest[8:16], "big") % (2**31)
-        )
-        p = pad_to - n
-        xs.append(_augment_host(x, p, aug_rng))
-        seeds.append(seed)
-        metas.append(CipherMeta(mode=mode, rotate_k=k, n=n,
-                                flipped=growth_safe and k % 2 == 1))
-        paddings.append(p)
-        log2_scales.append(ls)
-    x_aug = jnp.asarray(np.stack(xs))
-
-    # --- servers: SPCP — one wavefront sweep over the coalesced stack ---
-    plan = resolve_delays(normalize_plan(faults), straggler_deadline)
-    if distributed:
-        from repro.distrib.spdc_pipeline import lu_nserver_shardmap
-
-        l, u = lu_nserver_shardmap(x_aug, num_servers, faults=plan)
-        comm = None
-    else:
-        l, u = _lu_sweep(x_aug, num_servers=num_servers, faults=plan)
-        comm = nserver_comm_model(pad_to, num_servers)
-
-    if tamper is not None:
-        l, u = tamper(l, u)
-
-    # --- client: RRVP — per-matrix accept/reject, localized healing ---
-    verdict = authenticate(
-        l, u, x_aug, num_servers=num_servers, method=method,
-        rng=_probe_rng(_batch_digest(seeds)),
+    session = client.open_session(
+        list(ms), num_servers, faults=faults, tamper=tamper, pad_to=pad_to
     )
-    l, u, verdict, report = _recover_if_needed(
-        l, u, x_aug, verdict, num_servers=num_servers, method=method,
-        recover=recover, standby=standby, digest=_batch_digest(seeds),
-        style="pipeline" if distributed else "nserver",
-    )
-    dets = decipher_batch(seeds, metas, l, u, faithful=faithful_sign,
-                          log2_scale=np.asarray(log2_scales))
-    return SPDCBatchResult(
-        dets=dets,
-        verified=np.atleast_1d(np.asarray(verdict.ok)),
-        residual=np.atleast_1d(np.asarray(verdict.residual)),
-        seeds=seeds,
-        metas=metas,
-        comm=comm,
-        padding=0,
-        num_servers=num_servers,
-        verdict=verdict,
-        recovery=report,
-        paddings=paddings,
-        pad_to=pad_to,
-    )
+    return session.run(resolve_transport(transport, distributed=distributed))
 
 
 def outsource_determinant(
@@ -490,6 +306,7 @@ def outsource_determinant(
     dtype="float64",
     growth_safe: bool | None = None,
     equilibrate: bool | None = None,
+    transport=None,
 ) -> SPDCResult | SPDCBatchResult:
     """Run the full SPDC protocol — the package's main entry point.
 
@@ -514,8 +331,7 @@ def outsource_determinant(
         of the jnp oracle (TPU target; interpret-mode on CPU).
     distributed: route Parallelize through the shard_map pipeline — every
         mesh device plays one edge server (requires >= num_servers JAX
-        devices); otherwise the faithful single-process simulation of
-        Algorithm 3 runs. See DESIGN.md §2.
+        devices); equivalent to transport="shardmap". See DESIGN.md §2.
     faithful_sign: reproduce the paper's literal (−1)^k rotation sign in
         Decipher instead of the Panth Rotation Theorem's case split —
         wrong for n ≡ 0,1 (mod 4); kept for faithfulness studies
@@ -528,10 +344,14 @@ def outsource_determinant(
         untrusted-server model: per-server tamper/dropout/delay,
         batch-aware, applied inside the Parallelize stage (in-band faults
         poison the relay in the single-process simulation; the distributed
-        pipeline injects at the device output).
+        pipeline injects at the device output; message transports play
+        the faults on the matching WORKER, so every tamper is naturally
+        in-band — the relay forwards what the worker reported).
     recover: on a rejected verdict, localize the faulty server (blocked-Q1
-        attribution) and re-dispatch ONLY its shard via distrib.recovery —
-        result.recovery holds the RecoveryReport.
+        attribution) and re-dispatch ONLY its shard — the Session emits a
+        fresh ShardTask per blamed server through the same transport
+        (distrib.recovery runs the loop) — result.recovery holds the
+        RecoveryReport.
     standby: provision N+r spare servers for those re-dispatches
         (distrib.recovery.ServerPool).
     straggler_deadline: rounds after which a delayed server is treated as
@@ -552,6 +372,11 @@ def outsource_determinant(
         into Decipher exactly (None = same auto rule). Lossless in any
         binary float format; keeps ‖X‖-driven rounding flat (DESIGN.md
         §6.2).
+    transport: execution boundary for the Parallelize stage (DESIGN.md
+        §7) — None (inline fused fast path, bit-identical to the
+        pre-split protocol), "threadpool", "multiprocess" (spawned
+        workers, ShardTask/ShardResult bytes on a real OS pipe),
+        "shardmap", or a repro.api.Transport instance.
 
     Returns SPDCResult for a single matrix, SPDCBatchResult (per-matrix
     dets and verdicts) for a stack or list; both carry the structured
@@ -572,77 +397,17 @@ def outsource_determinant(
             tamper=tamper, faults=faults, recover=recover, standby=standby,
             straggler_deadline=straggler_deadline, dtype=dtype,
             growth_safe=growth_safe, equilibrate=equilibrate,
+            transport=transport,
         )
-    dtype = resolve_dtype(dtype)
-    growth_safe, equilibrate = _resolve_growth_controls(
-        dtype, growth_safe, equilibrate, faithful_sign
+    from repro.api import resolve_transport
+
+    client = _make_client(
+        lambda1=lambda1, lambda2=lambda2, mode=mode, method=method,
+        use_kernel=use_kernel, faithful_sign=faithful_sign,
+        recover=recover, standby=standby,
+        straggler_deadline=straggler_deadline, dtype=dtype,
+        growth_safe=growth_safe, equilibrate=equilibrate,
     )
-    m = jnp.asarray(m, dtype=dtype)
-    if m.ndim == 3:
-        return _outsource_determinant_batch(
-            m, num_servers,
-            lambda1=lambda1, lambda2=lambda2, mode=mode, method=method,
-            use_kernel=use_kernel, distributed=distributed,
-            faithful_sign=faithful_sign, tamper=tamper, faults=faults,
-            recover=recover, standby=standby,
-            straggler_deadline=straggler_deadline, dtype=dtype,
-            growth_safe=growth_safe, equilibrate=equilibrate,
-        )
-    n = int(m.shape[0])
-
-    # --- client: PMOP (privacy-preserving matrix obfuscation protocol) ---
-    seed = seedgen(lambda1, np.asarray(m))
-    key = keygen(lambda2, seed, n)
-    x, meta = cipher(m, key, seed, mode=mode, growth_safe=growth_safe,
-                     use_kernel=use_kernel)
-    if equilibrate:
-        x, log2_scale = ced_equilibrate(x)
-        log2_scale = float(log2_scale)
-    else:
-        log2_scale = 0.0
-
-    # augmentation (only when needed — paper Table IV) with random R block
-    aug_key = jax.random.key(
-        int.from_bytes(seed.digest[8:16], "big") % (2**31)
-    )
-    x_aug, padding = augment_for_servers(x, num_servers, key=aug_key)
-
-    # --- servers: SPCP (secure parallel computation protocol) ---
-    plan = resolve_delays(normalize_plan(faults), straggler_deadline)
-    if distributed:
-        from repro.distrib.spdc_pipeline import lu_nserver_shardmap
-
-        l, u = lu_nserver_shardmap(x_aug, num_servers, faults=plan)
-        comm = None
-    else:
-        l, u, comm = lu_nserver(x_aug, num_servers, faults=plan)
-
-    if tamper is not None:
-        l, u = tamper(l, u)
-
-    # --- client: RRVP (result recovery & verification protocol) ---
-    # probes are drawn from a generator keyed to the SECRET Ψ digest: a
-    # predictable probe could be evaded by a codebase-aware server
-    verdict = authenticate(
-        l, u, x_aug, num_servers=num_servers, method=method,
-        rng=_probe_rng(seed.digest),
-    )
-    l, u, verdict, report = _recover_if_needed(
-        l, u, x_aug, verdict, num_servers=num_servers, method=method,
-        recover=recover, standby=standby, digest=seed.digest,
-        style="pipeline" if distributed else "nserver",
-    )
-    det = decipher(seed, meta, l, u, faithful=faithful_sign,
-                   log2_scale=log2_scale)
-    return SPDCResult(
-        det=det,
-        verified=bool(np.all(verdict.ok)),
-        residual=verdict.residual,
-        seed=seed,
-        meta=meta,
-        comm=comm,
-        padding=padding,
-        num_servers=num_servers,
-        verdict=verdict,
-        recovery=report,
-    )
+    session = client.open_session(m, num_servers, faults=faults,
+                                  tamper=tamper)
+    return session.run(resolve_transport(transport, distributed=distributed))

@@ -62,7 +62,6 @@ diagnostics.
 """
 from __future__ import annotations
 
-import warnings
 from dataclasses import dataclass
 
 import jax
@@ -204,6 +203,11 @@ def per_server_residuals(
     return np.asarray(reduce(blocked, axis=-1))
 
 
+#: Verdict fields that may be scalars (single matrix) or per-matrix
+#: numpy arrays (a stack) — the wire codec branches on this
+_VERDICT_POLY = ("ok", "residual", "eps", "culprit")
+
+
 @dataclass
 class Verdict:
     """Structured Authenticate outcome: global accept/reject PLUS the
@@ -214,9 +218,12 @@ class Verdict:
     exceeds ε(N) — the owner of the earliest corrupted strip, with every
     strip above it verified-clean (-1 when all blocks pass).
 
-    Iterating/indexing a Verdict emulates the legacy `(verified, residual)`
-    tuple with a DeprecationWarning, so pre-structured callers keep
-    working.
+    (The legacy `(verified, residual)` tuple emulation was removed after
+    its deprecation cycle — unpack `.ok` / `.residual` explicitly.)
+
+    Serializes with the role-split wire codec (`to_bytes`/`from_bytes`,
+    repro.api.wire) so gateways and archives can move verdicts across
+    process boundaries without pickle.
     """
 
     ok: bool | np.ndarray
@@ -228,28 +235,50 @@ class Verdict:
     server_ok: np.ndarray | None = None
     culprit: int | np.ndarray = -1
 
-    def _legacy(self, what: str):
-        warnings.warn(
-            f"{what} a Verdict as the legacy (verified, residual) tuple is "
-            "deprecated; use .ok / .residual / .server_residual",
-            DeprecationWarning,
-            stacklevel=3,
-        )
-
-    def __iter__(self):
-        self._legacy("unpacking")
-        return iter((self.ok, self.residual))
-
-    def __getitem__(self, i):
-        self._legacy("indexing")
-        return (self.ok, self.residual)[i]
-
-    def __len__(self):
-        return 2
-
     @property
     def all_ok(self) -> bool:
         return bool(np.all(self.ok))
+
+    def to_bytes(self) -> bytes:
+        from repro.api import wire
+
+        scalars = {"method": self.method, "num_servers": self.num_servers}
+        arrays = {"server_residual": self.server_residual,
+                  "server_ok": self.server_ok}
+        for name in _VERDICT_POLY:
+            val = getattr(self, name)
+            if isinstance(val, np.ndarray):
+                arrays[name] = val
+            elif isinstance(val, (bool, np.bool_)):
+                scalars[name] = bool(val)
+            elif isinstance(val, (int, np.integer)):
+                scalars[name] = int(val)
+            else:
+                scalars[name] = float(val)
+        return wire.encode("Verdict", scalars, arrays)
+
+    @classmethod
+    def _from_wire(cls, scalars, arrays):
+        fields = {
+            "method": scalars["method"],
+            "num_servers": int(scalars["num_servers"]),
+            "server_residual": arrays["server_residual"],
+            "server_ok": arrays["server_ok"],
+        }
+        for name in _VERDICT_POLY:
+            fields[name] = (
+                arrays[name] if name in arrays else scalars[name]
+            )
+        return cls(**fields)
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "Verdict":
+        from repro.api import wire
+
+        kind, scalars, arrays = wire.decode(data)
+        if kind != "Verdict":
+            raise wire.WireError(f"expected Verdict frame, got {kind!r}")
+        return cls._from_wire(scalars, arrays)
 
 
 def _first_culprit(server_ok: np.ndarray) -> int | np.ndarray:

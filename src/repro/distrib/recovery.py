@@ -157,6 +157,7 @@ def recover_lu(
     pool: ServerPool | None = None,
     style: str = "nserver",
     verdict: Verdict | None = None,
+    dispatch=None,
 ) -> tuple[jnp.ndarray, jnp.ndarray, Verdict, RecoveryReport]:
     """Heal a rejected factorization by re-dispatching localized shards.
 
@@ -175,6 +176,15 @@ def recover_lu(
     recompute, or a genuinely different machine), splice-induced rounding
     can push a downstream row's residual over ε(N); the loop simply heals
     that row on the next round — an extra hop, never a wrong answer.
+
+    dispatch: optional hook actually EXECUTING one re-dispatch —
+    ``dispatch(x, u, server, attempt, replacement) -> (l_row, u_row)``.
+    The role-split Session passes one that mints a fresh ShardTask
+    (sub-seed H(Ψ ‖ server ‖ attempt), verified upstream U rows attached)
+    and runs it on the replacement worker through its Transport
+    (repro.api.client), so recovery stays client-driven under every
+    execution boundary. Default: recompute locally via lu_block_row —
+    identical arithmetic, no transport.
 
     Returns (l, u, final verdict, report).
     """
@@ -215,8 +225,11 @@ def recover_lu(
         for s in to_heal:
             attempts[s] = attempts.get(s, 0) + 1
             phys, pool = pool.replacement_for(s)
-            row_fn = _block_row_batched if batched else lu_block_row
-            l_row, u_row = row_fn(x, u, s, num_servers, style=style)
+            if dispatch is not None:
+                l_row, u_row = dispatch(x, u, s, attempts[s], phys)
+            else:
+                row_fn = _block_row_batched if batched else lu_block_row
+                l_row, u_row = row_fn(x, u, s, num_servers, style=style)
             b = n // num_servers
             sl = slice(s * b, (s + 1) * b)
             if batched:

@@ -33,7 +33,6 @@ elsewhere — faithful to the paper's staggered activation (§IV.D.3).
 """
 from __future__ import annotations
 
-import warnings
 from functools import lru_cache, partial
 
 import jax
@@ -337,7 +336,6 @@ def _compiled_pipeline(program: str, n: int, batch: int | None,
 def lu_nserver_shardmap(
     x: jnp.ndarray, num_servers: int, *, mesh=None, axis: str = "servers",
     program: str = "baseline", faults=(),
-    exact_relay: bool | str | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Distributed Alg. 3. x: (n, n) or (B, n, n) with n % num_servers == 0.
 
@@ -355,22 +353,9 @@ def lu_nserver_shardmap(
     mesh: optional existing mesh containing `axis`; default builds a 1-D
     mesh over the first num_servers devices of this process.
 
-    exact_relay is deprecated: it was a bool that silently grew string
-    values; pass program="exact" / "stream" instead.
+    (The deprecated `exact_relay=` bool shim completed its cycle and was
+    removed — passing it now raises TypeError.)
     """
-    if exact_relay is not None:
-        warnings.warn(
-            "lu_nserver_shardmap(exact_relay=...) is deprecated; use "
-            "program='baseline'|'exact'|'stream'",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        if exact_relay is True:
-            program = "exact"
-        elif exact_relay is False:
-            program = "baseline"
-        else:
-            program = exact_relay
     if program not in _PROGRAMS:
         raise ValueError(
             f"unknown program {program!r}; expected one of {sorted(_PROGRAMS)}"

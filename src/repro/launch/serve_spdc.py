@@ -83,6 +83,13 @@ def main(argv=None) -> int:
     ap.add_argument("--max-pending", type=int, default=4096)
     ap.add_argument("--method", choices=["q1", "q2", "q3"], default="q3")
     ap.add_argument("--mode", choices=["ewd", "ewm"], default="ewd")
+    ap.add_argument("--transport",
+                    choices=["inline", "threadpool", "multiprocess"],
+                    default="inline",
+                    help="execution boundary for bucket sweeps (DESIGN.md "
+                         "§7): inline = fused fast path; threadpool = "
+                         "in-process edge workers; multiprocess = spawned "
+                         "worker processes, wire-codec messages")
     ap.add_argument("--recover", action="store_true",
                     help="heal rejected verdicts in place (DESIGN.md §4)")
     ap.add_argument("--standby", type=int, default=0)
@@ -108,6 +115,7 @@ def main(argv=None) -> int:
     spdc = SPDCConfig(
         num_servers=args.servers, mode=args.mode, method=args.method,
         recover=args.recover, standby=args.standby,
+        transport=args.transport,
     )
     cfg = SPDCGatewayConfig(
         name="spdc-gateway-cli",

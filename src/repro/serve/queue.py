@@ -67,6 +67,17 @@ class BucketKey:
     #: float64 clients never share a compiled program, a warmup cache, or
     #: an ε(N) calibration — a coalesced sweep has ONE device dtype.
     dtype: str = "float64"
+    #: growth-control overrides (DESIGN.md §6; None = the protocol's
+    #: dtype-keyed auto rule). Part of the key: they change the compiled
+    #: sweep AND the factor values, so explicit settings cannot share a
+    #: bucket with auto-ruled requests.
+    growth_safe: bool | None = None
+    equilibrate: bool | None = None
+    #: execution boundary of the bucket's sweeps (DESIGN.md §7). Part of
+    #: the key: an inline sweep and a multiprocess sweep are different
+    #: programs with different warm state, so requests targeting different
+    #: transports must not coalesce.
+    transport: str = "inline"
 
     def protocol_kwargs(self) -> dict:
         """Keyword arguments for core.protocol.outsource_determinant_mixed."""
@@ -80,6 +91,9 @@ class BucketKey:
             standby=self.standby,
             straggler_deadline=self.straggler_deadline,
             dtype=self.dtype,
+            growth_safe=self.growth_safe,
+            equilibrate=self.equilibrate,
+            transport=self.transport,
         )
 
 

@@ -62,7 +62,8 @@ __all__ = [
 #: fields minus pad_to, which bucketing derives)
 _OVERRIDE_KEYS = frozenset(
     {"num_servers", "mode", "method", "lambda1", "lambda2", "recover",
-     "standby", "straggler_deadline", "dtype"}
+     "standby", "straggler_deadline", "dtype", "growth_safe",
+     "equilibrate", "transport"}
 )
 
 
@@ -184,6 +185,9 @@ class SPDCGateway:
             # one canonical name — equal compute dtypes must share one
             # bucket, one compiled sweep, and one warmup cache
             dtype=resolve_dtype(overrides.get("dtype", spdc.dtype)).name,
+            growth_safe=overrides.get("growth_safe", spdc.growth_safe),
+            equilibrate=overrides.get("equilibrate", spdc.equilibrate),
+            transport=overrides.get("transport", spdc.transport),
         )
 
     def submit(self, matrix, *, now: float | None = None, **overrides) -> int:
@@ -194,9 +198,11 @@ class SPDCGateway:
         every bucket — or whose synthesized fallback size would exceed the
         largest configured bucket — is served immediately as a direct
         un-coalesced protocol call (stats.direct). Keyword overrides (num_servers,
-        mode, method, recover, standby, straggler_deadline, dtype) place
-        the request in a bucket matching that security/precision config —
-        an f32 client never shares a compiled sweep with f64 clients.
+        mode, method, recover, standby, straggler_deadline, dtype,
+        transport) place the request in a bucket matching that
+        security/precision/execution config — an f32 client never shares
+        a compiled sweep with f64 clients, and an inline sweep never
+        coalesces with a multiprocess one.
         """
         unknown = set(overrides) - _OVERRIDE_KEYS
         if unknown:
@@ -388,6 +394,9 @@ class SPDCGateway:
                     "straggler_deadline", spdc.straggler_deadline
                 ),
                 dtype=overrides.get("dtype", spdc.dtype),
+                growth_safe=overrides.get("growth_safe", spdc.growth_safe),
+                equilibrate=overrides.get("equilibrate", spdc.equilibrate),
+                transport=overrides.get("transport", spdc.transport),
             )
         except Exception as e:  # noqa: BLE001 — fail the request, not the service
             key = BucketKey(pad_to=req.n, num_servers=spdc.num_servers)

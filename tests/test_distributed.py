@@ -27,17 +27,13 @@ def test_shardmap_matches_reference(n, servers, program):
     np.testing.assert_allclose(np.asarray(u), np.asarray(u2), atol=1e-9)
 
 
-def test_shardmap_exact_relay_deprecation_shim():
-    """The old exact_relay bool|str overload still works but warns."""
+def test_shardmap_exact_relay_shim_removed():
+    """The exact_relay deprecation cycle is finished: the parameter is
+    gone, so passing it is a TypeError — not a silent bool reinterpret."""
     x = _wellcond(16, seed=1)
+    with pytest.raises(TypeError, match="exact_relay"):
+        lu_nserver_shardmap(x, 4, exact_relay=True)
     ref_l, ref_u = lu_nserver_shardmap(x, 4, program="exact")
-    for legacy, modern in [(True, "exact"), (False, "baseline"),
-                           ("stream", "stream")]:
-        with pytest.warns(DeprecationWarning):
-            l, u = lu_nserver_shardmap(x, 4, exact_relay=legacy)
-        l2, u2 = lu_nserver_shardmap(x, 4, program=modern)
-        np.testing.assert_allclose(np.asarray(l), np.asarray(l2), atol=0)
-        np.testing.assert_allclose(np.asarray(u), np.asarray(u2), atol=0)
     np.testing.assert_allclose(np.asarray(ref_l @ ref_u), np.asarray(x),
                                atol=1e-9)
 

@@ -208,19 +208,19 @@ def test_batched_localization_per_matrix(honest_lu):
     assert list(v.ok) == [True, False, True, True, False]
 
 
-# -------------------------------------------------- verdict structure + shim
-def test_verdict_fields_and_legacy_shim(honest_lu):
+# ------------------------------------------------------- verdict structure
+def test_verdict_fields_and_tuple_shim_removed(honest_lu):
     a, l, u = honest_lu
     v = authenticate(l, u, a, num_servers=N, method="q2", attribute=True)
     assert v.method == "q2" and v.num_servers == N
     assert v.eps > 0 and v.server_residual.shape == (N,)
     assert v.all_ok
-    with pytest.warns(DeprecationWarning, match="deprecated"):
+    # the legacy (verified, residual) tuple emulation completed its
+    # deprecation cycle: a Verdict is no longer iterable or indexable
+    with pytest.raises(TypeError):
         ok, resid = v
-    assert ok is v.ok and resid == v.residual
-    with pytest.warns(DeprecationWarning):
-        assert v[0] is v.ok
-    assert len(v) == 2
+    with pytest.raises(TypeError):
+        v[0]
 
 
 def test_verdict_attribute_flag_skips_localization(honest_lu):
