@@ -23,6 +23,16 @@ shape must stay within `--factor` of the baseline's.
     # of the committed baseline — the role split may not tax the fast path
     python benchmarks/check_regression.py BENCH_ci.json BENCH_4.json \
         --suite transports --n 256 --servers 4 --factor 1.5
+    # rateless guard (rows from the `rateless` suite, BENCH_5): under the
+    # straggling fault plan the rateless scheduler must sustain >=
+    # --straggle-speedup x the deadline-based rate measured in the SAME
+    # fresh run, stay within --honest-factor of an honest classic fleet
+    # (the streaming scheduler's per-strip dispatches cannot match the
+    # fused relay at smoke scale, so this bounds the overhead rather
+    # than demanding parity), keep every leg 100%% verified, and stay
+    # within --factor of the committed baseline's rateless_straggle rate
+    python benchmarks/check_regression.py BENCH_ci.json BENCH_5.json \
+        --suite rateless --n 64 --servers 4 --factor 2.0
 """
 
 from __future__ import annotations
@@ -117,6 +127,97 @@ def check_precision(
     return ok and not unverified and not inaccurate, fresh_f32, base_f32
 
 
+def check_rateless(
+    fresh_rows: list[dict],
+    base_rows: list[dict],
+    n: int,
+    servers: int,
+    straggle_speedup: float,
+    factor: float,
+    honest_factor: float,
+) -> bool:
+    """The rateless suite's acceptance claims (DESIGN.md §8).
+
+    All on the FRESH run (the modes share one process, one fleet, one
+    machine — the ratios are noise-immune even when absolute rates are
+    not): rateless beats the deadline-based session by
+    ``straggle_speedup``× under the straggling plan; an honest uniform
+    fleet pays at most ``honest_factor``× for over-decomposition and
+    per-strip streaming (at smoke scale the F×lanes individual edge
+    dispatches can't amortize against the fused relay's N, so the guard
+    bounds that overhead instead of demanding parity — the bound
+    tightens as n grows and strip compute dominates dispatch); every
+    leg reports all_verified — a fast-but-rejected run is a regression,
+    not a win. The committed baseline then floors the absolute
+    rateless_straggle rate at ``factor``× like every other guard — but
+    only against baseline rows measured at the SAME batch size: the
+    smoke leg shrinks the batch and the fault plan's delays, so its
+    absolute rates are a different experiment from the committed full
+    run, and cross-shape floors would be noise, not a guard.
+    """
+    def rate(rows, mode):
+        return best_dets_per_sec(
+            rows, n, servers, suite="rateless", modes=(mode,)
+        )
+
+    ok = True
+    r_strag = rate(fresh_rows, "rateless_straggle")
+    d_strag = rate(fresh_rows, "deadline_straggle")
+    sp = r_strag / d_strag
+    good = sp >= straggle_speedup
+    print(
+        f"rateless[straggle] n={n} N={servers}: rateless {r_strag:.1f} vs "
+        f"deadline-based {d_strag:.1f} dets/sec = {sp:.2f}x (need >= "
+        f"{straggle_speedup}x) -> {'OK' if good else 'FAIL'}"
+    )
+    ok = ok and good
+    r_hon = rate(fresh_rows, "rateless_honest")
+    c_hon = rate(fresh_rows, "classic_honest")
+    good = r_hon >= c_hon / honest_factor
+    print(
+        f"rateless[honest] n={n} N={servers}: rateless {r_hon:.1f} vs "
+        f"classic {c_hon:.1f} dets/sec (floor {c_hon / honest_factor:.1f} "
+        f"at {honest_factor}x) -> {'OK' if good else 'FAIL'}"
+    )
+    ok = ok and good
+    unverified = [
+        r["name"] for r in fresh_rows
+        if r.get("suite") == "rateless" and r.get("all_verified") is False
+    ]
+    if unverified:
+        print(f"rateless unverified legs: {unverified} -> FAIL")
+        ok = False
+    else:
+        print("rateless all legs 100% verified -> OK")
+    fresh_batch = [
+        r.get("batch") for r in fresh_rows
+        if r.get("suite") == "rateless" and r.get("mode") == "rateless_straggle"
+        and r.get("n") == n and r.get("num_servers") == servers
+    ]
+    base_match = [
+        float(r["dets_per_sec"]) for r in base_rows
+        if r.get("suite") == "rateless" and r.get("mode") == "rateless_straggle"
+        and r.get("n") == n and r.get("num_servers") == servers
+        and r.get("batch") in fresh_batch
+    ]
+    if not base_match:
+        print(
+            f"rateless[baseline] n={n} N={servers}: no baseline "
+            f"rateless_straggle row at batch={fresh_batch} — smoke shapes "
+            f"differ from the committed full run; skipping absolute floor"
+        )
+        return ok
+    base_strag = max(base_match)
+    good = r_strag >= base_strag / factor
+    print(
+        f"rateless[baseline] n={n} N={servers}: fresh {r_strag:.1f} vs "
+        f"baseline {base_strag:.1f} dets/sec (floor "
+        f"{base_strag / factor:.1f} at {factor}x) "
+        f"-> {'OK' if good else 'REGRESSION'}"
+    )
+    return ok and good
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("fresh", type=Path, help="freshly measured BENCH json")
@@ -131,12 +232,14 @@ def main(argv: list[str] | None = None) -> int:
     )
     ap.add_argument(
         "--suite",
-        choices=("throughput", "gateway", "precision", "transports"),
+        choices=("throughput", "gateway", "precision", "transports",
+                 "rateless"),
         default="throughput",
         help="which suite's rows to guard (gateway also checks the "
         "gateway-beats-loop acceptance claim on the fresh run; precision "
         "checks the f32-speedup and 100%%-verified claims; transports "
-        "guards the role-split inline fast path)",
+        "guards the role-split inline fast path; rateless checks the "
+        "straggle-speedup, honest-within-noise, and all-verified claims)",
     )
     ap.add_argument(
         "--f32-speedup",
@@ -144,10 +247,30 @@ def main(argv: list[str] | None = None) -> int:
         default=1.5,
         help="precision suite: minimum fresh f32/f64 dets/sec ratio",
     )
+    ap.add_argument(
+        "--straggle-speedup",
+        type=float,
+        default=1.5,
+        help="rateless suite: minimum fresh rateless/deadline-based "
+        "dets/sec ratio under the straggling fault plan",
+    )
+    ap.add_argument(
+        "--honest-factor",
+        type=float,
+        default=6.0,
+        help="rateless suite: maximum tolerated honest-uniform-fleet "
+        "slowdown of the streaming scheduler vs the fused classic "
+        "session (per-strip dispatch overhead, see check_rateless)",
+    )
     args = ap.parse_args(argv)
 
     fresh = json.loads(args.fresh.read_text())
     base = json.loads(args.baseline.read_text())
+    if args.suite == "rateless":
+        ok = check_rateless(fresh["rows"], base["rows"], args.n,
+                            args.servers, args.straggle_speedup, args.factor,
+                            args.honest_factor)
+        return 0 if ok else 1
     if args.suite == "precision":
         ok, got, want = check_precision(fresh["rows"], base["rows"], args.n,
                                         args.servers, args.f32_speedup)

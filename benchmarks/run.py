@@ -39,6 +39,14 @@ future PRs have a perf trajectory to beat.
                            check_regression.py --suite transports guard
                            that inline stays within noise of the
                            pre-role-split throughput
+  rateless               — rateless straggler-adaptive dispatch (DESIGN.md
+                           §8): dets/sec of the streaming scheduler vs the
+                           deadline-based classic session, honest uniform
+                           fleet AND a Pareto/exponential straggling one;
+                           rows land in BENCH_5.json, guarded by
+                           check_regression.py --suite rateless (rateless
+                           ≥ 1.5× deadline-based under straggle, within
+                           noise on an honest fleet)
   extension_inverse      — paper §VII.B future work: secure inversion
 
 Usage: python benchmarks/run.py [suite ...] [--smoke] [--out PATH]
@@ -539,6 +547,73 @@ def transports_suite(n: int = 256, N: int = 4, B: int = 8):
     close_all()  # shut the spawned workers down before the next suite
 
 
+def rateless_suite(n: int = 64, N: int = 4, B: int = 8):
+    """Rateless dispatch (DESIGN.md §8) vs the deadline-based session.
+
+    Four measured modes over the SAME threadpool fleet:
+      classic_honest / rateless_honest    — uniform fleet; the rateless
+        claim here is "within noise" (over-decomposition must not tax a
+        healthy fleet)
+      deadline_straggle / rateless_straggle — two wall-clock stragglers
+        (Pareto heavy tail + exponential); the classic relay WAITS out
+        every sleep, the rateless scheduler times the slow workers out
+        once, benches them, and streams their strips to the fast ones.
+        The guarded claim: rateless ≥ 1.5× the deadline-based rate.
+
+    The straggle legs reuse ONE client across reps — fleet health is
+    client-lived, so later sessions skip the stragglers outright. That is
+    the mechanism being measured, not an artifact.
+    """
+    from repro.api import ThreadPoolTransport
+    from repro.api.client import SPDCClient
+    from repro.configs.spdc import RatelessConfig
+    from repro.core import ServerFault
+
+    reps, delays = (2, (0.4, 0.2)) if SMOKE else (3, (1.0, 0.5))
+    if SMOKE:
+        B = 4
+    stack = _wellcond(n, seed=n, batch=B)
+    plan = (
+        ServerFault(server=1, kind="delay", delay_s=delays[0],
+                    delay_dist="pareto", delay_alpha=2.5),
+        ServerFault(server=3, kind="delay", delay_s=delays[1],
+                    delay_dist="exponential"),
+    )
+    cfg = RatelessConfig(request_timeout_s=0.25, probation_cooldown_s=1e9)
+    rates = {}
+    with ThreadPoolTransport() as tp:
+        def measure(mode, client, faults):
+            t_us, res = _t(
+                lambda: client.open_session(stack, N, faults=faults).run(tp),
+                reps=reps, warmup=1,
+            )
+            rates[mode] = B * 1e6 / t_us
+            emit(
+                f"rateless_{mode}_n{n}_N{N}_B{B}", t_us,
+                suite="rateless", n=n, num_servers=N, batch=B, mode=mode,
+                dets_per_sec=round(rates[mode], 2),
+                all_verified=bool(np.asarray(res.verified).all()),
+            )
+
+        measure("classic_honest", SPDCClient(), ())
+        measure("rateless_honest", SPDCClient(rateless=cfg), ())
+        measure("deadline_straggle",
+                SPDCClient(straggler_deadline=8, recover=True, standby=1),
+                plan)
+        measure("rateless_straggle", SPDCClient(rateless=cfg, recover=True),
+                plan)
+    emit(
+        f"rateless_speedup_n{n}_N{N}_B{B}", 0.0,
+        suite="rateless", n=n, num_servers=N, batch=B, mode="ratio",
+        straggle_speedup=round(
+            rates["rateless_straggle"] / rates["deadline_straggle"], 2
+        ),
+        honest_ratio=round(
+            rates["rateless_honest"] / rates["classic_honest"], 2
+        ),
+    )
+
+
 def extension_inverse(n: int = 128):
     """Paper §VII.B future work, implemented: secure outsourced inversion."""
     from repro.core import outsource_inverse
@@ -565,6 +640,7 @@ SUITES = {
     "gateway": gateway_suite,
     "precision": precision_suite,
     "transports": transports_suite,
+    "rateless": rateless_suite,
     "inverse": extension_inverse,
 }
 
@@ -614,7 +690,7 @@ def main(argv: list[str] | None = None) -> None:
     # committed baselines (BENCH_2/3/4.json — each with its own CI
     # guard); everything else lives in BENCH_1.json
     own_baseline = {"gateway": "BENCH_2.json", "precision": "BENCH_3.json",
-                    "transports": "BENCH_4.json"}
+                    "transports": "BENCH_4.json", "rateless": "BENCH_5.json"}
     for suite, fname in own_baseline.items():
         rows = [r for r in RESULTS if r.get("suite") == suite]
         if suite in names and not SMOKE:

@@ -27,6 +27,8 @@ from .transport import (
     ThreadPoolTransport,
     Transport,
     TransportError,
+    TransportTimeout,
+    TransportWorkerDied,
     close_all,
     resolve_transport,
 )
@@ -36,7 +38,8 @@ __all__ = [
     "SPDCClient", "Session", "BoundaryViolation",
     "EdgeServer",
     "ShardTask", "ShardResult", "FaultPlanFrame",
-    "Transport", "TransportError", "InlineTransport", "ShardMapTransport",
+    "Transport", "TransportError", "TransportTimeout", "TransportWorkerDied",
+    "InlineTransport", "ShardMapTransport",
     "ThreadPoolTransport", "MultiprocessTransport", "resolve_transport",
     "close_all",
     "WireError", "decode_message",

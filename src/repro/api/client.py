@@ -33,6 +33,7 @@ serving, real remote workers, or security tests that must see the wire.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Any
@@ -124,8 +125,14 @@ class SPDCClient:
     dtype: Any = "float64"
     growth_safe: bool | None = None
     equilibrate: bool | None = None
+    #: rateless straggler-adaptive dispatch (DESIGN.md §8): True uses the
+    #: default RatelessConfig, or pass one. Sessions over-decompose into
+    #: F = overdecompose·N strips streamed to whichever workers are free;
+    #: straggler_deadline is ignored (there is no deadline to tune).
+    rateless: Any = False
 
     def __post_init__(self):
+        from repro.configs.spdc import RATELESS_DEFAULT, RatelessConfig
         from repro.core.protocol import (
             _resolve_growth_controls, resolve_dtype,
         )
@@ -135,6 +142,29 @@ class SPDCClient:
             self.dtype, self.growth_safe, self.equilibrate,
             self.faithful_sign,
         )
+        if self.rateless is True:
+            self.rateless = RATELESS_DEFAULT
+        elif not self.rateless:
+            self.rateless = None
+        elif not isinstance(self.rateless, RatelessConfig):
+            raise ValueError(
+                "rateless must be a bool or a configs.spdc.RatelessConfig, "
+                f"got {self.rateless!r}"
+            )
+        # fleet health OUTLIVES sessions: what one session learned about
+        # the workers (speed, tamper history) steers the next
+        if self.rateless is not None:
+            from repro.distrib.rateless import FleetHealth
+
+            self.fleet = FleetHealth(self.rateless)
+        else:
+            self.fleet = None
+
+    def _partitions(self, num_servers: int) -> int:
+        """Strips per matrix: F = overdecompose·N rateless, N classic."""
+        if self.rateless is None:
+            return num_servers
+        return num_servers * self.rateless.overdecompose
 
     # -- PMOP: everything before any server is involved ---------------------
 
@@ -156,8 +186,11 @@ class SPDCClient:
         fused transports, worker-side for message transports); tamper is
         a client-side hook on the assembled factors.
         """
-        plan = resolve_delays(normalize_plan(faults),
-                              self.straggler_deadline)
+        plan = resolve_delays(
+            normalize_plan(faults),
+            # rateless has no rounds deadline — slow servers just do less
+            None if self.rateless is not None else self.straggler_deadline,
+        )
         if isinstance(m, (list, tuple)):
             return self._open_mixed(m, num_servers, plan, tamper, pad_to)
         if pad_to is not None:
@@ -185,15 +218,26 @@ class SPDCClient:
         aug_key = jax.random.key(
             int.from_bytes(seed.digest[8:16], "big") % (2**31)
         )
-        padding = padding_for_servers(n, num_servers)
+        parts = self._partitions(num_servers)
+        padding = self._padding_for(n, parts)
         x_aug = augment(x, padding, key=aug_key)
         return Session(
             client=self, kind="single", num_servers=num_servers,
             x_aug=x_aug, seeds=[seed], metas=[meta],
             log2_scale=log2_scale, n=n, padding=padding,
             digest=seed.digest, plan=plan, tamper=tamper,
+            num_strips=parts if parts != num_servers else None,
             _m_host=m_host,
         )
+
+    def _padding_for(self, n: int, parts: int) -> int:
+        """Identity-border padding to the partition grid; the rateless
+        grid (F strips) additionally keeps strips ≥ 2 rows — the same
+        n'/N > 1 floor the paper puts on the classic schedule."""
+        padding = padding_for_servers(n, parts)
+        if (n + padding) // parts < 2:
+            padding = 2 * parts - n
+        return padding
 
     def _open_batch(self, m, num_servers, plan, tamper) -> "Session":
         from repro.core.protocol import _batch_digest
@@ -208,7 +252,8 @@ class SPDCClient:
         aug_key = jax.random.key(
             int.from_bytes(seeds[0].digest[8:16], "big") % (2**31)
         )
-        padding = padding_for_servers(n, num_servers)
+        parts = self._partitions(num_servers)
+        padding = self._padding_for(n, parts)
         x_aug, log2_scale = _equilibrate_augment(
             x, aug_key, padding=padding, equilibrate=self.equilibrate
         )
@@ -220,6 +265,7 @@ class SPDCClient:
             x_aug=x_aug, seeds=seeds, metas=metas,
             log2_scale=log2_scale, n=n, padding=padding,
             digest=_batch_digest(seeds), plan=plan, tamper=tamper,
+            num_strips=parts if parts != num_servers else None,
             _m_host=m_host,
         )
 
@@ -241,12 +287,16 @@ class SPDCClient:
                     f"expected square matrices, got shape {mi.shape}"
                 )
         sizes = [int(mi.shape[0]) for mi in ms]
+        parts = self._partitions(num_servers)
         if pad_to is None:
-            pad_to = common_padded_size(sizes, num_servers)
-        if pad_to % num_servers != 0 or pad_to // num_servers <= 1:
+            pad_to = common_padded_size(sizes, parts)
+        if pad_to % parts != 0 or pad_to // parts <= 1:
             raise ValueError(
-                f"pad_to={pad_to} not servable by N={num_servers} "
-                "(need pad_to % N == 0 and pad_to / N > 1)"
+                f"pad_to={pad_to} not servable by {parts} partitions "
+                f"(N={num_servers}"
+                + (f" × overdecompose={parts // num_servers}"
+                   if parts != num_servers else "")
+                + "; need pad_to % parts == 0 and pad_to / parts > 1)"
             )
         if max(sizes) > pad_to:
             raise ValueError(
@@ -279,6 +329,7 @@ class SPDCClient:
             log2_scale=np.asarray(log2_scales), n=pad_to, padding=0,
             digest=_batch_digest(seeds), plan=plan, tamper=tamper,
             paddings=paddings, pad_to=pad_to,
+            num_strips=parts if parts != num_servers else None,
             _m_host=None, _m_hosts=ms,
         )
 
@@ -306,6 +357,12 @@ class Session:
     tamper: Any = None
     paddings: list[int] | None = None
     pad_to: int | None = None
+    #: rateless over-decomposition: F > N strips (None = classic, one
+    #: strip per server). The PARTITION geometry (authenticate blocks,
+    #: strip minting, recovery) keys off `partitions`; `num_servers`
+    #: stays the physical fleet size.
+    num_strips: int | None = None
+    fleet_report: Any = None
     _m_host: np.ndarray | None = None
     _m_hosts: list[np.ndarray] = field(default_factory=list)
 
@@ -327,14 +384,26 @@ class Session:
         return self.n_aug // self.num_servers
 
     @property
+    def partitions(self) -> int:
+        """Block rows the protocol partitions n' into: F when rateless,
+        N classically. Verification, recovery, and task minting all key
+        off this count — authenticate works for ANY divisor of n'."""
+        return self.num_strips or self.num_servers
+
+    @property
+    def strip_block(self) -> int:
+        return self.n_aug // self.partitions
+
+    @property
     def batch(self) -> int | None:
         return int(self.x_aug.shape[0]) if self.x_aug.ndim == 3 else None
 
     # -- dispatch ------------------------------------------------------------
 
     def tasks(self, *, check_boundary: bool | None = None) -> list[ShardTask]:
-        """The N initial ShardTasks — one encrypted block row + dispatch
-        sub-seed per server. u_upstream is left to the transport's relay.
+        """The initial ShardTasks — one encrypted block row + dispatch
+        sub-seed per partition (N classically, F when rateless).
+        u_upstream is left to the transport's relay.
 
         check_boundary: None (default) runs the structural boundary
         checks always and the full entry-level plaintext screening up to
@@ -343,13 +412,13 @@ class Session:
         """
         from repro.distrib.recovery import dispatch_subseed
 
-        b = self.block
+        b = self.strip_block
         out = []
-        for i in range(self.num_servers):
+        for i in range(self.partitions):
             out.append(
                 ShardTask(
                     server=i,
-                    num_servers=self.num_servers,
+                    num_servers=self.partitions,
                     x_row=np.asarray(
                         self.x_aug[..., i * b : (i + 1) * b, :]
                     ),
@@ -362,15 +431,15 @@ class Session:
         return out
 
     def _repair_task(self, server: int, attempt: int, u) -> ShardTask:
-        """A verification-driven re-issue for one blamed server: fresh
+        """A verification-driven re-issue for one blamed block row: fresh
         dispatch sub-seed, verified upstream U rows attached (the
         replacement is stateless and the culprit's relay is untrusted)."""
         from repro.distrib.recovery import dispatch_subseed
 
-        b, s0 = self.block, server * self.block
+        b, s0 = self.strip_block, server * self.strip_block
         return ShardTask(
             server=server,
-            num_servers=self.num_servers,
+            num_servers=self.partitions,
             x_row=np.asarray(self.x_aug[..., s0 : s0 + b, :]),
             subseed=dispatch_subseed(self.digest, server, attempt),
             style=self._style,
@@ -442,10 +511,26 @@ class Session:
     _style: str = "nserver"
 
     def run(self, transport=None):
-        """Dispatch + collect through a transport (default inline)."""
+        """Dispatch + collect through a transport (default inline).
+
+        Rateless sessions always take the streaming scheduler — the
+        fused sweep has no per-strip dispatch for health tracking to
+        steer (distrib.rateless; DESIGN.md §8).
+        """
         transport = resolve_transport(transport)
         self._style = transport.style
-        if transport.fused:
+        if self.num_strips is not None:
+            from repro.distrib.rateless import run_rateless
+
+            self._style = "nserver"  # the scheduler's strip primitive
+            l_host, u_host, rpt = run_rateless(
+                self, transport, self.client.rateless, self.client.fleet,
+                faults=self.plan,
+            )
+            self.fleet_report = rpt
+            dt = self.x_aug.dtype
+            l, u = jnp.asarray(l_host, dtype=dt), jnp.asarray(u_host, dtype=dt)
+        elif transport.fused:
             l, u = transport.sweep(self.x_aug, self.num_servers,
                                    faults=self.plan)
         else:
@@ -454,18 +539,18 @@ class Session:
         return self.collect((l, u), transport=transport)
 
     def _assemble(self, results) -> tuple[jnp.ndarray, jnp.ndarray]:
-        """Stack per-server strips into full (…, n', n') factors."""
+        """Stack per-partition strips into full (…, n', n') factors."""
         byid = {r.server: r for r in results}
-        if sorted(byid) != list(range(self.num_servers)):
+        if sorted(byid) != list(range(self.partitions)):
             raise ValueError(
-                f"need one ShardResult per server, got {sorted(byid)}"
+                f"need one ShardResult per partition, got {sorted(byid)}"
             )
         l = np.concatenate(
-            [np.asarray(byid[i].l_row) for i in range(self.num_servers)],
+            [np.asarray(byid[i].l_row) for i in range(self.partitions)],
             axis=-2,
         )
         u = np.concatenate(
-            [np.asarray(byid[i].u_row) for i in range(self.num_servers)],
+            [np.asarray(byid[i].u_row) for i in range(self.partitions)],
             axis=-2,
         )
         dt = self.x_aug.dtype
@@ -495,27 +580,44 @@ class Session:
         if self.tamper is not None:
             l, u = self.tamper(l, u)
         verdict = authenticate(
-            l, u, self.x_aug, num_servers=self.num_servers,
+            l, u, self.x_aug, num_servers=self.partitions,
             method=self.client.method, rng=_probe_rng(self.digest),
         )
         report = None
         if self.client.recover and not bool(np.all(verdict.ok)):
+            fleet = self.client.fleet
+
             def dispatch(x, u_now, server, attempt, replacement):
+                # recovery IS re-streaming one strip: rateless sessions
+                # route the re-issue to the healthiest live worker (or
+                # compute it inline when the fleet is gone) instead of
+                # the pool's positional replacement
                 task = self._repair_task(server, attempt, u_now)
-                res = transport.repair(task, replacement=replacement)
+                if fleet is not None:
+                    ids = tuple(range(self.num_servers))
+                    live = (fleet.assignable(ids, set(), time.monotonic())
+                            or fleet.live(ids))
+                    if live:
+                        res = transport.repair(task, replacement=live[0])
+                    else:
+                        from .server import EdgeServer
+
+                        res = EdgeServer(None).run(task)
+                else:
+                    res = transport.repair(task, replacement=replacement)
                 dt = self.x_aug.dtype
                 return (jnp.asarray(res.l_row, dtype=dt),
                         jnp.asarray(res.u_row, dtype=dt))
 
             l, u, verdict, report = recover_lu(
-                l, u, self.x_aug, num_servers=self.num_servers,
+                l, u, self.x_aug, num_servers=self.partitions,
                 method=self.client.method, standby=self.client.standby,
                 digest=self.digest, style=self._style, verdict=verdict,
                 dispatch=dispatch,
             )
         comm = (
             None if transport.style == "pipeline"
-            else nserver_comm_model(self.n_aug, self.num_servers)
+            else nserver_comm_model(self.n_aug, self.partitions)
         )
         if self.kind == "single":
             det = decipher(self.seeds[0], self.metas[0], l, u,
@@ -532,6 +634,7 @@ class Session:
                 num_servers=self.num_servers,
                 verdict=verdict,
                 recovery=report,
+                fleet=self.fleet_report,
             )
         dets = decipher_batch(self.seeds, self.metas, l, u,
                               faithful=self.client.faithful_sign,
@@ -549,4 +652,5 @@ class Session:
             recovery=report,
             paddings=self.paddings,
             pad_to=self.pad_to,
+            fleet=self.fleet_report,
         )

@@ -191,6 +191,8 @@ class FaultPlanFrame:
                 "server": f.server, "kind": f.kind, "mode": f.mode,
                 "target": f.target, "magnitude": f.magnitude,
                 "delay_rounds": f.delay_rounds,
+                "delay_s": f.delay_s, "delay_dist": f.delay_dist,
+                "delay_alpha": f.delay_alpha,
                 "matrices": None if f.matrices is None else list(f.matrices),
                 "in_band": f.in_band, "seed": f.seed,
             }

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.faults import corrupt_strip, normalize_plan
+from repro.core.faults import corrupt_strip, normalize_plan, sample_delay
 from repro.core.lu import lu_block_row
 
 from .messages import ShardResult, ShardTask
@@ -85,6 +85,7 @@ class EdgeServer:
                     "transport must thread the one-way relay"
                 )
             u = zeros
+        self._straggle(task, faults)
         row_fn = _block_row_batched if x.ndim == 3 else lu_block_row
         l_row, u_row = row_fn(x, u, task.server, task.num_servers,
                               style=task.style)
@@ -98,17 +99,42 @@ class EdgeServer:
             session_id=task.session_id,
         )
 
+    def _bound(self, task) -> int:
+        """The id faults bind to: the PHYSICAL worker when known, else the
+        task's block row. Identical on the classic paths (transports run
+        task i on worker i); under rateless dispatch ``task.server`` is a
+        strip index while the fault plan names workers, so the physical
+        id is the one that matters."""
+        return self.worker_id if self.worker_id is not None else task.server
+
+    def _straggle(self, task, faults) -> None:
+        """Play this worker's wall-clock delay faults (core.faults
+        ``delay_s``) as a real sleep — unlike tampering, slowness is a
+        property of the MACHINE, so it fires on every attempt, repairs
+        and probation probes included (a retry on the same slow worker is
+        slow again; a retry elsewhere escapes it)."""
+        bound = self._bound(task)
+        wait = sum(
+            sample_delay(f, token=task.subseed)
+            for f in normalize_plan(faults)
+            if f.kind == "delay" and f.server == bound and f.delay_s > 0.0
+        )
+        if wait > 0.0:
+            import time
+
+            time.sleep(wait)
+
     def _misbehave(self, task, l_row, u_row, faults):
         """Apply the simulated fault model to this server's reported strips.
 
-        Only faults naming this task's block row fire, and only on the
+        Only faults naming this worker (`_bound`) fire, and only on the
         initial dispatch (module docstring). Because message transports
         forward the reported U row down the relay, every tamper here is
         effectively in-band — the cascading-poison threat model.
         """
         plan = [
             f for f in normalize_plan(faults)
-            if f.server == task.server and task.attempt == 0
+            if f.server == self._bound(task) and task.attempt == 0
             and f.kind != "delay"
         ]
         if not plan:

@@ -57,6 +57,8 @@ from .server import EdgeServer
 __all__ = [
     "Transport",
     "TransportError",
+    "TransportTimeout",
+    "TransportWorkerDied",
     "InlineTransport",
     "ShardMapTransport",
     "ThreadPoolTransport",
@@ -68,6 +70,22 @@ __all__ = [
 
 class TransportError(RuntimeError):
     """A worker died, timed out, or replied with a malformed frame."""
+
+
+class TransportTimeout(TransportError):
+    """A per-request wall-clock deadline expired before the worker
+    replied. On the multiprocess transport the worker is killed (a reply
+    arriving after the deadline would desynchronize the lock-step pipe)
+    and respawned lazily on the next dispatch; the caller treats the
+    request as a dropout — zero strips, localize, re-dispatch — exactly
+    the rounds-deadline straggler policy (core.faults.resolve_delays)."""
+
+
+class TransportWorkerDied(TransportError):
+    """The worker process/thread went away mid-request (crash, kill,
+    broken pipe). Unlike a timeout the worker did not merely straggle —
+    transports respawn it and retry the request once before surfacing
+    the error; the fleet-health layer counts it as a failure either way."""
 
 
 @partial(jax.jit, static_argnames=("num_servers", "faults"))
@@ -99,6 +117,23 @@ class Transport:
     def repair(self, task: ShardTask, *, replacement: int) -> ShardResult:
         """Run one verification-driven re-dispatch on `replacement`."""
         raise NotImplementedError
+
+    def submit(self, task: ShardTask, worker_id: int, *, faults=(),
+               timeout: float | None = None):
+        """Async single-task dispatch → `concurrent.futures.Future`
+        resolving to a ShardResult (or raising a TransportError). The
+        rateless scheduler's surface: it streams tasks to whichever
+        workers are free instead of walking the fixed relay order.
+        `timeout` bounds the request where the transport can enforce one
+        (multiprocess kills the worker); where it cannot (a thread has no
+        preemption), the caller enforces its own wait and the late future
+        becomes a zombie — discarded on arrival, the worker busy until it
+        really returns. Fused transports don't have per-task workers;
+        they raise."""
+        raise NotImplementedError(
+            f"transport {self.name!r} has no per-task submit surface "
+            "(fused transports run the sweep as one program)"
+        )
 
     def close(self) -> None:  # noqa: B027 — optional hook
         """Release workers/pools; shared instances are closed at exit."""
@@ -135,6 +170,19 @@ class InlineTransport(Transport):
     def repair(self, task, *, replacement):
         return EdgeServer(replacement).run(task)
 
+    def submit(self, task, worker_id, *, faults=(), timeout=None):
+        """Synchronous submit: compute now, return a completed Future.
+        Lets the rateless scheduler run against the inline boundary
+        (tests, and the degradation ladder's last rung)."""
+        from concurrent.futures import Future
+
+        fut: Future = Future()
+        try:
+            fut.set_result(EdgeServer(worker_id).run(task, faults))
+        except Exception as e:  # noqa: BLE001 — future carries it
+            fut.set_exception(e)
+        return fut
+
 
 class ShardMapTransport(Transport):
     """distrib.spdc_pipeline as a transport: one mesh device per server,
@@ -164,7 +212,14 @@ class ShardMapTransport(Transport):
 def _run_relay(tasks, execute) -> list[ShardResult]:
     """The one-way relay schedule over single-shot workers: execute task i
     with u_upstream = the U rows servers 0..i−1 reported. `execute(task,
-    worker_id)` runs one task on one worker."""
+    worker_id)` runs one task on one worker.
+
+    A per-request TransportTimeout is absorbed here as a DROPOUT: the
+    straggler's strips are substituted with zeros — byte-for-byte what a
+    `kind="dropout"` fault reports — so verification localizes it and
+    recovery re-dispatches, identically to the pipeline-rounds deadline
+    path (core.faults.resolve_delays). One straggler policy, two clocks.
+    """
     tasks = sorted(tasks, key=lambda t: t.server)
     if [t.server for t in tasks] != list(range(len(tasks))):
         raise ValueError(
@@ -176,7 +231,15 @@ def _run_relay(tasks, execute) -> list[ShardResult]:
     for t in tasks:
         if t.server > 0:
             t = t.with_upstream(np.concatenate(u_rows, axis=-2))
-        r = execute(t, t.server)
+        try:
+            r = execute(t, t.server)
+        except TransportTimeout:
+            zero = np.zeros_like(np.asarray(t.x_row))
+            r = ShardResult(
+                server=t.server, l_row=zero, u_row=zero,
+                subseed=t.subseed, attempt=t.attempt,
+                session_id=t.session_id,
+            )
         results.append(r)
         u_rows.append(np.asarray(r.u_row))
     return results
@@ -214,6 +277,13 @@ class ThreadPoolTransport(Transport):
 
     def repair(self, task, *, replacement):
         return self._pool.submit(self._edge(replacement).run, task).result()
+
+    def submit(self, task, worker_id, *, faults=(), timeout=None):
+        """Future[ShardResult] on the shared pool. Threads cannot be
+        preempted, so `timeout` is advisory here — the rateless scheduler
+        enforces its own wait and zombifies a late future (the worker
+        slot stays busy until the thread actually returns)."""
+        return self._pool.submit(self._edge(worker_id).run, task, faults)
 
     def close(self):
         self._pool.shutdown(wait=True)
@@ -263,9 +333,17 @@ class MultiprocessTransport(Transport):
 
     Workers spawn lazily per worker id (first dispatch pays the process +
     jax import + jit cost; a shared instance amortizes it across every
-    later sweep) and inherit the parent's x64 setting. `timeout` bounds
-    each request round-trip so a hung worker fails the sweep instead of
-    the suite.
+    later sweep) and inherit the parent's x64 setting.
+
+    Request discipline: each pipe is strict lock-step request-reply, so
+    each WORKER has its own lock (requests to different workers run
+    concurrently — the property the rateless scheduler needs) and every
+    request takes a PER-REQUEST wall-clock deadline (`timeout` is only
+    the default). A deadline miss kills the worker — its eventual reply
+    would desynchronize the pipe — and raises TransportTimeout; a worker
+    found dead mid-request (crash, external kill) is respawned and the
+    request retried once before TransportWorkerDied surfaces, so a
+    session heals across a worker death instead of failing.
     """
 
     name = "multiprocess"
@@ -277,15 +355,22 @@ class MultiprocessTransport(Transport):
         self._conns: dict[int, object] = {}
         self._procs: dict[int, object] = {}
         self._sent_plan: dict[int, tuple] = {}
-        self._lock = threading.RLock()
+        self._locks: dict[int, threading.Lock] = {}
+        self._meta = threading.RLock()  # guards the dicts, not the pipes
+        self._io = None  # lazy executor behind submit()
         self.timeout = float(timeout)
 
     @property
     def workers(self) -> tuple[int, ...]:
-        return tuple(sorted(self._procs))
+        with self._meta:
+            return tuple(sorted(self._procs))
+
+    def _worker_lock(self, worker_id: int) -> threading.Lock:
+        with self._meta:
+            return self._locks.setdefault(worker_id, threading.Lock())
 
     def _conn(self, worker_id: int):
-        with self._lock:
+        with self._meta:
             conn = self._conns.get(worker_id)
             if conn is not None and self._procs[worker_id].is_alive():
                 return conn
@@ -304,29 +389,57 @@ class MultiprocessTransport(Transport):
             self._sent_plan[worker_id] = ()
             return parent
 
-    def _request(self, worker_id: int, frame: bytes) -> bytes:
-        """One lock-step request-reply round trip (raw reply bytes)."""
+    def _discard(self, worker_id: int) -> None:
+        """Forget a worker whose pipe can no longer be trusted (dead, or
+        timed out with a reply still owed). The next dispatch respawns
+        it lazily with a fresh, in-sync pipe."""
+        with self._meta:
+            conn = self._conns.pop(worker_id, None)
+            proc = self._procs.pop(worker_id, None)
+            self._sent_plan.pop(worker_id, None)
+        if conn is not None:
+            try:
+                conn.close()
+            except (OSError, ValueError):
+                pass
+        if proc is not None and proc.is_alive():
+            proc.terminate()
+            proc.join(timeout=5)
+
+    def _request(self, worker_id: int, frame: bytes,
+                 timeout: float | None = None) -> bytes:
+        """One lock-step request-reply round trip (raw reply bytes).
+        Caller holds the worker's lock. Raises TransportTimeout (worker
+        killed) past the deadline, TransportWorkerDied on a dead pipe."""
+        deadline = self.timeout if timeout is None else float(timeout)
         conn = self._conn(worker_id)
-        conn.send_bytes(frame)
-        if not conn.poll(self.timeout):
-            raise TransportError(
-                f"edge worker {worker_id} timed out after {self.timeout}s"
-            )
         try:
+            conn.send_bytes(frame)
+            if not conn.poll(deadline):
+                self._discard(worker_id)
+                raise TransportTimeout(
+                    f"edge worker {worker_id} exceeded its {deadline}s "
+                    "request deadline (killed; respawns on next dispatch)"
+                )
             data = conn.recv_bytes()
-        except (EOFError, OSError) as e:
-            raise TransportError(f"edge worker {worker_id} died: {e}") from e
+        except (EOFError, OSError, BrokenPipeError) as e:
+            self._discard(worker_id)
+            raise TransportWorkerDied(
+                f"edge worker {worker_id} died mid-request: {e!r}"
+            ) from e
         if data[:4] == b"ERR:":
             raise TransportError(
                 f"edge worker {worker_id} failed: {data[4:].decode()}"
             )
         return data
 
-    def _configure_faults(self, worker_id: int, faults) -> None:
+    def _configure_faults(self, worker_id: int, faults,
+                          timeout: float | None = None) -> None:
         plan = tuple(faults)
         if self._sent_plan.get(worker_id) == plan:
             return
-        ack = self._request(worker_id, FaultPlanFrame(plan).to_bytes())
+        ack = self._request(worker_id, FaultPlanFrame(plan).to_bytes(),
+                            timeout)
         if ack != b"ACK":
             raise TransportError(
                 f"edge worker {worker_id} mis-acknowledged a fault-plan "
@@ -334,12 +447,22 @@ class MultiprocessTransport(Transport):
             )
         self._sent_plan[worker_id] = plan
 
-    def _run_on(self, task: ShardTask, worker_id: int, faults=()):
-        with self._lock:
-            self._configure_faults(worker_id, faults)
+    def _run_on(self, task: ShardTask, worker_id: int, faults=(),
+                timeout: float | None = None):
+        def once():
+            self._configure_faults(worker_id, faults, timeout)
             return ShardResult.from_bytes(
-                self._request(worker_id, task.to_bytes())
+                self._request(worker_id, task.to_bytes(), timeout)
             )
+
+        with self._worker_lock(worker_id):
+            try:
+                return once()
+            except TransportWorkerDied:
+                # the pipe state was discarded, so the retry spawns a
+                # fresh worker (and re-sends the fault plan) — one crash
+                # costs one respawn, not the session
+                return once()
 
     def factor(self, tasks, faults=()):
         return _run_relay(tasks, lambda t, wid: self._run_on(t, wid, faults))
@@ -347,9 +470,25 @@ class MultiprocessTransport(Transport):
     def repair(self, task, *, replacement):
         return self._run_on(task, replacement)
 
+    def submit(self, task, worker_id, *, faults=(), timeout=None):
+        """Future[ShardResult]: the blocking request-reply runs on an IO
+        thread; the per-worker lock serializes a worker's pipe while
+        different workers' requests proceed concurrently. `timeout` is
+        REAL here — a deadline miss kills the straggling process."""
+        with self._meta:
+            if self._io is None:
+                from concurrent.futures import ThreadPoolExecutor
+
+                self._io = ThreadPoolExecutor(
+                    max_workers=32, thread_name_prefix="spdc-mp-io"
+                )
+            io = self._io
+        return io.submit(self._run_on, task, worker_id, faults, timeout)
+
     def close(self):
-        with self._lock:
-            for wid, conn in self._conns.items():
+        with self._meta:
+            io, self._io = self._io, None
+            for conn in self._conns.values():
                 try:
                     conn.send_bytes(b"")
                     conn.close()
@@ -362,6 +501,9 @@ class MultiprocessTransport(Transport):
             self._conns.clear()
             self._procs.clear()
             self._sent_plan.clear()
+            self._locks.clear()
+        if io is not None:
+            io.shutdown(wait=False)
 
 
 _SHARED: dict[str, Transport] = {}

@@ -10,6 +10,72 @@ from dataclasses import dataclass
 
 
 @dataclass(frozen=True)
+class RatelessConfig:
+    """Knobs of the rateless dispatch layer (distrib.rateless).
+
+    The scheduler streams strip tasks to whichever workers are free and
+    completes when enough VERIFIED strips arrived — so there is no
+    deadline to tune; these knobs shape how hard it leans on a degraded
+    fleet, not whether it finishes.
+
+    overdecompose: strips per matrix = overdecompose × num_servers (the
+        paper's F > N rateless factor; 2 doubles the strips so a fast
+        worker can absorb a slow one's share strip-by-strip).
+    request_timeout_s: per-request wall-clock deadline handed to the
+        transport (None = the transport's own default). A miss counts as
+        a failure against the worker and the strip is re-streamed.
+    max_attempts: dispatch attempts per strip before the client computes
+        it inline (the degradation ladder's last rung — the session
+        answers even with the whole fleet dark).
+    backoff_base_s / backoff_max_s / backoff_jitter: exponential backoff
+        between a worker's consecutive failures — base·2^(k−1) capped at
+        max, ±jitter fraction drawn deterministically from the dispatch
+        sub-seed (reproducible runs, no thundering herd).
+    quarantine_after: consecutive failures (or ONE tamper) that bench a
+        worker; it re-admits only by passing a probation probe — a
+        re-issue of an already-verified strip checked against the known
+        answer.
+    probation_cooldown_s: how long a quarantined worker sits out before
+        the scheduler spends a probe on it.
+    ewma_alpha: weight of the newest latency sample in the per-worker
+        EWMA the work-stealing assignment ranks workers by.
+    min_live: fleet floor — fewer live workers than this flips the
+        session to inline completion of the remaining strips.
+    lanes: independent dispatch lanes for BATCHED sessions (each lane
+        owns a contiguous slice of the batch and its own sequential
+        strip chain, so lanes are what actually run concurrently).
+        None = min(batch, fleet size); single matrices always run 1 lane.
+    """
+
+    overdecompose: int = 2
+    request_timeout_s: float | None = 30.0
+    max_attempts: int = 4
+    backoff_base_s: float = 0.05
+    backoff_max_s: float = 2.0
+    backoff_jitter: float = 0.25
+    quarantine_after: int = 2
+    probation_cooldown_s: float = 0.5
+    ewma_alpha: float = 0.5
+    min_live: int = 1
+    lanes: int | None = None
+
+    def __post_init__(self):
+        if self.overdecompose < 1:
+            raise ValueError("overdecompose must be >= 1")
+        if self.max_attempts < 1:
+            raise ValueError("max_attempts must be >= 1")
+        if self.quarantine_after < 1:
+            raise ValueError("quarantine_after must be >= 1")
+        if not 0.0 < self.ewma_alpha <= 1.0:
+            raise ValueError("ewma_alpha must be in (0, 1]")
+        if self.min_live < 0:
+            raise ValueError("min_live must be >= 0")
+
+
+RATELESS_DEFAULT = RatelessConfig()
+
+
+@dataclass(frozen=True)
 class SPDCConfig:
     name: str = "spdc"
     matrix_n: int = 4096
@@ -35,6 +101,11 @@ class SPDCConfig:
     # "inline" (fused fast path) | "shardmap" | "threadpool" |
     # "multiprocess" (spawned workers, wire-codec messages)
     transport: str = "inline"
+    # rateless straggler-adaptive dispatch (DESIGN.md §8): over-decompose
+    # into F > N strips and stream them to whichever workers are free —
+    # True uses RATELESS_DEFAULT knobs. Replaces straggler_deadline
+    # (which a rateless session ignores: slow servers just do less).
+    rateless: bool = False
 
     def protocol_kwargs(self) -> dict:
         """Keyword arguments for core.protocol.outsource_determinant —
@@ -54,6 +125,7 @@ class SPDCConfig:
             growth_safe=self.growth_safe,
             equilibrate=self.equilibrate,
             transport=self.transport,
+            rateless=self.rateless,
         )
 
 
@@ -84,6 +156,13 @@ SPDC_EDGE_THREADS = SPDCConfig(
 SPDC_EDGE_MP = SPDCConfig(
     name="spdc-edge-mp", matrix_n=256, num_servers=4,
     transport="multiprocess", standby=1, recover=True,
+)
+#: heterogeneous-fleet profile (DESIGN.md §8): rateless dispatch over
+#: message workers — no straggler_deadline to tune, slow servers just
+#: complete fewer strips, tamperers get quarantined mid-session.
+SPDC_EDGE_RATELESS = SPDCConfig(
+    name="spdc-edge-rateless", matrix_n=256, num_servers=4,
+    transport="threadpool", recover=True, rateless=True,
 )
 
 

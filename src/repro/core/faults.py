@@ -11,10 +11,33 @@ be exercised deterministically:
     ``block`` (the whole strip scaled — a wholesale substitution).
   * ``dropout`` — the server's strip never arrives; the client sees zeros
     (an all-zero L diagonal is structurally invalid, so Q1/Q3 flag it).
-  * ``delay``   — a straggler. ``delay_rounds`` models how many pipeline
-    rounds late the strip lands; a client with ``deadline`` d treats any
-    server later than d as dropped and re-dispatches proactively, instead
-    of stalling the whole batch behind one slow server.
+  * ``delay``   — a straggler. TWO units exist, matching the two kinds of
+    execution boundary, and they are NOT interchangeable:
+
+    - ``delay_rounds`` is measured in *pipeline rounds* — the abstract
+      schedule steps of the fused single-process simulation and the
+      shard_map pipeline, where no wall clock exists. It is meaningful
+      ONLY against ``straggler_deadline`` (also in rounds): a client with
+      deadline d treats any server later than d rounds as dropped and
+      re-dispatches proactively (``resolve_delays``). On message
+      transports (threadpool/multiprocess) rounds are meaningless and
+      ``delay_rounds`` is ignored.
+    - ``delay_s`` is wall-clock *seconds* — a real sleep executed by the
+      worker on message transports before it reports its strip
+      (``sample_delay``; ``delay_dist`` draws it from a fixed /
+      exponential / Pareto latency distribution, the synthetic straggler
+      models the rateless benchmarks use). Fused transports ignore it
+      (there is no wall clock inside one jitted sweep).
+
+    Both units converge on ONE straggler policy — dropout semantics: a
+    server past the rounds deadline is dropped by ``resolve_delays``
+    before dispatch; a server past a transport's wall-clock request
+    timeout raises ``TransportTimeout`` and the relay substitutes a
+    zero (dropped) strip, so verification localizes it and recovery
+    re-dispatches — exactly as if the fault had been a ``dropout``. The
+    rateless scheduler (distrib/rateless.py) applies the same rule per
+    strip, with no deadline to tune: a slow server is simply assigned
+    less work.
 
 Faults are *per-server* (Algorithm 3's block-row ownership makes a server's
 contribution exactly one L strip + one U strip) and *batch-aware*
@@ -41,18 +64,28 @@ import numpy as np
 
 TAMPER_MODES = ("single", "sign_flip", "block")
 FAULT_KINDS = ("tamper", "dropout", "delay")
+DELAY_DISTS = ("fixed", "exponential", "pareto")
 
 
 @dataclass(frozen=True)
 class ServerFault:
-    """One misbehaving server. See the module docstring for semantics."""
+    """One misbehaving server. See the module docstring for semantics.
+
+    On message transports faults bind to the PHYSICAL worker id (the
+    process/thread slot), which for the classic N-server dispatch is the
+    same as the block-row index; under rateless dispatch a worker runs
+    many strips and misbehaves on all of them.
+    """
 
     server: int
     kind: str = "tamper"  # "tamper" | "dropout" | "delay"
     mode: str = "single"  # tamper only: "single" | "sign_flip" | "block"
     target: str = "u"  # tamper only: corrupt "l", "u", or "lu"
     magnitude: float = 0.05
-    delay_rounds: int = 0  # delay only: rounds late
+    delay_rounds: int = 0  # delay only: PIPELINE ROUNDS late (fused paths)
+    delay_s: float = 0.0  # delay only: wall-clock SECONDS (message paths)
+    delay_dist: str = "fixed"  # "fixed" | "exponential" | "pareto"
+    delay_alpha: float = 1.5  # pareto shape (tail heaviness; mean-preserving)
     matrices: tuple[int, ...] | None = None  # batch indices hit; None = all
     in_band: bool = False  # corruption enters the relay chain
     seed: int = 0  # position PRNG for single/sign_flip
@@ -70,6 +103,18 @@ class ServerFault:
             raise ValueError(f"target must be 'l', 'u', or 'lu', got {self.target!r}")
         if self.server < 0:
             raise ValueError("server must be >= 0")
+        if self.delay_dist not in DELAY_DISTS:
+            raise ValueError(
+                f"unknown delay_dist {self.delay_dist!r}; expected one of "
+                f"{DELAY_DISTS}"
+            )
+        if self.delay_s < 0.0:
+            raise ValueError("delay_s must be >= 0 seconds")
+        if self.delay_dist == "pareto" and self.delay_alpha <= 1.0:
+            raise ValueError(
+                "pareto delay_alpha must be > 1 (finite mean; delay_s is "
+                "the mean of the sampled distribution)"
+            )
         if self.in_band and self.kind != "tamper":
             raise ValueError(
                 "in_band is only meaningful for tamper faults (a dropped or "
@@ -100,10 +145,24 @@ def normalize_plan(faults) -> FaultPlan:
 
 
 def resolve_delays(faults, deadline: int | None) -> FaultPlan:
-    """Client-side straggler policy: a server later than ``deadline`` rounds
-    is treated as dropped (its strip re-dispatched); an on-time-enough delay
-    is harmless and removed from the effective plan. ``deadline=None``
-    tolerates any delay (the client waits)."""
+    """Client-side straggler policy for ROUND-denominated delays.
+
+    ``deadline`` is measured in *pipeline rounds* (see the module
+    docstring's unit discussion) — it is the fused-path analog of a
+    message transport's wall-clock request timeout, and both resolve to
+    the same dropout semantics:
+
+      * a delay later than ``deadline`` rounds becomes a ``dropout`` here,
+        BEFORE dispatch (the fused sweep has no wall clock to wait on);
+      * an on-time-enough round delay is harmless and removed;
+      * ``deadline=None`` tolerates any round delay (the client waits).
+
+    Wall-clock delays (``delay_s > 0``) are NOT resolved here — they ride
+    through to the message-transport workers, which actually sleep, and
+    the transport's per-request timeout converts an over-budget sleep
+    into the very same dropout (``TransportTimeout`` → zero strip →
+    localization → re-dispatch). One policy, two clocks.
+    """
     out = []
     for f in normalize_plan(faults):
         if f.kind != "delay":
@@ -112,7 +171,41 @@ def resolve_delays(faults, deadline: int | None) -> FaultPlan:
             out.append(
                 ServerFault(server=f.server, kind="dropout", matrices=f.matrices)
             )
+        elif f.delay_s > 0.0:
+            # wall-clock straggler: keep it in the effective plan so the
+            # worker-side sleep actually happens on message transports
+            # (fused paths ignore it — corrupt_strip is identity on delay)
+            out.append(f)
     return tuple(out)
+
+
+def sample_delay(fault: ServerFault, token: bytes = b"") -> float:
+    """Draw one wall-clock delay (seconds) for a delay fault.
+
+    Deterministic given (fault, token): benchmarks and the chaos tests
+    seed ``token`` from the dispatch sub-seed so a straggling worker's
+    latency sequence reproduces exactly. ``delay_s`` is the MEAN of every
+    distribution; ``pareto`` keeps the mean but adds the heavy tail
+    (shape ``delay_alpha``) that makes deadline tuning hopeless — the
+    motivating case for rateless dispatch.
+    """
+    if fault.kind != "delay" or fault.delay_s <= 0.0:
+        return 0.0
+    if fault.delay_dist == "fixed":
+        return float(fault.delay_s)
+    import hashlib
+
+    h = hashlib.sha256(
+        token + fault.seed.to_bytes(8, "big", signed=True)
+        + fault.server.to_bytes(8, "big", signed=True)
+    ).digest()
+    rng = np.random.default_rng(int.from_bytes(h[:8], "big"))
+    if fault.delay_dist == "exponential":
+        return float(rng.exponential(fault.delay_s))
+    # pareto: delay_s * (alpha-1) * Lomax(alpha) has mean delay_s for
+    # alpha > 1 — same budget as the exponential, much heavier tail
+    a = fault.delay_alpha
+    return float(fault.delay_s * (a - 1.0) * rng.pareto(a))
 
 
 def _tamper_position(

@@ -88,6 +88,9 @@ class SPDCResult:
     verdict: Verdict | None = None
     #: verification-driven re-dispatch log (None unless recover=True fired)
     recovery: object | None = None
+    #: rateless dispatch report (distrib.rateless.RatelessReport — strip
+    #: counts, per-worker health; None on classic sessions)
+    fleet: object | None = None
 
 
 @dataclass
@@ -120,6 +123,8 @@ class SPDCBatchResult:
     paddings: list[int] | None = None
     #: mixed-size path only: the common padded size n' of the sweep
     pad_to: int | None = None
+    #: rateless dispatch report (None on classic sessions)
+    fleet: object | None = None
 
     @property
     def batch(self) -> int:
@@ -211,6 +216,7 @@ def common_padded_size(sizes, num_servers: int) -> int:
 def _make_client(
     *, lambda1, lambda2, mode, method, use_kernel, faithful_sign,
     recover, standby, straggler_deadline, dtype, growth_safe, equilibrate,
+    rateless=False,
 ):
     from repro.api import SPDCClient
 
@@ -220,6 +226,7 @@ def _make_client(
         recover=recover, standby=standby,
         straggler_deadline=straggler_deadline, dtype=dtype,
         growth_safe=growth_safe, equilibrate=equilibrate,
+        rateless=rateless,
     )
 
 
@@ -243,6 +250,7 @@ def outsource_determinant_mixed(
     growth_safe: bool | None = None,
     equilibrate: bool | None = None,
     transport=None,
+    rateless=False,
 ) -> SPDCBatchResult:
     """Run the SPDC protocol for a *mixed-size* list of matrices in ONE
     coalesced N-server sweep — the gateway's batching primitive.
@@ -280,6 +288,7 @@ def outsource_determinant_mixed(
         use_kernel=False, faithful_sign=faithful_sign, recover=recover,
         standby=standby, straggler_deadline=straggler_deadline,
         dtype=dtype, growth_safe=growth_safe, equilibrate=equilibrate,
+        rateless=rateless,
     )
     session = client.open_session(
         list(ms), num_servers, faults=faults, tamper=tamper, pad_to=pad_to
@@ -307,6 +316,7 @@ def outsource_determinant(
     growth_safe: bool | None = None,
     equilibrate: bool | None = None,
     transport=None,
+    rateless=False,
 ) -> SPDCResult | SPDCBatchResult:
     """Run the full SPDC protocol — the package's main entry point.
 
@@ -377,6 +387,15 @@ def outsource_determinant(
         pre-split protocol), "threadpool", "multiprocess" (spawned
         workers, ShardTask/ShardResult bytes on a real OS pipe),
         "shardmap", or a repro.api.Transport instance.
+    rateless: straggler-adaptive streaming dispatch (DESIGN.md §8) —
+        True (default knobs) or a configs.spdc.RatelessConfig. The
+        session over-decomposes into F = overdecompose·N strips and
+        streams them to whichever workers are free; completion is
+        "every strip verified", so there is no straggler_deadline to
+        tune (the kwarg is ignored), slow workers just complete fewer
+        strips, tampering workers get quarantined mid-session, and the
+        client finishes strips inline if the fleet collapses.
+        result.fleet carries the RatelessReport.
 
     Returns SPDCResult for a single matrix, SPDCBatchResult (per-matrix
     dets and verdicts) for a stack or list; both carry the structured
@@ -397,7 +416,7 @@ def outsource_determinant(
             tamper=tamper, faults=faults, recover=recover, standby=standby,
             straggler_deadline=straggler_deadline, dtype=dtype,
             growth_safe=growth_safe, equilibrate=equilibrate,
-            transport=transport,
+            transport=transport, rateless=rateless,
         )
     from repro.api import resolve_transport
 
@@ -407,6 +426,7 @@ def outsource_determinant(
         recover=recover, standby=standby,
         straggler_deadline=straggler_deadline, dtype=dtype,
         growth_safe=growth_safe, equilibrate=equilibrate,
+        rateless=rateless,
     )
     session = client.open_session(m, num_servers, faults=faults,
                                   tamper=tamper)

@@ -78,6 +78,11 @@ class BucketKey:
     #: programs with different warm state, so requests targeting different
     #: transports must not coalesce.
     transport: str = "inline"
+    #: rateless dispatch (DESIGN.md §8). Part of the key: a rateless sweep
+    #: partitions the bucket into F = overdecompose·N strips instead of N,
+    #: so its padded size rides a different grid and its session carries
+    #: fleet-health state a deadline-based sweep has no use for.
+    rateless: bool = False
 
     def protocol_kwargs(self) -> dict:
         """Keyword arguments for core.protocol.outsource_determinant_mixed."""
@@ -94,6 +99,7 @@ class BucketKey:
             growth_safe=self.growth_safe,
             equilibrate=self.equilibrate,
             transport=self.transport,
+            rateless=self.rateless,
         )
 
 

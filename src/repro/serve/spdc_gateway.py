@@ -63,8 +63,19 @@ __all__ = [
 _OVERRIDE_KEYS = frozenset(
     {"num_servers", "mode", "method", "lambda1", "lambda2", "recover",
      "standby", "straggler_deadline", "dtype", "growth_safe",
-     "equilibrate", "transport"}
+     "equilibrate", "transport", "rateless"}
 )
+
+
+def _partition_divisor(num_servers: int, rateless: bool) -> int:
+    """The strip count a padded size must divide into: N for deadline-based
+    sweeps, F = overdecompose·N for rateless ones (the bucket grid has to
+    accommodate the over-decomposed partition, not just the fleet size)."""
+    if not rateless:
+        return num_servers
+    from repro.configs.spdc import RATELESS_DEFAULT
+
+    return num_servers * RATELESS_DEFAULT.overdecompose
 
 
 def allowed_batch_sizes(max_batch: int) -> tuple[int, ...]:
@@ -136,14 +147,18 @@ class SPDCGateway:
         # schedule's divisibility rule is a config bug, and catching it at
         # construction beats every request of that size silently riding
         # the synthesized-fallback (or, pre-fix, the direct) path
+        divisor = _partition_divisor(
+            config.spdc.num_servers, config.spdc.rateless
+        )
         for b in config.buckets:
-            if b % config.spdc.num_servers != 0 \
-                    or b // config.spdc.num_servers <= 1:
+            if b % divisor != 0 or b // divisor <= 1:
                 raise ValueError(
                     f"bucket {b} in {tuple(config.buckets)} is not "
-                    f"servable by num_servers={config.spdc.num_servers} "
-                    "(need n' % N == 0 and n'/N > 1); fix the preset's "
-                    "buckets or its spdc.num_servers"
+                    f"servable by num_servers={config.spdc.num_servers}"
+                    + (" under rateless over-decomposition"
+                       if config.spdc.rateless else "")
+                    + f" (need n' % {divisor} == 0 and n'/{divisor} > 1); "
+                    "fix the preset's buckets or its spdc.num_servers"
                 )
         self.config = config
         self._clock = clock
@@ -167,10 +182,16 @@ class SPDCGateway:
     def _key_for(self, n: int, overrides: dict) -> BucketKey:
         spdc = self.config.spdc
         num_servers = overrides.get("num_servers", spdc.num_servers)
-        pad_to = bucket_size_for(n, self.config.buckets, num_servers)
+        rateless = overrides.get("rateless", spdc.rateless)
+        # rateless sweeps partition into F = overdecompose·N strips, so the
+        # bucket size must land on the F-grid, not merely the N-grid
+        pad_to = bucket_size_for(
+            n, self.config.buckets, _partition_divisor(num_servers, rateless)
+        )
         return BucketKey(
             pad_to=pad_to,
             num_servers=num_servers,
+            rateless=rateless,
             mode=overrides.get("mode", spdc.mode),
             method=overrides.get("method", spdc.method),
             lambda1=overrides.get("lambda1", spdc.lambda1),
@@ -397,9 +418,11 @@ class SPDCGateway:
                 growth_safe=overrides.get("growth_safe", spdc.growth_safe),
                 equilibrate=overrides.get("equilibrate", spdc.equilibrate),
                 transport=overrides.get("transport", spdc.transport),
+                rateless=overrides.get("rateless", spdc.rateless),
             )
         except Exception as e:  # noqa: BLE001 — fail the request, not the service
-            key = BucketKey(pad_to=req.n, num_servers=spdc.num_servers)
+            key = BucketKey(pad_to=req.n, num_servers=spdc.num_servers,
+                            rateless=spdc.rateless)
             self._fail_requests([req], key, "direct",
                                 f"{type(e).__name__}: {e}")
             return

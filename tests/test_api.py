@@ -18,6 +18,8 @@ from repro.api import (
     ShardTask,
     SPDCClient,
     ThreadPoolTransport,
+    TransportError,
+    TransportTimeout,
     WireError,
     decode_message,
     resolve_transport,
@@ -490,3 +492,70 @@ def test_multiprocess_batched_sweep(mp_transport):
         ws, wl = np.linalg.slogdet(stack[i])
         assert res.dets[i].sign == ws
         np.testing.assert_allclose(res.dets[i].logabs, wl, rtol=1e-10)
+
+
+def test_multiprocess_timeout_is_typed_and_worker_respawns(mp_transport):
+    """A worker sleeping past the per-request deadline surfaces a TYPED
+    TransportTimeout (a TransportError — callers catching the base class
+    keep working), the stuck process is killed, and the next dispatch to
+    that worker id transparently respawns it."""
+    import time
+
+    m = _wellcond(16, seed=43)
+    session = SPDCClient().open_session(m, N)
+    task = session.tasks()[0]
+    slow = ServerFault(server=0, kind="delay", delay_s=30.0)
+    pid_before = mp_transport._conn(0) and mp_transport._procs[0].pid
+    t0 = time.monotonic()
+    fut = mp_transport.submit(task, 0, faults=(slow,), timeout=0.5)
+    with pytest.raises(TransportTimeout, match="request deadline"):
+        fut.result(timeout=60)
+    assert time.monotonic() - t0 < 20.0  # did NOT wait out the sleep
+    assert issubclass(TransportTimeout, TransportError)
+    assert 0 not in mp_transport.workers  # killed and discarded
+    res = mp_transport.submit(task, 0).result(timeout=60)
+    assert res.server == 0  # respawned on demand and served
+    assert mp_transport._procs[0].pid != pid_before
+
+
+def test_multiprocess_worker_killed_mid_session_heals(mp_transport):
+    """Regression: SIGKILL a live worker, then run a full session through
+    the same transport — the dead worker is detected (TransportWorkerDied
+    under the hood), respawned, and the protocol completes verified."""
+    import os
+    import signal
+    import time
+
+    m = _wellcond(16, seed=47)
+    res = outsource_determinant(m, N, transport=mp_transport)
+    assert res.verified  # all four workers warm and live
+    victim = mp_transport._procs[1]
+    os.kill(victim.pid, signal.SIGKILL)
+    victim.join(timeout=10)
+    time.sleep(0.1)
+    res2 = outsource_determinant(m, N, transport=mp_transport)
+    assert res2.verified
+    assert mp_transport._procs[1].pid != victim.pid  # genuinely respawned
+    ws, wl = np.linalg.slogdet(m)
+    assert res2.det.sign == ws
+    np.testing.assert_allclose(res2.det.logabs, wl, rtol=1e-10)
+
+
+def test_multiprocess_rateless_streams_through_worker_processes():
+    """Rateless dispatch over REAL worker processes: per-request timeouts
+    cut a sleeping worker loose mid-session, the strip re-streams to a
+    live sibling, and the fleet report attributes the slowness."""
+    from repro.configs import RatelessConfig
+
+    m = _wellcond(16, seed=53)
+    cfg = RatelessConfig(request_timeout_s=1.0, probation_cooldown_s=60.0)
+    client = SPDCClient(rateless=cfg, recover=True)
+    fault = ServerFault(server=1, kind="delay", delay_s=8.0)
+    with MultiprocessTransport() as t:
+        out = client.open_session(m, N, faults=fault).run(t)
+    assert out.verified
+    assert out.fleet.timeouts >= 1
+    w1 = out.fleet.workers[1]
+    assert w1["failures"] >= 1 and w1["completed"] == 0
+    ws, wl = np.linalg.slogdet(m)
+    np.testing.assert_allclose(out.det.logabs, wl, rtol=1e-8)

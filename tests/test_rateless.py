@@ -1,0 +1,405 @@
+"""Rateless straggler-adaptive dispatch + fleet health (DESIGN.md §8).
+
+Includes the acceptance end-to-end: N=4 edge workers, ONE Pareto-delayed
+and ONE tampering, NO straggler_deadline configured — the session still
+completes, the determinant matches the honest run at rtol 1e-10, the
+healed factors pass Q2 AND Q3, the slow worker completed fewer strips
+than the healthy ones, and the tamperer ends the session quarantined.
+
+The chaos matrix at the bottom (slow/chaos-marked; always-on in CI's
+chaos job) sweeps seeded tamper × dropout × delay-distribution plans
+through the scheduler.
+"""
+import time
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.api import SPDCClient, ThreadPoolTransport
+from repro.configs import RATELESS_DEFAULT, RatelessConfig, SPDC_EDGE_RATELESS
+from repro.core import ServerFault, authenticate, outsource_determinant
+from repro.distrib.rateless import FleetHealth, run_rateless
+
+N = 4
+
+
+def _wellcond(n, seed=0, batch=None):
+    rng = np.random.default_rng(seed)
+    if batch is None:
+        return rng.standard_normal((n, n)) + n * np.eye(n)
+    return rng.standard_normal((batch, n, n)) + n * np.eye(n)
+
+
+def _logabs(res):
+    if hasattr(res, "dets"):
+        return np.asarray([d.logabs for d in res.dets])
+    return np.asarray(res.det.logabs)
+
+
+# ------------------------------------------------------------- acceptance
+def test_rateless_acceptance_straggler_and_tamperer():
+    """Acceptance: one Pareto-heavy-tail straggler + one tamperer, no
+    deadline anywhere — verified det matches honest at rtol 1e-10, Q2 and
+    Q3 both pass on the streamed factors, the slow worker did less, and
+    the tamperer is quarantined."""
+    B, n = 5, 32
+    m = _wellcond(n, seed=7, batch=B)
+    honest = outsource_determinant(m, N, rateless=True)
+    assert np.asarray(honest.verified).all()
+
+    cfg = RatelessConfig(
+        request_timeout_s=0.35,
+        probation_cooldown_s=60.0,  # no probes inside this short session
+    )
+    plan = (
+        ServerFault(server=1, kind="delay", delay_s=0.25,
+                    delay_dist="pareto", delay_alpha=2.5),
+        ServerFault(server=2, kind="tamper", mode="block", magnitude=0.5),
+    )
+    client = SPDCClient(rateless=cfg, recover=True)
+    assert client.straggler_deadline is None  # nothing to tune
+    session = client.open_session(m, N, faults=plan)
+    assert session.partitions == cfg.overdecompose * N
+
+    with ThreadPoolTransport() as tp:
+        l, u, rpt = run_rateless(
+            session, tp, client.rateless, client.fleet, faults=session.plan
+        )
+        # the streamed factors pass BOTH Q2 and Q3 — per-strip probes
+        # caught the tampered strips before any downstream strip consumed
+        # them, so no localize→heal cascade is even needed
+        for method in ("q2", "q3"):
+            v = authenticate(
+                jnp.asarray(l), jnp.asarray(u), session.x_aug,
+                num_servers=session.partitions, method=method,
+            )
+            assert bool(np.all(v.ok)), (method, v.residual)
+        session.fleet_report = rpt
+        out = session.collect(
+            (jnp.asarray(l, dtype=session.x_aug.dtype),
+             jnp.asarray(u, dtype=session.x_aug.dtype)),
+            transport=tp,
+        )
+
+    assert np.asarray(out.verified).all()
+    np.testing.assert_allclose(_logabs(out), _logabs(honest), rtol=1e-10)
+
+    workers = rpt.workers
+    tamperer = workers[2]
+    assert tamperer["quarantined"] and tamperer["tampers"] >= 1
+    assert tamperer["completed"] == 0  # nothing it produced was accepted
+    honest_completed = [workers[w]["completed"] for w in (0, 3)]
+    # rateless redistribution: the straggler pulled fewer strips than the
+    # healthy workers absorbed on its behalf
+    assert workers[1]["completed"] < max(honest_completed)
+    total = rpt.num_strips * rpt.lanes
+    assert sum(w["completed"] for w in workers.values()) \
+        + rpt.inline_strips == total
+
+
+def test_rateless_honest_matches_numpy_single_and_batch():
+    m = _wellcond(24, seed=11)
+    res = outsource_determinant(m, N, rateless=True)
+    ws, wl = np.linalg.slogdet(m)
+    assert res.verified and res.det.sign == ws
+    np.testing.assert_allclose(res.det.logabs, wl, rtol=1e-8)
+    assert res.num_servers == N  # fleet size, not strip count
+    assert res.fleet.num_strips == RATELESS_DEFAULT.overdecompose * N
+    assert res.fleet.inline_strips == 0 and res.fleet.retries == 0
+
+    stack = _wellcond(16, seed=13, batch=3)
+    bres = outsource_determinant(stack, N, rateless=True,
+                                 transport="threadpool")
+    assert np.asarray(bres.verified).all()
+    for i in range(3):
+        ws, wl = np.linalg.slogdet(stack[i])
+        assert bres.dets[i].sign == ws
+        np.testing.assert_allclose(bres.dets[i].logabs, wl, rtol=1e-8)
+    assert bres.fleet.lanes == 3  # one lane per batch slice
+
+
+def test_rateless_ignores_round_deadline():
+    """A rateless session has no rounds deadline: a delay_rounds fault far
+    past any classic deadline is NOT converted to a dropout (while the
+    classic path drops it and rejects without recovery)."""
+    m = _wellcond(16, seed=17)
+    fault = ServerFault(server=0, kind="delay", delay_rounds=99)
+    classic = outsource_determinant(m, N, faults=fault, straggler_deadline=1)
+    assert not classic.verified
+    res = outsource_determinant(
+        m, N, faults=fault, straggler_deadline=1, rateless=True
+    )
+    assert res.verified and res.recovery is None
+
+
+def test_rateless_config_resolution_and_validation():
+    assert SPDCClient().fleet is None
+    c = SPDCClient(rateless=True)
+    assert c.rateless == RATELESS_DEFAULT
+    assert isinstance(c.fleet, FleetHealth)
+    with pytest.raises(ValueError, match="rateless"):
+        SPDCClient(rateless="yes")
+    with pytest.raises(ValueError, match="overdecompose"):
+        RatelessConfig(overdecompose=0)
+    with pytest.raises(ValueError, match="ewma_alpha"):
+        RatelessConfig(ewma_alpha=1.5)
+    cfg = SPDC_EDGE_RATELESS
+    assert cfg.rateless and cfg.protocol_kwargs()["rateless"] is True
+
+
+def test_fleet_health_outlives_sessions():
+    """What one session learned rides into the next: the client's
+    FleetHealth keeps its observations across open_session calls."""
+    client = SPDCClient(
+        rateless=RatelessConfig(probation_cooldown_s=60.0), recover=True
+    )
+    m = _wellcond(16, seed=19)
+    fault = ServerFault(server=1, kind="tamper", mode="sign_flip")
+    with ThreadPoolTransport() as tp:
+        out1 = client.open_session(m, N, faults=fault).run(tp)
+        assert out1.verified
+        assert client.fleet.worker(1).quarantined
+        out2 = client.open_session(m, N).run(tp)
+        assert out2.verified
+    # second session never dispatched to the quarantined worker
+    assert out2.fleet.workers[1]["completed"] == 0
+
+
+# ------------------------------------------------- fleet-health unit pieces
+def test_fleet_ewma_and_assignable_ordering():
+    fh = FleetHealth(RatelessConfig(ewma_alpha=0.5))
+    fh.observe_success(0, 1.0)
+    fh.observe_success(0, 0.5)
+    assert fh.worker(0).ewma_latency_s == pytest.approx(0.75)
+    fh.observe_success(1, 0.1)
+    # unknown worker 2 ranks FIRST (optimism), then fastest EWMA
+    assert fh.assignable((0, 1, 2), set(), now=0.0) == [2, 1, 0]
+    # busy workers drop out of the assignable view
+    assert fh.assignable((0, 1, 2), {2}, now=0.0) == [1, 0]
+
+
+def test_fleet_backoff_is_exponential_capped_and_deterministic():
+    cfg = RatelessConfig(backoff_base_s=0.1, backoff_max_s=0.4,
+                         backoff_jitter=0.25, quarantine_after=99)
+    fh = FleetHealth(cfg)
+    pauses = []
+    for _ in range(4):
+        fh.observe_failure(3, now=0.0)
+        pauses.append(fh.worker(3).next_ok_at)
+    for pause, nominal in zip(pauses, (0.1, 0.2, 0.4, 0.4)):
+        assert nominal * 0.75 <= pause <= nominal * 1.25
+    # deterministic: a fresh tracker replays the identical jitter
+    fh2 = FleetHealth(cfg)
+    for k in range(4):
+        fh2.observe_failure(3, now=0.0)
+        assert fh2.worker(3).next_ok_at == pauses[k]
+    # a worker inside its backoff window is not assignable, then is again
+    assert fh.assignable((3,), set(), now=0.0) == []
+    assert fh.assignable((3,), set(), now=1.0) == [3]
+
+
+def test_fleet_quarantine_paths_and_probation():
+    cfg = RatelessConfig(quarantine_after=2, probation_cooldown_s=10.0)
+    fh = FleetHealth(cfg)
+    # path 1: consecutive failures
+    fh.observe_failure(0, now=0.0)
+    assert not fh.worker(0).quarantined
+    fh.observe_failure(0, now=1.0)
+    assert fh.worker(0).quarantined
+    # path 2: ONE tamper is enough
+    fh.observe_tamper(1, now=1.0)
+    assert fh.worker(1).quarantined and fh.worker(1).tampers == 1
+    assert fh.live((0, 1, 2)) == [2]
+    # probation respects the cooldown and the busy set
+    assert fh.probation_due((0, 1, 2), set(), now=5.0) == []
+    assert fh.probation_due((0, 1, 2), set(), now=12.0) == [0, 1]
+    assert fh.probation_due((0, 1, 2), {0}, now=12.0) == [1]
+    # a passed probe re-admits and resets the failure streak
+    fh.readmit(0, now=12.0, latency_s=0.2)
+    w = fh.worker(0)
+    assert not w.quarantined and w.consecutive_failures == 0
+    assert w.probes_passed == 1 and w.quarantine_count == 1
+    # success resets the streak without touching quarantine bookkeeping
+    fh.observe_failure(2, now=0.0)
+    fh.observe_success(2, 0.1)
+    assert fh.worker(2).consecutive_failures == 0
+
+
+def test_fleet_next_wakeup_bounds_the_stall_sleep():
+    cfg = RatelessConfig(backoff_base_s=0.2, backoff_jitter=0.0,
+                         probation_cooldown_s=1.0, quarantine_after=99)
+    fh = FleetHealth(cfg)
+    assert fh.next_wakeup((0, 1), now=0.0) is None  # nothing benched
+    fh.observe_failure(0, now=0.0)  # backoff expires at 0.2
+    fh.observe_tamper(1, now=0.0)  # probation due at 1.0
+    assert fh.next_wakeup((0, 1), now=0.0) == pytest.approx(0.2)
+    assert fh.next_wakeup((0, 1), now=0.5) == pytest.approx(0.5)
+    assert fh.next_wakeup((0, 1), now=2.0) == 0.0
+
+
+# --------------------------------------------------- degradation + probation
+def test_degradation_ladder_completes_inline_when_fleet_is_dark():
+    """Every worker quarantined before the session starts → the client
+    computes every strip itself; the answer is still verified."""
+    client = SPDCClient(rateless=RatelessConfig(probation_cooldown_s=60.0))
+    for wid in range(N):
+        client.fleet.observe_tamper(wid, now=time.monotonic())
+    m = _wellcond(16, seed=23)
+    with ThreadPoolTransport() as tp:
+        out = client.open_session(m, N).run(tp)
+    assert out.verified
+    assert out.fleet.inline_strips == out.fleet.num_strips
+    assert out.fleet.dispatches == 0
+    ws, wl = np.linalg.slogdet(m)
+    assert out.det.sign == ws
+    np.testing.assert_allclose(out.det.logabs, wl, rtol=1e-8)
+
+
+def test_degradation_ladder_when_every_worker_tampers():
+    """All N workers tamper: per-strip probes burn through max_attempts,
+    the whole fleet lands in quarantine, and the ladder's last rung
+    (inline completion) still produces a verified determinant."""
+    cfg = RatelessConfig(max_attempts=2, probation_cooldown_s=60.0)
+    plan = tuple(
+        ServerFault(server=s, kind="tamper", mode="block", magnitude=0.5)
+        for s in range(N)
+    )
+    client = SPDCClient(rateless=cfg, recover=True)
+    m = _wellcond(16, seed=29)
+    with ThreadPoolTransport() as tp:
+        out = client.open_session(m, N, faults=plan).run(tp)
+    assert out.verified
+    assert out.fleet.inline_strips > 0
+    assert out.fleet.tampered_strips >= 1
+    assert all(w["quarantined"] for w in out.fleet.workers.values())
+
+
+def test_probation_probe_readmits_transient_offender():
+    """A worker benched by stale health state earns its way back through
+    the probation probe (a re-issue of an already-verified strip) and is
+    then assigned real work again."""
+    cfg = RatelessConfig(probation_cooldown_s=0.0)
+    client = SPDCClient(rateless=cfg)
+    # bench worker 3 with PRE-SESSION state (transient flake, now healthy)
+    client.fleet.observe_tamper(3, now=time.monotonic() - 1.0)
+    m = _wellcond(24, seed=31, batch=4)
+    with ThreadPoolTransport() as tp:
+        out = client.open_session(m, N).run(tp)
+    assert np.asarray(out.verified).all()
+    assert out.fleet.probes >= 1
+    w3 = out.fleet.workers[3]
+    assert not w3["quarantined"] and w3["probes_passed"] >= 1
+
+
+def test_probation_probe_keeps_persistent_tamperer_benched():
+    """The probe rides the wire as attempt 0, so a persistently tampering
+    worker corrupts the probe too and stays quarantined."""
+    cfg = RatelessConfig(probation_cooldown_s=0.01)
+    plan = ServerFault(server=1, kind="tamper", mode="single", target="u",
+                       magnitude=100.0)
+    client = SPDCClient(rateless=cfg, recover=True)
+    m = _wellcond(24, seed=37, batch=4)
+    with ThreadPoolTransport() as tp:
+        out = client.open_session(m, N, faults=plan).run(tp)
+    assert np.asarray(out.verified).all()
+    w1 = out.fleet.workers[1]
+    assert w1["quarantined"] and w1["probes_passed"] == 0
+    assert w1["tampers"] >= 2  # the original strike plus failed probe(s)
+
+
+def test_rateless_recovery_reroutes_to_live_worker():
+    """collect()-level healing on a rateless session re-streams the strip
+    to a healthy worker chosen by fleet health (tamper=... corrupts the
+    factors AFTER the scheduler, so only recovery can heal them)."""
+    m = _wellcond(16, seed=41)
+    client = SPDCClient(rateless=True, recover=True)
+    client.fleet.observe_tamper(0, now=time.monotonic())
+
+    def corrupt(l, u):
+        u = np.asarray(u).copy()
+        u[3, 3] += 50.0
+        return jnp.asarray(np.asarray(l)), jnp.asarray(u)
+
+    with ThreadPoolTransport() as tp:
+        session = client.open_session(m, N, tamper=corrupt)
+        out = session.run(tp)
+    assert out.verified and out.recovery is not None and out.recovery.ok
+    ws, wl = np.linalg.slogdet(m)
+    np.testing.assert_allclose(out.det.logabs, wl, rtol=1e-8)
+
+
+# ----------------------------------------------------------- gateway thread
+def test_gateway_coalesces_rateless_sweeps():
+    from repro.configs import SPDCGatewayConfig
+    from repro.serve import SPDCGateway
+    from repro.serve.queue import BucketKey
+
+    cfg = SPDCGatewayConfig(
+        name="gw-rateless-test", buckets=(32, 64), max_batch=4,
+        pad_batches=False, spdc=SPDC_EDGE_RATELESS,
+    )
+    gw = SPDCGateway(cfg)
+    mats = [_wellcond(k, seed=200 + k) for k in (20, 30, 32, 25)]
+    rids = [gw.submit(m) for m in mats]
+    gw.drain()
+    for rid, m in zip(rids, mats):
+        r = gw.take(rid)
+        assert r is not None and r.verified
+        ws, wl = np.linalg.slogdet(m)
+        assert r.det.sign == ws
+        np.testing.assert_allclose(r.det.logabs, wl, rtol=1e-8)
+    # rateless is part of the coalescing identity AND the grid rule: a
+    # per-request override must not share the default-config bucket
+    key = gw._key_for(30, {})
+    assert key.rateless and key.pad_to == 32
+    assert key != gw._key_for(30, {"rateless": False})
+    # buckets must divide into F strips, not merely N
+    with pytest.raises(ValueError, match="rateless"):
+        SPDCGateway(SPDCGatewayConfig(buckets=(12,), spdc=SPDC_EDGE_RATELESS))
+    assert "rateless" in BucketKey(pad_to=64, num_servers=4).protocol_kwargs()
+
+
+# ------------------------------------------------------------- chaos matrix
+def _chaos_plans():
+    delay = dict(kind="delay", delay_s=0.15, delay_dist="exponential")
+    pareto = dict(kind="delay", delay_s=0.15, delay_dist="pareto",
+                  delay_alpha=2.0)
+    return {
+        "tamper-pair": (
+            ServerFault(server=0, kind="tamper", mode="block", magnitude=0.4),
+            ServerFault(server=2, kind="tamper", mode="sign_flip"),
+        ),
+        "dropout-delay": (
+            ServerFault(server=1, kind="dropout"),
+            ServerFault(server=3, **delay),
+        ),
+        "pareto-tamper": (
+            ServerFault(server=0, **pareto),
+            ServerFault(server=1, kind="tamper", mode="single", target="l"),
+        ),
+        "exp-exp-dropout": (
+            ServerFault(server=0, **delay),
+            ServerFault(server=1, **delay),
+            ServerFault(server=2, kind="dropout"),
+        ),
+    }
+
+
+@pytest.mark.slow
+@pytest.mark.chaos
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("plan_name", sorted(_chaos_plans()))
+def test_chaos_matrix_rateless_survives_fault_plans(plan_name, seed):
+    """Seeded chaos: every tamper × dropout × delay-distribution plan must
+    end in a verified determinant matching the honest rateless run."""
+    plan = _chaos_plans()[plan_name]
+    B, n = 3, 24
+    m = _wellcond(n, seed=100 + seed, batch=B)
+    honest = outsource_determinant(m, N, rateless=True)
+    cfg = RatelessConfig(request_timeout_s=0.3, probation_cooldown_s=0.2)
+    client = SPDCClient(rateless=cfg, recover=True)
+    with ThreadPoolTransport() as tp:
+        out = client.open_session(m, N, faults=plan).run(tp)
+    assert np.asarray(out.verified).all(), (plan_name, seed)
+    np.testing.assert_allclose(_logabs(out), _logabs(honest), rtol=1e-10)

@@ -254,6 +254,59 @@ def test_server_pool_standby_then_neighbor():
     assert pool.retired == (1, 2, 3)
 
 
+def test_server_pool_standby_exhaustion_batched():
+    """Batched sweep with MORE culprits than spares: the pool hands out
+    both standbys, then falls back to healthy neighbors — every matrix
+    still heals to the honest determinant, and every re-dispatch carries
+    a fresh sub-seed."""
+    B, n = 4, 32
+    m = _wellcond(n, seed=61, batch=B)
+    honest = outsource_determinant(m, N)
+    plan = (
+        ServerFault(server=0, kind="tamper", matrices=(0,)),
+        ServerFault(server=1, kind="dropout", matrices=(1,)),
+        ServerFault(server=2, kind="tamper", mode="sign_flip",
+                    matrices=(2,)),
+        ServerFault(server=3, kind="dropout", matrices=(3,)),
+    )
+    res = outsource_determinant(m, N, faults=plan, recover=True, standby=2)
+    assert np.asarray(res.verified).all()
+    rep = res.recovery
+    assert rep.ok and rep.standby_used == 2  # spares genuinely exhausted
+    assert rep.servers_replaced == (0, 1, 2, 3)
+    repl = [e.replacement for e in rep.events]
+    assert repl[:2] == [N, N + 1]  # the provisioned standbys, in order
+    assert all(r < N for r in repl[2:])  # then healthy-neighbor fallback
+    for e in rep.events:
+        assert e.replacement != e.server
+    subseeds = [e.subseed for e in rep.events]
+    assert len(set(subseeds)) == len(subseeds)
+    for i in range(B):
+        assert res.dets[i].sign == honest.dets[i].sign
+        np.testing.assert_allclose(
+            res.dets[i].logabs, honest.dets[i].logabs, rtol=1e-10
+        )
+
+
+def test_standby_exhaustion_cascade_fresh_subseed_per_attempt():
+    """An in-band cascade with ONE spare: after the spare is spent the
+    remaining rounds ride neighbors, and the sub-seed is fresh on every
+    event — re-dispatches of different rounds never share a channel key."""
+    n = 32
+    m = _wellcond(n, seed=67)
+    honest = outsource_determinant(m, N)
+    fault = ServerFault(server=1, in_band=True, mode="block", magnitude=0.3)
+    res = outsource_determinant(m, N, faults=fault, recover=True, standby=1)
+    assert res.verified and res.recovery.ok
+    assert res.recovery.rounds >= 2  # genuinely cascaded past the spare
+    assert res.recovery.standby_used == 1
+    repl = [e.replacement for e in res.recovery.events]
+    assert repl[0] == N and any(r < N for r in repl[1:])
+    subseeds = [e.subseed for e in res.recovery.events]
+    assert len(set(subseeds)) == len(subseeds)
+    np.testing.assert_allclose(res.det.logabs, honest.det.logabs, rtol=1e-10)
+
+
 def test_dispatch_subseed_is_fresh_per_attempt():
     d = b"\x01" * 32
     s1 = dispatch_subseed(d, 2, 1)
