@@ -33,6 +33,17 @@ shape must stay within `--factor` of the baseline's.
     # within --factor of the committed baseline's rateless_straggle rate
     python benchmarks/check_regression.py BENCH_ci.json BENCH_5.json \
         --suite rateless --n 64 --servers 4 --factor 2.0
+    # sockets guard (rows from the `sockets` suite, BENCH_6): the socket
+    # transport (real worker daemons, wire frames over UDS) must stay
+    # within --socket-factor of the fresh inline rate — the "message
+    # transports within 2-3x of inline at n >= 1024" claim of DESIGN.md
+    # §9; pipelined sessions must never lose to the blocking loop on the
+    # same warm daemons (--overlap-floor); every leg must verify; and the
+    # committed baseline floors the absolute socket rate at --factor when
+    # the shapes match (smoke runs a smaller n, so the floor is skipped
+    # there, same as the rateless guard)
+    python benchmarks/check_regression.py BENCH_ci.json BENCH_6.json \
+        --suite sockets --n 1024 --servers 4 --factor 2.0
 """
 
 from __future__ import annotations
@@ -218,6 +229,127 @@ def check_rateless(
     return ok and good
 
 
+def check_sockets(
+    fresh_rows: list[dict],
+    base_rows: list[dict],
+    n: int,
+    servers: int,
+    socket_factor: float,
+    overlap_floor: float,
+    factor: float,
+) -> bool:
+    """The sockets suite's acceptance claims (DESIGN.md §9).
+
+    Ratios are taken on the FRESH run (inline and socket share one
+    process and one machine, so the ratio is noise-immune even when the
+    absolute rates are not): the socket transport — real worker daemons,
+    wire-codec frames on a UDS — stays within ``socket_factor`` of the
+    fused inline rate at its best sustained mode, which is the PIPELINED
+    loop: the async-overlap redesign (`run_pipelined(depth=2)`, PMOP of
+    batch k+1 overlapping wire time of batch k) is exactly the mechanism
+    that buys the within-3x claim, so the guard measures the transport
+    as the API means it to be driven (the blocking single-session rate
+    is reported alongside, not guarded); pipelined sessions sustain at
+    least ``overlap_floor`` x the blocking sequential loop on the SAME
+    warm daemons — the redesign's whole point is that overlap is free,
+    so a pipelined loss is a regression; and every leg verifies. The
+    COMMITTED baseline must hold the sharp within-3x claim at its own
+    shape (it is a deterministic artifact, immune to runner noise), and
+    floors the fresh absolute socket rate at ``factor`` x when the
+    fresh shapes match the committed ones (the smoke leg shrinks n and
+    the batch, so cross-shape floors would be noise, not a guard —
+    skipped, same as the rateless guard).
+    """
+    SOCKET_MODES = ("socket", "socket_seq", "socket_pipelined")
+
+    def rate(rows, *modes):
+        return best_dets_per_sec(
+            rows, n, servers, suite="sockets", modes=modes
+        )
+
+    ok = True
+    s = rate(fresh_rows, *SOCKET_MODES)
+    i = rate(fresh_rows, "inline")
+    r = s / i
+    good = r >= 1.0 / socket_factor
+    print(
+        f"sockets[fresh] n={n} N={servers}: socket {s:.1f} vs inline "
+        f"{i:.1f} dets/sec = {r:.3f}x (floor {1.0 / socket_factor:.3f} at "
+        f"{socket_factor}x) -> {'OK' if good else 'FAIL'}"
+    )
+    ok = ok and good
+    pipe = rate(fresh_rows, "socket_pipelined")
+    seq = rate(fresh_rows, "socket_seq")
+    print(f"sockets[fresh] best socket mode rate {s:.1f} "
+          f"(blocking {seq:.1f}, pipelined {pipe:.1f})")
+    good = pipe >= seq * overlap_floor
+    print(
+        f"sockets[overlap] n={n} N={servers}: pipelined {pipe:.1f} vs "
+        f"blocking {seq:.1f} dets/sec = {pipe / seq:.2f}x (floor "
+        f"{overlap_floor}x) -> {'OK' if good else 'FAIL'}"
+    )
+    ok = ok and good
+    unverified = [
+        r2["name"] for r2 in fresh_rows
+        if r2.get("suite") == "sockets" and r2.get("all_verified") is False
+    ]
+    if unverified:
+        print(f"sockets unverified legs: {unverified} -> FAIL")
+        ok = False
+    else:
+        print("sockets all legs 100% verified -> OK")
+    # committed claim, at the baseline's own shapes: the within-3x claim
+    # is asymptotic in n (wire is n², compute is n³), so the sharp floor
+    # binds at the LARGEST committed n; smaller legs are reported so the
+    # trajectory stays visible but a small-n ratio is not a failure
+    base_pairs = sorted({
+        (r2["n"], r2["num_servers"]) for r2 in base_rows
+        if r2.get("suite") == "sockets" and r2.get("mode") in SOCKET_MODES
+    })
+    for bn, bN in base_pairs:
+        bs = best_dets_per_sec(base_rows, bn, bN, suite="sockets",
+                               modes=SOCKET_MODES)
+        bi = best_dets_per_sec(base_rows, bn, bN, suite="sockets",
+                               modes=("inline",))
+        br = bs / bi
+        binding = bn == base_pairs[-1][0]
+        good = br >= 1.0 / 3.0
+        print(
+            f"sockets[committed] n={bn} N={bN}: socket {bs:.1f} vs inline "
+            f"{bi:.1f} dets/sec = {br:.3f}x "
+            + (f"(sharp floor 0.333) -> {'OK' if good else 'FAIL'}"
+               if binding else "(informational leg)")
+        )
+        if binding:
+            ok = ok and good
+    fresh_batch = [
+        r2.get("batch") for r2 in fresh_rows
+        if r2.get("suite") == "sockets" and r2.get("mode") in SOCKET_MODES
+        and r2.get("n") == n and r2.get("num_servers") == servers
+    ]
+    base_match = [
+        float(r2["dets_per_sec"]) for r2 in base_rows
+        if r2.get("suite") == "sockets" and r2.get("mode") in SOCKET_MODES
+        and r2.get("n") == n and r2.get("num_servers") == servers
+        and r2.get("batch") in fresh_batch
+    ]
+    if not base_match:
+        print(
+            f"sockets[baseline] n={n} N={servers}: no baseline socket row "
+            f"at batch={fresh_batch} — smoke shapes differ from the "
+            f"committed full run; skipping absolute floor"
+        )
+        return ok
+    base_s = max(base_match)
+    good = s >= base_s / factor
+    print(
+        f"sockets[baseline] n={n} N={servers}: fresh {s:.1f} vs baseline "
+        f"{base_s:.1f} dets/sec (floor {base_s / factor:.1f} at {factor}x) "
+        f"-> {'OK' if good else 'REGRESSION'}"
+    )
+    return ok and good
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("fresh", type=Path, help="freshly measured BENCH json")
@@ -233,13 +365,15 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument(
         "--suite",
         choices=("throughput", "gateway", "precision", "transports",
-                 "rateless"),
+                 "rateless", "sockets"),
         default="throughput",
         help="which suite's rows to guard (gateway also checks the "
         "gateway-beats-loop acceptance claim on the fresh run; precision "
         "checks the f32-speedup and 100%%-verified claims; transports "
         "guards the role-split inline fast path; rateless checks the "
-        "straggle-speedup, honest-within-noise, and all-verified claims)",
+        "straggle-speedup, honest-within-noise, and all-verified claims; "
+        "sockets checks the socket-within-socket-factor-of-inline, "
+        "pipelined-never-loses, and all-verified claims)",
     )
     ap.add_argument(
         "--f32-speedup",
@@ -262,10 +396,31 @@ def main(argv: list[str] | None = None) -> int:
         "slowdown of the streaming scheduler vs the fused classic "
         "session (per-strip dispatch overhead, see check_rateless)",
     )
+    ap.add_argument(
+        "--socket-factor",
+        type=float,
+        default=3.0,
+        help="sockets suite: maximum tolerated fresh socket-vs-inline "
+        "slowdown (the DESIGN.md §9 within-2-3x claim; the committed "
+        "baseline is always held to the sharp 3x)",
+    )
+    ap.add_argument(
+        "--overlap-floor",
+        type=float,
+        default=0.9,
+        help="sockets suite: minimum fresh pipelined/blocking dets/sec "
+        "ratio on the same warm daemons (0.9 tolerates runner noise; "
+        "the overlap must never be a real loss)",
+    )
     args = ap.parse_args(argv)
 
     fresh = json.loads(args.fresh.read_text())
     base = json.loads(args.baseline.read_text())
+    if args.suite == "sockets":
+        ok = check_sockets(fresh["rows"], base["rows"], args.n,
+                           args.servers, args.socket_factor,
+                           args.overlap_floor, args.factor)
+        return 0 if ok else 1
     if args.suite == "rateless":
         ok = check_rateless(fresh["rows"], base["rows"], args.n,
                             args.servers, args.straggle_speedup, args.factor,

@@ -73,7 +73,7 @@ def main():
         faults=ServerFault(server=culprit_server, kind="tamper"),
         recover=True, standby=1,
     )
-    rep = healed.recovery
+    rep = healed.report.recovery
     print(f"  tampered server {culprit_server}: localized culprit="
           f"{rep.events[0].server}, shard re-dispatched to standby "
           f"server {rep.events[0].replacement} "
@@ -91,7 +91,7 @@ def main():
                            delay_rounds=9),
         straggler_deadline=4, recover=True, standby=1,
     )
-    assert slow.verified and slow.recovery.ok
+    assert slow.verified and slow.report.recovery.ok
     print(f"  straggler (9 rounds late, deadline 4): shard re-dispatched, "
           f"verified={slow.verified}")
 

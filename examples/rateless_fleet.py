@@ -56,12 +56,12 @@ def main():
         # not cold-start compilation
         honest_res = SPDCClient(rateless=cfg).open_session(stack, N).run(tp)
         honest_done = [w["completed"]
-                       for w in honest_res.fleet.workers.values()]
+                       for w in honest_res.report.fleet.workers.values()]
         print(f"warmup (honest fleet): strips per server = "
               f"{sorted(honest_done, reverse=True)}")
         res = client.open_session(stack, N, faults=plan).run(tp)
 
-    fleet = res.fleet
+    fleet = res.report.fleet
     print(f"\n  verified          = {np.asarray(res.verified).tolist()}")
     print(f"  strips x lanes    = {fleet.num_strips} x {fleet.lanes} "
           f"({fleet.dispatches} dispatches, {fleet.retries} retries, "

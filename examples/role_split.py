@@ -73,7 +73,7 @@ def main():
             m, args.servers,
             faults=ServerFault(server=1, mode="block", magnitude=0.3),
         ).run(tp)
-        rep = bad.recovery
+        rep = bad.report.recovery
         assert bad.verified and rep.ok
         assert np.isclose(bad.det.logabs, honest.det.logabs, rtol=1e-10)
         print(f"  {tp.name} transport: worker 1 tampered in-band → localized, "

@@ -54,9 +54,9 @@ from repro.core.seed import Seed, seedgen, seedgen_batch
 from repro.core.verify import authenticate
 
 from .messages import ShardResult, ShardTask
-from .transport import resolve_transport
+from .transport import Transport, TransportConfig, resolve_transport
 
-__all__ = ["SPDCClient", "Session", "BoundaryViolation"]
+__all__ = ["SPDCClient", "Session", "PendingResult", "BoundaryViolation"]
 
 
 class BoundaryViolation(AssertionError):
@@ -130,6 +130,12 @@ class SPDCClient:
     #: F = overdecompose·N strips streamed to whichever workers are free;
     #: straggler_deadline is ignored (there is no deadline to tune).
     rateless: Any = False
+    #: default execution boundary for this client's sessions: a name, a
+    #: TransportConfig, or a Transport instance (resolve_transport). A
+    #: config is BUILT here and OWNED — `close()` (or the client's
+    #: context manager) tears it down deterministically; names resolve to
+    #: the process-shared instance and instances stay caller-owned.
+    transport: Any = None
 
     def __post_init__(self):
         from repro.configs.spdc import RATELESS_DEFAULT, RatelessConfig
@@ -137,6 +143,15 @@ class SPDCClient:
             _resolve_growth_controls, resolve_dtype,
         )
 
+        self._owns_transport = False
+        if isinstance(self.transport, TransportConfig):
+            self.transport = self.transport.build()
+            self._owns_transport = True
+        elif self.transport is not None and not isinstance(
+            self.transport, Transport
+        ):
+            # a name string — shared instance, not owned
+            self.transport = resolve_transport(self.transport)
         self.dtype = resolve_dtype(self.dtype)
         self.growth_safe, self.equilibrate = _resolve_growth_controls(
             self.dtype, self.growth_safe, self.equilibrate,
@@ -166,6 +181,54 @@ class SPDCClient:
             return num_servers
         return num_servers * self.rateless.overdecompose
 
+    # -- transport lifecycle -------------------------------------------------
+
+    def close(self) -> None:
+        """Close the transport this client OWNS (built from a
+        TransportConfig). Shared (name-resolved) and caller-provided
+        instances are left alone — their owner closes them. Idempotent."""
+        if self._owns_transport and self.transport is not None:
+            self.transport.close()
+
+    def __enter__(self) -> "SPDCClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- async-overlap pipeline (DESIGN.md §9) --------------------------------
+
+    def run_pipelined(self, inputs, num_servers: int, *, depth: int = 2,
+                      transport=None, faults=None, tamper=None) -> list:
+        """Run many independent protocol inputs with PMOP/wire overlap.
+
+        The sequential loop `[open_session(m).run() for m in inputs]`
+        leaves the wire idle during every PMOP and the client idle during
+        every wire round trip. This pipeline keeps up to `depth` sessions
+        in flight: batch k's ShardTasks ride the transport (a
+        `Session.start` Future) WHILE batch k+1's cipher/border runs on
+        the client — on message transports the client-side prepare cost
+        disappears into wire time. Results come back in input order, each
+        collected (authenticate → decipher) on this thread as its dispatch
+        resolves; `inputs` elements are anything `open_session` accepts.
+
+        depth=1 degrades to the sequential loop; depth beyond the
+        transport's driver width (4) adds nothing.
+        """
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        results: list = []
+        pending: list[PendingResult] = []
+        for m in inputs:
+            if len(pending) >= depth:
+                results.append(pending.pop(0).result())
+            session = self.open_session(m, num_servers, faults=faults,
+                                        tamper=tamper)
+            pending.append(session.start(transport))
+        while pending:
+            results.append(pending.pop(0).result())
+        return results
+
     # -- PMOP: everything before any server is involved ---------------------
 
     def open_session(
@@ -186,21 +249,26 @@ class SPDCClient:
         fused transports, worker-side for message transports); tamper is
         a client-side hook on the assembled factors.
         """
+        t0 = time.perf_counter()
         plan = resolve_delays(
             normalize_plan(faults),
             # rateless has no rounds deadline — slow servers just do less
             None if self.rateless is not None else self.straggler_deadline,
         )
         if isinstance(m, (list, tuple)):
-            return self._open_mixed(m, num_servers, plan, tamper, pad_to)
-        if pad_to is not None:
-            raise ValueError("pad_to applies to mixed-size lists only")
-        m = jnp.asarray(m, dtype=self.dtype)
-        if m.ndim == 3:
-            return self._open_batch(m, num_servers, plan, tamper)
-        if m.ndim != 2 or m.shape[0] != m.shape[1]:
-            raise ValueError(f"expected a square matrix, got {m.shape}")
-        return self._open_single(m, num_servers, plan, tamper)
+            sess = self._open_mixed(m, num_servers, plan, tamper, pad_to)
+        else:
+            if pad_to is not None:
+                raise ValueError("pad_to applies to mixed-size lists only")
+            m = jnp.asarray(m, dtype=self.dtype)
+            if m.ndim == 3:
+                sess = self._open_batch(m, num_servers, plan, tamper)
+            elif m.ndim != 2 or m.shape[0] != m.shape[1]:
+                raise ValueError(f"expected a square matrix, got {m.shape}")
+            else:
+                sess = self._open_single(m, num_servers, plan, tamper)
+        sess._pmop_s = time.perf_counter() - t0
+        return sess
 
     def _open_single(self, m, num_servers, plan, tamper) -> "Session":
         n = int(m.shape[0])
@@ -365,6 +433,10 @@ class Session:
     fleet_report: Any = None
     _m_host: np.ndarray | None = None
     _m_hosts: list[np.ndarray] = field(default_factory=list)
+    # phase timings feeding SPDCReport.timings (client.open_session stamps
+    # _pmop_s; run/start stamp _dispatch_s; collect adds its own)
+    _pmop_s: float = 0.0
+    _dispatch_s: float = 0.0
 
     def __post_init__(self):
         from repro.distrib.recovery import dispatch_subseed
@@ -510,15 +582,24 @@ class Session:
 
     _style: str = "nserver"
 
+    def _resolve_transport(self, transport):
+        """None falls back to the client's configured transport (which
+        itself defaults to inline)."""
+        if transport is None:
+            transport = self.client.transport
+        return resolve_transport(transport)
+
     def run(self, transport=None):
-        """Dispatch + collect through a transport (default inline).
+        """Dispatch + collect through a transport (default: the client's
+        configured one, else inline).
 
         Rateless sessions always take the streaming scheduler — the
         fused sweep has no per-strip dispatch for health tracking to
         steer (distrib.rateless; DESIGN.md §8).
         """
-        transport = resolve_transport(transport)
+        transport = self._resolve_transport(transport)
         self._style = transport.style
+        t0 = time.perf_counter()
         if self.num_strips is not None:
             from repro.distrib.rateless import run_rateless
 
@@ -536,7 +617,66 @@ class Session:
         else:
             results = transport.factor(self.tasks(), faults=self.plan)
             l, u = self._assemble(results)
+        self._dispatch_s = time.perf_counter() - t0
         return self.collect((l, u), transport=transport)
+
+    def start(self, transport=None) -> "PendingResult":
+        """Nonblocking dispatch: ship this session's Parallelize stage
+        and return a PendingResult whose `.result()` runs the RRVP tail.
+
+        On message transports the sweep rides the transport's driver
+        threads (`Transport.driver_submit`), so the caller's NEXT
+        `open_session` — the client PMOP for batch k+1 — overlaps this
+        session's wire time; `SPDCClient.run_pipelined` is the loop
+        built on exactly this. Fused transports complete the future
+        synchronously — jax's own async dispatch already provides the
+        overlap there.
+        """
+        transport = self._resolve_transport(transport)
+        self._style = transport.style
+        t0 = time.perf_counter()
+        if self.num_strips is not None:
+            from concurrent.futures import Future as _Future  # noqa: F401
+            from repro.distrib.rateless import run_rateless
+
+            self._style = "nserver"
+
+            def drive_rateless():
+                l_host, u_host, rpt = run_rateless(
+                    self, transport, self.client.rateless,
+                    self.client.fleet, faults=self.plan,
+                )
+                self.fleet_report = rpt
+                dt = self.x_aug.dtype
+                out = (jnp.asarray(l_host, dtype=dt),
+                       jnp.asarray(u_host, dtype=dt))
+                self._dispatch_s = time.perf_counter() - t0
+                return out
+
+            future = transport.driver_submit(drive_rateless)
+        elif transport.fused:
+            from concurrent.futures import Future as _Future
+
+            future = _Future()
+            try:
+                future.set_result(
+                    transport.sweep(self.x_aug, self.num_servers,
+                                    faults=self.plan)
+                )
+                self._dispatch_s = time.perf_counter() - t0
+            except Exception as e:  # noqa: BLE001 — future carries it
+                future.set_exception(e)
+        else:
+            tasks = self.tasks()  # boundary-checked on THIS thread
+
+            def drive_factor():
+                out = transport.factor(tasks, self.plan)
+                self._dispatch_s = time.perf_counter() - t0
+                return out
+
+            future = transport.driver_submit(drive_factor)
+        return PendingResult(session=self, transport=transport,
+                             future=future)
 
     def _assemble(self, results) -> tuple[jnp.ndarray, jnp.ndarray]:
         """Stack per-partition strips into full (…, n', n') factors."""
@@ -566,11 +706,13 @@ class Session:
         SPDCBatchResult exactly as the facades always have.
         """
         from repro.core.protocol import (
-            SPDCBatchResult, SPDCResult, _probe_rng,
+            SPDCBatchResult, SPDCReport, SPDCResult, SessionTimings,
+            _probe_rng,
         )
         from repro.distrib.recovery import recover_lu
 
-        transport = resolve_transport(transport)
+        t_collect = time.perf_counter()
+        transport = self._resolve_transport(transport)
         self._style = transport.style
         if (isinstance(results, tuple) and len(results) == 2
                 and not isinstance(results[0], ShardResult)):
@@ -619,6 +761,21 @@ class Session:
             None if transport.style == "pipeline"
             else nserver_comm_model(self.n_aug, self.partitions)
         )
+
+        def build_report() -> SPDCReport:
+            collect_s = time.perf_counter() - t_collect
+            return SPDCReport(
+                verdict=verdict,
+                recovery=report,
+                fleet=self.fleet_report,
+                timings=SessionTimings(
+                    pmop_s=self._pmop_s,
+                    dispatch_s=self._dispatch_s,
+                    collect_s=collect_s,
+                    total_s=self._pmop_s + self._dispatch_s + collect_s,
+                ),
+            )
+
         if self.kind == "single":
             det = decipher(self.seeds[0], self.metas[0], l, u,
                            faithful=self.client.faithful_sign,
@@ -632,9 +789,7 @@ class Session:
                 comm=comm,
                 padding=self.padding,
                 num_servers=self.num_servers,
-                verdict=verdict,
-                recovery=report,
-                fleet=self.fleet_report,
+                report=build_report(),
             )
         dets = decipher_batch(self.seeds, self.metas, l, u,
                               faithful=self.client.faithful_sign,
@@ -648,9 +803,32 @@ class Session:
             comm=comm,
             padding=self.padding,
             num_servers=self.num_servers,
-            verdict=verdict,
-            recovery=report,
+            report=build_report(),
             paddings=self.paddings,
             pad_to=self.pad_to,
-            fleet=self.fleet_report,
         )
+
+
+@dataclass
+class PendingResult:
+    """A `Session.start`ed protocol run awaiting its RRVP tail.
+
+    `result(timeout=)` blocks on the in-flight Parallelize stage (the
+    timeout is a client-side wait — expiry raises TransportTimeout and
+    the dispatch keeps running; call `result` again to re-wait), then
+    runs `Session.collect` on the CALLING thread: authenticate, recovery,
+    and decipher touch session secrets and stay on the client thread by
+    construction — only the wire wait is asynchronous.
+    """
+
+    session: Session
+    transport: Any
+    future: Any
+
+    def done(self) -> bool:
+        """True once the dispatch resolved (collect still pending)."""
+        return self.future.done()
+
+    def result(self, timeout: float | None = None):
+        out = self.transport.result(self.future, timeout)
+        return self.session.collect(out, transport=self.transport)

@@ -18,10 +18,28 @@ messages; they differ in what the wire physically is:
     scheduler-visible boundary.
   * ``MultiprocessTransport``— spawned worker PROCESSES; every message
     crosses the boundary as `to_bytes()` frames over an OS pipe and is
-    decoded with `from_bytes()` on the far side. This is the transport
-    the wire format exists for: nothing but bytes connects client and
-    server, so whatever the codec does not carry, the server provably
-    does not have.
+    decoded with `from_bytes()` on the far side.
+  * ``SocketTransport``      — persistent worker DAEMONS reached over
+    TCP or Unix-domain sockets (socket_transport.py): length-prefixed
+    wire-codec frames, a versioned HELLO handshake, and warm worker
+    processes whose jit caches survive across sessions and client
+    restarts (launch/serve_worker.py). The closest shape to the paper's
+    real deployment.
+
+Dispatch surface (the async-overlap redesign, DESIGN.md §9):
+
+  * ``start(task, worker_id) -> Future``  — the canonical NONBLOCKING
+    primitive: ship one ShardTask to one worker, return immediately.
+    The rateless scheduler streams strips with it, and `Session.start`
+    rides it so the client's PMOP for batch k+1 overlaps the wire time
+    of batch k.
+  * ``result(future, timeout)``           — resolve a started dispatch,
+    mapping a client-side wait expiry to the typed `TransportTimeout`.
+  * ``submit(task, worker_id)``           — the BLOCKING facade:
+    ``result(start(...))``. Kept for callers that want one strip now.
+  * ``factor(tasks)`` / ``factor_async(tasks)`` — one session's whole
+    relay sweep, blocking / as a Future (the unit `Session.start`
+    pipelines).
 
 One-way model: for the sequential (message) transports the relay is run
 by the transport — task i executes only after i−1's result, and its
@@ -30,20 +48,28 @@ content of the paper's single S_{i-1} → S_i send. No server ever
 receives anything from downstream, and the client never ships plaintext
 or key material (messages.ShardTask).
 
+Lifecycle: every transport is a context manager with an idempotent
+``close()`` and a ``closed`` flag; dispatching on a closed transport
+raises TransportError. Long-lived role objects (SPDCClient, the
+gateway) BUILD and OWN their transports from a `TransportConfig` and
+close them deterministically; the one-shot facades
+(`outsource_determinant(transport=...)`) resolve strings and configs to
+process-wide SHARED instances so repeated calls — and every gateway
+flush — reuse one warm pool instead of respawning workers per call;
+`close_all()` runs at interpreter exit.
+
 Fault simulation: ``factor(tasks, faults=plan)`` plays core.faults
 misbehavior on the matching workers (a FaultPlanFrame control message on
-the multiprocess transport). Faults bind to initial dispatches; repairs
-run honestly on replacement workers (api.server docstring).
-
-Process-wide shared instances (`resolve_transport("threadpool")`, …) are
-cached so repeated protocol calls — and every gateway flush — reuse one
-warm pool instead of respawning workers per call; `close_all()` runs at
-interpreter exit.
+the message transports). Faults bind to initial dispatches; repairs run
+honestly on replacement workers (api.server docstring).
 """
 from __future__ import annotations
 
 import atexit
 import threading
+from concurrent.futures import Future
+from concurrent.futures import TimeoutError as _FutureTimeout
+from dataclasses import dataclass
 from functools import partial
 
 import jax
@@ -56,9 +82,11 @@ from .server import EdgeServer
 
 __all__ = [
     "Transport",
+    "TransportConfig",
     "TransportError",
     "TransportTimeout",
     "TransportWorkerDied",
+    "TransportProtocolError",
     "InlineTransport",
     "ShardMapTransport",
     "ThreadPoolTransport",
@@ -69,23 +97,34 @@ __all__ = [
 
 
 class TransportError(RuntimeError):
-    """A worker died, timed out, or replied with a malformed frame."""
+    """A worker died, timed out, replied with a malformed frame, or the
+    transport was used after close()."""
 
 
 class TransportTimeout(TransportError):
     """A per-request wall-clock deadline expired before the worker
-    replied. On the multiprocess transport the worker is killed (a reply
-    arriving after the deadline would desynchronize the lock-step pipe)
-    and respawned lazily on the next dispatch; the caller treats the
+    replied. On the process-backed transports the worker (multiprocess)
+    or its connection (socket) is killed — a reply arriving after the
+    deadline would desynchronize the lock-step channel — and respawned /
+    reconnected lazily on the next dispatch; the caller treats the
     request as a dropout — zero strips, localize, re-dispatch — exactly
     the rounds-deadline straggler policy (core.faults.resolve_delays)."""
 
 
 class TransportWorkerDied(TransportError):
-    """The worker process/thread went away mid-request (crash, kill,
-    broken pipe). Unlike a timeout the worker did not merely straggle —
-    transports respawn it and retry the request once before surfacing
-    the error; the fleet-health layer counts it as a failure either way."""
+    """The worker process/thread/connection went away mid-request
+    (crash, kill, broken pipe, dropped socket). Unlike a timeout the
+    worker did not merely straggle — transports respawn or reconnect it
+    and retry the request once before surfacing the error; the
+    fleet-health layer counts it as a failure either way."""
+
+
+class TransportProtocolError(TransportError):
+    """The far side violated the framing or handshake protocol: a
+    truncated or oversized frame, a non-wire-codec reply, or a HELLO
+    carrying an incompatible protocol/wire version. Unlike a death this
+    is not retried — a peer speaking the wrong protocol will speak it
+    again — the connection is dropped and the error surfaces typed."""
 
 
 @partial(jax.jit, static_argnames=("num_servers", "faults"))
@@ -95,6 +134,30 @@ def _lu_sweep(x_aug, *, num_servers, faults=()):
     exists to keep (DESIGN.md §3)."""
     l, u, _ = lu_nserver(x_aug, num_servers, faults=faults)
     return l, u
+
+
+def serve_frame(edge: EdgeServer, state: dict, data: bytes) -> bytes:
+    """One worker-side request → reply step, shared by every byte-framed
+    worker loop (the multiprocess pipe worker and the socket daemon).
+
+    Strict request-reply: EVERY frame gets exactly one reply — ShardTask
+    → ShardResult bytes, FaultPlanFrame → b"ACK", anything that fails
+    (including a frame that does not decode) → an ERR frame. One reply
+    per request keeps the channel in lock-step, so a failure can never
+    desynchronize later requests' replies. `state` holds the channel's
+    fault plan (simulation control; per-pipe on multiprocess, per-
+    connection on sockets).
+    """
+    from .wire import decode_message
+
+    try:  # noqa: SIM105 — report every failure, don't die silently
+        msg = decode_message(data)
+        if isinstance(msg, FaultPlanFrame):
+            state["plan"] = msg.plan
+            return b"ACK"
+        return edge.run(msg, faults=state.get("plan", ())).to_bytes()
+    except Exception as e:  # noqa: BLE001
+        return b"ERR:" + repr(e).encode()
 
 
 class Transport:
@@ -110,33 +173,107 @@ class Transport:
     fused = False
     style = "nserver"
 
+    _closed = False
+    _driver_pool = None
+    _driver_lock = threading.Lock()
+
+    @property
+    def closed(self) -> bool:
+        """True once close() ran; a closed transport refuses dispatch."""
+        return self._closed
+
+    def _ensure_open(self) -> None:
+        if self._closed:
+            raise TransportError(
+                f"transport {self.name!r} is closed; build or resolve a "
+                "fresh one"
+            )
+
+    # -- whole-sweep surface -------------------------------------------------
+
     def factor(self, tasks, faults=()) -> list[ShardResult]:
         """Run one session's initial ShardTasks (the full sweep)."""
         raise NotImplementedError
+
+    def driver_submit(self, fn, *args) -> Future:
+        """Run `fn(*args)` on this transport's driver threads — the
+        mechanism behind `factor_async` and `Session.start`. 4 drivers
+        bound the pipeline depth, not the worker parallelism."""
+        self._ensure_open()
+        with Transport._driver_lock:
+            if self._driver_pool is None:
+                from concurrent.futures import ThreadPoolExecutor
+
+                # instance attribute (class default is None)
+                self._driver_pool = ThreadPoolExecutor(
+                    max_workers=4, thread_name_prefix=f"spdc-{self.name}-drv"
+                )
+        return self._driver_pool.submit(fn, *args)
+
+    def factor_async(self, tasks, faults=()) -> Future:
+        """`factor` as a Future: the whole relay sweep runs on a driver
+        thread so the caller — `Session.start` — can overlap the client
+        PMOP for the NEXT session with this one's wire time. The relay
+        inside stays strictly sequential (the one-way chain is a data
+        dependency); only the session boundary is asynchronous."""
+        return self.driver_submit(self.factor, tasks, faults)
 
     def repair(self, task: ShardTask, *, replacement: int) -> ShardResult:
         """Run one verification-driven re-dispatch on `replacement`."""
         raise NotImplementedError
 
-    def submit(self, task: ShardTask, worker_id: int, *, faults=(),
-               timeout: float | None = None):
-        """Async single-task dispatch → `concurrent.futures.Future`
+    # -- per-task surface (the async-overlap redesign) -----------------------
+
+    def start(self, task: ShardTask, worker_id: int, *, faults=(),
+              timeout: float | None = None) -> Future:
+        """Nonblocking single-task dispatch → `concurrent.futures.Future`
         resolving to a ShardResult (or raising a TransportError). The
-        rateless scheduler's surface: it streams tasks to whichever
-        workers are free instead of walking the fixed relay order.
-        `timeout` bounds the request where the transport can enforce one
-        (multiprocess kills the worker); where it cannot (a thread has no
-        preemption), the caller enforces its own wait and the late future
-        becomes a zombie — discarded on arrival, the worker busy until it
-        really returns. Fused transports don't have per-task workers;
-        they raise."""
+        canonical async primitive: the rateless scheduler streams tasks
+        to whichever workers are free with it, and `submit` is its
+        blocking facade. `timeout` bounds the request where the transport
+        can enforce one (multiprocess kills the worker, socket drops the
+        connection); where it cannot (a thread has no preemption), the
+        caller enforces its own wait and the late future becomes a
+        zombie — discarded on arrival, the worker busy until it really
+        returns. Fused transports don't have per-task workers; they
+        raise."""
         raise NotImplementedError(
-            f"transport {self.name!r} has no per-task submit surface "
+            f"transport {self.name!r} has no per-task dispatch surface "
             "(fused transports run the sweep as one program)"
         )
 
-    def close(self) -> None:  # noqa: B027 — optional hook
-        """Release workers/pools; shared instances are closed at exit."""
+    def result(self, future: Future, timeout: float | None = None
+               ) -> ShardResult:
+        """Resolve a `start`ed dispatch. `timeout` is a CLIENT-side wait
+        bound: expiry raises the typed TransportTimeout but does not kill
+        the worker (pass timeout= to `start` for an enforced deadline);
+        the future keeps running and may be resolved again later."""
+        try:
+            return future.result(timeout)
+        except _FutureTimeout as e:
+            raise TransportTimeout(
+                f"dispatch did not resolve within the {timeout}s "
+                "client-side wait (the worker-side request may still be "
+                "running; start(timeout=) enforces a worker deadline)"
+            ) from e
+
+    def submit(self, task: ShardTask, worker_id: int, *, faults=(),
+               timeout: float | None = None) -> ShardResult:
+        """Blocking single-task facade: `result(start(...))`."""
+        return self.result(
+            self.start(task, worker_id, faults=faults, timeout=timeout)
+        )
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def close(self) -> None:
+        """Release workers/pools; idempotent. Subclasses extend this and
+        MUST call super().close() so `closed` flips and the driver pool
+        shuts down. Shared instances are closed at interpreter exit."""
+        self._closed = True
+        pool, self._driver_pool = self._driver_pool, None
+        if pool is not None:
+            pool.shutdown(wait=False)
 
     def __enter__(self):
         return self
@@ -159,23 +296,25 @@ class InlineTransport(Transport):
     fused = True
 
     def sweep(self, x_aug, num_servers: int, faults=()):
+        self._ensure_open()
         if x_aug.ndim == 2:
             l, u, _ = lu_nserver(x_aug, num_servers, faults=faults)
             return l, u
         return _lu_sweep(x_aug, num_servers=num_servers, faults=faults)
 
     def factor(self, tasks, faults=()):
+        self._ensure_open()
         return _run_relay(tasks, lambda t, wid: EdgeServer(wid).run(t, faults))
 
     def repair(self, task, *, replacement):
+        self._ensure_open()
         return EdgeServer(replacement).run(task)
 
-    def submit(self, task, worker_id, *, faults=(), timeout=None):
-        """Synchronous submit: compute now, return a completed Future.
+    def start(self, task, worker_id, *, faults=(), timeout=None):
+        """Synchronous start: compute now, return a completed Future.
         Lets the rateless scheduler run against the inline boundary
         (tests, and the degradation ladder's last rung)."""
-        from concurrent.futures import Future
-
+        self._ensure_open()
         fut: Future = Future()
         try:
             fut.set_result(EdgeServer(worker_id).run(task, faults))
@@ -199,6 +338,7 @@ class ShardMapTransport(Transport):
         self.program = program
 
     def sweep(self, x_aug, num_servers: int, faults=()):
+        self._ensure_open()
         from repro.distrib.spdc_pipeline import lu_nserver_shardmap
 
         return lu_nserver_shardmap(
@@ -206,6 +346,7 @@ class ShardMapTransport(Transport):
         )
 
     def repair(self, task, *, replacement):
+        self._ensure_open()
         return EdgeServer(replacement).run(task)
 
 
@@ -270,45 +411,45 @@ class ThreadPoolTransport(Transport):
             return self._edges[worker_id]
 
     def factor(self, tasks, faults=()):
+        self._ensure_open()
+
         def execute(t, wid):
             return self._pool.submit(self._edge(wid).run, t, faults).result()
 
         return _run_relay(tasks, execute)
 
     def repair(self, task, *, replacement):
+        self._ensure_open()
         return self._pool.submit(self._edge(replacement).run, task).result()
 
-    def submit(self, task, worker_id, *, faults=(), timeout=None):
+    def start(self, task, worker_id, *, faults=(), timeout=None):
         """Future[ShardResult] on the shared pool. Threads cannot be
         preempted, so `timeout` is advisory here — the rateless scheduler
         enforces its own wait and zombifies a late future (the worker
         slot stays busy until the thread actually returns)."""
+        self._ensure_open()
         return self._pool.submit(self._edge(worker_id).run, task, faults)
 
     def close(self):
         self._pool.shutdown(wait=True)
+        super().close()
 
 
 def _edge_worker_main(conn, worker_id: int, enable_x64: bool) -> None:
     """Entry point of one spawned edge-server process.
 
-    Strict request-reply: EVERY frame gets exactly one reply — ShardTask
-    → ShardResult bytes, FaultPlanFrame → b"ACK", anything that fails
-    (including a frame that does not decode) → an ERR frame. One reply
-    per request keeps the pipe in lock-step, so a failure can never
-    desynchronize later requests' replies; an empty frame is the
-    shutdown sentinel. Everything in and out is the wire codec — no
-    pickle of task data crosses the boundary.
+    One `serve_frame` reply per received frame keeps the pipe in strict
+    lock-step; an empty frame is the shutdown sentinel. Everything in and
+    out is the wire codec — no pickle of task data crosses the boundary.
     """
     import jax as _jax
 
     _jax.config.update("jax_enable_x64", bool(enable_x64))
-    from repro.api.messages import FaultPlanFrame as _FPF
     from repro.api.server import EdgeServer as _Edge
-    from repro.api.wire import decode_message as _decode
+    from repro.api.transport import serve_frame as _serve
 
     edge = _Edge(worker_id)
-    plan = ()
+    state: dict = {}
     while True:
         try:
             data = conn.recv_bytes()
@@ -316,16 +457,7 @@ def _edge_worker_main(conn, worker_id: int, enable_x64: bool) -> None:
             return
         if not data:
             return
-        try:  # noqa: SIM105 — report every failure, don't die silently
-            msg = _decode(data)
-            if isinstance(msg, _FPF):
-                plan = msg.plan
-                reply = b"ACK"
-            else:
-                reply = edge.run(msg, faults=plan).to_bytes()
-        except Exception as e:  # noqa: BLE001
-            reply = b"ERR:" + repr(e).encode()
-        conn.send_bytes(reply)
+        conn.send_bytes(_serve(edge, state, data))
 
 
 class MultiprocessTransport(Transport):
@@ -357,7 +489,7 @@ class MultiprocessTransport(Transport):
         self._sent_plan: dict[int, tuple] = {}
         self._locks: dict[int, threading.Lock] = {}
         self._meta = threading.RLock()  # guards the dicts, not the pipes
-        self._io = None  # lazy executor behind submit()
+        self._io = None  # lazy executor behind start()
         self.timeout = float(timeout)
 
     @property
@@ -465,16 +597,19 @@ class MultiprocessTransport(Transport):
                 return once()
 
     def factor(self, tasks, faults=()):
+        self._ensure_open()
         return _run_relay(tasks, lambda t, wid: self._run_on(t, wid, faults))
 
     def repair(self, task, *, replacement):
+        self._ensure_open()
         return self._run_on(task, replacement)
 
-    def submit(self, task, worker_id, *, faults=(), timeout=None):
+    def start(self, task, worker_id, *, faults=(), timeout=None):
         """Future[ShardResult]: the blocking request-reply runs on an IO
         thread; the per-worker lock serializes a worker's pipe while
         different workers' requests proceed concurrently. `timeout` is
         REAL here — a deadline miss kills the straggling process."""
+        self._ensure_open()
         with self._meta:
             if self._io is None:
                 from concurrent.futures import ThreadPoolExecutor
@@ -504,24 +639,115 @@ class MultiprocessTransport(Transport):
             self._locks.clear()
         if io is not None:
             io.shutdown(wait=False)
+        super().close()
 
 
-_SHARED: dict[str, Transport] = {}
-_SHARED_LOCK = threading.Lock()
+def _socket_factory(**kwargs):
+    from .socket_transport import SocketTransport
+
+    return SocketTransport(**kwargs)
+
 
 _FACTORIES = {
     "inline": InlineTransport,
     "shardmap": ShardMapTransport,
     "threadpool": ThreadPoolTransport,
     "multiprocess": MultiprocessTransport,
+    "socket": _socket_factory,
 }
 
 
+@dataclass(frozen=True)
+class TransportConfig:
+    """Declarative transport spec — the third leg of `resolve_transport`.
+
+    Everything that accepts `transport=` (`outsource_determinant{,_mixed}`,
+    `SPDCClient`, `SPDCGatewayConfig.spdc`, gateway `submit()` overrides,
+    the `serve_spdc`/`serve_worker` CLIs) takes a string name, a live
+    `Transport` instance, or one of these — resolved by the ONE
+    `resolve_transport()`. Frozen and hashable, so it can ride a gateway
+    `BucketKey` and serve as the shared-instance registry key.
+
+    name: "inline" | "shardmap" | "threadpool" | "multiprocess" | "socket".
+    addresses: socket only — the worker fleet's endpoints
+        ("tcp://host:port" / "unix:///path.sock"), worker_id i connecting
+        to addresses[i % len]. Empty = spawn local warm UDS daemons on
+        demand.
+    timeout: default per-request deadline (multiprocess / socket).
+    max_workers: thread pool width (threadpool only).
+    program: relay program (shardmap only).
+
+    `build()` returns a FRESH instance the caller owns (and must close —
+    SPDCClient and the gateway do this deterministically);
+    `resolve_transport(config)` instead returns a process-wide shared
+    instance keyed by the config, for one-shot facade calls.
+    """
+
+    name: str
+    addresses: tuple[str, ...] = ()
+    timeout: float | None = None
+    max_workers: int | None = None
+    program: str | None = None
+
+    def __post_init__(self):
+        if self.name not in _FACTORIES:
+            raise ValueError(
+                f"unknown transport {self.name!r}; expected one of "
+                f"{sorted(_FACTORIES)}"
+            )
+        # tolerate list input without breaking hashability
+        object.__setattr__(self, "addresses", tuple(self.addresses))
+        if self.addresses and self.name != "socket":
+            raise ValueError("addresses= applies to the socket transport")
+        if self.max_workers is not None and self.name != "threadpool":
+            raise ValueError("max_workers= applies to threadpool")
+        if self.program is not None and self.name != "shardmap":
+            raise ValueError("program= applies to shardmap")
+        if self.timeout is not None and self.name not in (
+            "multiprocess", "socket",
+        ):
+            raise ValueError(
+                "timeout= applies to the message transports "
+                "(multiprocess, socket)"
+            )
+
+    def build(self) -> Transport:
+        """Instantiate a FRESH transport the caller owns."""
+        kwargs: dict = {}
+        if self.name == "socket":
+            if self.addresses:
+                kwargs["addresses"] = self.addresses
+            if self.timeout is not None:
+                kwargs["timeout"] = self.timeout
+        elif self.name == "multiprocess" and self.timeout is not None:
+            kwargs["timeout"] = self.timeout
+        elif self.name == "threadpool" and self.max_workers is not None:
+            kwargs["max_workers"] = self.max_workers
+        elif self.name == "shardmap" and self.program is not None:
+            kwargs["program"] = self.program
+        return _FACTORIES[self.name](**kwargs)
+
+
+_SHARED: dict[object, Transport] = {}
+_SHARED_LOCK = threading.Lock()
+
+
 def resolve_transport(spec=None, *, distributed: bool = False) -> Transport:
-    """Resolve a transport spec: None (→ inline, or shardmap when the
-    legacy `distributed=True` flag is set), a name from
-    {"inline", "shardmap", "threadpool", "multiprocess"} (→ the shared
-    process-wide instance), or a Transport object (returned as-is)."""
+    """THE transport resolver — every `transport=` kwarg in the package
+    funnels here. Accepts:
+
+      * None          → inline (or shardmap when the legacy
+        `distributed=True` flag is set);
+      * a name string from {"inline", "shardmap", "threadpool",
+        "multiprocess", "socket"} → the process-wide shared instance;
+      * a `TransportConfig` → a process-wide shared instance keyed by the
+        config (equal configs share one warm pool; `config.build()` is
+        the fresh-instance escape hatch role objects use);
+      * a `Transport` instance → returned as-is (caller-owned).
+
+    Shared instances that were individually closed are rebuilt on the
+    next resolve; `close_all()` (atexit) closes the whole registry.
+    """
     if isinstance(spec, Transport):
         if distributed and spec.name != "shardmap":
             raise ValueError(
@@ -531,20 +757,28 @@ def resolve_transport(spec=None, *, distributed: bool = False) -> Transport:
         return spec
     if spec is None:
         spec = "shardmap" if distributed else "inline"
-    elif distributed and spec != "shardmap":
+    elif distributed and getattr(spec, "name", spec) != "shardmap":
         raise ValueError(
             f"distributed=True conflicts with transport={spec!r}; "
             "pass transport='shardmap' (or drop distributed)"
         )
+    if isinstance(spec, TransportConfig):
+        with _SHARED_LOCK:
+            inst = _SHARED.get(spec)
+            if inst is None or inst.closed:
+                _SHARED[spec] = inst = spec.build()
+            return inst
     if spec not in _FACTORIES:
         raise ValueError(
             f"unknown transport {spec!r}; expected one of "
-            f"{sorted(_FACTORIES)} or a Transport instance"
+            f"{sorted(_FACTORIES)}, a TransportConfig, or a Transport "
+            "instance"
         )
     with _SHARED_LOCK:
-        if spec not in _SHARED:
-            _SHARED[spec] = _FACTORIES[spec]()
-        return _SHARED[spec]
+        inst = _SHARED.get(spec)
+        if inst is None or inst.closed:
+            _SHARED[spec] = inst = _FACTORIES[spec]()
+        return inst
 
 
 def close_all() -> None:

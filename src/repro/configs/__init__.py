@@ -16,10 +16,11 @@ from .nemotron_4_340b import NEMOTRON_4_340B
 from .qwen2_vl_72b import QWEN2_VL_72B
 from .spdc import (
     RATELESS_DEFAULT, SPDC_DEFAULT, SPDC_EDGE_F32, SPDC_EDGE_HARDENED,
-    SPDC_EDGE_MP, SPDC_EDGE_RATELESS, SPDC_EDGE_SMALL, SPDC_EDGE_THREADS,
-    SPDC_GATEWAY_BULK, SPDC_GATEWAY_DEFAULT, SPDC_GATEWAY_F32,
-    SPDC_GATEWAY_HARDENED, SPDC_GATEWAY_LOWLAT, SPDC_GATEWAY_THREADS,
-    SPDC_POD, RatelessConfig, SPDCConfig, SPDCGatewayConfig,
+    SPDC_EDGE_MP, SPDC_EDGE_RATELESS, SPDC_EDGE_SMALL, SPDC_EDGE_SOCKET,
+    SPDC_EDGE_THREADS, SPDC_GATEWAY_BULK, SPDC_GATEWAY_DEFAULT,
+    SPDC_GATEWAY_F32, SPDC_GATEWAY_HARDENED, SPDC_GATEWAY_LOWLAT,
+    SPDC_GATEWAY_SOCKET, SPDC_GATEWAY_THREADS, SPDC_POD, RatelessConfig,
+    SPDCConfig, SPDCGatewayConfig,
 )
 from .tinyllama_1_1b import TINYLLAMA_1_1B
 
@@ -68,9 +69,9 @@ __all__ = [
     "ShapeConfig", "cell_status", "runnable_cells",
     "SPDCConfig", "SPDC_DEFAULT", "SPDC_EDGE_F32", "SPDC_EDGE_HARDENED",
     "SPDC_EDGE_MP", "SPDC_EDGE_RATELESS", "SPDC_EDGE_SMALL",
-    "SPDC_EDGE_THREADS", "SPDC_POD",
+    "SPDC_EDGE_SOCKET", "SPDC_EDGE_THREADS", "SPDC_POD",
     "RatelessConfig", "RATELESS_DEFAULT",
     "SPDCGatewayConfig", "SPDC_GATEWAY_DEFAULT", "SPDC_GATEWAY_LOWLAT",
     "SPDC_GATEWAY_BULK", "SPDC_GATEWAY_HARDENED", "SPDC_GATEWAY_F32",
-    "SPDC_GATEWAY_THREADS",
+    "SPDC_GATEWAY_THREADS", "SPDC_GATEWAY_SOCKET",
 ]

@@ -97,10 +97,13 @@ class SPDCConfig:
     standby: int = 0
     recover: bool = False
     straggler_deadline: int | None = None
-    # execution boundary of the Parallelize stage (DESIGN.md §7):
-    # "inline" (fused fast path) | "shardmap" | "threadpool" |
-    # "multiprocess" (spawned workers, wire-codec messages)
-    transport: str = "inline"
+    # execution boundary of the Parallelize stage (DESIGN.md §7/§9): a
+    # name — "inline" (fused fast path) | "shardmap" | "threadpool" |
+    # "multiprocess" (spawned workers, wire-codec messages) | "socket"
+    # (warm worker daemons over TCP/UDS) — or a repro.api.TransportConfig
+    # (declarative: name + addresses + timeout; frozen/hashable, so this
+    # config stays hashable). Resolved by repro.api.resolve_transport.
+    transport: object = "inline"
     # rateless straggler-adaptive dispatch (DESIGN.md §8): over-decompose
     # into F > N strips and stream them to whichever workers are free —
     # True uses RATELESS_DEFAULT knobs. Replaces straggler_deadline
@@ -163,6 +166,15 @@ SPDC_EDGE_MP = SPDCConfig(
 SPDC_EDGE_RATELESS = SPDCConfig(
     name="spdc-edge-rateless", matrix_n=256, num_servers=4,
     transport="threadpool", recover=True, rateless=True,
+)
+#: networked-fleet profile (DESIGN.md §9): warm worker daemons over
+#: TCP/UDS sockets — jit caches survive across sessions and client
+#: restarts. The bare "socket" name self-hosts local UDS daemons; point
+#: at a real fleet with transport=TransportConfig("socket",
+#: addresses=("tcp://host:port", ...)).
+SPDC_EDGE_SOCKET = SPDCConfig(
+    name="spdc-edge-socket", matrix_n=256, num_servers=4,
+    transport="socket", standby=1, recover=True,
 )
 
 
@@ -229,4 +241,10 @@ SPDC_GATEWAY_F32 = SPDCGatewayConfig(
 #: can still opt back to "inline")
 SPDC_GATEWAY_THREADS = SPDCGatewayConfig(
     name="spdc-gateway-threads", spdc=SPDC_EDGE_THREADS,
+)
+#: gateway over warm socket daemons (DESIGN.md §9): bucket sweeps stream
+#: ShardTasks to persistent worker processes whose jit caches outlive any
+#: single gateway — the deployment shape for a long-lived edge fleet.
+SPDC_GATEWAY_SOCKET = SPDCGatewayConfig(
+    name="spdc-gateway-socket", spdc=SPDC_EDGE_SOCKET,
 )

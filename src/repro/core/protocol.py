@@ -24,7 +24,8 @@ benchmarks/run.py:throughput).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import warnings
+from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
@@ -75,6 +76,64 @@ def _resolve_growth_controls(
 
 
 @dataclass
+class SessionTimings:
+    """Wall-clock phase breakdown of one protocol run (seconds).
+
+    pmop_s is the client-side prepare (seed/key/cipher/equilibrate/
+    border); dispatch_s is the Parallelize stage as the client saw it —
+    for message transports, dominated by wire time; collect_s is the
+    RRVP tail (authenticate → recovery → decipher). With the
+    async-overlap API (`Session.start` / `SPDCClient.run_pipelined`,
+    DESIGN.md §9) batch k+1's pmop_s runs INSIDE batch k's dispatch_s —
+    the sum of phases across a pipelined run exceeds its wall clock,
+    which is the point.
+    """
+
+    pmop_s: float = 0.0
+    dispatch_s: float = 0.0
+    collect_s: float = 0.0
+    total_s: float = 0.0
+
+
+@dataclass
+class SPDCReport:
+    """The ONE typed diagnostics surface on a protocol result.
+
+    Consolidates what used to be three ad-hoc optional result fields:
+
+    verdict: structured Authenticate outcome (method, ε(N), per-server
+        blame) — core.verify.Verdict.
+    recovery: verification-driven re-dispatch log (None unless
+        recover=True fired) — distrib.recovery.RecoveryReport.
+    fleet: rateless dispatch report (strip counts, per-worker health;
+        None on classic sessions) — distrib.rateless.RatelessReport.
+    timings: wall-clock phase breakdown (None on paths that don't time
+        themselves, e.g. a hand-driven tasks→collect flow).
+    """
+
+    verdict: Verdict | None = None
+    recovery: object | None = None
+    fleet: object | None = None
+    timings: SessionTimings | None = None
+
+
+def _deprecated_report_field(name: str):
+    """One-cycle shim: `result.verdict` etc. still answer, loudly."""
+
+    @property
+    def shim(self):
+        warnings.warn(
+            f"result.{name} is deprecated; read result.report.{name} "
+            "(the consolidated SPDCReport surface)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return getattr(self.report, name)
+
+    return shim
+
+
+@dataclass
 class SPDCResult:
     det: Determinant
     verified: bool
@@ -84,13 +143,13 @@ class SPDCResult:
     comm: CommLog | None
     padding: int
     num_servers: int
-    #: structured Authenticate outcome (method, ε(N), per-server blame)
-    verdict: Verdict | None = None
-    #: verification-driven re-dispatch log (None unless recover=True fired)
-    recovery: object | None = None
-    #: rateless dispatch report (distrib.rateless.RatelessReport — strip
-    #: counts, per-worker health; None on classic sessions)
-    fleet: object | None = None
+    #: consolidated diagnostics (verdict / recovery / fleet / timings)
+    report: SPDCReport = field(default_factory=SPDCReport)
+
+    # one-cycle deprecated aliases for the pre-consolidation fields
+    verdict = _deprecated_report_field("verdict")
+    recovery = _deprecated_report_field("recovery")
+    fleet = _deprecated_report_field("fleet")
 
 
 @dataclass
@@ -117,14 +176,16 @@ class SPDCBatchResult:
     comm: CommLog | None
     padding: int
     num_servers: int
-    verdict: Verdict | None = None
-    recovery: object | None = None
+    #: consolidated diagnostics (verdict / recovery / fleet / timings)
+    report: SPDCReport = field(default_factory=SPDCReport)
     #: mixed-size path only: per-matrix border amounts
     paddings: list[int] | None = None
     #: mixed-size path only: the common padded size n' of the sweep
     pad_to: int | None = None
-    #: rateless dispatch report (None on classic sessions)
-    fleet: object | None = None
+
+    verdict = _deprecated_report_field("verdict")
+    recovery = _deprecated_report_field("recovery")
+    fleet = _deprecated_report_field("fleet")
 
     @property
     def batch(self) -> int:
@@ -360,8 +421,8 @@ def outsource_determinant(
     recover: on a rejected verdict, localize the faulty server (blocked-Q1
         attribution) and re-dispatch ONLY its shard — the Session emits a
         fresh ShardTask per blamed server through the same transport
-        (distrib.recovery runs the loop) — result.recovery holds the
-        RecoveryReport.
+        (distrib.recovery runs the loop) — result.report.recovery holds
+        the RecoveryReport.
     standby: provision N+r spare servers for those re-dispatches
         (distrib.recovery.ServerPool).
     straggler_deadline: rounds after which a delayed server is treated as
@@ -383,10 +444,13 @@ def outsource_determinant(
         binary float format; keeps ‖X‖-driven rounding flat (DESIGN.md
         §6.2).
     transport: execution boundary for the Parallelize stage (DESIGN.md
-        §7) — None (inline fused fast path, bit-identical to the
-        pre-split protocol), "threadpool", "multiprocess" (spawned
-        workers, ShardTask/ShardResult bytes on a real OS pipe),
-        "shardmap", or a repro.api.Transport instance.
+        §7/§9) — None (inline fused fast path, bit-identical to the
+        pre-split protocol), a name ("threadpool"; "multiprocess" —
+        spawned workers, ShardTask/ShardResult bytes on a real OS pipe;
+        "socket" — warm worker daemons over TCP/UDS; "shardmap"), a
+        repro.api.TransportConfig (declarative: name + addresses +
+        timeout), or a live repro.api.Transport instance. All three
+        spellings funnel through repro.api.resolve_transport.
     rateless: straggler-adaptive streaming dispatch (DESIGN.md §8) —
         True (default knobs) or a configs.spdc.RatelessConfig. The
         session over-decomposes into F = overdecompose·N strips and
@@ -395,11 +459,11 @@ def outsource_determinant(
         tune (the kwarg is ignored), slow workers just complete fewer
         strips, tampering workers get quarantined mid-session, and the
         client finishes strips inline if the fleet collapses.
-        result.fleet carries the RatelessReport.
+        result.report.fleet carries the RatelessReport.
 
     Returns SPDCResult for a single matrix, SPDCBatchResult (per-matrix
-    dets and verdicts) for a stack or list; both carry the structured
-    Verdict and, when recover= fired, the RecoveryReport.
+    dets and verdicts) for a stack or list; both carry a consolidated
+    `report` (SPDCReport: verdict, recovery, fleet, timings).
     """
     if isinstance(m, (list, tuple)):
         if use_kernel:

@@ -435,8 +435,8 @@ def run_rateless(
         lane.in_flight = True
         busy.add(wid)
         report.dispatches += 1
-        fut = transport.submit(task, wid, faults=faults,
-                               timeout=cfg.request_timeout_s)
+        fut = transport.start(task, wid, faults=faults,
+                              timeout=cfg.request_timeout_s)
         pending[fut] = rec
 
     def dispatch_probe(wid: int, now: float) -> None:
@@ -467,8 +467,8 @@ def run_rateless(
                         attempt=1000 + probe_seq, t0=now, probe=True)
         busy.add(wid)
         report.probes += 1
-        fut = transport.submit(task, wid, faults=faults,
-                               timeout=cfg.request_timeout_s)
+        fut = transport.start(task, wid, faults=faults,
+                              timeout=cfg.request_timeout_s)
         pending[fut] = rec
 
     def verify_probe(rec: _Dispatch, result: ShardResult) -> bool:

@@ -84,12 +84,15 @@ def main(argv=None) -> int:
     ap.add_argument("--method", choices=["q1", "q2", "q3"], default="q3")
     ap.add_argument("--mode", choices=["ewd", "ewm"], default="ewd")
     ap.add_argument("--transport",
-                    choices=["inline", "threadpool", "multiprocess"],
+                    choices=["inline", "threadpool", "multiprocess",
+                             "socket"],
                     default="inline",
                     help="execution boundary for bucket sweeps (DESIGN.md "
-                         "§7): inline = fused fast path; threadpool = "
+                         "§7/§9): inline = fused fast path; threadpool = "
                          "in-process edge workers; multiprocess = spawned "
-                         "worker processes, wire-codec messages")
+                         "worker processes, wire-codec messages; socket = "
+                         "warm worker daemons over TCP/UDS (self-hosted "
+                         "local UDS fleet when no addresses are given)")
     ap.add_argument("--recover", action="store_true",
                     help="heal rejected verdicts in place (DESIGN.md §4)")
     ap.add_argument("--standby", type=int, default=0)

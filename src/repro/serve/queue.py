@@ -73,11 +73,15 @@ class BucketKey:
     #: bucket with auto-ruled requests.
     growth_safe: bool | None = None
     equilibrate: bool | None = None
-    #: execution boundary of the bucket's sweeps (DESIGN.md §7). Part of
-    #: the key: an inline sweep and a multiprocess sweep are different
+    #: execution boundary of the bucket's sweeps (DESIGN.md §7/§9). Part
+    #: of the key: an inline sweep and a multiprocess sweep are different
     #: programs with different warm state, so requests targeting different
-    #: transports must not coalesce.
-    transport: str = "inline"
+    #: transports must not coalesce. A name ("inline" | "threadpool" |
+    #: "multiprocess" | "socket" | "shardmap") or a live Transport
+    #: instance (hashed by identity; the gateway resolves TransportConfig
+    #: overrides to its owned instances BEFORE keying, so equal configs
+    #: land in one bucket and share one warm pool).
+    transport: object = "inline"
     #: rateless dispatch (DESIGN.md §8). Part of the key: a rateless sweep
     #: partitions the bucket into F = overdecompose·N strips instead of N,
     #: so its padded size rides a different grid and its session carries

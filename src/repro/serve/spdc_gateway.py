@@ -38,6 +38,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.api.transport import Transport, TransportConfig
 from repro.configs.spdc import SPDC_GATEWAY_DEFAULT, SPDCGatewayConfig
 from repro.core.protocol import outsource_determinant_mixed, resolve_dtype
 
@@ -171,6 +172,12 @@ class SPDCGateway:
         )
         self._results: dict[int, GatewayResult] = {}
         self._next_rid = 0
+        #: transports this gateway built from TransportConfig specs (its
+        #: default spdc.transport or per-request overrides). Owned: the
+        #: gateway closes them in close(). Keyed by the frozen config so
+        #: equal configs resolve to ONE instance — and therefore one
+        #: BucketKey, one bucket, one warm worker pool.
+        self._owned_transports: dict[TransportConfig, Transport] = {}
         self.stats = GatewayStats()
         #: guards queue/results/stats so AsyncSPDCGateway may run sweeps on
         #: a worker thread while the event loop keeps submitting. Held for
@@ -178,6 +185,43 @@ class SPDCGateway:
         self._lock = threading.RLock()
 
     # -- submission ---------------------------------------------------------
+
+    def _resolve_transport(self, spec):
+        """Fold a TransportConfig spec into an owned built instance.
+
+        Names and live Transport instances pass through untouched (names
+        resolve later through the shared registry; instances belong to the
+        caller). A TransportConfig builds ONCE per distinct config and is
+        cached — resolution happens BEFORE bucketing, so two requests
+        carrying equal configs key the same bucket and share one warm
+        pool. A cached instance someone closed is rebuilt.
+        """
+        if not isinstance(spec, TransportConfig):
+            return spec
+        with self._lock:
+            t = self._owned_transports.get(spec)
+            if t is None or t.closed:
+                t = self._owned_transports[spec] = spec.build()
+            return t
+
+    def close(self):
+        """Close every transport this gateway built (idempotent).
+
+        Only owned instances (resolved from TransportConfig specs) are
+        closed — transports the caller passed in live or selected by name
+        are the caller's/registry's to manage.
+        """
+        with self._lock:
+            owned, self._owned_transports = self._owned_transports, {}
+        for t in owned.values():
+            t.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
 
     def _key_for(self, n: int, overrides: dict) -> BucketKey:
         spdc = self.config.spdc
@@ -208,7 +252,9 @@ class SPDCGateway:
             dtype=resolve_dtype(overrides.get("dtype", spdc.dtype)).name,
             growth_safe=overrides.get("growth_safe", spdc.growth_safe),
             equilibrate=overrides.get("equilibrate", spdc.equilibrate),
-            transport=overrides.get("transport", spdc.transport),
+            transport=self._resolve_transport(
+                overrides.get("transport", spdc.transport)
+            ),
         )
 
     def submit(self, matrix, *, now: float | None = None, **overrides) -> int:
@@ -351,7 +397,7 @@ class SPDCGateway:
         done = self._clock()
         out = []
         with self._lock:
-            if res.recovery is not None:
+            if res.report.recovery is not None:
                 self.stats.recovered_flushes += 1
             for i, req in enumerate(reqs):
                 gres = GatewayResult(
@@ -365,7 +411,7 @@ class SPDCGateway:
                     flush_reason=reason,
                     submitted_at=req.enqueued_at,
                     completed_at=done,
-                    recovery=res.recovery,
+                    recovery=res.report.recovery,
                 )
                 self._results[req.rid] = gres
                 out.append(gres)
@@ -417,7 +463,9 @@ class SPDCGateway:
                 dtype=overrides.get("dtype", spdc.dtype),
                 growth_safe=overrides.get("growth_safe", spdc.growth_safe),
                 equilibrate=overrides.get("equilibrate", spdc.equilibrate),
-                transport=overrides.get("transport", spdc.transport),
+                transport=self._resolve_transport(
+                    overrides.get("transport", spdc.transport)
+                ),
                 rateless=overrides.get("rateless", spdc.rateless),
             )
         except Exception as e:  # noqa: BLE001 — fail the request, not the service
@@ -439,7 +487,7 @@ class SPDCGateway:
                 flush_reason="direct",
                 submitted_at=req.enqueued_at,
                 completed_at=self._clock(),
-                recovery=res.recovery,
+                recovery=res.report.recovery,
             )
 
     def _dummy(self, n_bucket: int) -> np.ndarray:
@@ -548,6 +596,9 @@ class AsyncSPDCGateway:
         if self._gw.pending:
             await asyncio.to_thread(self._gw.drain)
             self._deliver()
+        # release owned transports (worker pools, socket daemons) after
+        # the final drain so shutdown is deterministic, not GC-timed
+        await asyncio.to_thread(self._gw.close)
 
     async def warmup(self, batch_sizes: tuple[int, ...] | None = None) -> int:
         """Pre-compile bucket sweeps off the event loop (SPDCGateway.warmup)."""

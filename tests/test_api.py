@@ -352,17 +352,17 @@ def test_threadpool_recovery_emits_fresh_shard_tasks():
         m, N, method="q2", faults=ServerFault(server=1, mode="block"),
         recover=True, standby=1, transport="threadpool",
     )
-    assert res.verified and res.recovery.ok
-    assert 1 in res.recovery.servers_replaced
+    assert res.verified and res.report.recovery.ok
+    assert 1 in res.report.recovery.servers_replaced
     # in-band poisoning: the relay forwarded the tampered row, so healing
     # cascades one row per round (DESIGN.md §4.3)
-    assert 2 <= res.recovery.rounds <= N
+    assert 2 <= res.report.recovery.rounds <= N
     np.testing.assert_allclose(res.det.logabs, honest.det.logabs,
                                rtol=1e-10)
     # every event's sub-seed is the documented derivation — fresh per
     # (server, attempt), never the raw digest
     seen = set()
-    for e in res.recovery.events:
+    for e in res.report.recovery.events:
         assert e.subseed not in seen
         seen.add(e.subseed)
 
@@ -379,6 +379,132 @@ def test_resolve_transport_rules():
         resolve_transport("threadpool", distributed=True)
     with pytest.raises(ValueError, match="conflicts"):
         resolve_transport(inst, distributed=True)
+
+
+def test_transport_config_rules():
+    """Satellite: the declarative third leg of resolve_transport —
+    frozen/hashable, validated at construction, shared when resolved,
+    fresh when built."""
+    from repro.api import TransportConfig
+
+    cfg = TransportConfig("threadpool", max_workers=2)
+    assert hash(cfg) == hash(TransportConfig("threadpool", max_workers=2))
+    shared = resolve_transport(cfg)
+    assert shared is resolve_transport(TransportConfig("threadpool",
+                                                       max_workers=2))
+    owned = cfg.build()
+    try:
+        assert owned is not shared and owned.name == "threadpool"
+    finally:
+        owned.close()
+    # a closed shared instance is rebuilt on the next resolve
+    shared.close()
+    rebuilt = resolve_transport(cfg)
+    assert rebuilt is not shared and not rebuilt.closed
+    # field applicability is validated up front, not at build time
+    with pytest.raises(ValueError, match="unknown transport"):
+        TransportConfig("carrier-pigeon")
+    with pytest.raises(ValueError, match="addresses"):
+        TransportConfig("inline", addresses=("tcp://h:1",))
+    with pytest.raises(ValueError, match="max_workers"):
+        TransportConfig("socket", max_workers=3)
+    with pytest.raises(ValueError, match="program"):
+        TransportConfig("threadpool", program="baseline")
+    with pytest.raises(ValueError, match="timeout"):
+        TransportConfig("inline", timeout=5.0)
+    # list addresses are coerced so the config stays hashable
+    assert TransportConfig(
+        "socket", addresses=["unix:///a"]
+    ).addresses == ("unix:///a",)
+
+
+def test_transport_lifecycle_uniform():
+    """Satellite: every transport is a context manager; close() is
+    idempotent, flips `closed`, and a closed transport refuses
+    dispatch with a typed error."""
+    from repro.api.transport import _FACTORIES
+
+    for name in ("inline", "shardmap", "threadpool", "multiprocess",
+                 "socket"):
+        assert name in _FACTORIES
+    for make in (InlineTransport, ThreadPoolTransport):
+        with make() as t:
+            assert not t.closed
+        assert t.closed
+        t.close()  # idempotent
+        with pytest.raises(TransportError, match="closed"):
+            t.factor([])
+        with pytest.raises(TransportError, match="closed"):
+            t.driver_submit(lambda: None)
+
+
+def test_client_owns_config_transport_not_instances():
+    """Satellite: SPDCClient builds-and-OWNS a TransportConfig transport
+    (context manager closes it); a passed instance stays caller-owned."""
+    from repro.api import TransportConfig
+
+    with SPDCClient(transport=TransportConfig("threadpool")) as client:
+        inner = client.transport
+        assert isinstance(inner, ThreadPoolTransport)
+        assert client.open_session(_wellcond(12, seed=63), 2).run().verified
+    assert inner.closed
+    mine = ThreadPoolTransport()
+    try:
+        with SPDCClient(transport=mine) as client:
+            assert client.transport is mine
+        assert not mine.closed  # caller-owned: the client must not close it
+    finally:
+        mine.close()
+
+
+# ------------------------------------------------- report consolidation
+def test_report_consolidation_and_deprecated_shims():
+    """Satellite: verdict/recovery/fleet/timings live on ONE typed
+    `result.report`; the old top-level attributes still answer but warn
+    (pytest.ini escalates those warnings to errors inside repro/tests,
+    so no internal caller can quietly keep using them)."""
+    res = outsource_determinant(_wellcond(12, seed=65), 2)
+    rep = res.report
+    assert bool(np.all(rep.verdict.ok)) and rep.recovery is None
+    assert rep.fleet is None
+    t = rep.timings
+    assert t.pmop_s > 0 and t.collect_s > 0
+    assert t.total_s == pytest.approx(t.pmop_s + t.dispatch_s + t.collect_s)
+    for name in ("verdict", "recovery", "fleet"):
+        with pytest.warns(DeprecationWarning, match=f"report.{name}"):
+            assert getattr(res, name) is getattr(rep, name)
+
+
+def test_run_pipelined_overlaps_and_preserves_order():
+    """Tentpole: the async-overlap pipeline — up to `depth` sessions in
+    flight, batch k+1's PMOP hidden under batch k's wire time, results
+    in input order."""
+    mats = [_wellcond(12 + 2 * i, seed=70 + i) for i in range(5)]
+    client = SPDCClient()
+    with ThreadPoolTransport() as tp:
+        outs = client.run_pipelined(mats, 2, depth=3, transport=tp)
+    assert len(outs) == len(mats)
+    for m, r in zip(mats, outs):
+        ws, wl = np.linalg.slogdet(m)
+        assert r.verified and r.det.sign == ws
+        np.testing.assert_allclose(r.det.logabs, wl, rtol=1e-10)
+        assert r.report.timings.dispatch_s > 0
+    with pytest.raises(ValueError, match="depth"):
+        client.run_pipelined(mats, 2, depth=0)
+
+
+def test_session_start_matches_run_on_inline():
+    """start() on a fused transport completes synchronously and collects
+    to the same result as run() — same verdict, same det."""
+    m = _wellcond(16, seed=67)
+    client = SPDCClient()
+    pending = client.open_session(m, 2).start()
+    assert pending.done()
+    a = pending.result()
+    b = client.open_session(m, 2).run()
+    assert a.verified and b.verified
+    assert a.det.sign == b.det.sign
+    np.testing.assert_allclose(a.det.logabs, b.det.logabs, rtol=1e-12)
 
 
 def test_edge_server_requires_relay_rows():
@@ -473,9 +599,9 @@ def test_multiprocess_acceptance_tamper_recovery(mp_transport, method):
         faults=ServerFault(server=1, mode="block", magnitude=0.3),
         recover=True, standby=1, transport=mp_transport,
     )
-    assert res.verified and res.recovery.ok
-    assert res.recovery.events[0].server == 1  # localized the culprit
-    assert 1 in res.recovery.servers_replaced
+    assert res.verified and res.report.recovery.ok
+    assert res.report.recovery.events[0].server == 1  # localized the culprit
+    assert 1 in res.report.recovery.servers_replaced
     assert res.det.sign == honest.det.sign
     np.testing.assert_allclose(res.det.logabs, honest.det.logabs,
                                rtol=1e-10)
@@ -507,13 +633,15 @@ def test_multiprocess_timeout_is_typed_and_worker_respawns(mp_transport):
     slow = ServerFault(server=0, kind="delay", delay_s=30.0)
     pid_before = mp_transport._conn(0) and mp_transport._procs[0].pid
     t0 = time.monotonic()
-    fut = mp_transport.submit(task, 0, faults=(slow,), timeout=0.5)
+    # start() is the nonblocking half of the redesigned dispatch surface:
+    # it hands back a Future immediately; result() surfaces the typed error
+    fut = mp_transport.start(task, 0, faults=(slow,), timeout=0.5)
     with pytest.raises(TransportTimeout, match="request deadline"):
-        fut.result(timeout=60)
+        mp_transport.result(fut, timeout=60)
     assert time.monotonic() - t0 < 20.0  # did NOT wait out the sleep
     assert issubclass(TransportTimeout, TransportError)
     assert 0 not in mp_transport.workers  # killed and discarded
-    res = mp_transport.submit(task, 0).result(timeout=60)
+    res = mp_transport.submit(task, 0)  # blocking facade over start/result
     assert res.server == 0  # respawned on demand and served
     assert mp_transport._procs[0].pid != pid_before
 
@@ -554,8 +682,8 @@ def test_multiprocess_rateless_streams_through_worker_processes():
     with MultiprocessTransport() as t:
         out = client.open_session(m, N, faults=fault).run(t)
     assert out.verified
-    assert out.fleet.timeouts >= 1
-    w1 = out.fleet.workers[1]
+    assert out.report.fleet.timeouts >= 1
+    w1 = out.report.fleet.workers[1]
     assert w1["failures"] >= 1 and w1["completed"] == 0
     ws, wl = np.linalg.slogdet(m)
     np.testing.assert_allclose(out.det.logabs, wl, rtol=1e-8)

@@ -252,7 +252,7 @@ def test_f32_false_reject_rate_is_zero():
     for t in range(20):
         m = _wellcond(32, seed=500 + t)
         res = outsource_determinant(m, N, dtype="float32")
-        assert res.verified, (t, res.residual, res.verdict.eps)
+        assert res.verified, (t, res.residual, res.report.verdict.eps)
 
 
 @pytest.mark.parametrize("kind,kw", [
@@ -310,7 +310,7 @@ def test_f32_recovery_under_every_single_server_fault(fault_kw):
             faults=ServerFault(server=s, **fault_kw),
             recover=True, standby=1,
         )
-        assert bool(np.all(res.verified)) and res.recovery.ok, (s, fault_kw)
+        assert bool(np.all(res.verified)) and res.report.recovery.ok, (s, fault_kw)
         assert res.det.sign == want_s
         assert abs(res.det.logabs - want_la) <= F32_DLOG
 
@@ -323,7 +323,7 @@ def test_f32_batched_recovery_splices_one_matrix():
         faults=ServerFault(server=2, kind="dropout", matrices=(1,)),
         recover=True, standby=1,
     )
-    assert bool(np.all(res.verified)) and res.recovery.ok
+    assert bool(np.all(res.verified)) and res.report.recovery.ok
     for i in range(B):
         ws, wl = np.linalg.slogdet(stack[i])
         assert res.dets[i].sign == ws

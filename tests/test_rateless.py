@@ -105,8 +105,8 @@ def test_rateless_honest_matches_numpy_single_and_batch():
     assert res.verified and res.det.sign == ws
     np.testing.assert_allclose(res.det.logabs, wl, rtol=1e-8)
     assert res.num_servers == N  # fleet size, not strip count
-    assert res.fleet.num_strips == RATELESS_DEFAULT.overdecompose * N
-    assert res.fleet.inline_strips == 0 and res.fleet.retries == 0
+    assert res.report.fleet.num_strips == RATELESS_DEFAULT.overdecompose * N
+    assert res.report.fleet.inline_strips == 0 and res.report.fleet.retries == 0
 
     stack = _wellcond(16, seed=13, batch=3)
     bres = outsource_determinant(stack, N, rateless=True,
@@ -116,7 +116,7 @@ def test_rateless_honest_matches_numpy_single_and_batch():
         ws, wl = np.linalg.slogdet(stack[i])
         assert bres.dets[i].sign == ws
         np.testing.assert_allclose(bres.dets[i].logabs, wl, rtol=1e-8)
-    assert bres.fleet.lanes == 3  # one lane per batch slice
+    assert bres.report.fleet.lanes == 3  # one lane per batch slice
 
 
 def test_rateless_ignores_round_deadline():
@@ -130,7 +130,7 @@ def test_rateless_ignores_round_deadline():
     res = outsource_determinant(
         m, N, faults=fault, straggler_deadline=1, rateless=True
     )
-    assert res.verified and res.recovery is None
+    assert res.verified and res.report.recovery is None
 
 
 def test_rateless_config_resolution_and_validation():
@@ -163,7 +163,7 @@ def test_fleet_health_outlives_sessions():
         out2 = client.open_session(m, N).run(tp)
         assert out2.verified
     # second session never dispatched to the quarantined worker
-    assert out2.fleet.workers[1]["completed"] == 0
+    assert out2.report.fleet.workers[1]["completed"] == 0
 
 
 # ------------------------------------------------- fleet-health unit pieces
@@ -249,8 +249,8 @@ def test_degradation_ladder_completes_inline_when_fleet_is_dark():
     with ThreadPoolTransport() as tp:
         out = client.open_session(m, N).run(tp)
     assert out.verified
-    assert out.fleet.inline_strips == out.fleet.num_strips
-    assert out.fleet.dispatches == 0
+    assert out.report.fleet.inline_strips == out.report.fleet.num_strips
+    assert out.report.fleet.dispatches == 0
     ws, wl = np.linalg.slogdet(m)
     assert out.det.sign == ws
     np.testing.assert_allclose(out.det.logabs, wl, rtol=1e-8)
@@ -270,9 +270,9 @@ def test_degradation_ladder_when_every_worker_tampers():
     with ThreadPoolTransport() as tp:
         out = client.open_session(m, N, faults=plan).run(tp)
     assert out.verified
-    assert out.fleet.inline_strips > 0
-    assert out.fleet.tampered_strips >= 1
-    assert all(w["quarantined"] for w in out.fleet.workers.values())
+    assert out.report.fleet.inline_strips > 0
+    assert out.report.fleet.tampered_strips >= 1
+    assert all(w["quarantined"] for w in out.report.fleet.workers.values())
 
 
 def test_probation_probe_readmits_transient_offender():
@@ -287,8 +287,8 @@ def test_probation_probe_readmits_transient_offender():
     with ThreadPoolTransport() as tp:
         out = client.open_session(m, N).run(tp)
     assert np.asarray(out.verified).all()
-    assert out.fleet.probes >= 1
-    w3 = out.fleet.workers[3]
+    assert out.report.fleet.probes >= 1
+    w3 = out.report.fleet.workers[3]
     assert not w3["quarantined"] and w3["probes_passed"] >= 1
 
 
@@ -303,7 +303,7 @@ def test_probation_probe_keeps_persistent_tamperer_benched():
     with ThreadPoolTransport() as tp:
         out = client.open_session(m, N, faults=plan).run(tp)
     assert np.asarray(out.verified).all()
-    w1 = out.fleet.workers[1]
+    w1 = out.report.fleet.workers[1]
     assert w1["quarantined"] and w1["probes_passed"] == 0
     assert w1["tampers"] >= 2  # the original strike plus failed probe(s)
 
@@ -324,7 +324,7 @@ def test_rateless_recovery_reroutes_to_live_worker():
     with ThreadPoolTransport() as tp:
         session = client.open_session(m, N, tamper=corrupt)
         out = session.run(tp)
-    assert out.verified and out.recovery is not None and out.recovery.ok
+    assert out.verified and out.report.recovery is not None and out.report.recovery.ok
     ws, wl = np.linalg.slogdet(m)
     np.testing.assert_allclose(out.det.logabs, wl, rtol=1e-8)
 

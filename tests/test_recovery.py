@@ -57,7 +57,7 @@ def test_recovery_end_to_end_single_matrix(fault):
     res = outsource_determinant(m, N, faults=fault, recover=True, standby=1)
 
     assert res.verified
-    rep = res.recovery
+    rep = res.report.recovery
     assert isinstance(rep, RecoveryReport) and rep.ok
     # report-level fault: exactly one round, only the culprit's shard moved
     assert rep.rounds == 1
@@ -75,7 +75,7 @@ def test_recovery_end_to_end_single_matrix(fault):
         v = authenticate(l2, u2, x_aug, num_servers=N, method=method)
         assert v.ok, (method, v.residual)
 
-    assert res.verdict.ok and res.verdict.method == "q3"
+    assert res.report.verdict.ok and res.report.verdict.method == "q3"
     assert res.det.sign == honest.det.sign
     np.testing.assert_allclose(res.det.logabs, honest.det.logabs, rtol=1e-10)
     want_s, want_la = np.linalg.slogdet(m)
@@ -108,15 +108,15 @@ def test_recovery_end_to_end_batched(kind):
     )
     res = outsource_determinant(m, N, faults=plan, recover=True, standby=2)
     assert res.verified.all()
-    assert res.recovery.ok
-    assert res.recovery.servers_replaced == (1, 3)
-    spliced = {e.server: e.matrices for e in res.recovery.events}
+    assert res.report.recovery.ok
+    assert res.report.recovery.servers_replaced == (1, 3)
+    spliced = {e.server: e.matrices for e in res.report.recovery.events}
     assert spliced[1] == (0,) and spliced[3] == (2, 4)
     # the healed batch passes Q2 as well as the default Q3
     res_q2 = outsource_determinant(
         m, N, method="q2", faults=plan, recover=True, standby=2
     )
-    assert res_q2.verified.all() and res_q2.recovery.ok
+    assert res_q2.verified.all() and res_q2.report.recovery.ok
     for i in range(B):
         assert res.dets[i].sign == honest.dets[i].sign
         np.testing.assert_allclose(
@@ -140,9 +140,9 @@ def test_recovery_distributed_pipeline():
         faults=ServerFault(server=2, kind="dropout"),
         recover=True, standby=1,
     )
-    assert res.verified and res.recovery.ok
-    assert res.recovery.events[0].server == 2
-    assert res.recovery.rounds <= N
+    assert res.verified and res.report.recovery.ok
+    assert res.report.recovery.events[0].server == 2
+    assert res.report.recovery.rounds <= N
     np.testing.assert_allclose(res.det.logabs, honest.det.logabs, rtol=1e-10)
 
 
@@ -155,10 +155,10 @@ def test_recovery_in_band_cascade():
     honest = outsource_determinant(m, N)
     fault = ServerFault(server=1, in_band=True, mode="block", magnitude=0.3)
     res = outsource_determinant(m, N, faults=fault, recover=True, standby=N)
-    assert res.verified and res.recovery.ok
-    assert res.recovery.rounds >= 2  # genuinely cascaded
-    assert res.recovery.rounds <= N
-    assert 1 in res.recovery.servers_replaced
+    assert res.verified and res.report.recovery.ok
+    assert res.report.recovery.rounds >= 2  # genuinely cascaded
+    assert res.report.recovery.rounds <= N
+    assert 1 in res.report.recovery.servers_replaced
     np.testing.assert_allclose(res.det.logabs, honest.det.logabs, rtol=1e-10)
 
 
@@ -171,9 +171,9 @@ def test_recovery_straggler_redispatch():
     late = outsource_determinant(
         m, N, faults=fault, straggler_deadline=3, recover=True, standby=1
     )
-    assert late.verified and late.recovery.servers_replaced == (2,)
+    assert late.verified and late.report.recovery.servers_replaced == (2,)
     ontime = outsource_determinant(m, N, faults=fault, straggler_deadline=10)
-    assert ontime.verified and ontime.recovery is None
+    assert ontime.verified and ontime.report.recovery is None
 
 
 def test_recovery_without_standby_uses_healthy_neighbor():
@@ -183,8 +183,8 @@ def test_recovery_without_standby_uses_healthy_neighbor():
         m, N, faults=ServerFault(server=1), recover=True, standby=0
     )
     assert res.verified
-    assert res.recovery.standby_used == 0
-    assert res.recovery.events[0].replacement == 2  # culprit's neighbor
+    assert res.report.recovery.standby_used == 0
+    assert res.report.recovery.events[0].replacement == 2  # culprit's neighbor
 
 
 def test_recovery_cost_is_one_shard_not_full_restart():
@@ -196,7 +196,7 @@ def test_recovery_cost_is_one_shard_not_full_restart():
         m, N, faults=ServerFault(server=0), recover=True, standby=1
     )
     full_restart = n * n
-    for e in res.recovery.events:
+    for e in res.report.recovery.events:
         assert e.comm_elements < full_restart
     assert recovery_comm_elements(n, N, 0) == 3 * (n // N) * n
 
@@ -271,7 +271,7 @@ def test_server_pool_standby_exhaustion_batched():
     )
     res = outsource_determinant(m, N, faults=plan, recover=True, standby=2)
     assert np.asarray(res.verified).all()
-    rep = res.recovery
+    rep = res.report.recovery
     assert rep.ok and rep.standby_used == 2  # spares genuinely exhausted
     assert rep.servers_replaced == (0, 1, 2, 3)
     repl = [e.replacement for e in rep.events]
@@ -297,12 +297,12 @@ def test_standby_exhaustion_cascade_fresh_subseed_per_attempt():
     honest = outsource_determinant(m, N)
     fault = ServerFault(server=1, in_band=True, mode="block", magnitude=0.3)
     res = outsource_determinant(m, N, faults=fault, recover=True, standby=1)
-    assert res.verified and res.recovery.ok
-    assert res.recovery.rounds >= 2  # genuinely cascaded past the spare
-    assert res.recovery.standby_used == 1
-    repl = [e.replacement for e in res.recovery.events]
+    assert res.verified and res.report.recovery.ok
+    assert res.report.recovery.rounds >= 2  # genuinely cascaded past the spare
+    assert res.report.recovery.standby_used == 1
+    repl = [e.replacement for e in res.report.recovery.events]
     assert repl[0] == N and any(r < N for r in repl[1:])
-    subseeds = [e.subseed for e in res.recovery.events]
+    subseeds = [e.subseed for e in res.report.recovery.events]
     assert len(set(subseeds)) == len(subseeds)
     np.testing.assert_allclose(res.det.logabs, honest.det.logabs, rtol=1e-10)
 
@@ -339,8 +339,8 @@ def test_hardened_config_profile_drives_recovery():
     res = outsource_determinant(
         m, N, faults=ServerFault(server=1), **cfg.protocol_kwargs()
     )
-    assert res.verified and res.recovery.ok
-    assert res.recovery.events[0].replacement == N  # healed on a standby
+    assert res.verified and res.report.recovery.ok
+    assert res.report.recovery.events[0].replacement == N  # healed on a standby
 
 
 def test_server_pool_never_returns_culprit_when_avoidable():
@@ -373,5 +373,5 @@ def test_unrecoverable_without_recover_flag():
     m = _wellcond(n, seed=47)
     res = outsource_determinant(m, N, faults=ServerFault(server=1))
     assert not res.verified
-    assert res.recovery is None
-    assert res.verdict.culprit == 1
+    assert res.report.recovery is None
+    assert res.report.verdict.culprit == 1

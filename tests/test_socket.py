@@ -1,0 +1,436 @@
+"""SocketTransport acceptance (DESIGN.md §9): warm worker daemons over
+UDS, the full fault matrix (honest / tamper-localize-heal / death /
+rateless streaming) bit-identical to the multiprocess transport, plus
+wire-level adversaries — truncated frames, oversized length prefixes,
+HELLO version mismatches, mid-session disconnects — all surfacing as
+TYPED TransportErrors with the session healing where the protocol says
+it must. This file is the CI `sockets` job."""
+import multiprocessing
+import os
+import socket as socketlib
+import struct
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (
+    MultiprocessTransport,
+    SPDCClient,
+    TransportConfig,
+    TransportError,
+    TransportProtocolError,
+    TransportWorkerDied,
+    resolve_transport,
+    wire,
+)
+from repro.api.socket_transport import (
+    MAX_FRAME,
+    SOCKET_PROTO,
+    SocketTransport,
+    WorkerDaemon,
+    _daemon_main,
+    _hello_frame,
+    _parse_hello,
+    parse_address,
+    recv_frame,
+    send_frame,
+)
+from repro.core import ServerFault, outsource_determinant
+
+N = 4
+
+
+def _wellcond(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n, n)) + n * np.eye(n)
+
+
+# ----------------------------------------------------------- fixtures
+def _spawn_daemon(address, workers=None):
+    """A daemon in its own process, like deployment. In-process daemons
+    would run EdgeServer jit compiles in ephemeral handler threads, and
+    XLA compiles launched from short-lived threads can destabilize later
+    main-thread compiles in the same process — daemon jax stays out."""
+    proc = multiprocessing.get_context("spawn").Process(
+        target=_daemon_main,
+        args=(address, workers, bool(jax.config.jax_enable_x64)),
+        daemon=True,
+    )
+    proc.start()
+    return proc
+
+
+def _wait_bound(address, timeout=120.0):
+    """Block until the daemon's UDS path exists (it binds right after
+    the child finishes importing jax)."""
+    path = parse_address(address)[1]
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if os.path.exists(path):
+            return
+        time.sleep(0.05)
+    raise RuntimeError(f"daemon never bound {address}")
+
+
+def _probe_hello(address, worker_id=0):
+    """One throwaway wire-level handshake: the daemon's lifetime
+    counters as a NEW client would see them."""
+    family, target = parse_address(address)
+    s = socketlib.socket(
+        socketlib.AF_UNIX if family == "unix" else socketlib.AF_INET,
+        socketlib.SOCK_STREAM,
+    )
+    s.connect(target)
+    with s:
+        send_frame(s, _hello_frame(
+            proto=SOCKET_PROTO, wire=wire.VERSION,
+            role="client", worker_id=int(worker_id),
+        ))
+        return _parse_hello(recv_frame(s))
+
+
+@pytest.fixture(scope="module")
+def fleet(tmp_path_factory):
+    """N=4 REAL warm daemon processes on Unix sockets, shared by the
+    whole module — their lifetime HELLO counters are how tests observe
+    warmth. Each serves any worker id, so recovery's replacement ids
+    N, N+1, … wrap onto the same fleet (addresses[i % len])."""
+    root = tmp_path_factory.mktemp("spdc-fleet")
+    addrs = [f"unix://{root}/w{i}.sock" for i in range(N)]
+    procs = [_spawn_daemon(a) for a in addrs]
+    try:
+        for a in addrs:
+            _wait_bound(a)
+    except BaseException:
+        for p in procs:
+            p.terminate()
+        raise
+    yield addrs
+    for p in procs:
+        p.terminate()
+    for p in procs:
+        p.join(timeout=10)
+
+
+@pytest.fixture()
+def sock_transport(fleet):
+    t = SocketTransport(tuple(fleet), connect_timeout=10.0)
+    yield t
+    t.close()
+
+
+# ------------------------------------------------- framing primitives
+def test_parse_address():
+    assert parse_address("unix:///tmp/x.sock") == ("unix", "/tmp/x.sock")
+    assert parse_address("tcp://127.0.0.1:8471") == ("tcp", ("127.0.0.1", 8471))
+    for bad in ("http://x", "unix://", "tcp://noport"):
+        with pytest.raises(ValueError):
+            parse_address(bad)
+
+
+def test_frame_roundtrip_and_goodbye():
+    a, b = socketlib.socketpair()
+    with a, b:
+        send_frame(a, b"payload-bytes")
+        assert recv_frame(b) == b"payload-bytes"
+        send_frame(a, b"")  # goodbye sentinel
+        assert recv_frame(b) == b""
+        a.close()
+        assert recv_frame(b) is None  # clean EOF at a frame boundary
+
+
+# --------------------------------------------------- wire adversaries
+def test_adversary_truncated_frame_is_typed():
+    """A peer that dies mid-frame produced a truncated frame — a
+    protocol violation, never retried."""
+    a, b = socketlib.socketpair()
+    with b:
+        a.sendall(struct.pack(">I", 100) + b"only-ten-b")
+        a.close()
+        with pytest.raises(TransportProtocolError, match="truncated"):
+            recv_frame(b)
+
+
+def test_adversary_oversized_length_prefix_never_allocated():
+    """A malicious length prefix must not OOM the client: the reader
+    refuses before allocating."""
+    a, b = socketlib.socketpair()
+    with a, b:
+        a.sendall(struct.pack(">I", MAX_FRAME + 1))
+        with pytest.raises(TransportProtocolError, match="oversized"):
+            recv_frame(b)
+    assert issubclass(TransportProtocolError, TransportError)
+
+
+def _fake_daemon(reply_hello):
+    """One-connection fake worker: accepts, reads the client HELLO,
+    replies with `reply_hello` bytes, then serves nothing."""
+    lsock = socketlib.socket(socketlib.AF_INET, socketlib.SOCK_STREAM)
+    lsock.bind(("127.0.0.1", 0))
+    lsock.listen(1)
+    port = lsock.getsockname()[1]
+
+    def serve():
+        conn, _ = lsock.accept()
+        with conn, lsock:
+            recv_frame(conn)  # client HELLO
+            send_frame(conn, reply_hello)
+            recv_frame(conn)  # linger until the client hangs up
+
+    threading.Thread(target=serve, daemon=True).start()
+    return f"tcp://127.0.0.1:{port}"
+
+
+def test_adversary_hello_version_mismatch_not_retried():
+    """A daemon speaking the wrong socket-proto version is a protocol
+    violation: typed, immediate, no reconnect storm."""
+    addr = _fake_daemon(_hello_frame(
+        proto=SOCKET_PROTO + 1, wire=wire.VERSION, role="worker",
+        worker_id=0, served=None, caps=[], accept=True,
+        connections=1, frames_served=0,
+    ))
+    with SocketTransport((addr,), connect_timeout=5.0) as t:
+        task = SPDCClient().open_session(_wellcond(8), 2).tasks()[0]
+        with pytest.raises(TransportProtocolError, match="version mismatch"):
+            t.submit(task, 0)
+
+
+def test_adversary_non_worker_role_rejected():
+    addr = _fake_daemon(_hello_frame(
+        proto=SOCKET_PROTO, wire=wire.VERSION, role="client",
+        worker_id=0, accept=True,
+    ))
+    with SocketTransport((addr,), connect_timeout=5.0) as t:
+        task = SPDCClient().open_session(_wellcond(8), 2).tasks()[0]
+        with pytest.raises(TransportProtocolError, match="not a worker"):
+            t.submit(task, 0)
+
+
+def test_daemon_refuses_bad_client_hello(tmp_path):
+    """Daemon side of the handshake: wrong version or an unserved worker
+    id gets an explicit accept=False HELLO, not a silent EOF."""
+    with WorkerDaemon(f"unix://{tmp_path}/w.sock", workers=(0, 1)) as d:
+        def handshake(**fields):
+            s = socketlib.socket(socketlib.AF_UNIX, socketlib.SOCK_STREAM)
+            s.connect(parse_address(d.address)[1])
+            with s:
+                send_frame(s, _hello_frame(**fields))
+                return _parse_hello(recv_frame(s))
+
+        good = dict(proto=SOCKET_PROTO, wire=wire.VERSION, role="client")
+        assert handshake(**good, worker_id=1)["accept"] is True
+        assert handshake(**good, worker_id=7)["accept"] is False  # unserved
+        assert handshake(**{**good, "proto": 99}, worker_id=0)["accept"] is False
+        assert handshake(**{**good, "role": "worker"}, worker_id=0)["accept"] is False
+        hello = handshake(**good, worker_id=0)
+        assert hello["served"] == [0, 1] and hello["role"] == "worker"
+
+
+def test_mid_session_disconnect_heals(tmp_path):
+    """The daemon dies and is replaced between sweeps: the stale pooled
+    connection surfaces a TYPED TransportWorkerDied, and a full session
+    through the same transport heals by reconnecting — one drop costs
+    one reconnect, not the session."""
+    address = f"unix://{tmp_path}/w.sock"
+    sockpath = parse_address(address)[1]
+    p1 = _spawn_daemon(address)
+    p2 = None
+    m = _wellcond(16, seed=5)
+    t = SocketTransport((address,), connect_timeout=10.0)
+    try:
+        _wait_bound(address)
+        assert outsource_determinant(m, 2, transport=t).verified
+        p1.terminate()  # takes its live connections down with it
+        p1.join(timeout=10)
+        if os.path.exists(sockpath):
+            os.unlink(sockpath)  # SIGTERM skipped the daemon's unlink
+        p2 = _spawn_daemon(address)
+        _wait_bound(address)
+        task = SPDCClient().open_session(m, 2).tasks()[0]
+        with pytest.raises((TransportWorkerDied, TransportProtocolError)):
+            with t._worker_lock(0):
+                t._request(0, task.to_bytes())
+        res = outsource_determinant(m, 2, transport=t)  # reconnects
+        assert res.verified
+        assert t.hello(0)["connections"] >= 1  # the NEW daemon's counter
+    finally:
+        t.close()
+        for p in (p1, p2):
+            if p is not None:
+                p.terminate()
+                p.join(timeout=10)
+
+
+# ------------------------------------------- acceptance matrix (UDS, N=4)
+def test_honest_end_to_end(sock_transport, fleet):
+    """N=4 real daemons; every message crosses as length-prefixed wire
+    frames; det matches numpy at rtol 1e-10."""
+    m = _wellcond(16, seed=31)
+    res = outsource_determinant(m, N, transport=sock_transport)
+    assert len(sock_transport.workers) == N  # one connection per worker
+    ws, wl = np.linalg.slogdet(m)
+    assert res.verified and res.det.sign == ws
+    np.testing.assert_allclose(res.det.logabs, wl, rtol=1e-10)
+    hello = sock_transport.hello(0)
+    assert hello["role"] == "worker" and hello["proto"] == SOCKET_PROTO
+    # a fresh handshake reads each daemon's LIFETIME counter: all served
+    assert all(_probe_hello(a)["frames_served"] >= 1 for a in fleet)
+
+
+def test_socket_factors_bit_identical_to_multiprocess(fleet):
+    """THE equivalence bar: the same session's ShardTasks produce
+    bit-identical ShardResults over sockets and over process pipes —
+    the transport moves bytes, it must not change a single one."""
+    session = SPDCClient().open_session(_wellcond(16, seed=33), N)
+    tasks = session.tasks()
+    addrs = tuple(fleet)
+    with SocketTransport(addrs, connect_timeout=5.0) as st, \
+            MultiprocessTransport() as mt:
+        rs = st.factor(tasks)
+        rm = mt.factor(tasks)
+    for a, b in zip(rs, rm):
+        assert a.server == b.server and a.subseed == b.subseed
+        np.testing.assert_array_equal(a.l_row, b.l_row)  # bit-exact
+        np.testing.assert_array_equal(a.u_row, b.u_row)
+    out = session.collect(rs)
+    assert out.verified
+
+
+@pytest.mark.parametrize("method", ["q2", "q3"])
+def test_tamper_localize_heal(sock_transport, method):
+    """Worker 1 tampers its strip in-band; the client localizes it over
+    the socket boundary and heals via re-dispatched ShardTasks — the
+    replacement id N wraps onto the same fleet (addresses[N % N])."""
+    m = _wellcond(16, seed=37)
+    honest = outsource_determinant(m, N)
+    res = outsource_determinant(
+        m, N, method=method,
+        faults=ServerFault(server=1, mode="block", magnitude=0.3),
+        recover=True, standby=1, transport=sock_transport,
+    )
+    assert res.verified and res.report.recovery.ok
+    assert res.report.recovery.events[0].server == 1
+    assert 1 in res.report.recovery.servers_replaced
+    np.testing.assert_allclose(res.det.logabs, honest.det.logabs,
+                               rtol=1e-10)
+
+
+def test_rateless_streams_over_sockets(fleet):
+    """Rateless dispatch over real daemons: a sleeping worker's request
+    times out, its CONNECTION is dropped (the daemon survives), the
+    strip re-streams to a live sibling, and the fleet report attributes
+    the slowness."""
+    from repro.configs import RatelessConfig
+
+    m = _wellcond(16, seed=53)
+    cfg = RatelessConfig(request_timeout_s=1.0, probation_cooldown_s=60.0)
+    client = SPDCClient(rateless=cfg, recover=True)
+    fault = ServerFault(server=1, kind="delay", delay_s=8.0)
+    addrs = tuple(fleet)
+    with SocketTransport(addrs, connect_timeout=5.0) as t:
+        out = client.open_session(m, N, faults=fault).run(t)
+    assert out.verified
+    assert out.report.fleet.timeouts >= 1
+    w1 = out.report.fleet.workers[1]
+    assert w1["failures"] >= 1 and w1["completed"] == 0
+    ws, wl = np.linalg.slogdet(m)
+    np.testing.assert_allclose(out.det.logabs, wl, rtol=1e-8)
+
+
+def test_daemons_stay_warm_across_clients(fleet):
+    """The point of the transport: a NEW client (fresh SocketTransport,
+    as after a client restart) lands on the SAME daemon — its lifetime
+    counters keep growing and earlier clients' frames are visible."""
+    m = _wellcond(12, seed=61)
+    addrs = tuple(fleet)
+    with SocketTransport(addrs, connect_timeout=5.0) as t1:
+        assert outsource_determinant(m, N, transport=t1).verified
+        first = t1.hello(0)["connections"]
+    with SocketTransport(addrs, connect_timeout=5.0) as t2:
+        assert outsource_determinant(m, N, transport=t2).verified
+        hello = t2.hello(0)
+    assert hello["connections"] > first  # same daemon, one more client
+    assert hello["frames_served"] > 0  # warm: it served before we arrived
+
+
+def test_session_start_overlaps_wire(sock_transport):
+    """The async-overlap redesign end-to-end on real sockets: batch k+1's
+    PMOP runs while batch k's ShardTasks ride the wire; both collect on
+    the calling thread, in order, verified."""
+    client = SPDCClient()
+    m1, m2 = _wellcond(16, seed=71), _wellcond(16, seed=72)
+    p1 = client.open_session(m1, N).start(sock_transport)
+    # this PMOP overlaps p1's wire time — the pipeline's whole point
+    p2 = client.open_session(m2, N).start(sock_transport)
+    r2, r1 = p2.result(timeout=60), p1.result(timeout=60)
+    assert p1.done() and p2.done()
+    for m, r in ((m1, r1), (m2, r2)):
+        ws, wl = np.linalg.slogdet(m)
+        assert r.verified and r.det.sign == ws
+        np.testing.assert_allclose(r.det.logabs, wl, rtol=1e-10)
+    t = r1.report.timings
+    assert t.pmop_s > 0 and t.dispatch_s > 0 and t.collect_s > 0
+
+
+# ------------------------------------------ self-hosting and lifecycle
+@pytest.mark.slow
+def test_self_hosted_daemons_death_respawn_and_leak_free():
+    """Bare `SocketTransport()` self-hosts one warm UDS daemon process
+    per worker id; a killed daemon is respawned transparently; close()
+    terminates every spawned process and removes the socket dir — the
+    leak check."""
+    m = _wellcond(16, seed=81)
+    t = SocketTransport(connect_timeout=30.0)
+    try:
+        res = outsource_determinant(m, 2, transport=t)
+        assert res.verified
+        assert sorted(t._spawned) == [0, 1]
+        victim = t._spawned[1][0]
+        victim.terminate()
+        victim.join(timeout=10)
+        res2 = outsource_determinant(m, 2, transport=t)  # respawn heals
+        assert res2.verified
+        assert t._spawned[1][0].pid != victim.pid
+    finally:
+        procs = [p for p, _ in t._spawned.values()]
+        tmpdir = t._tmpdir
+        t.close()
+    assert t.closed
+    assert tmpdir is not None and not os.path.exists(tmpdir)
+    for p in procs:
+        assert not p.is_alive()
+    with pytest.raises(TransportError, match="closed"):
+        t.factor([])
+
+
+def test_transport_config_socket_resolution(fleet):
+    """The unified transport= surface reaches sockets: a TransportConfig
+    with addresses builds a working transport, equal configs share ONE
+    process-wide instance via resolve_transport, and build() is the
+    fresh-owned escape hatch."""
+    addrs = tuple(fleet)
+    cfg = TransportConfig("socket", addresses=addrs, timeout=30.0)
+    shared = resolve_transport(cfg)
+    assert shared is resolve_transport(TransportConfig(
+        "socket", addresses=addrs, timeout=30.0
+    ))  # equal configs → one warm pool
+    owned = cfg.build()
+    assert owned is not shared
+    try:
+        m = _wellcond(12, seed=91)
+        res = outsource_determinant(m, N, transport=cfg)
+        assert res.verified
+        ws, wl = np.linalg.slogdet(m)
+        np.testing.assert_allclose(res.det.logabs, wl, rtol=1e-10)
+    finally:
+        owned.close()
+    # client OWNS a config-built transport and closes it deterministically
+    with SPDCClient(transport=cfg) as client:
+        inner = client.transport
+        assert isinstance(inner, SocketTransport) and inner is not shared
+        assert client.open_session(m, N).run().verified
+    assert inner.closed
+    assert not shared.closed  # the registry instance is untouched
