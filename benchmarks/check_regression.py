@@ -44,6 +44,20 @@ shape must stay within `--factor` of the baseline's.
     # there, same as the rateless guard)
     python benchmarks/check_regression.py BENCH_ci.json BENCH_6.json \
         --suite sockets --n 1024 --servers 4 --factor 2.0
+    # gateway_overload guard (rows from the `gateway_overload` suite,
+    # BENCH_7): under open-loop Poisson storms every admitted request
+    # must verify and every shed request must be a TYPED rejection that
+    # accounts exactly (served + rejected == offered); the heaviest
+    # storm must actually shed; the admitted-rate must beat the fresh
+    # per-request loop rate (batching pays even while shedding); the
+    # cache leg must hit >= 90%% and answer orders of magnitude above
+    # the loop rate; the breaker leg must open at least once and keep
+    # the clean bucket's rate within --containment-floor of its
+    # no-chaos baseline; and the committed baseline floors the absolute
+    # admitted rate at --factor when the shapes match (smoke shrinks
+    # the request count, so the floor is skipped there)
+    python benchmarks/check_regression.py BENCH_ci.json BENCH_7.json \
+        --suite gateway_overload --n 32 --servers 2 --factor 2.0
 """
 
 from __future__ import annotations
@@ -350,6 +364,147 @@ def check_sockets(
     return ok and good
 
 
+def check_gateway_overload(
+    fresh_rows: list[dict],
+    base_rows: list[dict],
+    n: int,
+    servers: int,
+    containment_floor: float,
+    factor: float,
+) -> bool:
+    """The overload & chaos suite's acceptance claims (DESIGN.md §10).
+
+    All sharp claims are taken on the FRESH run (the loop baseline, the
+    storms, the cache leg, and both breaker legs share one process and
+    one machine, so the ratios are noise-immune):
+
+      * every overload leg accounts exactly — served + typed rejections
+        == offered requests (no lost or silently dropped submissions) —
+        and every ADMITTED request verifies;
+      * the heaviest storm sheds (an overload guard that never rejects
+        guards nothing);
+      * the best admitted rate beats the fresh per-request loop rate —
+        micro-batching must keep paying even while the admission layer
+        is shedding (the serving layer's §5 claim, restated under load);
+      * the cache leg hits >= 90% on identical resubmissions and
+        answers >= 10x the loop rate (an idempotency hit must cost a
+        hash, not a sweep);
+      * the breaker leg opens at least once under pinned chaos and the
+        CLEAN bucket's rate stays >= ``containment_floor`` x its own
+        no-chaos baseline — a poisoned bucket must not starve healthy
+        traffic (§10.2's containment claim; the no-chaos leg must not
+        trip the breaker at all, folded into its all_verified flag).
+
+    The COMMITTED baseline floors the fresh absolute admitted rate at
+    ``factor`` x when an overload row matches on (n, N, offered_mult,
+    requests); the smoke run shrinks the request count, so the floor is
+    skipped there with a visible message, same as the sockets guard.
+    """
+    ok = True
+    sweeps = [r for r in fresh_rows
+              if r.get("suite") == "gateway_overload"
+              and r.get("mode") == "overload"
+              and r.get("n") == n and r.get("num_servers") == servers]
+    if not sweeps:
+        print(f"gateway_overload: no fresh overload rows at n={n} "
+              f"N={servers} -> FAIL")
+        return False
+    for r in sweeps:
+        shed = (r["rejected_overload"] + r["rejected_admission"]
+                + r["rejected_breaker"])
+        acct = (
+            bool(r.get("all_accounted"))
+            and r["served"] + shed == r["requests"]
+        )
+        ver = bool(r.get("all_verified"))
+        print(
+            f"gateway_overload[x{r['offered_mult']:g}] served {r['served']} "
+            f"+ shed {shed} of {r['requests']} (typed: "
+            f"overload={r['rejected_overload']} "
+            f"admission={r['rejected_admission']} "
+            f"breaker={r['rejected_breaker']}), p99 {r['p99_ms']}ms -> "
+            f"{'OK' if acct and ver else 'FAIL'}"
+            + ("" if ver else " (unverified admitted result)")
+        )
+        ok = ok and acct and ver
+    heaviest = max(sweeps, key=lambda r: r["offered_mult"])
+    heaviest_shed = (heaviest["rejected_overload"]
+                     + heaviest["rejected_admission"]
+                     + heaviest["rejected_breaker"])
+    good = heaviest_shed > 0
+    print(f"gateway_overload[shedding] x{heaviest['offered_mult']:g} storm "
+          f"shed {heaviest_shed} -> {'OK' if good else 'FAIL'}")
+    ok = ok and good
+    loop = best_dets_per_sec(fresh_rows, n, servers,
+                             suite="gateway_overload", modes=("loop",))
+    admitted = max(float(r["dets_per_sec"]) for r in sweeps)
+    good = admitted > loop
+    print(
+        f"gateway_overload[beats-loop] admitted {admitted:.1f} vs "
+        f"per-request {loop:.1f} dets/sec -> {'OK' if good else 'FAIL'}"
+    )
+    ok = ok and good
+    caches = [r for r in fresh_rows
+              if r.get("suite") == "gateway_overload"
+              and r.get("mode") == "cache" and r.get("n") == n]
+    for r in caches:
+        good = (r["hit_rate"] >= 0.9 and r["speedup_vs_loop"] >= 10.0
+                and bool(r.get("all_verified")))
+        print(
+            f"gateway_overload[cache] hit_rate {r['hit_rate']:.3f} "
+            f"(floor 0.9), {r['speedup_vs_loop']:.0f}x loop rate "
+            f"(floor 10x) -> {'OK' if good else 'FAIL'}"
+        )
+        ok = ok and good
+    if not caches:
+        print("gateway_overload: no fresh cache rows -> FAIL")
+        ok = False
+    breakers = [r for r in fresh_rows
+                if r.get("suite") == "gateway_overload"
+                and r.get("mode") == "breaker" and r.get("n") == n]
+    for r in breakers:
+        good = (r["breaker_opens"] >= 1
+                and r["containment_ratio"] >= containment_floor
+                and bool(r.get("all_verified")))
+        print(
+            f"gateway_overload[breaker] opens {r['breaker_opens']}, clean "
+            f"bucket {r['clean_dets_per_sec']:.1f} vs no-chaos "
+            f"{r['baseline_dets_per_sec']:.1f} dets/sec = "
+            f"{r['containment_ratio']:.3f}x (floor {containment_floor}x) "
+            f"-> {'OK' if good else 'FAIL'}"
+        )
+        ok = ok and good
+    if not breakers:
+        print("gateway_overload: no fresh breaker rows -> FAIL")
+        ok = False
+    # committed-baseline absolute floor, only at matching storm shapes
+    fresh_shapes = {(r["offered_mult"], r["requests"]) for r in sweeps}
+    base_match = [
+        float(r["dets_per_sec"]) for r in base_rows
+        if r.get("suite") == "gateway_overload"
+        and r.get("mode") == "overload"
+        and r.get("n") == n and r.get("num_servers") == servers
+        and (r.get("offered_mult"), r.get("requests")) in fresh_shapes
+    ]
+    if not base_match:
+        print(
+            f"gateway_overload[baseline] n={n} N={servers}: no baseline "
+            f"overload row at shapes={sorted(fresh_shapes)} — smoke "
+            f"shapes differ from the committed full run; skipping "
+            f"absolute floor"
+        )
+        return ok
+    base_a = max(base_match)
+    good = admitted >= base_a / factor
+    print(
+        f"gateway_overload[baseline] n={n} N={servers}: fresh "
+        f"{admitted:.1f} vs baseline {base_a:.1f} dets/sec (floor "
+        f"{base_a / factor:.1f} at {factor}x) "
+        f"-> {'OK' if good else 'REGRESSION'}"
+    )
+    return ok and good
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("fresh", type=Path, help="freshly measured BENCH json")
@@ -365,7 +520,7 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument(
         "--suite",
         choices=("throughput", "gateway", "precision", "transports",
-                 "rateless", "sockets"),
+                 "rateless", "sockets", "gateway_overload"),
         default="throughput",
         help="which suite's rows to guard (gateway also checks the "
         "gateway-beats-loop acceptance claim on the fresh run; precision "
@@ -373,7 +528,10 @@ def main(argv: list[str] | None = None) -> int:
         "guards the role-split inline fast path; rateless checks the "
         "straggle-speedup, honest-within-noise, and all-verified claims; "
         "sockets checks the socket-within-socket-factor-of-inline, "
-        "pipelined-never-loses, and all-verified claims)",
+        "pipelined-never-loses, and all-verified claims; "
+        "gateway_overload checks the typed-shedding, exact-accounting, "
+        "all-admitted-verified, cache-hit, and breaker-containment "
+        "claims)",
     )
     ap.add_argument(
         "--f32-speedup",
@@ -405,6 +563,16 @@ def main(argv: list[str] | None = None) -> int:
         "baseline is always held to the sharp 3x)",
     )
     ap.add_argument(
+        "--containment-floor",
+        type=float,
+        default=0.5,
+        help="gateway_overload suite: minimum clean-bucket dets/sec "
+        "ratio (chaos run / no-chaos baseline) — the breaker must keep "
+        "a poisoned bucket from starving healthy traffic (0.5 "
+        "tolerates runner noise; fast-failed chaos usually makes the "
+        "ratio exceed 1)",
+    )
+    ap.add_argument(
         "--overlap-floor",
         type=float,
         default=0.9,
@@ -416,6 +584,11 @@ def main(argv: list[str] | None = None) -> int:
 
     fresh = json.loads(args.fresh.read_text())
     base = json.loads(args.baseline.read_text())
+    if args.suite == "gateway_overload":
+        ok = check_gateway_overload(fresh["rows"], base["rows"], args.n,
+                                    args.servers, args.containment_floor,
+                                    args.factor)
+        return 0 if ok else 1
     if args.suite == "sockets":
         ok = check_sockets(fresh["rows"], base["rows"], args.n,
                            args.servers, args.socket_factor,

@@ -57,6 +57,16 @@ future PRs have a perf trajectory to beat.
                            by check_regression.py --suite sockets
                            (socket within 3x of inline, pipelining never
                            slower than blocking, every leg verified)
+  gateway_overload       — production-hardened gateway (DESIGN.md §10):
+                           open-loop Poisson overload at 2×/8×/16× the
+                           per-request loop rate against a rate-limited,
+                           bounded-queue gateway (admitted p50/p99, typed
+                           rejection accounting, 100% of admitted
+                           verified), an idempotency cache-hit leg, and a
+                           breaker-containment leg (one bucket poisoned,
+                           the clean bucket's rate vs its no-fault
+                           baseline); rows land in BENCH_7.json, guarded
+                           by check_regression.py --suite gateway_overload
   extension_inverse      — paper §VII.B future work: secure inversion
 
 Usage: python benchmarks/run.py [suite ...] [--smoke] [--out PATH]
@@ -452,7 +462,7 @@ def gateway_suite(n: int = 64, N: int = 2):
         emit(f"gateway_paced_n{n}_N{N}_x{mult:g}", wall * 1e6 / max(len(served), 1),
              suite="gateway", n=n, num_servers=N, mode="paced",
              offered_mult=mult, offered_per_sec=round(offered, 2),
-             requests=requests, rejected=rejected,
+             requests=requests, rejected=sum(rejected.values()),
              dets_per_sec=round(len(served) / wall, 2),
              p50_ms=lat_ms(served, 50), p99_ms=lat_ms(served, 99),
              all_verified=bool(all(r.verified for r in served)))
@@ -724,6 +734,172 @@ def sockets_suite(N: int = 4):
         )
 
 
+def gateway_overload_suite(n: int = 32, N: int = 2):
+    """Production-hardened gateway under overload and chaos (DESIGN.md §10).
+
+    Four measurement legs, all against the per-request loop-rate baseline
+    measured in the SAME process:
+
+      * loop      — one warm single-matrix call; its 1/t rate calibrates
+                    the offered-load multiples AND the admission rate;
+      * overload  — open-loop Poisson arrivals at 2×/8×/16× the loop rate
+                    against a gateway with per-tenant admission (rate =
+                    loop rate) and a bounded pending queue: admitted
+                    requests' sustained dets/sec + p50/p99, every shed
+                    request a TYPED rejection (overload/admission split
+                    emitted), all admitted verified — the guard's sharp
+                    claims;
+      * cache     — the same matrix resubmitted after a verified first
+                    answer: idempotency hit rate and the O(hash) answer
+                    rate vs the loop baseline;
+      * breaker   — chaos pinned to one bucket (its sweeps raise) while a
+                    clean bucket serves the same workload as a no-fault
+                    baseline run: containment_ratio = clean-bucket rate
+                    with chaos / without. The breaker fast-fails the
+                    poisoned bucket after failure_threshold flushes, so
+                    the clean bucket's rate must stay within noise.
+    """
+    import asyncio
+
+    from repro.configs import (
+        AdmissionConfig,
+        BreakerConfig,
+        SPDCConfig,
+        SPDCGatewayConfig,
+    )
+    from repro.core import outsource_determinant
+    from repro.launch.serve_spdc import run_workload
+    from repro.serve import AsyncSPDCGateway, SPDCGateway
+
+    requests = 48 if SMOKE else 96
+    mults = (8.0,) if SMOKE else (2.0, 8.0, 16.0)
+    max_batch = 8
+    rng = np.random.default_rng(11)
+    spdc = SPDCConfig(num_servers=N)
+
+    single_m = _wellcond(n, seed=n + N)
+    t_single_us, res = _t(
+        lambda: outsource_determinant(single_m, N), reps=3, warmup=1
+    )
+    loop_rate = 1e6 / t_single_us
+    emit(f"gw_overload_loop_n{n}_N{N}", t_single_us, suite="gateway_overload",
+         n=n, num_servers=N, mode="loop", dets_per_sec=round(loop_rate, 2),
+         verified=bool(res.verified))
+
+    def lat_ms(results, q):
+        return round(float(np.percentile(
+            [r.latency_s for r in results], q) * 1e3), 2)
+
+    # -- overload legs: Poisson arrivals at mult × the loop rate ---------
+    cfg = SPDCGatewayConfig(
+        name="bench-gw-overload", buckets=(n,), max_batch=max_batch,
+        max_wait_us=2000.0, max_pending=4 * max_batch, spdc=spdc,
+        admission=AdmissionConfig(rate_per_sec=loop_rate,
+                                  burst=float(max_batch)),
+    )
+    SPDCGateway(cfg).warmup()  # shapes shared via the process jit cache
+    for mult in mults:
+        offered = mult * loop_rate
+        mats = [_wellcond(n, seed=4000 + i) for i in range(requests)]
+        arrival_s = np.cumsum(rng.exponential(1.0 / offered, requests))
+
+        async def drive():
+            async with AsyncSPDCGateway(cfg) as agw:
+                out = await run_workload(agw, mats, arrival_s)
+                return out, agw.stats.as_dict()
+
+        (results, rejected, wall), stats = asyncio.run(drive())
+        served = [r for r in results if r is not None]
+        shed = sum(rejected.values())
+        emit(f"gw_overload_x{mult:g}_n{n}_N{N}",
+             wall * 1e6 / max(len(served), 1),
+             suite="gateway_overload", n=n, num_servers=N, mode="overload",
+             offered_mult=mult, offered_per_sec=round(offered, 2),
+             requests=requests, served=len(served),
+             rejected_overload=rejected["overload"],
+             rejected_admission=rejected["admission"],
+             rejected_breaker=rejected["breaker"],
+             all_accounted=bool(len(served) + shed == requests),
+             dets_per_sec=round(len(served) / wall, 2),
+             p50_ms=lat_ms(served, 50), p99_ms=lat_ms(served, 99),
+             all_verified=bool(all(r.verified for r in served)))
+
+    # -- cache leg: identical resubmissions answer in O(hash) ------------
+    cache_cfg = SPDCGatewayConfig(
+        name="bench-gw-cache", buckets=(n,), max_batch=max_batch,
+        max_wait_us=2000.0, spdc=spdc,
+    )
+    gw = SPDCGateway(cache_cfg)
+    m = _wellcond(n, seed=5000)
+    first = gw.submit(m)
+    gw.drain()
+    assert gw.take(first).verified
+    reps = requests
+    t0 = time.perf_counter()
+    rids = [gw.submit(m) for _ in range(reps)]
+    wall = time.perf_counter() - t0
+    hits = [gw.take(rid) for rid in rids]
+    lookups = gw.stats.cache_hits + gw.stats.cache_misses
+    hit_rate = gw.stats.cache_hits / lookups
+    emit(f"gw_cache_hit_n{n}_N{N}", wall * 1e6 / reps,
+         suite="gateway_overload", n=n, num_servers=N, mode="cache",
+         requests=reps, hit_rate=round(hit_rate, 4),
+         dets_per_sec=round(reps / wall, 2),
+         speedup_vs_loop=round((reps / wall) / loop_rate, 2),
+         all_verified=bool(all(r.verified for r in hits)))
+    gw.close()
+
+    # -- breaker leg: chaos on one bucket, containment on the other ------
+    n_small = n // 2
+
+    def run_clean_stream(poison: bool):
+        def faults_for(key):
+            if poison and key.pad_to == n_small:
+                raise RuntimeError("injected chaos: poisoned bucket")
+            return None
+
+        bcfg = SPDCGatewayConfig(
+            name="bench-gw-breaker", buckets=(n_small, n),
+            max_batch=max_batch, max_wait_us=2000.0, spdc=spdc,
+            breaker=BreakerConfig(failure_threshold=3),
+        )
+        bgw = SPDCGateway(bcfg, faults_for=faults_for)
+        bgw.warmup()
+        clean = [_wellcond(n, seed=6000 + i) for i in range(requests // 2)]
+        noisy = [_wellcond(n_small, seed=7000 + i)
+                 for i in range(requests // 2)]
+        clean_rids, shed = [], 0
+        t0 = time.perf_counter()
+        for cm, nm in zip(clean, noisy):
+            # Both legs submit BOTH streams; only the chaos leg's noisy
+            # bucket fails (and fast-fails once the breaker trips).
+            try:
+                bgw.submit(nm)
+            except Exception:  # noqa: BLE001 — BreakerOpen after it trips
+                shed += 1
+            clean_rids.append(bgw.submit(cm))
+        bgw.drain()
+        wall = time.perf_counter() - t0
+        served = [bgw.take(rid) for rid in clean_rids]
+        assert all(r is not None for r in served)
+        return served, wall, shed, bgw.stats.as_dict()
+
+    base_served, base_wall, _, base_stats = run_clean_stream(poison=False)
+    chaos_served, chaos_wall, shed, chaos_stats = run_clean_stream(poison=True)
+    base_rate = len(base_served) / base_wall
+    chaos_rate = len(chaos_served) / chaos_wall
+    emit(f"gw_breaker_containment_n{n}_N{N}", chaos_wall * 1e6 / len(chaos_served),
+         suite="gateway_overload", n=n, num_servers=N, mode="breaker",
+         requests=requests // 2, poisoned_shed=shed,
+         breaker_opens=chaos_stats["breaker_opens"],
+         clean_dets_per_sec=round(chaos_rate, 2),
+         baseline_dets_per_sec=round(base_rate, 2),
+         containment_ratio=round(chaos_rate / base_rate, 3),
+         dets_per_sec=round(chaos_rate, 2),
+         all_verified=bool(all(r.verified for r in chaos_served)
+                           and base_stats["breaker_opens"] == 0))
+
+
 def extension_inverse(n: int = 128):
     """Paper §VII.B future work, implemented: secure outsourced inversion."""
     from repro.core import outsource_inverse
@@ -752,6 +928,7 @@ SUITES = {
     "transports": transports_suite,
     "rateless": rateless_suite,
     "sockets": sockets_suite,
+    "gateway_overload": gateway_overload_suite,
     "inverse": extension_inverse,
 }
 
@@ -802,7 +979,8 @@ def main(argv: list[str] | None = None) -> None:
     # guard); everything else lives in BENCH_1.json
     own_baseline = {"gateway": "BENCH_2.json", "precision": "BENCH_3.json",
                     "transports": "BENCH_4.json", "rateless": "BENCH_5.json",
-                    "sockets": "BENCH_6.json"}
+                    "sockets": "BENCH_6.json",
+                    "gateway_overload": "BENCH_7.json"}
     for suite, fname in own_baseline.items():
         rows = [r for r in RESULTS if r.get("suite") == suite]
         if suite in names and not SMOKE:

@@ -15,11 +15,13 @@ from .mamba2_370m import MAMBA2_370M
 from .nemotron_4_340b import NEMOTRON_4_340B
 from .qwen2_vl_72b import QWEN2_VL_72B
 from .spdc import (
+    ADMISSION_OFF, BREAKER_DEFAULT, BREAKER_OFF, CACHE_DEFAULT, CACHE_OFF,
     RATELESS_DEFAULT, SPDC_DEFAULT, SPDC_EDGE_F32, SPDC_EDGE_HARDENED,
     SPDC_EDGE_MP, SPDC_EDGE_RATELESS, SPDC_EDGE_SMALL, SPDC_EDGE_SOCKET,
     SPDC_EDGE_THREADS, SPDC_GATEWAY_BULK, SPDC_GATEWAY_DEFAULT,
     SPDC_GATEWAY_F32, SPDC_GATEWAY_HARDENED, SPDC_GATEWAY_LOWLAT,
-    SPDC_GATEWAY_SOCKET, SPDC_GATEWAY_THREADS, SPDC_POD, RatelessConfig,
+    SPDC_GATEWAY_PROD, SPDC_GATEWAY_SOCKET, SPDC_GATEWAY_THREADS, SPDC_POD,
+    AdmissionConfig, BreakerConfig, CacheConfig, RatelessConfig,
     SPDCConfig, SPDCGatewayConfig,
 )
 from .tinyllama_1_1b import TINYLLAMA_1_1B
@@ -73,5 +75,7 @@ __all__ = [
     "RatelessConfig", "RATELESS_DEFAULT",
     "SPDCGatewayConfig", "SPDC_GATEWAY_DEFAULT", "SPDC_GATEWAY_LOWLAT",
     "SPDC_GATEWAY_BULK", "SPDC_GATEWAY_HARDENED", "SPDC_GATEWAY_F32",
-    "SPDC_GATEWAY_THREADS", "SPDC_GATEWAY_SOCKET",
+    "SPDC_GATEWAY_THREADS", "SPDC_GATEWAY_SOCKET", "SPDC_GATEWAY_PROD",
+    "AdmissionConfig", "ADMISSION_OFF", "BreakerConfig", "BREAKER_DEFAULT",
+    "BREAKER_OFF", "CacheConfig", "CACHE_DEFAULT", "CACHE_OFF",
 ]

@@ -179,6 +179,124 @@ SPDC_EDGE_SOCKET = SPDCConfig(
 
 
 @dataclass(frozen=True)
+class AdmissionConfig:
+    """Per-tenant admission control for the gateway (DESIGN.md §10.1).
+
+    Tenancy is an ACCOUNTING dimension, not a bucketing one: all tenants'
+    requests still coalesce into shared sweeps; what is per-tenant is the
+    right to enter the queue. Both knobs default to off (None) so a
+    gateway without multi-tenant policy behaves exactly as before.
+
+    rate_per_sec: token-bucket refill rate per tenant (None = unlimited).
+    burst: max banked tokens (None = max(1, rate_per_sec) — one second of
+        headroom; a fresh tenant may burst this many at once).
+    max_pending_per_tenant: pending-request quota per tenant (None =
+        unlimited). Exceeding either raises a typed AdmissionRejected at
+        submit time — distinct from GatewayOverloaded, which is the
+        gateway-wide capacity door.
+    """
+
+    rate_per_sec: float | None = None
+    burst: float | None = None
+    max_pending_per_tenant: int | None = None
+
+    def __post_init__(self):
+        if self.rate_per_sec is not None and self.rate_per_sec <= 0:
+            raise ValueError("rate_per_sec must be > 0 (or None for off)")
+        if self.burst is not None and self.burst <= 0:
+            raise ValueError("burst must be > 0 (or None for auto)")
+        if (self.max_pending_per_tenant is not None
+                and self.max_pending_per_tenant < 1):
+            raise ValueError("max_pending_per_tenant must be >= 1 (or None)")
+
+
+ADMISSION_OFF = AdmissionConfig()
+
+
+@dataclass(frozen=True)
+class BreakerConfig:
+    """Per-bucket circuit breaker (DESIGN.md §10.2).
+
+    failure_threshold: consecutive sweep failures (the sweep RAISED) that
+        trip the breaker.
+    max_unverified_rate: EWMA unverified-fraction above which the breaker
+        trips even though sweeps complete (None = failures only). A
+        bucket that keeps producing rejected verdicts burns device time
+        for answers nobody can accept — operationally a failure.
+    unverified_alpha / min_samples: EWMA weight of the newest flush and
+        the flush count before the unverified signal may trip.
+    cooldown_base_s / cooldown_max_s / probe_jitter: open-state cooldown
+        base·2^(opens−1) capped at max, ±jitter fraction drawn
+        deterministically from the bucket identity (no thundering herd,
+        exact probe times on the virtual clock).
+    on_open: what an open breaker does to NEW submissions — "fastfail"
+        raises a typed BreakerOpen with a retry-after hint; "direct"
+        detours them to the un-coalesced direct path (degraded but
+        served, and isolated from the poisoned compiled sweep).
+    enabled: master switch (False restores pre-breaker behavior).
+    """
+
+    failure_threshold: int = 3
+    max_unverified_rate: float | None = 0.5
+    unverified_alpha: float = 0.4
+    min_samples: int = 4
+    cooldown_base_s: float = 1.0
+    cooldown_max_s: float = 60.0
+    probe_jitter: float = 0.1
+    on_open: str = "fastfail"
+    enabled: bool = True
+
+    def __post_init__(self):
+        if self.failure_threshold < 1:
+            raise ValueError("failure_threshold must be >= 1")
+        if self.max_unverified_rate is not None and not (
+                0.0 < self.max_unverified_rate <= 1.0):
+            raise ValueError("max_unverified_rate must be in (0, 1] or None")
+        if not 0.0 < self.unverified_alpha <= 1.0:
+            raise ValueError("unverified_alpha must be in (0, 1]")
+        if self.cooldown_base_s <= 0 or self.cooldown_max_s < self.cooldown_base_s:
+            raise ValueError("need 0 < cooldown_base_s <= cooldown_max_s")
+        if not 0.0 <= self.probe_jitter < 1.0:
+            raise ValueError("probe_jitter must be in [0, 1)")
+        if self.on_open not in ("fastfail", "direct"):
+            raise ValueError("on_open must be 'fastfail' or 'direct'")
+
+
+BREAKER_DEFAULT = BreakerConfig()
+BREAKER_OFF = BreakerConfig(enabled=False)
+
+
+@dataclass(frozen=True)
+class CacheConfig:
+    """Idempotency-keyed result cache (DESIGN.md §10.3).
+
+    det is deterministic given (matrix bytes, security tuple), so a
+    content-hash cache-aside turns repeated matrices into O(hash) hits.
+    The key covers the full BucketKey (every protocol/security/dtype/
+    transport field) plus the tenant, so a hit never crosses configs or
+    tenants. Only verified results are stored.
+
+    enabled: master switch.
+    max_entries: LRU bound on cached results.
+    single_flight: coalesce concurrent IDENTICAL submissions — followers
+        ride the leader's sweep instead of enqueueing a duplicate, and
+        each still receives its own result.
+    """
+
+    enabled: bool = True
+    max_entries: int = 256
+    single_flight: bool = True
+
+    def __post_init__(self):
+        if self.max_entries < 1:
+            raise ValueError("max_entries must be >= 1")
+
+
+CACHE_DEFAULT = CacheConfig()
+CACHE_OFF = CacheConfig(enabled=False)
+
+
+@dataclass(frozen=True)
 class SPDCGatewayConfig:
     """Micro-batching gateway presets (DESIGN.md §5) — consumed by
     repro.serve.spdc_gateway.SPDCGateway.
@@ -204,6 +322,12 @@ class SPDCGatewayConfig:
     spdc: the protocol parameters (server count, cipher mode, verification
         method, recovery policy) every bucket runs with by default;
         per-request overrides open extra buckets.
+    admission: per-tenant rate limiting + pending quotas (DESIGN.md
+        §10.1; defaults to off — single-tenant gateways are unchanged).
+    breaker: per-bucket circuit breaker (DESIGN.md §10.2; on by default
+        with a 3-consecutive-failure trip).
+    cache: idempotency-keyed result cache + single-flight dedup
+        (DESIGN.md §10.3; on by default, 256-entry LRU).
     """
 
     name: str = "spdc-gateway"
@@ -214,6 +338,9 @@ class SPDCGatewayConfig:
     pad_batches: bool = True
     warmup_batches: tuple[int, ...] = ()
     spdc: SPDCConfig = SPDC_EDGE_SMALL
+    admission: AdmissionConfig = ADMISSION_OFF
+    breaker: BreakerConfig = BREAKER_DEFAULT
+    cache: CacheConfig = CACHE_DEFAULT
 
 
 SPDC_GATEWAY_DEFAULT = SPDCGatewayConfig()
@@ -247,4 +374,13 @@ SPDC_GATEWAY_THREADS = SPDCGatewayConfig(
 #: single gateway — the deployment shape for a long-lived edge fleet.
 SPDC_GATEWAY_SOCKET = SPDCGatewayConfig(
     name="spdc-gateway-socket", spdc=SPDC_EDGE_SOCKET,
+)
+#: public-facing deployment profile (DESIGN.md §10): per-tenant admission
+#: control ON (100 req/s, 256-pending quota per tenant), breaker + cache
+#: at their defaults — the preset serve_spdc --prod uses, and the shape
+#: ROADMAP item 3's "millions of users" story deploys.
+SPDC_GATEWAY_PROD = SPDCGatewayConfig(
+    name="spdc-gateway-prod",
+    admission=AdmissionConfig(rate_per_sec=100.0, burst=200.0,
+                              max_pending_per_tenant=256),
 )

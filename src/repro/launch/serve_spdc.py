@@ -4,7 +4,8 @@ service with a synthetic open-loop client workload.
     PYTHONPATH=src python -m repro.launch.serve_spdc --smoke
     PYTHONPATH=src python -m repro.launch.serve_spdc \
         --servers 4 --requests 256 --rate 200 --sizes 24,48,96 \
-        --max-batch 32 --max-wait-us 2000
+        --max-batch 32 --max-wait-us 2000 \
+        --tenants 4 --tenant-rate 100 --health-port 9100
 
 Open-loop means arrivals are paced by the offered rate, not by service
 completions (`--rate 0` = saturating: all requests arrive at once), so
@@ -12,6 +13,14 @@ queueing delay shows up in the reported p50/p99 latency exactly as it
 would for independent IoT clients. Each request draws its size from
 --sizes; the gateway buckets mixed sizes, coalesces each bucket into one
 batched protocol sweep, and answers with a per-request verdict.
+
+Production-hardening surface (DESIGN.md §10): --tenants spreads the swarm
+over synthetic tenants, --tenant-rate/--tenant-burst/--tenant-max-pending
+turn on per-tenant admission control, --no-breaker/--no-cache disable the
+per-bucket circuit breakers and the idempotency result cache, and
+--health-port serves GET /healthz and GET /metrics (Prometheus text) from
+the live gateway on 127.0.0.1 for the run's duration (port 0 picks a free
+port). --smoke self-fetches both endpoints once to prove the surface.
 
 --check verifies every returned determinant against numpy slogdet at
 rtol 1e-10 (always on with --smoke, which is the CI docs-job entry).
@@ -21,6 +30,7 @@ from __future__ import annotations
 import argparse
 import asyncio
 import sys
+import threading
 import time
 
 import jax
@@ -41,27 +51,88 @@ def percentile_ms(lat_s: list[float], q: float) -> float:
     return float(np.percentile(np.asarray(lat_s), q) * 1e3)
 
 
-async def run_workload(gw, mats, arrival_s):
-    """Submit each matrix at its open-loop arrival time; gather results."""
+async def run_workload(gw, mats, arrival_s, tenants=None):
+    """Submit each matrix at its open-loop arrival time; gather results.
+
+    Returns (results, rejected_by_kind, wall_s). Shed requests leave None
+    in their results slot and count under their typed rejection kind.
+    """
     t0 = time.perf_counter()
     results = [None] * len(mats)
-    rejected = 0
+    rejected = {"overload": 0, "admission": 0, "breaker": 0}
 
     async def one(i):
-        nonlocal rejected
         delay = arrival_s[i] - (time.perf_counter() - t0)
         if delay > 0:
             await asyncio.sleep(delay)
-        from repro.serve import GatewayOverloaded
+        from repro.serve import (
+            AdmissionRejected,
+            BreakerOpen,
+            GatewayOverloaded,
+        )
 
+        kwargs = {"tenant": tenants[i]} if tenants is not None else {}
         try:
-            results[i] = await gw.submit(mats[i])
+            results[i] = await gw.submit(mats[i], **kwargs)
         except GatewayOverloaded:
-            rejected += 1
+            rejected["overload"] += 1
+        except AdmissionRejected:
+            rejected["admission"] += 1
+        except BreakerOpen:
+            rejected["breaker"] += 1
 
     await asyncio.gather(*(one(i) for i in range(len(mats))))
     wall = time.perf_counter() - t0
     return results, rejected, wall
+
+
+def start_health_server(gw, port: int):
+    """Serve GET /healthz and GET /metrics from the live gateway.
+
+    Returns the ThreadingHTTPServer (bound to 127.0.0.1; ``port`` 0 picks
+    a free one — read it back from ``server_address[1]``). The caller
+    shuts it down.
+    """
+    from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+    class Handler(BaseHTTPRequestHandler):
+        def do_GET(self):
+            if self.path == "/healthz":
+                verdict = gw.healthz()
+                body = "".join(f"{k}: {v}\n" for k, v in verdict.items())
+                code = 503 if verdict["status"] == "overloaded" else 200
+            elif self.path == "/metrics":
+                body, code = gw.render_metrics(), 200
+            else:
+                body, code = "not found\n", 404
+            data = body.encode()
+            self.send_response(code)
+            self.send_header("Content-Type", "text/plain; version=0.0.4")
+            self.send_header("Content-Length", str(len(data)))
+            self.end_headers()
+            self.wfile.write(data)
+
+        def log_message(self, *args):  # keep the workload output clean
+            pass
+
+    srv = ThreadingHTTPServer(("127.0.0.1", port), Handler)
+    threading.Thread(target=srv.serve_forever, daemon=True).start()
+    return srv
+
+
+def _self_check_health(port: int) -> None:
+    """Fetch both endpoints once (the --smoke proof that the surface
+    actually serves, not merely that the thread started)."""
+    from urllib.request import urlopen
+
+    with urlopen(f"http://127.0.0.1:{port}/healthz", timeout=10) as r:
+        health = r.read().decode()
+        assert health.startswith("status: "), health
+    with urlopen(f"http://127.0.0.1:{port}/metrics", timeout=10) as r:
+        metrics = r.read().decode()
+        assert "spdc_gateway_served_total" in metrics, metrics[:200]
+    print(f"  health: GET /healthz -> {health.splitlines()[0]!r}, "
+          f"GET /metrics -> {len(metrics.splitlines())} series lines")
 
 
 def main(argv=None) -> int:
@@ -96,6 +167,22 @@ def main(argv=None) -> int:
     ap.add_argument("--recover", action="store_true",
                     help="heal rejected verdicts in place (DESIGN.md §4)")
     ap.add_argument("--standby", type=int, default=0)
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="spread the client swarm over this many tenants")
+    ap.add_argument("--tenant-rate", type=float, default=None,
+                    help="per-tenant admission rate, tokens/sec "
+                         "(DESIGN.md §10.1; unset = no rate limit)")
+    ap.add_argument("--tenant-burst", type=float, default=None,
+                    help="per-tenant token-bucket burst (default: rate)")
+    ap.add_argument("--tenant-max-pending", type=int, default=None,
+                    help="per-tenant pending-request quota")
+    ap.add_argument("--no-breaker", action="store_true",
+                    help="disable per-bucket circuit breakers")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="disable the idempotency result cache")
+    ap.add_argument("--health-port", type=int, default=None,
+                    help="serve GET /healthz + /metrics on 127.0.0.1:PORT "
+                         "for the run (0 = pick a free port)")
     ap.add_argument("--no-warmup", dest="warmup", action="store_false",
                     help="skip pre-compiling bucket sweeps")
     ap.add_argument("--check", action="store_true",
@@ -105,7 +192,16 @@ def main(argv=None) -> int:
                     help="tiny shapes + full checking (CI entry)")
     args = ap.parse_args(argv)
 
-    from repro.configs import SPDCConfig, SPDCGatewayConfig
+    from repro.configs import (
+        ADMISSION_OFF,
+        BREAKER_DEFAULT,
+        BREAKER_OFF,
+        CACHE_DEFAULT,
+        CACHE_OFF,
+        AdmissionConfig,
+        SPDCConfig,
+        SPDCGatewayConfig,
+    )
     from repro.serve import AsyncSPDCGateway
 
     if args.smoke:
@@ -114,6 +210,18 @@ def main(argv=None) -> int:
         args.buckets = args.buckets or (16, 32)
         args.max_batch = min(args.max_batch, 8)
         args.check = True
+        if args.health_port is None:
+            args.health_port = 0  # prove the health surface in CI
+
+    if (args.tenant_rate is not None or args.tenant_burst is not None
+            or args.tenant_max_pending is not None):
+        admission = AdmissionConfig(
+            rate_per_sec=args.tenant_rate,
+            burst=args.tenant_burst,
+            max_pending_per_tenant=args.tenant_max_pending,
+        )
+    else:
+        admission = ADMISSION_OFF
 
     spdc = SPDCConfig(
         num_servers=args.servers, mode=args.mode, method=args.method,
@@ -127,11 +235,18 @@ def main(argv=None) -> int:
         max_wait_us=args.max_wait_us,
         max_pending=args.max_pending,
         spdc=spdc,
+        admission=admission,
+        breaker=BREAKER_OFF if args.no_breaker else BREAKER_DEFAULT,
+        cache=CACHE_OFF if args.no_cache else CACHE_DEFAULT,
     )
 
     rng = np.random.default_rng(args.seed)
     sizes = rng.choice(args.sizes, size=args.requests)
     mats = [rng.standard_normal((n, n)) + n * np.eye(n) for n in sizes]
+    tenants = (
+        [f"tenant{i % args.tenants}" for i in range(args.requests)]
+        if args.tenants > 1 else None
+    )
     if args.rate > 0:
         arrival_s = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
     else:
@@ -139,25 +254,48 @@ def main(argv=None) -> int:
 
     async def drive():
         async with AsyncSPDCGateway(cfg) as gw:
+            health_srv = None
+            if args.health_port is not None:
+                health_srv = start_health_server(gw, args.health_port)
+                port = health_srv.server_address[1]
+                print(f"[health] serving /healthz + /metrics on "
+                      f"127.0.0.1:{port}")
             if args.warmup:
                 t0 = time.perf_counter()
                 # only the batch shapes this workload can produce
                 compiled = await gw.warmup()
                 print(f"[warmup] {compiled} bucket programs compiled in "
                       f"{time.perf_counter() - t0:.1f}s")
-            results, rejected, wall = await run_workload(gw, mats, arrival_s)
-            return results, rejected, wall, gw.stats.as_dict()
+            results, rejected, wall = await run_workload(
+                gw, mats, arrival_s, tenants
+            )
+            health_checked = False
+            if health_srv is not None:
+                await asyncio.to_thread(
+                    _self_check_health, health_srv.server_address[1]
+                )
+                health_checked = True
+                health_srv.shutdown()
+            return (results, rejected, wall, gw.stats.as_dict(),
+                    gw.healthz(), health_checked)
 
-    results, rejected, wall, stats = asyncio.run(drive())
+    results, rejected, wall, stats, health, health_checked = (
+        asyncio.run(drive())
+    )
     served = [r for r in results if r is not None]
+    n_rejected = sum(rejected.values())
     if not served:
         print("no requests served")
         return 1
     lats = [r.latency_s for r in served]
     rate_txt = f"{args.rate:.0f} req/s" if args.rate else "saturating"
     print(f"[serve_spdc] N={args.servers} offered={rate_txt} "
-          f"requests={args.requests} sizes={tuple(args.sizes)}")
-    print(f"  served={len(served)} rejected={rejected} wall={wall:.2f}s "
+          f"requests={args.requests} sizes={tuple(args.sizes)}"
+          + (f" tenants={args.tenants}" if args.tenants > 1 else ""))
+    print(f"  served={len(served)} rejected={n_rejected} "
+          f"(overload={rejected['overload']} "
+          f"admission={rejected['admission']} "
+          f"breaker={rejected['breaker']}) wall={wall:.2f}s "
           f"sustained={len(served) / wall:.1f} dets/sec")
     print(f"  latency p50={percentile_ms(lats, 50):.1f}ms "
           f"p99={percentile_ms(lats, 99):.1f}ms "
@@ -165,10 +303,17 @@ def main(argv=None) -> int:
     print(f"  flushes={stats['flushes']} (full={stats['flushes_full']} "
           f"timeout={stats['flushes_timeout']} drain={stats['flushes_drain']}) "
           f"recovered={stats['recovered_flushes']} direct={stats['direct']}")
+    print(f"  cache hits={stats['cache_hits']} "
+          f"coalesced={stats['coalesced']} "
+          f"breaker opens={stats['breaker_opens']} "
+          f"health={health['status']}")
 
     failed = [r for r in served if not r.verified]
     if failed:
         print(f"  VERIFICATION FAILED for {len(failed)} requests")
+        return 1
+    if args.smoke and args.health_port is not None and not health_checked:
+        print("  health surface was not exercised")
         return 1
     if args.check:
         for r, m in zip(results, mats):

@@ -12,6 +12,16 @@ Two stacks live here:
   kept for the model-zoo scenarios (`python -m repro.launch.serve`).
 """
 
+from .metrics import (  # noqa: F401
+    FlushEvent,
+    GatewayMetrics,
+    MetricsSnapshot,
+    QuantileSketch,
+    RejectEvent,
+    VerdictEvent,
+    render_healthz,
+    render_prometheus,
+)
 from .queue import (  # noqa: F401
     BucketKey,
     GatewayOverloaded,
@@ -19,6 +29,14 @@ from .queue import (  # noqa: F401
     MicroBatchQueue,
     NoBucketFits,
     bucket_size_for,
+)
+from .resilience import (  # noqa: F401
+    AdmissionController,
+    AdmissionRejected,
+    BreakerOpen,
+    CircuitBreaker,
+    ResultCache,
+    TokenBucket,
 )
 from .spdc_gateway import (  # noqa: F401
     AsyncSPDCGateway,

@@ -88,6 +88,26 @@ class BucketKey:
     #: fleet-health state a deadline-based sweep has no use for.
     rateless: bool = False
 
+    def label(self) -> str:
+        """Stable human-readable metrics label for this bucket.
+
+        Leads with the fields operators actually scan for (size, fleet,
+        dtype, method) and appends a short digest of the full key so two
+        buckets differing only in a rarely-varied field (lambda1, a
+        transport instance) never silently merge their metrics series.
+        """
+        import zlib
+
+        core = (f"n{self.pad_to}.N{self.num_servers}.{self.dtype}"
+                f".{self.mode}-{self.method}")
+        if self.rateless:
+            core += ".rateless"
+        rest = (self.lambda1, self.lambda2, self.recover, self.standby,
+                self.straggler_deadline, self.growth_safe, self.equilibrate,
+                str(self.transport) if isinstance(self.transport, str)
+                else f"transport@{id(self.transport):x}")
+        return f"{core}#{zlib.crc32(repr(rest).encode()) & 0xFFFF:04x}"
+
     def protocol_kwargs(self) -> dict:
         """Keyword arguments for core.protocol.outsource_determinant_mixed."""
         return dict(
@@ -115,6 +135,14 @@ class DetRequest:
     matrix: object  # (n, n) ndarray — kept framework-agnostic here
     n: int
     enqueued_at: float
+    #: admission-accounting dimension (DESIGN.md §10.1) — NOT part of the
+    #: BucketKey: tenants coalesce into shared sweeps, only their quota
+    #: bookkeeping is separate
+    tenant: str = "default"
+    #: idempotency cache key (BucketKey, tenant, content digest) the
+    #: gateway resolved at submit time; None when caching is off or the
+    #: request rides the direct path
+    ckey: object = None
 
 
 #: Granularity of synthesized fallback buckets: sizes are rounded up to
@@ -190,10 +218,19 @@ class GatewayStats:
     """Operational counters; surfaced by the CLI driver and benchmarks."""
 
     submitted: int = 0
-    rejected: int = 0  # backpressure at submit time
+    rejected: int = 0  # backpressure at submit time (GatewayOverloaded)
+    rejected_admission: int = 0  # per-tenant rate/quota (AdmissionRejected)
+    rejected_breaker: int = 0  # bucket breaker open, fast-fail (BreakerOpen)
     direct: int = 0  # oversize requests served un-coalesced
+    degraded_direct: int = 0  # breaker-open requests detoured direct
     served: int = 0  # requests answered through a coalesced flush
     failed: int = 0  # requests whose sweep raised (per-request error result)
+    cache_hits: int = 0  # idempotency-cache hits (answered in O(hash))
+    cache_misses: int = 0  # cache lookups that went on to enqueue
+    coalesced: int = 0  # single-flight followers riding a leader's sweep
+    breaker_opens: int = 0  # closed/half-open -> open transitions
+    breaker_probes: int = 0  # half-open probe requests admitted
+    breaker_closes: int = 0  # half-open -> closed recoveries
     flushes: int = 0
     flushes_full: int = 0  # max_batch reached
     flushes_timeout: int = 0  # max_wait_us exceeded on a partial bucket
@@ -284,3 +321,7 @@ class MicroBatchQueue:
 
     def keys(self) -> list[BucketKey]:
         return list(self._buckets)
+
+    def depth_by_key(self) -> dict[BucketKey, int]:
+        """Live per-bucket queue depth (the metrics depth gauge)."""
+        return {k: len(b) for k, b in self._buckets.items()}

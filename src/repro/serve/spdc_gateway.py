@@ -23,6 +23,26 @@ Two surfaces:
     resolves to that request's GatewayResult; a background flusher task
     runs the device sweeps off the event loop thread.
 
+Production hardening (DESIGN.md §10) rides the same submit path:
+
+  * per-tenant **admission control** — ``submit(tenant=...)`` charges a
+    token bucket and a pending quota; over-budget tenants get a typed
+    ``AdmissionRejected`` while the gateway keeps serving everyone else
+    (tenancy is accounting-only: all tenants coalesce into shared sweeps);
+  * a **circuit breaker per bucket** — consecutive sweep failures or a
+    high unverified-rate open the breaker, and new submissions to that
+    bucket fast-fail (``BreakerOpen``) or detour to the direct path until
+    a half-open probe proves the bucket healthy again;
+  * an **idempotency-keyed result cache** — det is deterministic given
+    (matrix bytes, security tuple), so repeated matrices answer from a
+    bounded LRU in O(hash), and concurrent identical submissions
+    single-flight onto one sweep;
+  * an **observability surface** — every event lands in a
+    ``GatewayMetrics`` registry (``metrics_snapshot()`` /
+    ``render_metrics()`` / ``healthz()``) AND fires the structured hook
+    points ``on_flush`` / ``on_verdict`` / ``on_reject``, so tests,
+    benchmarks, and dashboards read the same numbers.
+
 Faults and recovery are per-bucket: a tampering server poisons only the
 sweeps it participates in, and when a bucket's security config says
 `recover=True`, the verification-driven re-dispatch (DESIGN.md §4) heals
@@ -32,9 +52,12 @@ pay for it (test_gateway.py::test_tampered_bucket_isolated).
 
 from __future__ import annotations
 
+import hashlib
 import threading
 import time
-from dataclasses import dataclass
+import zlib
+from collections import OrderedDict
+from dataclasses import dataclass, replace
 
 import numpy as np
 
@@ -42,6 +65,14 @@ from repro.api.transport import Transport, TransportConfig
 from repro.configs.spdc import SPDC_GATEWAY_DEFAULT, SPDCGatewayConfig
 from repro.core.protocol import outsource_determinant_mixed, resolve_dtype
 
+from .metrics import (
+    FlushEvent,
+    GatewayMetrics,
+    RejectEvent,
+    VerdictEvent,
+    render_healthz,
+    render_prometheus,
+)
 from .queue import (
     BucketKey,
     DetRequest,
@@ -51,12 +82,21 @@ from .queue import (
     NoBucketFits,
     bucket_size_for,
 )
+from .resilience import (
+    AdmissionController,
+    AdmissionRejected,
+    BreakerOpen,
+    CircuitBreaker,
+    ResultCache,
+)
 
 __all__ = [
     "GatewayResult",
     "SPDCGateway",
     "AsyncSPDCGateway",
     "GatewayOverloaded",
+    "AdmissionRejected",
+    "BreakerOpen",
 ]
 
 #: per-request security-config overrides submit() accepts (the BucketKey
@@ -66,6 +106,12 @@ _OVERRIDE_KEYS = frozenset(
      "standby", "straggler_deadline", "dtype", "growth_safe",
      "equilibrate", "transport", "rateless"}
 )
+
+#: warmup-dummy cache bound: entries are (n_bucket, dtype)-keyed full
+#: matrices, so a long-lived gateway serving a diverse size/dtype mix must
+#: not accumulate one per distinct bucket forever (the pre-fix cache was
+#: keyed by n_bucket alone AND unbounded)
+_DUMMY_CACHE_MAX = 8
 
 
 def _partition_divisor(num_servers: int, rateless: bool) -> int:
@@ -107,15 +153,28 @@ class GatewayResult:
     n: int  # client's raw matrix size
     pad_to: int  # bucket size the sweep ran at (== n for direct calls)
     batch: int  # how many requests shared the sweep
-    flush_reason: str  # "full" | "timeout" | "drain" | "direct"
+    flush_reason: str  # "full"|"timeout"|"drain"|"direct"|"cache"|"coalesced"
     submitted_at: float
     completed_at: float
     recovery: object | None = None  # bucket's RecoveryReport, if it healed
     error: str | None = None  # sweep failure, delivered per-request
+    tenant: str = "default"
+    cache_hit: bool = False  # answered from the idempotency cache
 
     @property
     def latency_s(self) -> float:
         return self.completed_at - self.submitted_at
+
+
+class _InFlight:
+    """Single-flight bookkeeping for one idempotency key: the leader's
+    rid plus follower requests registered while the leader is pending."""
+
+    __slots__ = ("leader_rid", "followers")
+
+    def __init__(self, leader_rid: int):
+        self.leader_rid = leader_rid
+        self.followers: list[DetRequest] = []
 
 
 class SPDCGateway:
@@ -123,7 +182,8 @@ class SPDCGateway:
 
     config: an SPDCGatewayConfig preset (configs.spdc). Its `spdc` field
         supplies each request's default security config; `submit()`
-        keyword overrides open separate buckets.
+        keyword overrides open separate buckets. `admission`/`breaker`/
+        `cache` configure the resilience layer (DESIGN.md §10).
     clock: monotonic-seconds source; injectable for deterministic tests.
     faults_for: optional hook BucketKey -> FaultPlan | None injecting
         misbehaving servers into chosen buckets' sweeps (benchmarks and
@@ -131,6 +191,12 @@ class SPDCGateway:
     auto_flush: flush a bucket synchronously inside submit() the moment it
         reaches max_batch. AsyncSPDCGateway disables this so sweeps always
         run on its flusher thread.
+    on_flush / on_verdict / on_reject: structured observer hooks, called
+        with metrics.FlushEvent / VerdictEvent / RejectEvent AFTER the
+        gateway's own bookkeeping (outside its lock). The internal
+        GatewayMetrics registry consumes the identical events, so hook
+        consumers and the /metrics surface can never disagree. Hooks must
+        not raise.
     """
 
     def __init__(
@@ -140,6 +206,9 @@ class SPDCGateway:
         clock=time.monotonic,
         faults_for=None,
         auto_flush: bool = True,
+        on_flush=None,
+        on_verdict=None,
+        on_reject=None,
     ):
         if not config.buckets:
             raise ValueError("gateway config needs at least one bucket size")
@@ -165,6 +234,9 @@ class SPDCGateway:
         self._clock = clock
         self._faults_for = faults_for
         self._auto_flush = auto_flush
+        self.on_flush = on_flush
+        self.on_verdict = on_verdict
+        self.on_reject = on_reject
         self._queue = MicroBatchQueue(
             max_batch=config.max_batch,
             max_wait_us=config.max_wait_us,
@@ -179,12 +251,22 @@ class SPDCGateway:
         #: BucketKey, one bucket, one warm worker pool.
         self._owned_transports: dict[TransportConfig, Transport] = {}
         self.stats = GatewayStats()
+        self.metrics = GatewayMetrics()
+        self._admission = AdmissionController(config.admission)
+        self._breakers: dict[BucketKey, CircuitBreaker] = {}
+        self._cache = (
+            ResultCache(config.cache.max_entries)
+            if config.cache.enabled else None
+        )
+        self._inflight: dict[object, _InFlight] = {}
+        #: (n_bucket, dtype)-keyed warmup/padding dummies, LRU-bounded
+        self._dummies: "OrderedDict[tuple, np.ndarray]" = OrderedDict()
         #: guards queue/results/stats so AsyncSPDCGateway may run sweeps on
         #: a worker thread while the event loop keeps submitting. Held for
         #: bookkeeping only — never across a device sweep.
         self._lock = threading.RLock()
 
-    # -- submission ---------------------------------------------------------
+    # -- transports ---------------------------------------------------------
 
     def _resolve_transport(self, spec):
         """Fold a TransportConfig spec into an owned built instance.
@@ -257,14 +339,65 @@ class SPDCGateway:
             ),
         )
 
-    def submit(self, matrix, *, now: float | None = None, **overrides) -> int:
+    # -- resilience helpers -------------------------------------------------
+
+    def _breaker_for(self, key: BucketKey) -> CircuitBreaker:
+        br = self._breakers.get(key)
+        if br is None:
+            # jitter seed from the key's STABLE fields (a transport
+            # instance's id would randomize probe times across runs)
+            seed = zlib.crc32(
+                f"{key.pad_to}:{key.num_servers}:{key.dtype}:"
+                f"{key.mode}:{key.method}:{key.rateless}".encode()
+            )
+            br = self._breakers[key] = CircuitBreaker(
+                self.config.breaker, seed=seed
+            )
+        return br
+
+    def _cache_key(self, key: BucketKey, tenant: str, matrix: np.ndarray):
+        """(BucketKey, tenant, content digest): the BucketKey carries the
+        complete security tuple (and the transport identity), so a hit can
+        never cross configs; the digest covers bytes + shape + dtype."""
+        m = np.ascontiguousarray(matrix)
+        h = hashlib.sha256()
+        h.update(str(m.shape).encode())
+        h.update(str(m.dtype).encode())
+        h.update(m.tobytes())
+        return (key, tenant, h.digest())
+
+    def _reject(self, reason: str, tenant: str, key: BucketKey | None):
+        """Record + fire one typed rejection (caller raises afterwards)."""
+        ev = RejectEvent(
+            reason=reason, tenant=tenant,
+            bucket=key.label() if key is not None else None,
+        )
+        self.metrics.record_reject(ev)
+        return ev
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, matrix, *, now: float | None = None,
+               tenant: str = "default", **overrides) -> int:
         """Enqueue one (n, n) matrix; returns its request id.
 
-        Raises GatewayOverloaded when max_pending requests are already
-        queued (backpressure — nothing is enqueued). A matrix larger than
-        every bucket — or whose synthesized fallback size would exceed the
-        largest configured bucket — is served immediately as a direct
-        un-coalesced protocol call (stats.direct). Keyword overrides (num_servers,
+        Rejections are typed and nothing is ever half-enqueued:
+          * GatewayOverloaded — the gateway-wide pending queue is full
+            (capacity backpressure; retry elsewhere);
+          * AdmissionRejected — THIS tenant is over its token-bucket rate
+            or pending quota (policy; slow down — the gateway is fine);
+          * BreakerOpen — the request's bucket is fast-failing after
+            repeated sweep failures (carries a retry_after_s hint; only
+            when the breaker config says on_open="fastfail" — "direct"
+            detours such requests to the un-coalesced path instead).
+
+        A matrix identical (bytes, security config, tenant) to a
+        previously verified one answers from the idempotency cache in
+        O(hash); identical submissions already in flight coalesce onto the
+        leader's sweep (single-flight). A matrix larger than every bucket
+        — or whose synthesized fallback size would exceed the largest
+        configured bucket — is served immediately as a direct un-coalesced
+        protocol call (stats.direct). Keyword overrides (num_servers,
         mode, method, recover, standby, straggler_deadline, dtype,
         transport) place the request in a bucket matching that
         security/precision/execution config — an f32 client never shares
@@ -290,22 +423,115 @@ class SPDCGateway:
         if not np.all(np.isfinite(matrix)):
             raise ValueError("matrix contains non-finite entries")
         now = self._clock() if now is None else now
-        with self._lock:
-            rid = self._next_rid
-            self._next_rid += 1
-            self.stats.submitted += 1
-            req = DetRequest(rid=rid, matrix=matrix, n=n, enqueued_at=now)
-            try:
-                key = self._key_for(n, overrides)
-            except NoBucketFits:
-                key = None
-            if key is not None:
+        hook_events = []
+        try:
+            with self._lock:
                 try:
-                    full = self._queue.push(key, req)
-                except GatewayOverloaded:
-                    self.stats.submitted -= 1
-                    self.stats.rejected += 1
+                    key = self._key_for(n, overrides)
+                except NoBucketFits:
+                    key = None
+                self.metrics.record_submit(tenant)
+                # 1. admission: the tenant's token bucket guards the door
+                # for EVERY request shape (bucketed, direct, cache hit)
+                try:
+                    self._admission.charge(tenant, now)
+                except AdmissionRejected:
+                    self.stats.rejected_admission += 1
+                    hook_events.append(
+                        ("reject", self._reject("rate", tenant, key)))
                     raise
+                rid = self._next_rid
+                self._next_rid += 1
+                self.stats.submitted += 1
+                req = DetRequest(rid=rid, matrix=matrix, n=n,
+                                 enqueued_at=now, tenant=tenant)
+                if key is not None:
+                    # 2. idempotency cache / single-flight (cache hits cost
+                    # O(hash) — they bypass breaker and quota entirely)
+                    if self._cache is not None:
+                        req.ckey = self._cache_key(key, tenant, matrix)
+                        hit = self._cache.get(req.ckey)
+                        if hit is not None:
+                            self.stats.cache_hits += 1
+                            self.metrics.counters["cache_hits"] += 1
+                            gres = replace(
+                                hit, rid=rid, submitted_at=now,
+                                completed_at=now, flush_reason="cache",
+                                batch=1, recovery=None, cache_hit=True,
+                                tenant=tenant,
+                            )
+                            hook_events.append(("verdict", self._deliver(
+                                gres, key.label())))
+                            return rid
+                        self.stats.cache_misses += 1
+                        self.metrics.counters["cache_misses"] += 1
+                        if self.config.cache.single_flight:
+                            entry = self._inflight.get(req.ckey)
+                            if entry is not None:
+                                # ride the leader's sweep; quota still holds
+                                # a slot (the follower occupies memory and a
+                                # waiter until delivery)
+                                try:
+                                    self._admission.acquire_slot(tenant)
+                                except AdmissionRejected:
+                                    self.stats.submitted -= 1
+                                    self.stats.rejected_admission += 1
+                                    hook_events.append(
+                                        ("reject",
+                                         self._reject("quota", tenant, key)))
+                                    raise
+                                entry.followers.append(req)
+                                self.stats.coalesced += 1
+                                self.metrics.counters["coalesced"] += 1
+                                return rid
+                    # 3. circuit breaker: a poisoned bucket fast-fails or
+                    # detours instead of poisoning a shared sweep
+                    breaker = self._breaker_for(key)
+                    verdict = breaker.allow(now)
+                    if verdict == "open":
+                        if self.config.breaker.on_open == "direct":
+                            self.stats.degraded_direct += 1
+                            key = None  # detour: served, but un-coalesced
+                        else:
+                            self.stats.submitted -= 1
+                            self.stats.rejected_breaker += 1
+                            hook_events.append(
+                                ("reject",
+                                 self._reject("breaker", tenant, key)))
+                            raise BreakerOpen(
+                                f"bucket {key.label()} is fast-failing "
+                                "after repeated sweep failures; retry in "
+                                f"{breaker.retry_after(now):.3f}s",
+                                bucket=key.label(),
+                                retry_after_s=breaker.retry_after(now),
+                            )
+                    elif verdict == "probe":
+                        self.stats.breaker_probes += 1
+                        self.metrics.counters["breaker_probes"] += 1
+                if key is not None:
+                    # 4. per-tenant pending quota, then the gateway-wide
+                    # capacity door; BOTH unwind completely on rejection
+                    try:
+                        self._admission.acquire_slot(tenant)
+                    except AdmissionRejected:
+                        self.stats.submitted -= 1
+                        self.stats.rejected_admission += 1
+                        hook_events.append(
+                            ("reject", self._reject("quota", tenant, key)))
+                        raise
+                    try:
+                        full = self._queue.push(key, req)
+                    except GatewayOverloaded:
+                        self._admission.release_slot(tenant)
+                        self.stats.submitted -= 1
+                        self.stats.rejected += 1
+                        hook_events.append(
+                            ("reject", self._reject("overload", tenant, key)))
+                        raise
+                    if req.ckey is not None and self.config.cache.single_flight:
+                        self._inflight[req.ckey] = _InFlight(rid)
+        finally:
+            self._fire(hook_events)
         if key is None:
             self._run_direct(req, overrides, now)
         elif full and self._auto_flush:
@@ -360,6 +586,41 @@ class SPDCGateway:
         with self._lock:
             return self._results.pop(rid, None)
 
+    def _deliver(self, gres: GatewayResult, bucket_label: str | None):
+        """Store one finished result + its bookkeeping (lock held).
+
+        Returns the VerdictEvent for the caller's hook batch."""
+        self._results[gres.rid] = gres
+        ev = VerdictEvent(
+            rid=gres.rid, bucket=bucket_label, tenant=gres.tenant,
+            verified=gres.verified, latency_s=gres.latency_s,
+            flush_reason=gres.flush_reason, cache_hit=gres.cache_hit,
+            error=gres.error,
+        )
+        self.metrics.record_verdict(ev)
+        return ev
+
+    def _fire(self, hook_events) -> None:
+        """Invoke observer hooks OUTSIDE the gateway lock."""
+        for kind, ev in hook_events:
+            hook = {"flush": self.on_flush, "verdict": self.on_verdict,
+                    "reject": self.on_reject}[kind]
+            if hook is not None:
+                hook(ev)
+
+    def _followers_of(self, req: DetRequest) -> list[DetRequest]:
+        """Pop the single-flight followers riding this leader (lock held)."""
+        if req.ckey is None:
+            return []
+        entry = self._inflight.pop(req.ckey, None)
+        if entry is None or entry.leader_rid != req.rid:
+            # a follower of an older leader re-registered under a new one;
+            # only the true leader's completion pops the entry
+            if entry is not None:
+                self._inflight[req.ckey] = entry
+            return []
+        return entry.followers
+
     def _flush(self, key: BucketKey, reason: str, now: float):
         with self._lock:
             reqs = self._queue.pop(key, limit=self.config.max_batch)
@@ -379,8 +640,10 @@ class SPDCGateway:
                 if b >= len(mats)
             )
             mats = mats + [
-                self._dummy(key.pad_to) for _ in range(target - len(mats))
+                self._dummy(key.pad_to, key.dtype)
+                for _ in range(target - len(mats))
             ]
+        sweep_t0 = self._clock()
         try:
             faults = self._faults_for(key) if self._faults_for else None
             res = outsource_determinant_mixed(
@@ -393,12 +656,32 @@ class SPDCGateway:
             # the bucket is already popped: every co-batched request gets
             # its own failed result instead of vanishing (and the async
             # flusher keeps running)
-            return self._fail_requests(reqs, key, reason, f"{type(e).__name__}: {e}")
+            return self._fail_requests(
+                reqs, key, reason, f"{type(e).__name__}: {e}",
+                flush_now=now, sweep_t0=sweep_t0, padded_batch=len(mats),
+            )
         done = self._clock()
+        label = key.label()
         out = []
+        hook_events = []
         with self._lock:
             if res.report.recovery is not None:
                 self.stats.recovered_flushes += 1
+            n_verified = sum(
+                1 for i in range(len(reqs)) if bool(res.verified[i])
+            )
+            unverified_rate = 1.0 - n_verified / len(reqs)
+            self._record_breaker(key, now=done, failed=False,
+                                 unverified_rate=unverified_rate)
+            flush_ev = FlushEvent(
+                bucket=label, reason=reason, batch=len(reqs),
+                padded_batch=len(mats),
+                queue_waits_s=tuple(now - r.enqueued_at for r in reqs),
+                sweep_s=done - sweep_t0,
+                recovered=res.report.recovery is not None,
+            )
+            self.metrics.record_flush(flush_ev)
+            hook_events.append(("flush", flush_ev))
             for i, req in enumerate(reqs):
                 gres = GatewayResult(
                     rid=req.rid,
@@ -412,17 +695,68 @@ class SPDCGateway:
                     submitted_at=req.enqueued_at,
                     completed_at=done,
                     recovery=res.report.recovery,
+                    tenant=req.tenant,
                 )
-                self._results[req.rid] = gres
+                hook_events.append(("verdict", self._deliver(gres, label)))
                 out.append(gres)
                 self.stats.served += 1
+                self._admission.release_slot(req.tenant)
+                # cache-aside: ONLY verified results (a rejected verdict
+                # must not outlive its sweep), stored before followers so
+                # late identical submissions hit instead of re-leading
+                if (req.ckey is not None and self._cache is not None
+                        and gres.verified and gres.error is None):
+                    self._cache.put(req.ckey, gres)
+                for f in self._followers_of(req):
+                    fres = replace(
+                        gres, rid=f.rid, submitted_at=f.enqueued_at,
+                        flush_reason="coalesced", tenant=f.tenant,
+                    )
+                    hook_events.append(("verdict", self._deliver(fres, label)))
+                    out.append(fres)
+                    self.stats.served += 1
+                    self._admission.release_slot(f.tenant)
+        self._fire(hook_events)
         return out
 
-    def _fail_requests(self, reqs, key: BucketKey, reason: str, error: str):
+    def _record_breaker(self, key: BucketKey, *, now: float, failed: bool,
+                        unverified_rate: float = 0.0) -> None:
+        """Feed a flush outcome to the bucket's breaker (lock held)."""
+        breaker = self._breaker_for(key)
+        before = breaker.state
+        after = breaker.record(now, failed=failed,
+                               unverified_rate=unverified_rate)
+        if after == "open" and before != "open":
+            self.stats.breaker_opens += 1
+            self.metrics.counters["breaker_opens"] += 1
+        elif before == "half_open" and after == "closed":
+            self.stats.breaker_closes += 1
+            self.metrics.counters["breaker_closes"] += 1
+
+    def _fail_requests(self, reqs, key: BucketKey, reason: str, error: str,
+                       *, flush_now: float | None = None,
+                       sweep_t0: float | None = None,
+                       padded_batch: int | None = None):
         """Deliver a per-request failure result for a sweep that raised."""
         done = self._clock()
+        label = key.label()
         out = []
+        hook_events = []
         with self._lock:
+            if reason != "direct":
+                self._record_breaker(key, now=done, failed=True)
+                flush_ev = FlushEvent(
+                    bucket=label, reason=reason, batch=len(reqs),
+                    padded_batch=padded_batch or len(reqs),
+                    queue_waits_s=tuple(
+                        (flush_now if flush_now is not None else done)
+                        - r.enqueued_at for r in reqs
+                    ),
+                    sweep_s=done - (sweep_t0 if sweep_t0 is not None else done),
+                    error=error,
+                )
+                self.metrics.record_flush(flush_ev)
+                hook_events.append(("flush", flush_ev))
             self.stats.failed += len(reqs)
             for req in reqs:
                 gres = GatewayResult(
@@ -437,13 +771,29 @@ class SPDCGateway:
                     submitted_at=req.enqueued_at,
                     completed_at=done,
                     error=error,
+                    tenant=req.tenant,
                 )
-                self._results[req.rid] = gres
+                hook_events.append(("verdict", self._deliver(
+                    gres, label if reason != "direct" else None)))
                 out.append(gres)
+                if reason != "direct":
+                    self._admission.release_slot(req.tenant)
+                # single-flight followers fail WITH their leader — a
+                # stranded follower would hang an async waiter forever
+                for f in self._followers_of(req):
+                    fres = replace(
+                        gres, rid=f.rid, submitted_at=f.enqueued_at,
+                        tenant=f.tenant,
+                    )
+                    hook_events.append(("verdict", self._deliver(fres, label)))
+                    out.append(fres)
+                    self.stats.failed += 1
+                    self._admission.release_slot(f.tenant)
+        self._fire(hook_events)
         return out
 
     def _run_direct(self, req: DetRequest, overrides: dict, now: float):
-        """Oversize escape hatch: one un-coalesced protocol call."""
+        """Oversize / breaker-detour escape hatch: one un-coalesced call."""
         from repro.core.protocol import outsource_determinant
 
         spdc = self.config.spdc
@@ -474,9 +824,11 @@ class SPDCGateway:
             self._fail_requests([req], key, "direct",
                                 f"{type(e).__name__}: {e}")
             return
+        hook_events = []
         with self._lock:
             self.stats.direct += 1
-            self._results[req.rid] = GatewayResult(
+            self.metrics.counters["direct"] += 1
+            gres = GatewayResult(
                 rid=req.rid,
                 det=res.det,
                 verified=res.verified,
@@ -488,24 +840,73 @@ class SPDCGateway:
                 submitted_at=req.enqueued_at,
                 completed_at=self._clock(),
                 recovery=res.report.recovery,
+                tenant=req.tenant,
             )
+            hook_events.append(("verdict", self._deliver(gres, None)))
+        self._fire(hook_events)
 
-    def _dummy(self, n_bucket: int) -> np.ndarray:
+    def _dummy(self, n_bucket: int, dtype: str = "float64") -> np.ndarray:
         """Client-profile filler matrix for batch padding: diag-dominant
-        noise, cached per bucket. (A bare scaled identity would rotate to
-        an exactly singular anti-diagonal under the cipher's PRT stage —
-        fillers must look like real client matrices.) Its result is
-        discarded; it exists so the sweep runs at a warmed batch shape."""
-        cached = getattr(self, "_dummies", None)
+        noise, cached per (bucket size, dtype) with an LRU bound. (A bare
+        scaled identity would rotate to an exactly singular anti-diagonal
+        under the cipher's PRT stage — fillers must look like real client
+        matrices.) dtype is part of the key so an f32 bucket warms and
+        pads with f32 fillers — the exact matrix profile its sweeps see —
+        and the bound keeps a long-lived gateway serving a diverse mix
+        from accumulating one full matrix per distinct bucket forever.
+        The result is discarded; it exists so the sweep runs at a warmed
+        batch shape."""
+        ckey = (n_bucket, str(dtype))
+        cached = self._dummies.get(ckey)
         if cached is None:
-            cached = self._dummies = {}
-        if n_bucket not in cached:
             rng = np.random.default_rng(n_bucket)
-            cached[n_bucket] = (
+            cached = (
                 rng.standard_normal((n_bucket, n_bucket))
                 + n_bucket * np.eye(n_bucket)
-            )
-        return cached[n_bucket]
+            ).astype(np.dtype(str(dtype)))
+            self._dummies[ckey] = cached
+            while len(self._dummies) > _DUMMY_CACHE_MAX:
+                self._dummies.popitem(last=False)
+        else:
+            self._dummies.move_to_end(ckey)
+        return cached
+
+    # -- observability ------------------------------------------------------
+
+    def metrics_snapshot(self):
+        """Point-in-time MetricsSnapshot: counters + quantiles from the
+        registry, live gauges (queue depth, breaker states, cache size,
+        tenant pending) folded in from the serving structures."""
+        with self._lock:
+            bucket_gauges: dict[str, dict] = {}
+            for key, depth in self._queue.depth_by_key().items():
+                bucket_gauges.setdefault(key.label(), {})["depth"] = depth
+            for key, br in self._breakers.items():
+                bucket_gauges.setdefault(key.label(), {})["breaker"] = br.state
+            return self.metrics.snapshot(gauges={
+                "pending": self._queue.pending,
+                "buckets": bucket_gauges,
+                "tenant_pending": self._admission.pending_by_tenant(),
+                "cache_entries": len(self._cache) if self._cache else 0,
+                "cache_evictions": self._cache.evictions if self._cache else 0,
+            })
+
+    def healthz(self) -> dict:
+        """Health verdict dict (the /healthz body): ok | degraded (open
+        breaker) | overloaded (pending at the backpressure bound)."""
+        return render_healthz(
+            self.metrics_snapshot(), max_pending=self.config.max_pending
+        )
+
+    def render_metrics(self) -> str:
+        """Prometheus-style text exposition (the /metrics body)."""
+        return render_prometheus(self.metrics_snapshot())
+
+    def breaker_state(self, key: BucketKey) -> str:
+        """Current breaker state for a bucket ("closed" when never used)."""
+        with self._lock:
+            br = self._breakers.get(key)
+            return br.state if br is not None else "closed"
 
     # -- warmup -------------------------------------------------------------
 
@@ -528,16 +929,15 @@ class SPDCGateway:
                 if self.config.pad_batches
                 else (self.config.max_batch,)
             )
-        spdc = self.config.spdc
         compiled = 0
         # every configured bucket is servable — __init__ validates the
         # preset against spdc.num_servers and raises otherwise
         for n_bucket in self.config.buckets:
+            key = self._key_for(n_bucket, {})
             for b in sizes:
                 # the same cached filler live batch padding uses, so warmup
                 # compiles against the exact matrix profile flushes see
-                dummies = [self._dummy(n_bucket)] * b
-                key = self._key_for(n_bucket, {})
+                dummies = [self._dummy(n_bucket, key.dtype)] * b
                 res = outsource_determinant_mixed(
                     dummies, key.num_servers, **key.protocol_kwargs()
                 )
@@ -556,6 +956,11 @@ class AsyncSPDCGateway:
 
         async with AsyncSPDCGateway(cfg) as gw:
             results = await asyncio.gather(*(gw.submit(m) for m in ms))
+
+    Typed rejections (GatewayOverloaded / AdmissionRejected / BreakerOpen)
+    propagate out of ``submit`` immediately — the future never enters the
+    waiter table, so a rejection storm cannot leak futures
+    (tests/test_overload.py asserts this).
     """
 
     def __init__(self, config: SPDCGatewayConfig = SPDC_GATEWAY_DEFAULT,
@@ -574,6 +979,15 @@ class AsyncSPDCGateway:
     @property
     def pending(self) -> int:
         return self._gw.pending
+
+    def metrics_snapshot(self):
+        return self._gw.metrics_snapshot()
+
+    def healthz(self) -> dict:
+        return self._gw.healthz()
+
+    def render_metrics(self) -> str:
+        return self._gw.render_metrics()
 
     async def __aenter__(self):
         import asyncio
@@ -606,11 +1020,12 @@ class AsyncSPDCGateway:
 
         return await asyncio.to_thread(self._gw.warmup, batch_sizes)
 
-    async def submit(self, matrix, **overrides) -> GatewayResult:
+    async def submit(self, matrix, *, tenant: str = "default",
+                     **overrides) -> GatewayResult:
         """Enqueue one matrix and wait for its bucket's sweep.
 
-        Raises GatewayOverloaded immediately (without queueing) when the
-        gateway is backpressured.
+        Raises GatewayOverloaded / AdmissionRejected / BreakerOpen
+        immediately (without queueing) when the gateway sheds the request.
         """
         import asyncio
 
@@ -618,9 +1033,11 @@ class AsyncSPDCGateway:
             raise RuntimeError("use `async with AsyncSPDCGateway(...)`")
         # to_thread keeps the event loop free even when submit() itself
         # does device work (the oversize direct-call escape hatch)
-        rid = await asyncio.to_thread(self._gw.submit, matrix, **overrides)
+        rid = await asyncio.to_thread(
+            self._gw.submit, matrix, tenant=tenant, **overrides
+        )
         ready = self._gw.take(rid)
-        if ready is not None:  # oversize direct call completed inline
+        if ready is not None:  # direct call or cache hit completed inline
             return ready
         fut = asyncio.get_running_loop().create_future()
         self._waiters[rid] = fut
