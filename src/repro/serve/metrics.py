@@ -258,10 +258,12 @@ class GatewayMetrics:
 
     def record_verdict(self, ev: VerdictEvent) -> None:
         self.request_latency_s.observe(ev.latency_s)
-        self.tenant(ev.tenant).served += 1
         if ev.error is not None:
             self.counters["failed"] += 1
         else:
+            # tenant served mirrors the global served/failed split — a
+            # failed request is not "served" in either view
+            self.tenant(ev.tenant).served += 1
             self.counters["served"] += 1
         if ev.bucket is not None:
             b = self.bucket(ev.bucket)

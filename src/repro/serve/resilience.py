@@ -246,6 +246,17 @@ class CircuitBreaker:
     def retry_after(self, now: float) -> float:
         return max(0.0, self.next_probe_at - now)
 
+    def revert_probe(self) -> None:
+        """Undo an ``allow() == "probe"`` grant whose request never made
+        it into the queue (shed by quota or gateway capacity after the
+        verdict). ``next_probe_at`` is left unchanged — it is already in
+        the past — so the NEXT submission gets a fresh probe instead of
+        the bucket fast-failing forever on a probe that no flush will
+        ever ``record()``."""
+        if self.state == "half_open" and self.probe_pending:
+            self.state = "open"
+            self.probe_pending = False
+
     def record(self, now: float, *, failed: bool, unverified_rate: float = 0.0) -> str:
         """Feed one flush outcome; returns the resulting state.
 

@@ -443,6 +443,8 @@ class SPDCGateway:
                 rid = self._next_rid
                 self._next_rid += 1
                 self.stats.submitted += 1
+                breaker = None
+                probe_granted = False
                 req = DetRequest(rid=rid, matrix=matrix, n=n,
                                  enqueued_at=now, tenant=tenant)
                 if key is not None:
@@ -460,6 +462,7 @@ class SPDCGateway:
                                 batch=1, recovery=None, cache_hit=True,
                                 tenant=tenant,
                             )
+                            self.metrics.counters["admitted"] += 1
                             hook_events.append(("verdict", self._deliver(
                                 gres, key.label())))
                             return rid
@@ -483,6 +486,7 @@ class SPDCGateway:
                                 entry.followers.append(req)
                                 self.stats.coalesced += 1
                                 self.metrics.counters["coalesced"] += 1
+                                self.metrics.counters["admitted"] += 1
                                 return rid
                     # 3. circuit breaker: a poisoned bucket fast-fails or
                     # detours instead of poisoning a shared sweep
@@ -506,14 +510,21 @@ class SPDCGateway:
                                 retry_after_s=breaker.retry_after(now),
                             )
                     elif verdict == "probe":
+                        probe_granted = True
                         self.stats.breaker_probes += 1
                         self.metrics.counters["breaker_probes"] += 1
                 if key is not None:
                     # 4. per-tenant pending quota, then the gateway-wide
-                    # capacity door; BOTH unwind completely on rejection
+                    # capacity door; BOTH unwind completely on rejection —
+                    # including a just-granted half-open probe, which must
+                    # return to "open" (with next_probe_at already in the
+                    # past) or no flush would ever record() and the bucket
+                    # would fast-fail forever
                     try:
                         self._admission.acquire_slot(tenant)
                     except AdmissionRejected:
+                        if probe_granted:
+                            breaker.revert_probe()
                         self.stats.submitted -= 1
                         self.stats.rejected_admission += 1
                         hook_events.append(
@@ -522,6 +533,8 @@ class SPDCGateway:
                     try:
                         full = self._queue.push(key, req)
                     except GatewayOverloaded:
+                        if probe_granted:
+                            breaker.revert_probe()
                         self._admission.release_slot(tenant)
                         self.stats.submitted -= 1
                         self.stats.rejected += 1
@@ -530,6 +543,7 @@ class SPDCGateway:
                         raise
                     if req.ckey is not None and self.config.cache.single_flight:
                         self._inflight[req.ckey] = _InFlight(rid)
+                self.metrics.counters["admitted"] += 1
         finally:
             self._fire(hook_events)
         if key is None:
@@ -634,17 +648,20 @@ class SPDCGateway:
             else:
                 self.stats.flushes_drain += 1
         mats = [r.matrix for r in reqs]
-        if self.config.pad_batches:
-            target = next(
-                b for b in allowed_batch_sizes(self.config.max_batch)
-                if b >= len(mats)
-            )
-            mats = mats + [
-                self._dummy(key.pad_to, key.dtype)
-                for _ in range(target - len(mats))
-            ]
         sweep_t0 = self._clock()
         try:
+            # padding runs inside the try: the requests are already popped
+            # from the queue, so a padding failure must fail THEM (below),
+            # not vanish them and hang their waiters
+            if self.config.pad_batches:
+                target = next(
+                    b for b in allowed_batch_sizes(self.config.max_batch)
+                    if b >= len(mats)
+                )
+                mats = mats + [
+                    self._dummy(key.pad_to, key.dtype)
+                    for _ in range(target - len(mats))
+                ]
             faults = self._faults_for(key) if self._faults_for else None
             res = outsource_determinant_mixed(
                 mats,
@@ -785,7 +802,8 @@ class SPDCGateway:
                         gres, rid=f.rid, submitted_at=f.enqueued_at,
                         tenant=f.tenant,
                     )
-                    hook_events.append(("verdict", self._deliver(fres, label)))
+                    hook_events.append(("verdict", self._deliver(
+                        fres, label if reason != "direct" else None)))
                     out.append(fres)
                     self.stats.failed += 1
                     self._admission.release_slot(f.tenant)
@@ -857,18 +875,19 @@ class SPDCGateway:
         The result is discarded; it exists so the sweep runs at a warmed
         batch shape."""
         ckey = (n_bucket, str(dtype))
-        cached = self._dummies.get(ckey)
-        if cached is None:
-            rng = np.random.default_rng(n_bucket)
-            cached = (
-                rng.standard_normal((n_bucket, n_bucket))
-                + n_bucket * np.eye(n_bucket)
-            ).astype(np.dtype(str(dtype)))
-            self._dummies[ckey] = cached
-            while len(self._dummies) > _DUMMY_CACHE_MAX:
-                self._dummies.popitem(last=False)
-        else:
-            self._dummies.move_to_end(ckey)
+        with self._lock:  # RLock: safe from flush (unlocked) and warmup
+            cached = self._dummies.get(ckey)
+            if cached is None:
+                rng = np.random.default_rng(n_bucket)
+                cached = (
+                    rng.standard_normal((n_bucket, n_bucket))
+                    + n_bucket * np.eye(n_bucket)
+                ).astype(np.dtype(str(dtype)))
+                self._dummies[ckey] = cached
+                while len(self._dummies) > _DUMMY_CACHE_MAX:
+                    self._dummies.popitem(last=False)
+            else:
+                self._dummies.move_to_end(ckey)
         return cached
 
     # -- observability ------------------------------------------------------

@@ -145,6 +145,7 @@ def test_overload_8x_bounded_p99_and_zero_loss():
     assert snap.tenants["default"]["pending"] == 0
     assert gw._admission.total_pending == 0
     assert gw._inflight == {}
+    assert snap.counters["admitted"] == len(admitted)
     assert snap.counters["served"] == len(admitted)
     assert snap.counters["rejected_rate"] == rejections["rate"]
     assert snap.counters["rejected_overload"] == rejections["overload"]
@@ -350,6 +351,96 @@ def test_breaker_on_open_direct_degrades_instead_of_failing():
     ws, wl = np.linalg.slogdet(m)
     assert res.det.sign == ws and np.isclose(res.det.logabs, wl, rtol=1e-10)
     assert gw.stats.degraded_direct == 1 and gw.stats.rejected_breaker == 0
+
+
+@pytest.mark.parametrize("shed", ["quota", "overload"])
+def test_breaker_probe_shed_before_enqueue_is_not_lost(shed):
+    """Regression: a half-open probe grant whose request is then shed by
+    tenant quota or gateway capacity must revert the breaker to "open"
+    with the probe still due. Before the fix, probe_pending stayed set
+    with no flush ever record()ing, so every later submission fast-failed
+    with retry_after 0 — the bucket was permanently unavailable."""
+    chaos = {"on": True}
+
+    def faults_for(key):
+        if chaos["on"] and key.pad_to == 8:
+            raise RuntimeError("bucket chaos")
+        return None
+
+    kw = (dict(max_pending=1) if shed == "overload"
+          else dict(admission=AdmissionConfig(max_pending_per_tenant=1)))
+    cfg = _cfg(
+        buckets=(8, 16), max_batch=2, pad_batches=False,
+        max_wait_us=1000.0,
+        breaker=_nojitter(failure_threshold=1, cooldown_base_s=1.0),
+        **kw,
+    )
+    clock = VirtualClock()
+    gw = SPDCGateway(cfg, clock=clock, faults_for=faults_for)
+    key8 = gw._key_for(4, {})
+
+    # trip bucket 8 via a timeout flush (threshold 1 → opens immediately)
+    gw.submit(_mat(4, seed=540))
+    clock.t = 0.01
+    gw.poll()
+    assert gw.breaker_state(key8) == "open"
+
+    # a pending request in the CLEAN bucket pins the tenant slot /
+    # gateway capacity, so the upcoming probe will be shed post-verdict
+    blocker = gw.submit(_mat(12, seed=541))
+    clock.t = 1.02  # cooldown (1s after the 0.01 failure) elapsed
+    chaos["on"] = False  # fleet healed — the probe WOULD succeed
+    expect = GatewayOverloaded if shed == "overload" else AdmissionRejected
+    for _ in range(2):  # shed twice: each revoked grant must re-arm
+        with pytest.raises(expect):
+            gw.submit(_mat(4, seed=542))
+        # the shed probe is revoked, not consumed: back to open, still due
+        assert gw.breaker_state(key8) == "open"
+
+    clock.t = 1.03
+    gw.poll()  # the overdue clean-bucket blocker flushes, freeing capacity
+    assert gw.take(blocker).verified
+    probe_rid = gw.submit(_mat(4, seed=543))  # THE probe, finally enqueued
+    assert gw.breaker_state(key8) == "half_open"
+    clock.t = 1.05
+    gw.poll()
+    assert gw.take(probe_rid).verified
+    assert gw.breaker_state(key8) == "closed"
+    assert gw.stats.breaker_closes == 1
+    assert gw.healthz()["status"] == "ok"
+
+
+def test_padding_failure_fails_requests_instead_of_losing_them():
+    """Regression: batch padding runs after the requests are popped from
+    the queue — a filler failure must route them through _fail_requests
+    (typed error results, slots released), not vanish them and hang
+    their waiters."""
+    cfg = _cfg(
+        buckets=(8,), max_batch=4, pad_batches=True, max_wait_us=1000.0,
+        admission=AdmissionConfig(max_pending_per_tenant=4),
+        breaker=_nojitter(),
+    )
+    clock = VirtualClock()
+    gw = SPDCGateway(cfg, clock=clock)
+
+    def boom(n_bucket, dtype="float64"):
+        raise RuntimeError("filler allocation failed")
+
+    gw._dummy = boom
+    # 3 requests pad to the next allowed shape (4) → one filler needed
+    rids = [gw.submit(_mat(4, seed=910 + i)) for i in range(3)]
+    clock.t = 0.01
+    out = gw.poll()
+    assert sorted(r.rid for r in out) == sorted(rids)
+    for rid in rids:
+        res = gw.take(rid)
+        assert res.error is not None
+        assert "filler allocation failed" in res.error
+    assert gw.pending == 0
+    assert gw._admission.total_pending == 0  # slots released on failure
+    snap = gw.metrics_snapshot()
+    assert snap.counters["failed"] == 3
+    assert snap.tenants["default"]["served"] == 0
 
 
 def test_breaker_containment_poisoned_bucket_does_not_starve_others():

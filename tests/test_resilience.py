@@ -169,6 +169,25 @@ def test_breaker_probe_success_closes_and_failure_reopens_with_backoff():
     assert br.allow(10.2) == "probe"
 
 
+def test_breaker_revert_probe_restores_reprobeable_open():
+    """Regression: a granted probe whose request is shed before enqueue
+    (quota / capacity) must be revocable — revert_probe() returns to
+    "open" with next_probe_at untouched, so the NEXT submission re-probes
+    instead of the bucket fast-failing forever on a probe that no flush
+    will ever record()."""
+    br = _breaker()
+    for t in (0.0, 1.0, 2.0):
+        br.record(t, failed=True)
+    assert br.allow(3.0) == "probe"
+    br.revert_probe()  # the probe's request never made it into the queue
+    assert br.state == "open" and not br.probe_pending
+    assert br.retry_after(3.0) == 0.0  # still due, not pushed out
+    assert br.allow(3.0) == "probe"  # grant is re-issued immediately
+    assert br.record(3.5, failed=False) == "closed"
+    br.revert_probe()  # no-op outside a pending probe
+    assert br.state == "closed"
+
+
 def test_breaker_cooldown_caps_at_max():
     br = _breaker(cooldown_base_s=1.0, cooldown_max_s=4.0)
     for round_ in range(6):  # trip, fail the probe, repeat
@@ -387,6 +406,21 @@ def test_tenant_isolation_in_metrics():
     assert snap.tenants["b"]["submitted"] == 1
     assert snap.tenants["b"]["rejected_rate"] == 1
     assert snap.tenants["a"]["rejected_rate"] == 0
+
+
+def test_tenant_served_excludes_failures():
+    """Per-tenant served mirrors the global served/failed split: a
+    request that completed WITH an error is failed, not served."""
+    m = GatewayMetrics()
+    m.record_verdict(VerdictEvent(
+        rid=0, bucket="b", tenant="a", verified=True, latency_s=0.01,
+        flush_reason="full"))
+    m.record_verdict(VerdictEvent(
+        rid=1, bucket="b", tenant="a", verified=False, latency_s=0.01,
+        flush_reason="full", error="sweep raised"))
+    snap = m.snapshot()
+    assert snap.tenants["a"]["served"] == 1
+    assert snap.counters["served"] == 1 and snap.counters["failed"] == 1
 
 
 def test_render_prometheus_grammar():
