@@ -13,7 +13,7 @@ def fmt_s(x):
 def main(mesh="single"):
     rows = []
     for f in sorted(DIR.glob(f"*__{mesh}.json")):
-        r = json.load(open(f))
+        r = json.loads(f.read_text())
         rows.append(r)
     print(f"| arch | shape | compute (s) | memory (s) | collective (s) | "
           f"dominant | MODEL_FLOPS | useful | frac | state/dev GiB | peak GiB |")

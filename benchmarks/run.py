@@ -149,7 +149,8 @@ def table1_overhead(n: int = 1024):
     l, u = jax.jit(lu_unblocked)(x)
     for method in ("q1", "q2", "q3"):
         us, _ = _t(
-            lambda: authenticate(l, u, x, num_servers=4, method=method), reps=3
+            lambda method=method: authenticate(l, u, x, num_servers=4,
+                                               method=method), reps=3
         )
         emit(f"table1_auth_{method}_n{n}", us,
              claimed_flops=verification_flops(n, method))
@@ -283,7 +284,7 @@ def throughput(ns=(64, 256, 1024), Ns=(2, 4, 8), batches=(1, 8, 32)):
         for N in Ns:
             single_m = _wellcond(n, seed=n + N)
             t_single_us, res = _t(
-                lambda: outsource_determinant(single_m, N), reps=2, warmup=1
+                lambda N=N: outsource_determinant(single_m, N), reps=2, warmup=1
             )
             loop_dets_per_sec = 1e6 / t_single_us
             emit(f"throughput_loop_n{n}_N{N}", t_single_us,
@@ -293,7 +294,7 @@ def throughput(ns=(64, 256, 1024), Ns=(2, 4, 8), batches=(1, 8, 32)):
             for B in batches:
                 stack = jnp.asarray(_wellcond(n, seed=n + N, batch=B))
                 t_us, resb = _t(
-                    lambda s=stack: outsource_determinant(s, N),
+                    lambda s=stack, N=N: outsource_determinant(s, N),
                     reps=2, warmup=1,
                 )
                 dets_per_sec = B * 1e6 / t_us
@@ -856,7 +857,8 @@ def gateway_overload_suite(n: int = 32, N: int = 2):
         def faults_for(key):
             if poison and key.pad_to == n_small:
                 raise RuntimeError("injected chaos: poisoned bucket")
-            return None
+            # callback contract: an explicit None means "no fault plan"
+            return None  # noqa: RET501
 
         bcfg = SPDCGatewayConfig(
             name="bench-gw-breaker", buckets=(n_small, n),
@@ -870,7 +872,7 @@ def gateway_overload_suite(n: int = 32, N: int = 2):
                  for i in range(requests // 2)]
         clean_rids, shed = [], 0
         t0 = time.perf_counter()
-        for cm, nm in zip(clean, noisy):
+        for cm, nm in zip(clean, noisy, strict=True):
             # Both legs submit BOTH streams; only the chaos leg's noisy
             # bucket fails (and fast-fails once the breaker trips).
             try:

@@ -60,7 +60,7 @@ def main():
     gw.drain()
 
     healed = 0
-    for m, rid in zip(mats, rids):
+    for m, rid in zip(mats, rids, strict=True):
         res = gw.take(rid)
         assert res is not None and res.verified, f"request {rid} failed"
         ws, wl = np.linalg.slogdet(m)

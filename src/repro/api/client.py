@@ -263,9 +263,11 @@ class SPDCClient:
             m = jnp.asarray(m, dtype=self.dtype)
             if m.ndim == 3:
                 sess = self._open_batch(m, num_servers, plan, tamper)
-            elif m.ndim != 2 or m.shape[0] != m.shape[1]:
-                raise ValueError(f"expected a square matrix, got {m.shape}")
             else:
+                if m.ndim != 2 or m.shape[0] != m.shape[1]:
+                    raise ValueError(
+                        f"expected a square matrix, got {m.shape}"
+                    )
                 sess = self._open_single(m, num_servers, plan, tamper)
         sess._pmop_s = time.perf_counter() - t0
         return sess

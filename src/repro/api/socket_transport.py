@@ -235,14 +235,18 @@ class WorkerDaemon:
         self.workers = None if workers is None else tuple(workers)
         self.address: str | None = None  # actual (ephemeral ports resolved)
         self._family, self._target = parse_address(bind)
-        self._edges: dict[int, EdgeServer] = {}
+        self._edges: dict[int, EdgeServer] = {}  #: guarded-by: self._lock
         self._lock = threading.Lock()
         self._listener: socket.socket | None = None
         self._accept_thread: threading.Thread | None = None
-        self._open: set[socket.socket] = set()  # live connections
+        #: live connections
+        #: guarded-by: self._lock
+        self._open: set[socket.socket] = set()
         self._stop = threading.Event()
-        self.connections = 0  # lifetime accepted connections
-        self.frames_served = 0  # lifetime request frames answered
+        #: lifetime accepted connections
+        self.connections = 0  #: guarded-by: self._lock
+        #: lifetime request frames answered
+        self.frames_served = 0  #: guarded-by: self._lock
 
     def start(self) -> str:
         """Bind + listen + spawn the accept loop; returns the actual
@@ -432,13 +436,15 @@ class SocketTransport(Transport):
         self.timeout = float(timeout)
         self.connect_timeout = float(connect_timeout)
         self.health = FleetHealth()  # reconnect/backoff bookkeeping
-        self._socks: dict[int, socket.socket] = {}
-        self._hellos: dict[int, dict] = {}
-        self._sent_plan: dict[int, tuple | None] = {}
+        self._socks: dict[int, socket.socket] = {}  #: guarded-by: self._meta
+        self._hellos: dict[int, dict] = {}  #: guarded-by: self._meta
+        self._sent_plan: dict[int, tuple | None] = {}  #: guarded-by: self._meta
         self._locks: dict[int, threading.Lock] = {}
         self._meta = threading.RLock()
         self._io = None  # lazy executor behind start()
-        self._spawned: dict[int, tuple] = {}  # wid -> (proc, uds path)
+        #: wid -> (proc, uds path)
+        #: guarded-by: self._meta
+        self._spawned: dict[int, tuple] = {}
         self._tmpdir: str | None = None
         self._ctx = None
 
@@ -613,8 +619,14 @@ class SocketTransport(Transport):
     def _configure_faults(self, worker_id: int, faults,
                           timeout: float | None = None) -> None:
         plan = tuple(faults)
-        if self._sent_plan.get(worker_id) == plan:
-            return
+        # _sent_plan is _meta-guarded: close() clears it from another
+        # thread, and dict reads concurrent with that clear are racy.
+        # The caller's per-worker lock serializes the check-then-send
+        # pair for THIS worker; the socket round-trip stays outside
+        # _meta (never block the fleet on one worker's I/O).
+        with self._meta:
+            if self._sent_plan.get(worker_id) == plan:
+                return
         ack = self._request(
             worker_id, FaultPlanFrame(plan).to_bytes(), timeout
         )
@@ -624,7 +636,8 @@ class SocketTransport(Transport):
                 f"worker {worker_id} mis-acknowledged a fault-plan frame: "
                 f"{ack[:32]!r}"
             )
-        self._sent_plan[worker_id] = plan
+        with self._meta:
+            self._sent_plan[worker_id] = plan
 
     def _run_on(self, task, worker_id: int, faults=(),
                 timeout: float | None = None) -> ShardResult:
@@ -671,23 +684,26 @@ class SocketTransport(Transport):
         return io.submit(self._run_on, task, worker_id, faults, timeout)
 
     def close(self):
+        # swap state out under _meta, then do the goodbye/teardown I/O
+        # unlocked: a slow or dead daemon must not wedge every other
+        # thread that needs the metadata lock while close() waits on it
         with self._meta:
             io, self._io = self._io, None
-            for sock in self._socks.values():
-                try:
-                    send_frame(sock, b"")  # goodbye
-                except OSError:
-                    pass
-                try:
-                    sock.close()
-                except OSError:
-                    pass
-            self._socks.clear()
+            socks, self._socks = dict(self._socks), {}
             self._hellos.clear()
             self._sent_plan.clear()
             self._locks.clear()
             spawned, self._spawned = dict(self._spawned), {}
             tmpdir, self._tmpdir = self._tmpdir, None
+        for sock in socks.values():
+            try:
+                send_frame(sock, b"")  # goodbye
+            except OSError:
+                pass
+            try:
+                sock.close()
+            except OSError:
+                pass
         for proc, _path in spawned.values():
             if proc.is_alive():
                 proc.terminate()

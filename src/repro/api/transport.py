@@ -401,7 +401,7 @@ class ThreadPoolTransport(Transport):
         self._pool = ThreadPoolExecutor(
             max_workers=max_workers, thread_name_prefix="spdc-edge"
         )
-        self._edges: dict[int, EdgeServer] = {}
+        self._edges: dict[int, EdgeServer] = {}  #: guarded-by: self._lock
         self._lock = threading.Lock()
 
     def _edge(self, worker_id: int) -> EdgeServer:
@@ -484,9 +484,9 @@ class MultiprocessTransport(Transport):
         import multiprocessing as mp
 
         self._ctx = mp.get_context("spawn")
-        self._conns: dict[int, object] = {}
-        self._procs: dict[int, object] = {}
-        self._sent_plan: dict[int, tuple] = {}
+        self._conns: dict[int, object] = {}  #: guarded-by: self._meta
+        self._procs: dict[int, object] = {}  #: guarded-by: self._meta
+        self._sent_plan: dict[int, tuple] = {}  #: guarded-by: self._meta
         self._locks: dict[int, threading.Lock] = {}
         self._meta = threading.RLock()  # guards the dicts, not the pipes
         self._io = None  # lazy executor behind start()
@@ -568,8 +568,13 @@ class MultiprocessTransport(Transport):
     def _configure_faults(self, worker_id: int, faults,
                           timeout: float | None = None) -> None:
         plan = tuple(faults)
-        if self._sent_plan.get(worker_id) == plan:
-            return
+        # _sent_plan is _meta-guarded: close() clears it from another
+        # thread. The caller's per-worker lock serializes the
+        # check-then-send pair for THIS worker; the pipe round-trip
+        # stays outside _meta (never block the fleet on one worker).
+        with self._meta:
+            if self._sent_plan.get(worker_id) == plan:
+                return
         ack = self._request(worker_id, FaultPlanFrame(plan).to_bytes(),
                             timeout)
         if ack != b"ACK":
@@ -577,7 +582,8 @@ class MultiprocessTransport(Transport):
                 f"edge worker {worker_id} mis-acknowledged a fault-plan "
                 f"frame: {ack[:32]!r}"
             )
-        self._sent_plan[worker_id] = plan
+        with self._meta:
+            self._sent_plan[worker_id] = plan
 
     def _run_on(self, task: ShardTask, worker_id: int, faults=(),
                 timeout: float | None = None):
@@ -621,22 +627,25 @@ class MultiprocessTransport(Transport):
         return io.submit(self._run_on, task, worker_id, faults, timeout)
 
     def close(self):
+        # swap state out under _meta, then do the goodbye sends and the
+        # (up to 5 s per worker) joins unlocked: a wedged worker must
+        # not hold the metadata lock against every other thread
         with self._meta:
             io, self._io = self._io, None
-            for conn in self._conns.values():
-                try:
-                    conn.send_bytes(b"")
-                    conn.close()
-                except (OSError, ValueError):
-                    pass
-            for proc in self._procs.values():
-                proc.join(timeout=5)
-                if proc.is_alive():
-                    proc.terminate()
-            self._conns.clear()
-            self._procs.clear()
+            conns, self._conns = dict(self._conns), {}
+            procs, self._procs = dict(self._procs), {}
             self._sent_plan.clear()
             self._locks.clear()
+        for conn in conns.values():
+            try:
+                conn.send_bytes(b"")
+                conn.close()
+            except (OSError, ValueError):
+                pass
+        for proc in procs.values():
+            proc.join(timeout=5)
+            if proc.is_alive():
+                proc.terminate()
         if io is not None:
             io.shutdown(wait=False)
         super().close()

@@ -73,7 +73,7 @@ class Determinant:
             )
         return float(self.sign * np.exp(self.logabs))
 
-    def is_zero(self, atol_logabs: float = float("-inf")) -> bool:
+    def is_zero(self, atol_logabs: float = -np.inf) -> bool:
         """True when this determinant is (numerically) zero: an exact zero
         sign, a -inf logabs, or logabs at/below `atol_logabs`."""
         return self.sign == 0 or self.logabs == float("-inf") \
@@ -84,7 +84,7 @@ class Determinant:
         other: "Determinant",
         rtol: float | None = None,
         atol: float = 0.0,
-        zero_logabs: float = float("-inf"),
+        zero_logabs: float = -np.inf,
     ) -> bool:
         """Relative-determinant comparison, done correctly in log space.
 
@@ -225,7 +225,7 @@ def decipher_batch(
             float(sign_x[i]), float(logabs_x[i]), seed, meta,
             faithful=faithful, log2_scale=float(log2_scale[i]), dtype=dtype,
         )
-        for i, (seed, meta) in enumerate(zip(seeds, metas))
+        for i, (seed, meta) in enumerate(zip(seeds, metas, strict=True))
     ]
 
 

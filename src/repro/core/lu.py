@@ -57,8 +57,7 @@ def _doolittle_compact(a: jnp.ndarray) -> jnp.ndarray:
         lcol = jnp.where(below, a[..., :, k] / pivot[..., None], 0.0)
         urow = jnp.where(below, a[..., k, :], 0.0)
         a = a - lcol[..., :, None] * urow[..., None, :]
-        a = a.at[..., :, k].set(jnp.where(below, lcol, a[..., :, k]))
-        return a
+        return a.at[..., :, k].set(jnp.where(below, lcol, a[..., :, k]))
 
     return lax.fori_loop(0, n, body, a)
 

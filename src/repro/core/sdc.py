@@ -46,8 +46,11 @@ def checked_matmul(
 
 def check_step_outputs(triples, key: jax.Array) -> jnp.ndarray:
     """Max residual over an iterable of (A, B, C) claims (e.g. one per layer)."""
-    keys = jax.random.split(key, max(len(triples), 1))
-    resids = [freivalds_residual(a, b, c, k) for (a, b, c), k in zip(triples, keys)]
-    if not resids:
+    if not triples:
         return jnp.zeros(())
+    keys = jax.random.split(key, len(triples))
+    resids = [
+        freivalds_residual(a, b, c, k)
+        for (a, b, c), k in zip(triples, keys, strict=True)
+    ]
     return jnp.max(jnp.stack(resids))

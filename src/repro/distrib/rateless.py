@@ -342,7 +342,7 @@ def run_rateless(
         lanes = [
             _Lane(index=i, sel=slice(int(lo), int(hi)),
                   x=x_host[int(lo):int(hi)])
-            for i, (lo, hi) in enumerate(zip(bounds[:-1], bounds[1:]))
+            for i, (lo, hi) in enumerate(zip(bounds[:-1], bounds[1:], strict=True))
             if hi > lo
         ]
     else:

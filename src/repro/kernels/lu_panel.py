@@ -42,8 +42,7 @@ def _lu_panel_kernel(x_ref, o_ref, *, acc_dtype=None):
         urow_right = jnp.where(jnp.arange(b) > k, urow, 0.0)
         a = a - lcol[:, None] * urow_right[None, :]
         # store multipliers into column k (rows > k)
-        a = jnp.where((cols == k) & (rows > k), lcol[:, None], a)
-        return a
+        return jnp.where((cols == k) & (rows > k), lcol[:, None], a)
 
     out = lax.fori_loop(0, b, body, a).astype(o_ref.dtype)
     o_ref[...] = out[None] if squeeze else out

@@ -57,7 +57,7 @@ def run_variant(arch, shape_name, mesh_name, overrides, tag):
 
     base_file = BASE / f"{arch}__{shape_name}__{mesh_name}.json"
     if base_file.exists():
-        base = json.load(open(base_file))
+        base = json.loads(base_file.read_text())
         print(f"[perf:{tag}] vs baseline:")
         for k in ("compute_s", "memory_s", "collective_s", "roofline_fraction"):
             b, v = base[k], rec[k]

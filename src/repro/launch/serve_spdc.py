@@ -316,7 +316,7 @@ def main(argv=None) -> int:
         print("  health surface was not exercised")
         return 1
     if args.check:
-        for r, m in zip(results, mats):
+        for r, m in zip(results, mats, strict=True):
             if r is None:
                 continue
             ws, wl = np.linalg.slogdet(m)

@@ -113,8 +113,7 @@ def apply_moe(p: dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
         combine = constrain(disp * wk[..., None], gspec, None, "model", None)
         y = jnp.einsum("gtec,gecd->gtd", combine, out)
         y = constrain(y, gspec, None, None).reshape(t, d)
-    y = constrain(y.reshape(b, s, d), "batch", "seq", None)
-    return y
+    return constrain(y.reshape(b, s, d), "batch", "seq", None)
 
 
 def moe_active_params(cfg) -> int:

@@ -251,8 +251,12 @@ class MicroBatchQueue:
         self.max_batch = int(max_batch)
         self.max_wait_us = float(max_wait_us)
         self.max_pending = int(max_pending)
+        # the queue has no lock of its own: every caller is the gateway,
+        # already inside its RLock (enforced there via the gateway's own
+        # guarded `_queue` reference — see tools/repro_lint, DESIGN.md §11)
+        #: guarded-by: external(SPDCGateway._lock)
         self._buckets: "OrderedDict[BucketKey, _Bucket]" = OrderedDict()
-        self._pending = 0
+        self._pending = 0  #: guarded-by: external(SPDCGateway._lock)
 
     @property
     def pending(self) -> int:

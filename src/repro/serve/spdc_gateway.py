@@ -65,6 +65,7 @@ from repro.api.transport import Transport, TransportConfig
 from repro.configs.spdc import SPDC_GATEWAY_DEFAULT, SPDCGatewayConfig
 from repro.core.protocol import outsource_determinant_mixed, resolve_dtype
 
+from .locking import assert_owns_lock
 from .metrics import (
     FlushEvent,
     GatewayMetrics,
@@ -237,29 +238,35 @@ class SPDCGateway:
         self.on_flush = on_flush
         self.on_verdict = on_verdict
         self.on_reject = on_reject
+        #: guarded-by: self._lock
         self._queue = MicroBatchQueue(
             max_batch=config.max_batch,
             max_wait_us=config.max_wait_us,
             max_pending=config.max_pending,
         )
-        self._results: dict[int, GatewayResult] = {}
-        self._next_rid = 0
+        self._results: dict[int, GatewayResult] = {}  #: guarded-by: self._lock
+        self._next_rid = 0  #: guarded-by: self._lock
         #: transports this gateway built from TransportConfig specs (its
         #: default spdc.transport or per-request overrides). Owned: the
         #: gateway closes them in close(). Keyed by the frozen config so
         #: equal configs resolve to ONE instance — and therefore one
         #: BucketKey, one bucket, one warm worker pool.
+        #: guarded-by: self._lock
         self._owned_transports: dict[TransportConfig, Transport] = {}
-        self.stats = GatewayStats()
-        self.metrics = GatewayMetrics()
-        self._admission = AdmissionController(config.admission)
-        self._breakers: dict[BucketKey, CircuitBreaker] = {}
+        self.stats = GatewayStats()  #: guarded-by: self._lock
+        self.metrics = GatewayMetrics()  #: guarded-by: self._lock
+        self._admission = AdmissionController(config.admission)  #: guarded-by: self._lock
+        self._breakers: dict[BucketKey, CircuitBreaker] = {}  #: guarded-by: self._lock
+        #: guarded-by: self._lock
         self._cache = (
             ResultCache(config.cache.max_entries)
             if config.cache.enabled else None
         )
-        self._inflight: dict[object, _InFlight] = {}
-        #: (n_bucket, dtype)-keyed warmup/padding dummies, LRU-bounded
+        self._inflight: dict[object, _InFlight] = {}  #: guarded-by: self._lock
+        #: (n_bucket, dtype)-keyed warmup/padding dummies, LRU-bounded.
+        #: OrderedDict.get + move_to_end MUTATE recency order — every
+        #: touch, reads included, must hold the lock (the PR-8 bug).
+        #: guarded-by: self._lock
         self._dummies: "OrderedDict[tuple, np.ndarray]" = OrderedDict()
         #: guards queue/results/stats so AsyncSPDCGateway may run sweeps on
         #: a worker thread while the event loop keeps submitting. Held for
@@ -341,6 +348,7 @@ class SPDCGateway:
 
     # -- resilience helpers -------------------------------------------------
 
+    #: requires-lock: self._lock
     def _breaker_for(self, key: BucketKey) -> CircuitBreaker:
         br = self._breakers.get(key)
         if br is None:
@@ -366,6 +374,7 @@ class SPDCGateway:
         h.update(m.tobytes())
         return (key, tenant, h.digest())
 
+    #: requires-lock: self._lock
     def _reject(self, reason: str, tenant: str, key: BucketKey | None):
         """Record + fire one typed rejection (caller raises afterwards)."""
         ev = RejectEvent(
@@ -600,10 +609,12 @@ class SPDCGateway:
         with self._lock:
             return self._results.pop(rid, None)
 
+    #: requires-lock: self._lock
     def _deliver(self, gres: GatewayResult, bucket_label: str | None):
         """Store one finished result + its bookkeeping (lock held).
 
         Returns the VerdictEvent for the caller's hook batch."""
+        assert_owns_lock(self._lock, "gateway results/metrics")
         self._results[gres.rid] = gres
         ev = VerdictEvent(
             rid=gres.rid, bucket=bucket_label, tenant=gres.tenant,
@@ -622,6 +633,7 @@ class SPDCGateway:
             if hook is not None:
                 hook(ev)
 
+    #: requires-lock: self._lock
     def _followers_of(self, req: DetRequest) -> list[DetRequest]:
         """Pop the single-flight followers riding this leader (lock held)."""
         if req.ckey is None:
@@ -736,6 +748,7 @@ class SPDCGateway:
         self._fire(hook_events)
         return out
 
+    #: requires-lock: self._lock
     def _record_breaker(self, key: BucketKey, *, now: float, failed: bool,
                         unverified_rate: float = 0.0) -> None:
         """Feed a flush outcome to the bucket's breaker (lock held)."""
@@ -876,6 +889,7 @@ class SPDCGateway:
         batch shape."""
         ckey = (n_bucket, str(dtype))
         with self._lock:  # RLock: safe from flush (unlocked) and warmup
+            assert_owns_lock(self._lock, "_dummies LRU")
             cached = self._dummies.get(ckey)
             if cached is None:
                 rng = np.random.default_rng(n_bucket)

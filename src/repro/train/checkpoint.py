@@ -73,7 +73,7 @@ class CheckpointManager:
         tmp.mkdir(parents=True)
         paths, leaves, _ = _flatten_with_paths(host_tree)
         manifest = {"step": step, "leaves": []}
-        for i, (p, leaf) in enumerate(zip(paths, leaves)):
+        for i, (p, leaf) in enumerate(zip(paths, leaves, strict=True)):
             fname = f"leaf_{i:06d}.npy"
             np.save(tmp / fname, leaf)
             manifest["leaves"].append(
@@ -101,9 +101,10 @@ class CheckpointManager:
     def all_steps(self) -> list[int]:
         out = []
         for d in self.dir.iterdir():
-            if d.is_dir() and d.name.startswith("step_") and "tmp" not in d.name:
-                if (d / "manifest.json").exists():
-                    out.append(int(d.name.split("_")[1]))
+            if (d.is_dir() and d.name.startswith("step_")
+                    and "tmp" not in d.name
+                    and (d / "manifest.json").exists()):
+                out.append(int(d.name.split("_")[1]))
         return sorted(out)
 
     def latest_step(self) -> int | None:
@@ -117,7 +118,7 @@ class CheckpointManager:
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
         d = self.dir / f"step_{step:09d}"
-        manifest = json.load(open(d / "manifest.json"))
+        manifest = json.loads((d / "manifest.json").read_text())
         paths, _, treedef = _flatten_with_paths(template)
         by_path = {m["path"]: m for m in manifest["leaves"]}
         leaves = []

@@ -19,8 +19,7 @@ import numpy as np
 def _markov_logits(vocab: int, seed: int, branch: int = 32) -> np.ndarray:
     """Sparse-ish row-stochastic transition matrix (vocab, branch)."""
     rng = np.random.default_rng(seed)
-    nexts = rng.integers(0, vocab, size=(vocab, branch))
-    return nexts
+    return rng.integers(0, vocab, size=(vocab, branch))
 
 
 class SyntheticLM:

@@ -86,7 +86,7 @@ def adamw_update(params, grads, state, cfg: AdamWConfig):
     # time, not all leaves at once (340B models: ~25 GB -> ~2 GB peak).
     out = []
     token = None
-    for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu):
+    for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu, strict=True):
         if token is not None:
             p, g, m, n, _ = jax.lax.optimization_barrier((p, g, m, n, token))
         res = upd(p, g, m, n)

@@ -351,3 +351,42 @@ def test_async_gateway_backpressure_raises():
 
     r1, r2 = asyncio.run(main())
     assert r1.verified and r2.verified
+
+
+# ------------------------------------------------------------- lock assertions
+def test_assert_owns_lock_semantics():
+    """Debug-mode ownership probe: exact for RLock, one-sided for Lock."""
+    import threading
+
+    from repro.serve.locking import assert_owns_lock
+
+    rl = threading.RLock()
+    with pytest.raises(AssertionError, match="without holding"):
+        assert_owns_lock(rl, "thing")
+    with rl:
+        assert_owns_lock(rl, "thing")  # no raise
+    # plain Lock: a free lock is provably not ours
+    pl = threading.Lock()
+    with pytest.raises(AssertionError):
+        assert_owns_lock(pl)
+    with pl:
+        assert_owns_lock(pl)  # held (by us) => accepted
+    assert not pl.locked()  # probe must not leave the lock held
+
+
+def test_gateway_deliver_requires_lock_at_runtime():
+    """_deliver asserts gateway-lock ownership: calling it unlocked (the
+    bug class repro-lint's SPDC204 catches lexically) trips at runtime."""
+    from repro.serve.spdc_gateway import GatewayResult
+
+    gw = SPDCGateway(_cfg(), clock=VirtualClock())
+    gres = GatewayResult(
+        rid=1, det=None, verified=False, residual=0.0, n=8, pad_to=8,
+        batch=1, flush_reason="direct", submitted_at=0.0, completed_at=0.0,
+        error="x",
+    )
+    with pytest.raises(AssertionError, match="gateway results"):
+        gw._deliver(gres, "b8")
+    with gw._lock:
+        gw._deliver(gres, "b8")
+    assert gw.take(1) is gres

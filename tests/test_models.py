@@ -231,3 +231,37 @@ def test_decode_matches_parallel_forward(arch):
     mask = np.arange(logits.shape[-1]) < cfg.vocab_size
     err = np.max(np.abs(np.asarray(logits - ref))[:, mask])
     assert err < 2e-3, err
+
+
+def test_moe_active_params_accounting():
+    """moe_active_params counts only per-token ACTIVE expert weights: it
+    scales with experts_per_token, not with the expert pool size."""
+    from dataclasses import replace
+
+    from repro.models.moe import moe_active_params
+
+    cfg = smoke_config("granite-moe-1b-a400m")
+    base = moe_active_params(cfg)
+    assert base > 0
+    # doubling the routed-expert count doubles the active matmul cost
+    # (router cost unchanged), while growing the POOL only adds router rows
+    doubled = moe_active_params(
+        replace(cfg, experts_per_token=2 * cfg.experts_per_token)
+    )
+    assert doubled == base + 3 * cfg.d_model * cfg.d_ff * cfg.experts_per_token
+    pool = moe_active_params(replace(cfg, num_experts=2 * cfg.num_experts))
+    assert pool - base == cfg.d_model * cfg.num_experts
+
+
+def test_cache_bytes_matches_materialized_caches():
+    """cache_bytes (an eval_shape estimate — no allocation) must agree
+    exactly with the bytes of actually materialized decode caches."""
+    from repro.serve.kvcache import cache_bytes, init_caches
+
+    cfg = smoke_config("tinyllama-1.1b")
+    B, S = 2, 16
+    est = cache_bytes(cfg, B, S)
+    real = sum(
+        x.size * x.dtype.itemsize for x in jax.tree.leaves(init_caches(cfg, B, S))
+    )
+    assert est == real > 0

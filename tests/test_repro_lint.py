@@ -1,0 +1,472 @@
+"""Tests for the repro-lint static-analysis suite (DESIGN.md §11).
+
+Fixture corpus: for each pass, a must-flag and a must-pass source, the
+two historical bug classes reproduced verbatim as must-flag patterns
+(the unlocked ``_dummies`` LRU read, the under-lock hook firing), the
+suppression grammar, and annotation-deletion checks against the REAL
+tree sources — deleting any guard annotation or whitelist entry must
+turn the lint red.  Finally the integration gate: the live tree lints
+clean, which is what CI enforces.
+"""
+import re
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+if str(REPO) not in sys.path:
+    sys.path.insert(0, str(REPO))
+
+from tools.repro_lint import CODES, lint_paths, lint_sources  # noqa: E402
+from tools.repro_lint.vocab import REQUIRED_GUARDS, UNSUPPRESSIBLE  # noqa: E402
+
+SERVE = "src/repro/serve/fixture.py"
+CORE = "src/repro/core/fixture.py"
+
+
+def codes(findings):
+    return [f.code for f in findings]
+
+
+def lint_one(src, path=SERVE, passes=None):
+    return lint_sources({path: src}, passes=passes)
+
+
+# ---------------------------------------------------------------- suppression
+def test_syntax_error_is_spdc000():
+    assert codes(lint_one("def f(:\n")) == ["SPDC000"]
+
+
+def test_suppression_without_justification_rejected():
+    src = "import time\nwith lock:\n    pass\n_x = 1  # repro-lint: ignore[SPDC301]\n"
+    fs = lint_one(src)
+    assert "SPDC001" in codes(fs)
+
+
+def test_suppression_unknown_code_rejected():
+    fs = lint_one("_x = 1  # repro-lint: ignore[SPDC999] -- misremembered code\n")
+    assert "SPDC002" in codes(fs)
+
+
+def test_suppressing_the_unsuppressible_rejected():
+    for code in sorted(UNSUPPRESSIBLE):
+        fs = lint_one(f"_x = 1  # repro-lint: ignore[{code}] -- nice try\n")
+        assert "SPDC002" in codes(fs), code
+
+
+def test_stale_suppression_is_spdc003():
+    fs = lint_one("_x = 1  # repro-lint: ignore[SPDC301] -- nothing here flags\n")
+    assert codes(fs) == ["SPDC003"]
+
+
+def test_justified_suppression_silences_finding():
+    src = (
+        "import time\n"
+        "import jax\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    t = time.time()  # repro-lint: ignore[SPDC301] -- fixture\n"
+        "    return x * t\n"
+    )
+    assert codes(lint_one(src, path=CORE, passes=["jit"])) == []
+    # and the same source WITHOUT the suppression flags
+    assert "SPDC301" in codes(lint_one(src.replace(
+        "  # repro-lint: ignore[SPDC301] -- fixture", ""), path=CORE, passes=["jit"]))
+
+
+def test_standalone_suppression_targets_next_statement():
+    src = (
+        "import time\n"
+        "import jax\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    # repro-lint: ignore[SPDC301] -- fixture, comment-above form\n"
+        "    t = time.time()\n"
+        "    return x * t\n"
+    )
+    assert codes(lint_one(src, path=CORE, passes=["jit"])) == []
+
+
+# --------------------------------------------------------- pass 1: taint
+def test_taint_secret_to_log_flags():
+    src = (
+        "import logging\n"
+        "log = logging.getLogger(__name__)\n"
+        "def f(m):\n"
+        "    log.info('got %s', m)\n"
+    )
+    assert "SPDC102" in codes(lint_one(src, path=CORE))
+
+
+def test_taint_metadata_attrs_are_clean():
+    src = (
+        "import logging\n"
+        "log = logging.getLogger(__name__)\n"
+        "def f(m):\n"
+        "    log.info('got %s x %s', m.shape, m.dtype)\n"
+        "    if len(m) > 2:\n"
+        "        raise ValueError(f'bad rank {m.ndim}')\n"
+    )
+    assert codes(lint_one(src, path=CORE)) == []
+
+
+def test_taint_secret_in_exception_flags():
+    src = "def f(seed):\n    raise ValueError(f'bad seed {seed}')\n"
+    assert "SPDC103" in codes(lint_one(src, path=CORE))
+
+
+def test_taint_boundary_ctor_flags():
+    src = (
+        "def f(m, x_row):\n"
+        "    return ShardTask(x_row=m)\n"
+    )
+    assert "SPDC101" in codes(lint_one(src, path=CORE, passes=["taint"]))
+    # the CIPHERED row crossing is the protocol working as designed
+    clean = "def f(m, x_row):\n    return ShardTask(x_row=x_row)\n"
+    assert codes(lint_one(clean, path=CORE, passes=["taint"])) == []
+
+
+def test_taint_interprocedural_sink_through_helper():
+    """A secret reaching a sink through one level of local helper."""
+    src = (
+        "def _send(transport, x):\n"
+        "    transport.submit(x)\n"
+        "def f(transport, m):\n"
+        "    _send(transport, m)\n"
+    )
+    fs = lint_one(src, path=CORE)
+    assert "SPDC101" in codes(fs)
+    # only the CALL of the helper with the secret flags, not clean calls
+    src_clean = src + "def g(transport):\n    _send(transport, 'hello')\n"
+    assert codes(lint_one(src_clean, path=CORE)).count("SPDC101") == 1
+
+
+def test_taint_sanitizer_launders():
+    src = (
+        "import hashlib\n"
+        "def f(m):\n"
+        "    d = hashlib.sha256(m).hexdigest()\n"
+        "    raise ValueError(f'digest {d}')\n"
+    )
+    assert codes(lint_one(src, path=CORE)) == []
+
+
+def test_taint_out_of_scope_paths_are_skipped():
+    src = "def f(m):\n    print(m)\n"
+    assert "SPDC102" in codes(lint_one(src, path=CORE, passes=["taint"]))
+    assert codes(lint_one(src, path="src/repro/models/fixture.py", passes=["taint"])) == []
+
+
+# --------------------------------------------------------- pass 2: locks
+_LRU_BUG = """\
+import threading
+from collections import OrderedDict
+
+class Gateway:
+    def __init__(self):
+        self._lock = threading.RLock()
+        #: guarded-by: self._lock
+        self._dummies = OrderedDict()
+        self.on_flush = None
+
+    def dummy(self, key):
+        {body}
+"""
+
+
+def test_lock_unlocked_lru_read_flags():
+    """The PR-8 bug class: OrderedDict.get on an LRU outside the lock is
+    a MUTATION of recency order and must flag."""
+    src = _LRU_BUG.format(body="return self._dummies.get(key)")
+    assert "SPDC201" in codes(lint_one(src, passes=["locks"]))
+
+
+def test_lock_locked_lru_read_passes():
+    src = _LRU_BUG.format(
+        body="with self._lock:\n            return self._dummies.get(key)"
+    )
+    assert codes(lint_one(src, passes=["locks"])) == []
+
+
+def test_lock_unlocked_store_flags():
+    src = _LRU_BUG.format(body="self._dummies[key] = 1")
+    assert "SPDC201" in codes(lint_one(src, passes=["locks"]))
+
+
+def test_lock_hook_under_lock_flags():
+    """The other historical bug class: observer hooks fired while the
+    gateway lock is held (re-entrancy / deadlock hazard)."""
+    src = _LRU_BUG.format(
+        body="with self._lock:\n            self.on_flush(key)"
+    )
+    assert "SPDC203" in codes(lint_one(src, passes=["locks"]))
+
+
+def test_lock_hook_outside_lock_passes():
+    src = _LRU_BUG.format(
+        body="with self._lock:\n            pass\n        self.on_flush(key)"
+    )
+    assert codes(lint_one(src, passes=["locks"])) == []
+
+
+def test_lock_blocking_call_under_lock_flags():
+    src = "import time\n" + _LRU_BUG.format(
+        body="with self._lock:\n            time.sleep(1)"
+    )
+    assert "SPDC202" in codes(lint_one(src, passes=["locks"]))
+
+
+def test_lock_requires_lock_callsite_enforced():
+    src = _LRU_BUG.format(body="self._unsafe(key)") + """\
+
+    #: requires-lock: self._lock
+    def _unsafe(self, key):
+        self._dummies[key] = 1
+"""
+    fs = lint_one(src, passes=["locks"])
+    assert "SPDC204" in codes(fs)
+    # body itself is analyzed as lock-held: no SPDC201 from _unsafe
+    assert "SPDC201" not in codes(fs)
+    locked = src.replace(
+        "self._unsafe(key)",
+        "with self._lock:\n            self._unsafe(key)",
+    )
+    assert codes(lint_one(locked, passes=["locks"])) == []
+
+
+# ------------------------------------------------- pass 2: real-tree guards
+def _real(relpath):
+    return (REPO / relpath).read_text(encoding="utf-8")
+
+
+def test_real_gateway_lints_clean_under_lock_pass():
+    path = "src/repro/serve/spdc_gateway.py"
+    assert codes(lint_sources({path: _real(path)}, passes=["locks"])) == []
+
+
+def test_deleting_any_guard_annotation_turns_red():
+    """REQUIRED_GUARDS: strip a single '#: guarded-by:' annotation from
+    the real gateway source -> SPDC206."""
+    path = "src/repro/serve/spdc_gateway.py"
+    src = _real(path)
+    assert "#: guarded-by: self._lock" in src
+    stripped = src.replace("#: guarded-by: self._lock", "#:", 1)
+    fs = lint_sources({path: stripped}, passes=["locks"])
+    assert "SPDC206" in codes(fs)
+
+
+def test_required_guards_cover_all_declared_files():
+    """Every REQUIRED_GUARDS row matches a real file + class (no rotted
+    entries pointing at renamed code)."""
+    for suffix, clsname, _attr in REQUIRED_GUARDS:
+        matches = [p for p in (REPO / "src").rglob("*.py")
+                   if p.as_posix().endswith(suffix)]
+        assert matches, f"REQUIRED_GUARDS names missing file {suffix}"
+        assert any(f"class {clsname}" in m.read_text() for m in matches), (
+            suffix, clsname)
+
+
+def test_reintroducing_unlocked_dummies_pattern_turns_red():
+    """Re-introduce the exact PR-8 regression in the real gateway source
+    (hoist the _dummies LRU read above the lock) -> non-zero findings."""
+    path = "src/repro/serve/spdc_gateway.py"
+    src = _real(path)
+    target = (
+        "        with self._lock:  # RLock: safe from flush (unlocked) and warmup\n"
+        '            assert_owns_lock(self._lock, "_dummies LRU")\n'
+        "            cached = self._dummies.get(ckey)\n"
+    )
+    assert target in src
+    buggy = src.replace(target, (
+        "        cached = self._dummies.get(ckey)\n"
+        "        with self._lock:  # RLock: safe from flush (unlocked) and warmup\n"
+    ), 1)
+    fs = lint_sources({path: buggy}, passes=["locks"])
+    assert "SPDC201" in codes(fs)
+
+
+def test_deleting_whitelist_entry_turns_red():
+    """SPDC105: the ShardTask dataclass and the client-side _TASK_FIELDS
+    whitelist are cross-checked; dropping a name from either side flags."""
+    client = "src/repro/api/client.py"
+    messages = "src/repro/api/messages.py"
+    sources = {client: _real(client), messages: _real(messages)}
+    assert codes(lint_sources(dict(sources), passes=["taint"])) == []
+    assert '"subseed", ' in sources[client]
+    sources[client] = sources[client].replace('"subseed", ', "", 1)
+    fs = lint_sources(sources, passes=["taint"])
+    assert "SPDC105" in codes(fs)
+
+
+# --------------------------------------------------------- pass 3: jit
+def test_jit_wallclock_flags():
+    src = (
+        "import time\n"
+        "import jax\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    return x * time.time()\n"
+    )
+    assert "SPDC301" in codes(lint_one(src, path=CORE, passes=["jit"]))
+
+
+def test_jit_wallclock_outside_jit_passes():
+    src = "import time\ndef f(x):\n    return x * time.time()\n"
+    assert codes(lint_one(src, path=CORE, passes=["jit"])) == []
+
+
+def test_jit_reaches_through_helpers():
+    src = (
+        "import time\n"
+        "import jax\n"
+        "def _helper(x):\n"
+        "    return x * time.time()\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    return _helper(x)\n"
+    )
+    assert "SPDC301" in codes(lint_one(src, path=CORE, passes=["jit"]))
+
+
+def test_jit_host_rng_flags():
+    src = (
+        "import jax\n"
+        "import numpy as np\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    return x + np.random.standard_normal()\n"
+    )
+    assert "SPDC302" in codes(lint_one(src, path=CORE, passes=["jit"]))
+
+
+def test_jit_global_mutation_flags():
+    src = (
+        "import jax\n"
+        "CACHE = {}\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    CACHE[0] = x\n"
+        "    return x\n"
+    )
+    assert "SPDC303" in codes(lint_one(src, path=CORE, passes=["jit"]))
+
+
+def test_jit_assignment_form_is_a_root():
+    src = (
+        "import time\n"
+        "import jax\n"
+        "def f(x):\n"
+        "    return x * time.time()\n"
+        "g = jax.jit(f)\n"
+    )
+    assert "SPDC301" in codes(lint_one(src, path=CORE, passes=["jit"]))
+
+
+def test_jit_unhashable_static_arg_flags():
+    src = (
+        "import jax\n"
+        "from functools import partial\n"
+        "@partial(jax.jit, static_argnames=('shape',))\n"
+        "def f(x, shape):\n"
+        "    return x\n"
+        "def g(x):\n"
+        "    return f(x, shape=[1, 2])\n"
+    )
+    assert "SPDC304" in codes(lint_one(src, path=CORE, passes=["jit"]))
+
+
+# --------------------------------------------------------- pass 4: exports
+def test_dead_export_flags_and_references_silence():
+    a = "src/repro/fixture_a.py"
+    b = "src/repro/fixture_b.py"
+    srcs = {
+        a: "def zzq_used():\n    return 1\ndef zzq_orphan():\n    return 2\n",
+        b: "from repro.fixture_a import zzq_used\nzzq_used()\n",
+    }
+    fs = lint_sources(srcs, passes=["exports"])
+    assert codes(fs) == ["SPDC401"]
+    assert "zzq_orphan" in fs[0].message
+    # private names are never audited
+    srcs[a] = srcs[a].replace("zzq_orphan", "_zzq_orphan")
+    assert codes(lint_sources(srcs, passes=["exports"])) == []
+
+
+def test_module_internal_reuse_counts_as_reference():
+    a = "src/repro/fixture_a.py"
+    src = "ZZQ_CONST = 3\ndef _consume():\n    return ZZQ_CONST\n"
+    assert codes(lint_sources({a: src}, passes=["exports"])) == []
+
+
+# ------------------------------------------------------------- docs + CLI
+def test_design_doc_code_table_matches_vocab():
+    """DESIGN.md §11's finding-code table and vocab.CODES must agree
+    exactly — the doc is the contract reviewers read."""
+    design = (REPO / "DESIGN.md").read_text(encoding="utf-8")
+    doc_codes = set(re.findall(r"\|\s*(SPDC\d{3})\s*\|", design))
+    assert doc_codes == set(CODES), (
+        sorted(doc_codes ^ set(CODES)))
+
+
+def test_cli_exit_codes(tmp_path):
+    import subprocess
+
+    bad = tmp_path / "src" / "repro" / "core" / "m.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("def _f(seed):\n    raise ValueError(f'{seed}')\n")
+    r = subprocess.run(
+        [sys.executable, "-m", "tools.repro_lint", "--root", str(tmp_path), "src"],
+        capture_output=True, text=True, cwd=REPO,
+    )
+    assert r.returncode == 1
+    assert "SPDC103" in r.stdout
+    bad.write_text("def _f(seed):\n    raise ValueError('bad seed')\n")
+    r = subprocess.run(
+        [sys.executable, "-m", "tools.repro_lint", "--root", str(tmp_path), "src"],
+        capture_output=True, text=True, cwd=REPO,
+    )
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+# ------------------------------------------------------------- integration
+def test_live_tree_lints_clean():
+    """The CI gate: zero findings across src, benchmarks, examples."""
+    fs = lint_paths(["src", "benchmarks", "examples"], root=REPO)
+    assert fs == [], "\n".join(f.render() for f in fs)
+
+
+# ------------------------------------------- regression: fixed transport races
+def test_transports_lint_clean_under_lock_pass():
+    for path in ("src/repro/api/transport.py", "src/repro/api/socket_transport.py"):
+        assert codes(lint_sources({path: _real(path)}, passes=["locks"])) == [], path
+
+
+def test_reintroducing_unlocked_sent_plan_turns_red():
+    """Regression guard for the fixed race: _sent_plan (shared with a
+    concurrent close()) written without _meta must flag."""
+    path = "src/repro/api/transport.py"
+    src = _real(path)
+    target = (
+        "        with self._meta:\n"
+        "            self._sent_plan[worker_id] = plan\n"
+    )
+    assert target in src
+    buggy = src.replace(
+        target, "        self._sent_plan[worker_id] = plan\n", 1
+    )
+    assert "SPDC201" in codes(lint_sources({path: buggy}, passes=["locks"]))
+
+
+def test_reintroducing_blocking_close_under_lock_turns_red():
+    """Regression guard for the fixed close(): pipe goodbyes moved back
+    under _meta (one wedged worker freezing the fleet) must flag."""
+    path = "src/repro/api/transport.py"
+    src = _real(path)
+    target = "            self._locks.clear()\n"
+    assert target in src
+    buggy = src.replace(target, (
+        "            self._locks.clear()\n"
+        "            for conn in conns.values():\n"
+        "                conn.send_bytes(b\"\")\n"
+    ), 1)
+    assert "SPDC202" in codes(lint_sources({path: buggy}, passes=["locks"]))

@@ -1,0 +1,6 @@
+"""Repo tooling namespace (``python -m tools.<tool>``).
+
+Everything in here is stdlib-only on purpose: the CI lint job installs
+no project dependencies (not even jax), so a tool that imports
+``repro.*`` at module scope would break the cheapest gate we have.
+"""

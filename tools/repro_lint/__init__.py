@@ -1,0 +1,17 @@
+"""repro-lint: AST static analysis for the SPDC tree (DESIGN.md §11).
+
+Four passes over the source, each with stable SPDCxxx finding codes:
+
+1. ``taint``   — secret-taint / trust-boundary dataflow (SPDC10x)
+2. ``locks``   — lock discipline for annotated attributes (SPDC20x)
+3. ``jit``     — jit/tracer hygiene (SPDC30x)
+4. ``exports`` — dead public API surface (SPDC401)
+
+Run as ``python -m tools.repro_lint src benchmarks examples``.
+Stdlib-only: safe for the dependency-free CI lint job.
+"""
+
+from .engine import Finding, lint_paths, lint_sources  # noqa: F401
+from .vocab import CODES  # noqa: F401
+
+__all__ = ["Finding", "lint_paths", "lint_sources", "CODES"]

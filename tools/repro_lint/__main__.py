@@ -1,0 +1,56 @@
+"""CLI driver: ``python -m tools.repro_lint [paths...]``.
+
+Exit status: 0 when the tree is clean, 1 when there are findings
+(including malformed/stale suppressions), 2 on usage errors.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from .engine import lint_paths
+from .vocab import CODES
+
+PASS_NAMES = ("taint", "locks", "jit", "exports")
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.repro_lint",
+        description="SPDC static analysis: taint, locks, jit hygiene, exports.",
+    )
+    ap.add_argument(
+        "paths", nargs="*", default=["src", "benchmarks", "examples"],
+        help="files or directories to lint (default: src benchmarks examples)",
+    )
+    ap.add_argument(
+        "--pass", dest="passes", action="append", choices=PASS_NAMES,
+        help="run only the named pass (repeatable; default: all)",
+    )
+    ap.add_argument(
+        "--root", default=None,
+        help="repo root (default: auto-detect from this file's location)",
+    )
+    ap.add_argument(
+        "--codes", action="store_true", help="print the finding-code table",
+    )
+    ns = ap.parse_args(argv)
+
+    if ns.codes:
+        for code in sorted(CODES):
+            print(f"{code}  {CODES[code]}")
+        return 0
+
+    root = Path(ns.root) if ns.root else Path(__file__).resolve().parents[2]
+    findings = lint_paths(ns.paths or ["src"], root=root, passes=ns.passes)
+    for f in findings:
+        print(f.render())
+    n = len(findings)
+    print(f"repro-lint: {n} finding{'s' if n != 1 else ''}", file=sys.stderr)
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,231 @@
+"""repro-lint engine: findings, suppressions, file discovery, pass driver.
+
+Stdlib-only (ast/re/pathlib) — this runs in the CI lint job, which
+installs no project dependencies. Passes live in sibling modules and
+register through PASSES; each is a function
+``(files: list[SourceFile], ctx: Context) -> list[Finding]``.
+
+Suppression syntax (DESIGN.md §11.4)::
+
+    x = risky()  # repro-lint: ignore[SPDC102] -- startup banner, no payload
+
+The justification after ``--`` is mandatory; an ignore without one is
+itself a finding (SPDC001) and cannot be suppressed. A suppression may
+sit trailing on the offending line or on its own line directly above.
+Stale suppressions (matching no finding) are findings too (SPDC003), so
+the ignore inventory can only shrink when the underlying issue is gone.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+
+from . import vocab
+
+SUPPRESS_RE = re.compile(
+    r"#\s*repro-lint:\s*ignore\[([A-Za-z0-9_,\s]+)\](.*)$"
+)
+JUSTIFY_RE = re.compile(r"^\s*--\s*\S")
+
+
+@dataclass(frozen=True, order=True)
+class Finding:
+    path: str
+    line: int
+    code: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.code} {self.message}"
+
+
+@dataclass
+class Suppression:
+    line: int          # physical line of the comment
+    target: int        # line whose findings it silences
+    codes: frozenset[str]
+    used: bool = False
+
+
+@dataclass
+class SourceFile:
+    """One parsed file plus its suppression table.
+
+    ``path`` is the repo-relative posix label; passes match on suffixes
+    of it, so fixture tests can use the same labels as the real tree.
+    """
+
+    path: str
+    text: str
+    tree: ast.Module | None = None
+    lines: list[str] = field(default_factory=list)
+    suppressions: list[Suppression] = field(default_factory=list)
+    parse_error: Finding | None = None
+    _eager: list[Finding] = field(default_factory=list)
+
+    @classmethod
+    def parse(cls, path: str, text: str) -> "SourceFile":
+        sf = cls(path=path, text=text, lines=text.splitlines())
+        try:
+            sf.tree = ast.parse(text)
+        except SyntaxError as e:
+            sf.parse_error = Finding(
+                path, e.lineno or 1, "SPDC000", f"syntax error: {e.msg}"
+            )
+        sf._collect_suppressions()
+        return sf
+
+    def _collect_suppressions(self) -> None:
+        for i, raw in enumerate(self.lines, start=1):
+            m = SUPPRESS_RE.search(raw)
+            if not m:
+                continue
+            codes = frozenset(
+                c.strip() for c in m.group(1).split(",") if c.strip()
+            )
+            before = raw[: m.start()]
+            if before.strip():
+                target = i
+            else:
+                target = self._next_code_line(i)
+            self.suppressions.append(
+                Suppression(line=i, target=target, codes=codes)
+            )
+            # malformed suppressions are findings in their own right;
+            # recorded eagerly so they surface even in pass subsets
+            if not JUSTIFY_RE.match(m.group(2)):
+                self._eager.append(Finding(
+                    self.path, i, "SPDC001",
+                    "suppression lacks ' -- <justification>'",
+                ))
+            for c in codes:
+                if c not in vocab.CODES:
+                    self._eager.append(Finding(
+                        self.path, i, "SPDC002",
+                        f"unknown finding code {c!r} in suppression",
+                    ))
+                elif c in vocab.UNSUPPRESSIBLE:
+                    self._eager.append(Finding(
+                        self.path, i, "SPDC002",
+                        f"{c} cannot be suppressed",
+                    ))
+
+    def _next_code_line(self, after: int) -> int:
+        for j in range(after, len(self.lines)):
+            s = self.lines[j].strip()
+            if s and not s.startswith("#"):
+                return j + 1
+        return after
+
+    def eager_findings(self) -> list[Finding]:
+        out = list(self._eager)
+        if self.parse_error is not None:
+            out.append(self.parse_error)
+        return out
+
+    def suppressed(self, finding: Finding) -> bool:
+        if finding.code in vocab.UNSUPPRESSIBLE:
+            return False
+        hit = False
+        for s in self.suppressions:
+            if s.target == finding.line and finding.code in s.codes:
+                s.used = True
+                hit = True
+        return hit
+
+    def stale_suppressions(self) -> list[Finding]:
+        return [
+            Finding(
+                self.path, s.line, "SPDC003",
+                f"suppression for {','.join(sorted(s.codes))} matched no finding",
+            )
+            for s in self.suppressions
+            if not s.used and not (s.codes & vocab.UNSUPPRESSIBLE)
+        ]
+
+
+@dataclass
+class Context:
+    """Shared pass context: all scanned files + optional real repo root
+    (None when linting in-memory fixture sources)."""
+
+    files: list["SourceFile"]
+    root: Path | None = None
+
+    def by_suffix(self, suffix: str) -> "SourceFile | None":
+        for f in self.files:
+            if f.path.endswith(suffix):
+                return f
+        return None
+
+
+def _discover(root: Path, targets: list[str]) -> list[Path]:
+    out: list[Path] = []
+    for t in targets:
+        p = (root / t) if not Path(t).is_absolute() else Path(t)
+        if p.is_file() and p.suffix == ".py":
+            out.append(p)
+        elif p.is_dir():
+            out.extend(sorted(p.rglob("*.py")))
+    # de-dup, keep deterministic order, skip caches
+    seen, uniq = set(), []
+    for p in out:
+        if "__pycache__" in p.parts or p in seen:
+            continue
+        seen.add(p)
+        uniq.append(p)
+    return uniq
+
+
+def _run_passes(ctx: Context, passes: list | None) -> list[Finding]:
+    from . import exports, jit_hygiene, locks, taint
+
+    registry = {
+        "taint": taint.run,
+        "locks": locks.run,
+        "jit": jit_hygiene.run,
+        "exports": exports.run,
+    }
+    names = passes if passes is not None else list(registry)
+    findings: list[Finding] = []
+    for f in ctx.files:
+        findings.extend(f.eager_findings())
+    for name in names:
+        findings.extend(registry[name](ctx.files, ctx))
+    # apply suppressions, then report stale ones
+    by_path = {f.path: f for f in ctx.files}
+    kept = []
+    for fi in findings:
+        sf = by_path.get(fi.path)
+        if sf is not None and sf.suppressed(fi):
+            continue
+        kept.append(fi)
+    for sf in ctx.files:
+        kept.extend(sf.stale_suppressions())
+    return sorted(set(kept))
+
+
+def lint_sources(
+    sources: dict[str, str],
+    passes: list[str] | None = None,
+    root: Path | None = None,
+) -> list[Finding]:
+    """Lint in-memory sources; keys are repo-relative path labels."""
+    files = [SourceFile.parse(p, s) for p, s in sources.items()]
+    return _run_passes(Context(files=files, root=root), passes)
+
+
+def lint_paths(
+    targets: list[str],
+    root: Path | str | None = None,
+    passes: list[str] | None = None,
+) -> list[Finding]:
+    rootp = Path(root) if root is not None else Path.cwd()
+    files = []
+    for p in _discover(rootp, targets):
+        rel = p.relative_to(rootp).as_posix() if p.is_relative_to(rootp) else str(p)
+        files.append(SourceFile.parse(rel, p.read_text(encoding="utf-8")))
+    return _run_passes(Context(files=files, root=rootp), passes)

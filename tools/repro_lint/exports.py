@@ -1,0 +1,107 @@
+"""Pass 4 — dead/undeclared-export audit (SPDC401).
+
+A module-level public symbol (no leading underscore) defined under
+src/repro must be *referenced* — by bare identifier, anywhere in the
+reference index — or it is dead API surface. The index always covers
+src/tests/benchmarks/examples/tools relative to the repo root, no
+matter which subset of paths the CLI was pointed at, so
+``python -m tools.repro_lint src`` still knows that tests/ uses a
+symbol. References are word-boundary identifier hits in any other file, or
+*repeat* hits inside the defining file itself — a module-internal
+helper/constant with a public name is used, not dead; the definition
+line alone does not witness itself.
+
+Deliberate dead surface goes in vocab.EXPORT_EXEMPT with a written
+justification, the same standard as an inline suppression.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+
+from . import vocab
+from .engine import Context, Finding, SourceFile
+
+_IDENT_RE = re.compile(r"[A-Za-z_][A-Za-z0-9_]*")
+
+
+def _public_defs(tree: ast.Module) -> list[tuple[str, int]]:
+    out: list[tuple[str, int]] = []
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            if not node.name.startswith("_"):
+                out.append((node.name, node.lineno))
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and not t.id.startswith("_"):
+                    out.append((t.id, node.lineno))
+        elif (
+            isinstance(node, ast.AnnAssign)
+            and isinstance(node.target, ast.Name)
+            and not node.target.id.startswith("_")
+            and node.value is not None
+        ):
+            out.append((node.target.id, node.lineno))
+    return out
+
+
+def _token_index(ctx: Context, scanned: list[SourceFile]) -> dict[str, set[str]]:
+    """path -> set of identifier tokens, over the reference roots."""
+    index: dict[str, set[str]] = {
+        sf.path: set(_IDENT_RE.findall(sf.text)) for sf in scanned
+    }
+    if ctx.root is None:
+        return index
+    for root_name in vocab.REFERENCE_ROOTS:
+        root = Path(ctx.root) / root_name
+        if not root.is_dir():
+            continue
+        for p in sorted(root.rglob("*.py")):
+            if "__pycache__" in p.parts:
+                continue
+            rel = p.relative_to(ctx.root).as_posix()
+            if rel in index:
+                continue
+            try:
+                index[rel] = set(_IDENT_RE.findall(p.read_text(encoding="utf-8")))
+            except OSError:
+                continue
+    return index
+
+
+def run(files: list[SourceFile], ctx: Context) -> list[Finding]:
+    targets = [
+        sf for sf in files
+        if sf.tree is not None
+        and "src/repro/" in sf.path
+        and not sf.path.endswith(vocab.EXPORT_EXEMPT_MODULES or ("\0",))
+    ]
+    if not targets:
+        return []
+    index = _token_index(ctx, files)
+    findings: list[Finding] = []
+    for sf in targets:
+        assert sf.tree is not None
+        for name, lineno in _public_defs(sf.tree):
+            if name in ("__all__",) or name in vocab.EXPORT_EXEMPT:
+                continue
+            if any(
+                name in toks
+                for path, toks in index.items()
+                if path != sf.path
+            ):
+                continue
+            # used inside its own module (beyond the definition line)?
+            own_hits = len(
+                re.findall(rf"\b{re.escape(name)}\b", sf.text)
+            )
+            if own_hits > 1:
+                continue
+            findings.append(Finding(
+                sf.path, lineno, "SPDC401",
+                f"public symbol {name!r} is referenced nowhere in "
+                f"src/tests/benchmarks/examples/tools",
+            ))
+    return findings

@@ -1,0 +1,285 @@
+"""Pass 3 — jit/tracer hygiene (SPDC301..304).
+
+Roots: module-level functions decorated ``@jax.jit`` / ``@jit`` /
+``@partial(jax.jit, ...)``, plus functions wrapped by a module-level
+``name = jax.jit(fn)`` assignment. From the roots, an intra-module call
+graph (bare-name calls to module functions) gives the set of
+traced-reachable bodies.
+
+Inside a traced body, the following are one-time trace effects — they
+bake a single host value into the compiled executable and silently
+diverge on every later call (the classic "why is my timestamp frozen"
+bug):
+
+* wall-clock reads (time.*, datetime.now)            -> SPDC301
+* host RNG (np.random/random/secrets/os.urandom;
+  jax.random is functional and fine)                 -> SPDC302
+* mutable module-global state (global stmt, stores
+  or mutating method calls on module-level names)    -> SPDC303
+
+SPDC304 checks that decorator-declared static args receive hashable
+literals at intra-module call sites (a list/dict/set literal passed for
+a static arg is a guaranteed TypeError at trace time — but only on the
+first cache miss, which tests may never hit).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from . import vocab
+from .engine import Context, Finding, SourceFile
+
+
+def _dotted(node: ast.expr) -> str | None:
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_jit_expr(node: ast.expr) -> bool:
+    d = _dotted(node)
+    return d in ("jit", "jax.jit")
+
+
+def _jit_decoration(fn: ast.FunctionDef | ast.AsyncFunctionDef):
+    """(is_jit, static_names, static_nums) from the decorator list."""
+    static_names: set[str] = set()
+    static_nums: set[int] = set()
+    is_jit = False
+    for dec in fn.decorator_list:
+        call = dec if isinstance(dec, ast.Call) else None
+        target = call.func if call else dec
+        if _is_jit_expr(target):
+            is_jit = True
+        elif call is not None and _dotted(call.func) in (
+            "partial", "functools.partial"
+        ):
+            if not (call.args and _is_jit_expr(call.args[0])):
+                continue
+            is_jit = True
+        else:
+            continue
+        if call is None:
+            continue
+        for kw in call.keywords:
+            if kw.arg == "static_argnames":
+                try:
+                    v = ast.literal_eval(kw.value)
+                    static_names.update(
+                        [v] if isinstance(v, str) else list(v)
+                    )
+                except Exception:
+                    pass
+            elif kw.arg == "static_argnums":
+                try:
+                    v = ast.literal_eval(kw.value)
+                    static_nums.update(
+                        [v] if isinstance(v, int) else list(v)
+                    )
+                except Exception:
+                    pass
+    return is_jit, static_names, static_nums
+
+
+class _ModulePass:
+    def __init__(self, sf: SourceFile):
+        self.sf = sf
+        self.findings: list[Finding] = []
+        tree = sf.tree
+        assert tree is not None
+        self.functions: dict[str, ast.FunctionDef | ast.AsyncFunctionDef] = {}
+        self.module_names: set[str] = set()
+        self.roots: dict[str, tuple[set[str], set[int]]] = {}
+
+        for node in tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.functions[node.name] = node
+                is_jit, names, nums = _jit_decoration(node)
+                if is_jit:
+                    self.roots[node.name] = (names, nums)
+            elif isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        self.module_names.add(t.id)
+                # name = jax.jit(fn, static_argnames=...)
+                v = node.value
+                if (
+                    isinstance(v, ast.Call)
+                    and _is_jit_expr(v.func)
+                    and v.args
+                    and isinstance(v.args[0], ast.Name)
+                ):
+                    names: set[str] = set()
+                    nums: set[int] = set()
+                    for kw in v.keywords:
+                        try:
+                            lv = ast.literal_eval(kw.value)
+                        except Exception:
+                            continue
+                        if kw.arg == "static_argnames":
+                            names.update([lv] if isinstance(lv, str) else list(lv))
+                        elif kw.arg == "static_argnums":
+                            nums.update([lv] if isinstance(lv, int) else list(lv))
+                    self.roots[v.args[0].id] = (names, nums)
+            elif isinstance(node, ast.AnnAssign) and isinstance(
+                node.target, ast.Name
+            ):
+                self.module_names.add(node.target.id)
+
+        self.reachable = self._reachability()
+
+    def _callees(self, fn: ast.AST) -> set[str]:
+        out: set[str] = set()
+        for node in ast.walk(fn):
+            if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                    and node.func.id in self.functions):
+                out.add(node.func.id)
+        return out
+
+    def _reachability(self) -> set[str]:
+        seen: set[str] = set()
+        work = [r for r in self.roots if r in self.functions]
+        while work:
+            name = work.pop()
+            if name in seen:
+                continue
+            seen.add(name)
+            for callee in self._callees(self.functions[name]):
+                if callee not in seen:
+                    work.append(callee)
+        return seen
+
+    def run(self) -> None:
+        for name in sorted(self.reachable):
+            self._check_body(self.functions[name], name)
+        self._check_static_call_sites()
+
+    def _f(self, code: str, node: ast.AST, msg: str) -> None:
+        self.findings.append(Finding(self.sf.path, node.lineno, code, msg))
+
+    def _check_body(self, fn: ast.AST, name: str) -> None:
+        locals_: set[str] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                targets = (
+                    node.targets
+                    if isinstance(node, ast.Assign)
+                    else [node.target]
+                )
+                for t in targets:
+                    if isinstance(t, ast.Name):
+                        locals_.add(t.id)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Global):
+                self._f(
+                    "SPDC303", node,
+                    f"'global' statement in jit-traced {name}()",
+                )
+            if isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (
+                    node.targets
+                    if isinstance(node, ast.Assign)
+                    else [node.target]
+                )
+                for t in targets:
+                    base = t
+                    while isinstance(base, (ast.Subscript, ast.Attribute)):
+                        base = base.value
+                    if (
+                        isinstance(base, ast.Name)
+                        and base is not t  # only stores THROUGH the name
+                        and base.id in self.module_names
+                        and base.id not in locals_
+                    ):
+                        self._f(
+                            "SPDC303", node,
+                            f"store into module-level {base.id!r} inside "
+                            f"jit-traced {name}()",
+                        )
+            if not isinstance(node, ast.Call):
+                continue
+            d = _dotted(node.func)
+            if d in vocab.WALLCLOCK_CALLEES or d == "time.sleep":
+                self._f(
+                    "SPDC301", node,
+                    f"wall-clock read {d}() traces to a constant inside "
+                    f"jit-traced {name}()",
+                )
+            elif d and d.startswith(vocab.HOST_RNG_PREFIXES):
+                self._f(
+                    "SPDC302", node,
+                    f"host RNG {d}() inside jit-traced {name}() — one "
+                    f"sample is baked in at trace time",
+                )
+            elif (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr in vocab.HOST_RNG_METHODS
+                and isinstance(node.func.value, ast.Name)
+                and node.func.value.id in vocab.HOST_RNG_RECEIVERS
+            ):
+                self._f(
+                    "SPDC302", node,
+                    f"host RNG {node.func.value.id}.{node.func.attr}() "
+                    f"inside jit-traced {name}()",
+                )
+            elif (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr in vocab.MUTATOR_METHODS
+                and isinstance(node.func.value, ast.Name)
+                and node.func.value.id in self.module_names
+                and node.func.value.id not in locals_
+            ):
+                self._f(
+                    "SPDC303", node,
+                    f"mutation of module-level {node.func.value.id!r} via "
+                    f".{node.func.attr}() inside jit-traced {name}()",
+                )
+
+    def _check_static_call_sites(self) -> None:
+        assert self.sf.tree is not None
+        for node in ast.walk(self.sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if not isinstance(node.func, ast.Name):
+                continue
+            root = self.roots.get(node.func.id)
+            if root is None:
+                continue
+            static_names, static_nums = root
+            for kw in node.keywords:
+                if kw.arg in static_names and isinstance(
+                    kw.value, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                               ast.DictComp, ast.SetComp)
+                ):
+                    self._f(
+                        "SPDC304", node,
+                        f"unhashable literal for static argument "
+                        f"{kw.arg!r} of {node.func.id}()",
+                    )
+            for i, a in enumerate(node.args):
+                if i in static_nums and isinstance(
+                    a, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                        ast.DictComp, ast.SetComp)
+                ):
+                    self._f(
+                        "SPDC304", node,
+                        f"unhashable literal for static argument #{i} "
+                        f"of {node.func.id}()",
+                    )
+
+
+def run(files: list[SourceFile], ctx: Context) -> list[Finding]:
+    findings: list[Finding] = []
+    for sf in files:
+        if sf.tree is None:
+            continue
+        mp = _ModulePass(sf)
+        mp.run()
+        findings.extend(mp.findings)
+    return findings

@@ -1,0 +1,372 @@
+"""Pass 2 — lock discipline (SPDC201..206).
+
+Annotation grammar (DESIGN.md §11.2)::
+
+    self._results = {}          #: guarded-by: self._lock
+    #: guarded-by: self._lock
+    self._dummies = OrderedDict()
+
+    #: requires-lock: self._lock
+    def _deliver(self, ...): ...
+
+An attribute annotated ``guarded-by`` may only be *mutated* — assigned,
+aug-assigned, deleted, subscript-stored, or have ANY method called on it
+— inside a lexical ``with <lock>:`` over the named lock. The
+any-method-call rule is deliberately strict: the PR-8 bug this pass
+exists for was ``OrderedDict.get`` + ``move_to_end`` (a read API that
+mutates LRU order) outside the gateway lock, and no static pass can
+know which methods of an arbitrary object mutate. Plain attribute
+*loads* (``self._queue.pending``) are not flagged — benign-race reads
+of scalars are an accepted idiom here and are annotated in source.
+
+``guarded-by: external(<who>)`` documents a container that has no lock
+of its own and is serialized by its single owner (MicroBatchQueue under
+the gateway lock). It satisfies the REQUIRED_GUARDS coverage check but
+is not lexically enforced in the annotated class — enforcement happens
+in the owner, whose *reference* to the container is itself guarded.
+
+``requires-lock`` on a method makes every call site of
+``self.<method>()`` require the named lock to be lexically held
+(SPDC204); the method body is analyzed as if the lock were held.
+
+Also flagged while any lock is held: blocking calls (sweep dispatch,
+socket/pipe I/O, futures, sleeps — SPDC202) and user hook invocation
+(on_flush/on_verdict/on_reject — SPDC203). Nested function bodies are
+analyzed with an empty lock set: a closure outlives the ``with`` block
+it was defined in.
+
+``__init__``/``__post_init__`` are exempt from mutation checks —
+construction happens-before publication.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+
+from . import vocab
+from .engine import Context, Finding, SourceFile
+
+GUARD_RE = re.compile(r"#:\s*guarded-by:\s*(.+?)\s*$")
+REQUIRES_RE = re.compile(r"#:\s*requires-lock:\s*(.+?)\s*$")
+
+_EXEMPT_METHODS = frozenset({"__init__", "__post_init__", "__new__"})
+
+
+def _lockish(name: str) -> bool:
+    last = name.rsplit(".", 1)[-1]
+    return any(h in last for h in vocab.LOCK_NAME_HINTS) or last == "lock"
+
+
+def _comment_above_or_trailing(
+    lines: list[str], lineno: int, rx: re.Pattern
+) -> str | None:
+    """Match rx on the statement's own line or the line directly above."""
+    for ln in (lineno, lineno - 1):
+        if 1 <= ln <= len(lines):
+            m = rx.search(lines[ln - 1])
+            if m:
+                return m.group(1).strip()
+    return None
+
+
+def _base_self_attr(node: ast.expr) -> str | None:
+    """'X' when the expression drills into self.X (through any number of
+    Attribute/Subscript layers), else None."""
+    while isinstance(node, (ast.Subscript, ast.Attribute)):
+        if (
+            isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"
+        ):
+            return node.attr
+        node = node.value
+    return None
+
+
+def _dotted(node: ast.expr) -> str | None:
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+@dataclass
+class ClassGuards:
+    name: str
+    lineno: int
+    guards: dict[str, str] = field(default_factory=dict)      # attr -> lock
+    requires: dict[str, str] = field(default_factory=dict)    # method -> lock
+
+    def enforced(self, attr: str) -> str | None:
+        lock = self.guards.get(attr)
+        if lock is None or lock.startswith("external"):
+            return None
+        return lock
+
+
+def _collect_class(cls: ast.ClassDef, lines: list[str]) -> ClassGuards:
+    cg = ClassGuards(name=cls.name, lineno=cls.lineno)
+    for node in cls.body:
+        # dataclass-style field annotations in the class body
+        if isinstance(node, ast.AnnAssign) and isinstance(node.target, ast.Name):
+            expr = _comment_above_or_trailing(lines, node.lineno, GUARD_RE)
+            if expr:
+                cg.guards[node.target.id] = expr
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        look_from = min(
+            [node.lineno] + [d.lineno for d in node.decorator_list]
+        )
+        expr = _comment_above_or_trailing(lines, look_from, REQUIRES_RE)
+        if expr:
+            cg.requires[node.name] = expr
+        if node.name in _EXEMPT_METHODS:
+            for stmt in ast.walk(node):
+                if isinstance(stmt, (ast.Assign, ast.AnnAssign)):
+                    targets = (
+                        stmt.targets
+                        if isinstance(stmt, ast.Assign)
+                        else [stmt.target]
+                    )
+                    for t in targets:
+                        if (
+                            isinstance(t, ast.Attribute)
+                            and isinstance(t.value, ast.Name)
+                            and t.value.id == "self"
+                        ):
+                            g = _comment_above_or_trailing(
+                                lines, stmt.lineno, GUARD_RE
+                            )
+                            if g:
+                                cg.guards[t.attr] = g
+    return cg
+
+
+class _MethodWalker:
+    def __init__(
+        self,
+        path: str,
+        cg: ClassGuards,
+        method: ast.FunctionDef | ast.AsyncFunctionDef,
+    ):
+        self.path = path
+        self.cg = cg
+        self.findings: list[Finding] = []
+        held: set[str] = set()
+        req = cg.requires.get(method.name)
+        if req:
+            held.add(req)
+        self.exempt = method.name in _EXEMPT_METHODS
+        self._block(method.body, held)
+
+    def _f(self, code: str, node: ast.AST, msg: str) -> None:
+        self.findings.append(Finding(self.path, node.lineno, code, msg))
+
+    def _block(self, stmts: list[ast.stmt], held: set[str]) -> None:
+        for s in stmts:
+            self._stmt(s, held)
+
+    def _stmt(self, s: ast.stmt, held: set[str]) -> None:
+        if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # closures escape the lexical lock scope: empty lock set
+            self._block(s.body, set())
+            return
+        if isinstance(s, ast.ClassDef):
+            return
+        if isinstance(s, (ast.With, ast.AsyncWith)):
+            inner = set(held)
+            for item in s.items:
+                d = _dotted(item.context_expr)
+                if d and _lockish(d):
+                    inner.add(d)
+                self._expr(item.context_expr, held)
+            self._block(s.body, inner)
+            return
+        if isinstance(s, (ast.Assign,)):
+            for t in s.targets:
+                self._store_target(t, held, s)
+            self._expr(s.value, held)
+            return
+        if isinstance(s, ast.AnnAssign):
+            self._store_target(s.target, held, s)
+            if s.value is not None:
+                self._expr(s.value, held)
+            return
+        if isinstance(s, ast.AugAssign):
+            self._store_target(s.target, held, s)
+            self._expr(s.value, held)
+            return
+        if isinstance(s, ast.Delete):
+            for t in s.targets:
+                self._store_target(t, held, s)
+            return
+        if isinstance(s, (ast.For, ast.AsyncFor)):
+            self._expr(s.iter, held)
+            self._block(s.body, held)
+            self._block(s.orelse, held)
+            return
+        if isinstance(s, ast.While):
+            self._expr(s.test, held)
+            self._block(s.body, held)
+            self._block(s.orelse, held)
+            return
+        if isinstance(s, ast.If):
+            self._expr(s.test, held)
+            self._block(s.body, held)
+            self._block(s.orelse, held)
+            return
+        if isinstance(s, ast.Try):
+            self._block(s.body, held)
+            for h in s.handlers:
+                self._block(h.body, held)
+            self._block(s.orelse, held)
+            self._block(s.finalbody, held)
+            return
+        # everything else: just scan contained expressions
+        for child in ast.iter_child_nodes(s):
+            if isinstance(child, ast.expr):
+                self._expr(child, held)
+
+    def _store_target(self, t: ast.expr, held: set[str], s: ast.stmt) -> None:
+        if isinstance(t, (ast.Tuple, ast.List)):
+            for e in t.elts:
+                self._store_target(e, held, s)
+            return
+        attr = _base_self_attr(t)
+        if attr is None:
+            return
+        self._check_guard(attr, held, s, "mutated")
+
+    def _check_guard(
+        self, attr: str, held: set[str], node: ast.AST, verb: str
+    ) -> None:
+        if self.exempt:
+            return
+        lock = self.cg.enforced(attr)
+        if lock is not None and lock not in held:
+            self._f(
+                "SPDC201", node,
+                f"{self.cg.name}.{attr} is guarded by {lock} but {verb} "
+                f"outside it",
+            )
+
+    def _expr(self, e: ast.expr, held: set[str]) -> None:
+        if isinstance(e, ast.Lambda):
+            # lambda bodies run later, outside the lexical lock scope
+            self._expr(e.body, set())
+            return
+        if isinstance(e, ast.Call):
+            self._call(e, held)
+        for child in ast.iter_child_nodes(e):
+            if isinstance(child, ast.expr):
+                self._expr(child, held)
+
+    def _call(self, node: ast.Call, held: set[str]) -> None:
+        func = node.func
+        d = _dotted(func)
+        # strict rule: ANY method call through a guarded attribute
+        if isinstance(func, ast.Attribute):
+            base = _base_self_attr(func.value)
+            if base is not None:
+                self._check_guard(
+                    base, held, node,
+                    f"touched via .{func.attr}()",
+                )
+            # hooks under lock
+            if func.attr in vocab.HOOK_ATTRS and held:
+                self._f(
+                    "SPDC203", node,
+                    f"user hook .{func.attr}() fired while holding "
+                    f"{', '.join(sorted(held))}",
+                )
+            # blocking method names under lock
+            if func.attr in vocab.BLOCKING_METHODS and held:
+                recv = _dotted(func.value) or "<expr>"
+                # ".join" is overloaded: str.join / os.path.join are not
+                # thread joins — skip literal receivers and *path modules
+                str_join = func.attr == "join" and (
+                    isinstance(func.value, ast.Constant)
+                    or recv.endswith("path")
+                    or recv == "<expr>"
+                )
+                if not _lockish(recv) and not str_join:
+                    self._f(
+                        "SPDC202", node,
+                        f"blocking call {recv}.{func.attr}() while holding "
+                        f"{', '.join(sorted(held))}",
+                    )
+            # requires-lock methods called on self
+            if (
+                isinstance(func.value, ast.Name)
+                and func.value.id == "self"
+                and func.attr in self.cg.requires
+            ):
+                req = self.cg.requires[func.attr]
+                if req not in held:
+                    self._f(
+                        "SPDC204", node,
+                        f"{self.cg.name}.{func.attr}() requires {req} "
+                        f"but it is not held at this call site",
+                    )
+        if (
+            held
+            and d is not None
+            and (d in vocab.BLOCKING_CALLEES
+                 or any(d.endswith("." + b) for b in vocab.BLOCKING_CALLEES))
+        ):
+            self._f(
+                "SPDC202", node,
+                f"blocking call {d}() while holding "
+                f"{', '.join(sorted(held))}",
+            )
+
+
+def _required_guard_findings(
+    files: list[SourceFile], collected: dict[str, dict[str, ClassGuards]]
+) -> list[Finding]:
+    out: list[Finding] = []
+    for suffix, clsname, attr in vocab.REQUIRED_GUARDS:
+        for sf in files:
+            if not sf.path.endswith(suffix):
+                continue
+            cg = collected.get(sf.path, {}).get(clsname)
+            if cg is None:
+                out.append(Finding(
+                    sf.path, 1, "SPDC206",
+                    f"class {clsname} (REQUIRED_GUARDS) not found",
+                ))
+            elif attr not in cg.guards:
+                out.append(Finding(
+                    sf.path, cg.lineno, "SPDC206",
+                    f"{clsname}.{attr} must carry a '#: guarded-by:' "
+                    f"annotation (REQUIRED_GUARDS)",
+                ))
+    return out
+
+
+def run(files: list[SourceFile], ctx: Context) -> list[Finding]:
+    findings: list[Finding] = []
+    collected: dict[str, dict[str, ClassGuards]] = {}
+    for sf in files:
+        if sf.tree is None:
+            continue
+        per_class: dict[str, ClassGuards] = {}
+        for node in sf.tree.body:
+            if not isinstance(node, ast.ClassDef):
+                continue
+            cg = _collect_class(node, sf.lines)
+            per_class[cg.name] = cg
+            for sub in node.body:
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    findings.extend(
+                        _MethodWalker(sf.path, cg, sub).findings
+                    )
+        collected[sf.path] = per_class
+    findings.extend(_required_guard_findings(files, collected))
+    return findings

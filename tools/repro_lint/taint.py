@@ -1,0 +1,570 @@
+"""Pass 1 — secret-taint / trust-boundary dataflow (SPDC101..105).
+
+Intra-procedural forward taint with conservative per-parameter call
+summaries (DESIGN.md §11.2). Taint is a set of labels: the reserved
+label ``*secret*`` marks values derived from the declared vocabulary
+(vocab.SECRET_PARAMS / SECRET_ATTRS / SECRET_CALLS); parameter-name
+labels track which formal a value came from, which is what makes the
+summaries precise. A finding is emitted when a ``*secret*``-labelled
+value reaches a boundary, logging, exception, or metrics sink without
+passing through a sanctioned chokepoint (vocab.SANITIZERS).
+
+Call summaries: every module-level function/method is pre-analyzed once
+with each parameter carrying its own label. That yields, per function:
+``sink_params`` — formals that can reach a sink inside (with the sink's
+code) — and ``ret_params`` — formals whose taint flows to the return
+value. At a local call site, only arguments bound to a sink formal
+report, and only arguments bound to a return formal taint the result.
+This stays linear in program size and catches one level of
+secret-through-helper indirection; helper→helper chains are analyzed
+from each function's own entry instead (every function whose formals
+are secret-*named* re-enters the analysis with real secret labels).
+
+Scope: src/repro/{api,core,serve,distrib} only. benchmarks/ and
+examples/ are the data owner's own scripts — plaintext is *supposed* to
+live there. Within serve/, ``key``/``keys`` name BucketKeys (public
+batching identity), not cipher keys, so the key-ish names only taint
+under core/ and api/ (vocab.SECRET_KEY_PARAMS).
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+
+from . import vocab
+from .engine import Context, Finding, SourceFile
+
+SECRET = "*secret*"
+EMPTY: frozenset[str] = frozenset()
+
+#: builtins whose result is cardinality/identity metadata, never payload
+CLEAN_FUNCS = frozenset({"len", "isinstance", "type", "callable", "bool",
+                         "range", "id"})
+
+
+def _dotted(node: ast.expr) -> str | None:
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _last(d: str | None) -> str | None:
+    return d.rsplit(".", 1)[-1] if d else None
+
+
+@dataclass
+class Summary:
+    name: str = ""
+    params: list[str] = field(default_factory=list)
+    sink_params: dict[str, str] = field(default_factory=dict)  # param -> code
+    ret_params: set[str] = field(default_factory=set)
+
+
+def _secret_params_for(path: str) -> frozenset[str]:
+    base = vocab.SECRET_PARAMS
+    if any(p in path for p in vocab.SECRET_KEY_SCOPES):
+        return base | vocab.SECRET_KEY_PARAMS
+    return base
+
+
+class _FunctionTaint:
+    """Single forward pass over one function body, label-set taint."""
+
+    def __init__(
+        self,
+        fn: ast.FunctionDef | ast.AsyncFunctionDef,
+        path: str,
+        summaries: dict[str, Summary],
+        *,
+        summary_mode: bool,
+    ):
+        self.fn = fn
+        self.path = path
+        self.summaries = summaries
+        self.summary_mode = summary_mode
+        self.findings: list[Finding] = []
+        self.sink_labels: dict[str, str] = {}  # label -> first sink code
+        self.ret_labels: set[str] = set()
+        self.env: dict[str, frozenset[str]] = {}
+        self.params = _param_names(fn)
+        secret_names = _secret_params_for(path)
+        for p in self.params:
+            if summary_mode:
+                self.env[p] = frozenset({p})
+            else:
+                self.env[p] = (
+                    frozenset({SECRET}) if p in secret_names else EMPTY
+                )
+
+    # ------------------------------------------------------------- expr
+
+    def taint(self, node: ast.expr | None) -> frozenset[str]:
+        if node is None or isinstance(node, ast.Constant):
+            return EMPTY
+        if isinstance(node, ast.Name):
+            return self.env.get(node.id, EMPTY)
+        if isinstance(node, ast.Attribute):
+            if node.attr in vocab.METADATA_ATTRS:
+                self.taint(node.value)  # still walk for nested calls
+                return EMPTY
+            base = self.taint(node.value)
+            if node.attr in vocab.SECRET_ATTRS and not self.summary_mode:
+                return base | {SECRET}
+            return base
+        if isinstance(node, ast.Call):
+            return self._call(node)
+        if isinstance(node, ast.Compare):
+            # comparison results are booleans (shape checks, thresholds)
+            self.taint(node.left)
+            for c in node.comparators:
+                self.taint(c)
+            return EMPTY
+        if isinstance(node, ast.BinOp):
+            return self.taint(node.left) | self.taint(node.right)
+        if isinstance(node, ast.BoolOp):
+            out = EMPTY
+            for v in node.values:
+                out = out | self.taint(v)
+            return out
+        if isinstance(node, ast.UnaryOp):
+            return self.taint(node.operand)
+        if isinstance(node, ast.IfExp):
+            self.taint(node.test)
+            return self.taint(node.body) | self.taint(node.orelse)
+        if isinstance(node, ast.Subscript):
+            self.taint(node.slice)
+            return self.taint(node.value)
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            out = EMPTY
+            for e in node.elts:
+                out = out | self.taint(e)
+            return out
+        if isinstance(node, ast.Dict):
+            out = EMPTY
+            for k in node.keys:
+                if k is not None:
+                    out = out | self.taint(k)
+            for v in node.values:
+                out = out | self.taint(v)
+            return out
+        if isinstance(node, ast.JoinedStr):
+            out = EMPTY
+            for v in node.values:
+                if isinstance(v, ast.FormattedValue):
+                    out = out | self.taint(v.value)
+            return out
+        if isinstance(node, ast.FormattedValue):
+            return self.taint(node.value)
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp)):
+            return self._comp(node, [node.elt])
+        if isinstance(node, ast.DictComp):
+            return self._comp(node, [node.key, node.value])
+        if isinstance(node, ast.Starred):
+            return self.taint(node.value)
+        if isinstance(node, ast.Await):
+            return self.taint(node.value)
+        if isinstance(node, ast.NamedExpr):
+            t = self.taint(node.value)
+            if isinstance(node.target, ast.Name):
+                self.env[node.target.id] = t
+            return t
+        return EMPTY
+
+    def _comp(self, comp: ast.expr, elts: list[ast.expr]) -> frozenset[str]:
+        saved = dict(self.env)
+        for gen in comp.generators:  # type: ignore[attr-defined]
+            self._bind_iter(gen.target, gen.iter)
+            for cond in gen.ifs:
+                self.taint(cond)
+        out = EMPTY
+        for e in elts:
+            out = out | self.taint(e)
+        self.env = saved
+        return out
+
+    def _bind_iter(self, target: ast.expr, iter_node: ast.expr) -> None:
+        """Bind a loop/comprehension target, element-wise through the
+        common zip()/enumerate() shapes so one secret operand does not
+        smear its co-iterated metadata (seeds vs metas)."""
+        if isinstance(iter_node, ast.Call):
+            d = _dotted(iter_node.func)
+            if (
+                d == "zip"
+                and isinstance(target, (ast.Tuple, ast.List))
+                and len(target.elts) == len(iter_node.args)
+            ):
+                for e, a in zip(target.elts, iter_node.args, strict=False):
+                    self._bind(e, self.taint(a))
+                return
+            if (
+                d == "enumerate"
+                and isinstance(target, (ast.Tuple, ast.List))
+                and len(target.elts) == 2
+                and iter_node.args
+            ):
+                self._bind(target.elts[0], EMPTY)
+                self._bind_iter(target.elts[1], iter_node.args[0])
+                return
+        self._bind(target, self.taint(iter_node))
+
+    def _bind(self, target: ast.expr, t: frozenset[str]) -> None:
+        if isinstance(target, ast.Name):
+            self.env[target.id] = t
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._bind(e, t)
+        elif isinstance(target, ast.Starred):
+            self._bind(target.value, t)
+        # stores through self.X are tracked statically via SECRET_ATTRS
+
+    # ------------------------------------------------------------- call
+
+    def _call(self, node: ast.Call) -> frozenset[str]:
+        arg_t = [self.taint(a) for a in node.args]
+        kw_t = {k.arg: self.taint(k.value) for k in node.keywords}
+        all_labels = EMPTY
+        for t in arg_t:
+            all_labels = all_labels | t
+        for t in kw_t.values():
+            all_labels = all_labels | t
+        d = _dotted(node.func)
+        last = _last(d)
+
+        self._check_sinks(node, d, last, all_labels)
+
+        # sanctioned chokepoints launder; metadata builtins are clean
+        if last in vocab.SANITIZERS or last in CLEAN_FUNCS:
+            return EMPTY
+        if d and d.startswith(vocab.SANITIZER_PREFIXES):
+            return EMPTY
+        if d in vocab.SECRET_CALLS or last in vocab.SECRET_CALLS:
+            return EMPTY if self.summary_mode else frozenset({SECRET})
+
+        # receiver taint rides along: m.copy() of a secret is secret
+        recv_t = (
+            self.taint(node.func.value)
+            if isinstance(node.func, ast.Attribute)
+            else EMPTY
+        )
+
+        summ = self.summaries.get(last or "")
+        if summ is not None:
+            return recv_t | self._apply_summary(summ, node, arg_t, kw_t)
+
+        # unknown callee: conservative propagation
+        return all_labels | recv_t
+
+    def _apply_summary(
+        self,
+        summ: Summary,
+        node: ast.Call,
+        arg_t: list[frozenset[str]],
+        kw_t: dict[str | None, frozenset[str]],
+    ) -> frozenset[str]:
+        """Bind call arguments to the callee's formals; report args that
+        hit an in-callee sink, propagate args bound to return formals."""
+        bound: list[tuple[str | None, frozenset[str]]] = []
+        for i, t in enumerate(arg_t):
+            p = summ.params[i] if i < len(summ.params) else None
+            bound.append((p, t))
+        for name, t in kw_t.items():
+            bound.append((name if name in summ.params else None, t))
+        out = EMPTY
+        for p, t in bound:
+            if not t:
+                continue
+            code = summ.sink_params.get(p or "")
+            if code is not None:
+                if SECRET in t:
+                    self._report(
+                        code, node,
+                        f"secret argument for {p!r} reaches a "
+                        f"{_sink_noun(code)} inside {summ.name}()",
+                    )
+                elif self.summary_mode:
+                    # transitive: my formal feeds a sink one level down
+                    for lbl in t:
+                        self.sink_labels.setdefault(lbl, code)
+            if p is None or p in summ.ret_params:
+                out = out | t
+        return out
+
+    def _check_sinks(
+        self,
+        node: ast.Call,
+        d: str | None,
+        last: str | None,
+        labels: frozenset[str],
+    ) -> None:
+        if not labels:
+            return
+        code_msg: list[tuple[str, str]] = []
+        if last in vocab.BOUNDARY_CTORS:
+            code_msg.append((
+                "SPDC101",
+                f"secret value passed to boundary constructor {last}()",
+            ))
+        if d in vocab.WIRE_CALLEES or (last == "encode" and d and "wire" in d):
+            code_msg.append(("SPDC101", "secret value passed to a wire encoder"))
+        if (
+            isinstance(node.func, ast.Attribute)
+            and node.func.attr in vocab.TRANSPORT_METHODS
+        ):
+            recv = _dotted(node.func.value) or ""
+            if "transport" in recv.lower():
+                code_msg.append((
+                    "SPDC101",
+                    f"secret value passed to transport .{node.func.attr}()",
+                ))
+        if d in vocab.LOG_CALLEES or (
+            d and d.startswith(vocab.LOG_CALLEE_PREFIXES)
+        ):
+            code_msg.append(("SPDC102", f"secret value logged via {d}()"))
+        if last in vocab.METRIC_CTORS:
+            code_msg.append((
+                "SPDC104", f"secret value in metrics event {last}()",
+            ))
+        if (
+            isinstance(node.func, ast.Attribute)
+            and node.func.attr in vocab.METRIC_METHODS
+        ):
+            code_msg.append((
+                "SPDC104",
+                f"secret value passed to metrics .{node.func.attr}()",
+            ))
+        for code, msg in code_msg:
+            self._sink(code, node, msg, labels)
+
+    def _sink(
+        self, code: str, node: ast.AST, msg: str, labels: frozenset[str]
+    ) -> None:
+        if self.summary_mode:
+            for lbl in labels:
+                self.sink_labels.setdefault(lbl, code)
+        elif SECRET in labels:
+            self._report(code, node, msg)
+
+    def _report(self, code: str, node: ast.AST, msg: str) -> None:
+        if not self.summary_mode:
+            self.findings.append(Finding(self.path, node.lineno, code, msg))
+
+    # ------------------------------------------------------------- stmt
+
+    def run(self) -> "Summary":
+        self._block(self.fn.body)
+        return Summary(
+            name=self.fn.name,
+            params=self.params,
+            sink_params={
+                p: c for p, c in self.sink_labels.items() if p in self.params
+            },
+            ret_params=self.ret_labels & set(self.params),
+        )
+
+    def _block(self, stmts: list[ast.stmt]) -> None:
+        for s in stmts:
+            self._stmt(s)
+
+    def _stmt(self, s: ast.stmt) -> None:
+        if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            return  # nested defs run later, outside this flow
+        if isinstance(s, ast.Assign):
+            t = self.taint(s.value)
+            for tgt in s.targets:
+                self._bind(tgt, t)
+        elif isinstance(s, ast.AnnAssign):
+            if s.value is not None:
+                self._bind(s.target, self.taint(s.value))
+        elif isinstance(s, ast.AugAssign):
+            t = self.taint(s.value)
+            if isinstance(s.target, ast.Name):
+                self.env[s.target.id] = (
+                    self.env.get(s.target.id, EMPTY) | t
+                )
+        elif isinstance(s, ast.Expr):
+            self.taint(s.value)
+        elif isinstance(s, ast.Return):
+            self.ret_labels |= self.taint(s.value)
+        elif isinstance(s, ast.Raise):
+            self._raise(s)
+        elif isinstance(s, ast.Assert):
+            self.taint(s.test)
+            if s.msg is not None:
+                self._sink(
+                    "SPDC103", s, "secret value in assert message",
+                    self.taint(s.msg),
+                )
+        elif isinstance(s, (ast.For, ast.AsyncFor)):
+            self._bind_iter(s.target, s.iter)
+            self._block(s.body)
+            self._block(s.orelse)
+        elif isinstance(s, ast.While):
+            self.taint(s.test)
+            self._block(s.body)
+            self._block(s.orelse)
+        elif isinstance(s, ast.If):
+            self.taint(s.test)
+            self._block(s.body)
+            self._block(s.orelse)
+        elif isinstance(s, (ast.With, ast.AsyncWith)):
+            for item in s.items:
+                self.taint(item.context_expr)
+                if item.optional_vars is not None:
+                    self._bind(item.optional_vars, EMPTY)
+            self._block(s.body)
+        elif isinstance(s, ast.Try):
+            self._block(s.body)
+            for h in s.handlers:
+                if h.name:
+                    self.env[h.name] = EMPTY
+                self._block(h.body)
+            self._block(s.orelse)
+            self._block(s.finalbody)
+
+    def _raise(self, s: ast.Raise) -> None:
+        exc = s.exc
+        if exc is None:
+            return
+        if isinstance(exc, ast.Call):
+            labels = EMPTY
+            for a in exc.args:
+                labels = labels | self.taint(a)
+            for k in exc.keywords:
+                labels = labels | self.taint(k.value)
+            self._sink(
+                "SPDC103", s,
+                "secret value interpolated into exception message", labels,
+            )
+        else:
+            self._sink(
+                "SPDC103", s, "secret value raised as exception",
+                self.taint(exc),
+            )
+
+
+def _param_names(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> list[str]:
+    args = fn.args
+    params = list(args.posonlyargs) + list(args.args) + list(args.kwonlyargs)
+    names = [a.arg for a in params]
+    if names and names[0] in ("self", "cls"):
+        names = names[1:]
+    if args.vararg:
+        names.append(args.vararg.arg)
+    if args.kwarg:
+        names.append(args.kwarg.arg)
+    return names
+
+
+def _sink_noun(code: str) -> str:
+    return {
+        "SPDC101": "trust-boundary sink",
+        "SPDC102": "logging sink",
+        "SPDC103": "exception message",
+        "SPDC104": "metrics label",
+    }.get(code, "sink")
+
+
+def _functions(tree: ast.Module):
+    """Yield (func_node, qualname) for module functions and methods."""
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node, node.name
+        elif isinstance(node, ast.ClassDef):
+            for sub in node.body:
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    yield sub, f"{node.name}.{sub.name}"
+
+
+def _whitelist_check(ctx: Context) -> list[Finding]:
+    """SPDC105: ShardTask dataclass fields vs the client-side mint
+    whitelist must agree exactly — a field added to the wire message
+    without a whitelist decision (or a stale whitelist name) is a
+    boundary change nobody signed off on."""
+    wl_file = ctx.by_suffix(vocab.TASK_WHITELIST_FILE)
+    dc_file = ctx.by_suffix(vocab.TASK_DATACLASS_FILE)
+    if wl_file is None or dc_file is None:
+        return []
+    if wl_file.tree is None or dc_file.tree is None:
+        return []
+
+    whitelist: set[str] | None = None
+    wl_line = 1
+    for node in ast.walk(wl_file.tree):
+        if isinstance(node, ast.Assign):
+            names = [t.id for t in node.targets if isinstance(t, ast.Name)]
+            if vocab.TASK_WHITELIST_NAME in names:
+                try:
+                    val = ast.literal_eval(
+                        node.value.args[0]
+                        if isinstance(node.value, ast.Call)
+                        else node.value
+                    )
+                    whitelist = set(val)
+                    wl_line = node.lineno
+                except Exception:
+                    pass
+
+    fields: set[str] = set()
+    dc_line = 1
+    for node in dc_file.tree.body:
+        if isinstance(node, ast.ClassDef) and node.name == vocab.TASK_DATACLASS_NAME:
+            dc_line = node.lineno
+            for sub in node.body:
+                if isinstance(sub, ast.AnnAssign) and isinstance(
+                    sub.target, ast.Name
+                ):
+                    fields.add(sub.target.id)
+
+    out: list[Finding] = []
+    if whitelist is None:
+        out.append(Finding(
+            wl_file.path, wl_line, "SPDC105",
+            f"{vocab.TASK_WHITELIST_NAME} whitelist not found in "
+            f"{wl_file.path} (moved or deleted?)",
+        ))
+        return out
+    if not fields:
+        return out
+    for f in sorted(fields - whitelist):
+        out.append(Finding(
+            dc_file.path, dc_line, "SPDC105",
+            f"{vocab.TASK_DATACLASS_NAME} field {f!r} is not in the "
+            f"{vocab.TASK_WHITELIST_NAME} whitelist",
+        ))
+    for f in sorted(whitelist - fields):
+        out.append(Finding(
+            wl_file.path, wl_line, "SPDC105",
+            f"whitelist entry {f!r} matches no {vocab.TASK_DATACLASS_NAME} field",
+        ))
+    return out
+
+
+def run(files: list[SourceFile], ctx: Context) -> list[Finding]:
+    findings: list[Finding] = []
+    for sf in files:
+        if sf.tree is None:
+            continue
+        if not any(p in sf.path for p in vocab.TAINT_SCOPE_PREFIXES):
+            continue
+        # phase 1: per-parameter summaries (definition order; a helper
+        # defined before its callee sees no summary for it — one level
+        # of indirection is the documented contract)
+        summaries: dict[str, Summary] = {}
+        for fn, qual in _functions(sf.tree):
+            ft = _FunctionTaint(fn, sf.path, summaries, summary_mode=True)
+            summ = ft.run()
+            summ.name = qual
+            summaries[fn.name] = summ
+        # phase 2: real analysis with the secret vocabulary
+        for fn, _qual in _functions(sf.tree):
+            ft = _FunctionTaint(fn, sf.path, summaries, summary_mode=False)
+            ft.run()
+            findings.extend(ft.findings)
+    findings.extend(_whitelist_check(ctx))
+    return findings

@@ -1,0 +1,264 @@
+"""Declared vocabularies for the repro-lint passes (DESIGN.md §11.1).
+
+This module is the single place where the *names* of the protocol's
+secrets, sanctioned chokepoints, boundary sinks, and lock-coverage
+requirements live. The passes are generic dataflow/scope machinery; all
+protocol knowledge is data in this file, so a reviewer can audit the
+security argument by reading one table instead of four visitors.
+
+Everything here is checked against the live tree by
+tests/test_repro_lint.py — deleting an entry that the tree relies on
+(e.g. a REQUIRED_GUARDS row, or a name from the ShardTask whitelist in
+api/client.py) makes ``python -m tools.repro_lint`` exit non-zero.
+"""
+
+from __future__ import annotations
+
+# --------------------------------------------------------------------------
+# Finding codes. SPDC0xx engine/suppression, 1xx taint, 2xx locks,
+# 3xx jit hygiene, 4xx exports. The table is the one rendered in
+# DESIGN.md §11.3; keep the two in sync (tools/check_docs.py does not
+# diff them, tests/test_repro_lint.py does).
+# --------------------------------------------------------------------------
+
+CODES: dict[str, str] = {
+    "SPDC000": "file does not parse (syntax error)",
+    "SPDC001": "suppression without ' -- <justification>' (not suppressible)",
+    "SPDC002": "suppression names an unknown finding code",
+    "SPDC003": "suppression matched no finding on its line (stale)",
+    "SPDC101": "secret value reaches a trust-boundary sink (task/wire/transport)",
+    "SPDC102": "secret value reaches a logging/print sink",
+    "SPDC103": "secret value interpolated into an exception message",
+    "SPDC104": "secret value used as a metrics/event label or field",
+    "SPDC105": "ShardTask fields and the client _TASK_FIELDS whitelist disagree",
+    "SPDC201": "guarded attribute mutated outside its lock",
+    "SPDC202": "blocking operation while holding a lock",
+    "SPDC203": "user hook fired while holding a lock",
+    "SPDC204": "requires-lock method called without the lock held",
+    "SPDC206": "required guarded-by annotation is missing",
+    "SPDC301": "wall-clock read inside jit-traced code",
+    "SPDC302": "host RNG inside jit-traced code",
+    "SPDC303": "mutable global state touched inside jit-traced code",
+    "SPDC304": "unhashable value passed for a static jit argument",
+    "SPDC401": "public symbol in src/repro referenced nowhere",
+}
+
+#: Codes that may never be suppressed — a suppression *about*
+#: suppressions would be circular, and a syntax error hides everything.
+UNSUPPRESSIBLE: frozenset[str] = frozenset({"SPDC000", "SPDC001", "SPDC002", "SPDC003"})
+
+# --------------------------------------------------------------------------
+# Pass 1 — secret-taint / trust-boundary (SPDC10x).
+#
+# Scope: the protocol implementation only. benchmarks/ and examples/ are
+# client-side driver scripts that legitimately hold plaintext (they ARE
+# the data owner in the paper's model), so taint there is meaningless;
+# they still get passes 2-4.
+# --------------------------------------------------------------------------
+
+TAINT_SCOPE_PREFIXES: tuple[str, ...] = (
+    "src/repro/api/",
+    "src/repro/core/",
+    "src/repro/serve/",
+    "src/repro/distrib/",
+)
+
+#: Parameter names that introduce taint at function entry. These are the
+#: paper's objects: the plaintext matrix (m/matrix/x...), PMOP seeds and
+#: derived keys, the blinding vector v, rotation degrees psi.
+SECRET_PARAMS: frozenset[str] = frozenset({
+    "m", "ms", "mi", "matrix", "matrices", "m_host", "m_hosts",
+    "seed", "seeds", "aug_key",
+    "psi", "digest", "plaintext", "plaintexts", "secret", "secrets",
+})
+
+#: key-ish parameter names are secret only under these path fragments:
+#: in core/ and api/ a ``key`` is cipher key material; in serve/ the
+#: same name is a BucketKey — the gateway's *public* batching identity.
+SECRET_KEY_PARAMS: frozenset[str] = frozenset({"key", "keys", "key_vs", "v"})
+SECRET_KEY_SCOPES: tuple[str, ...] = ("src/repro/core/", "src/repro/api/")
+
+#: Attribute loads that introduce taint regardless of the object:
+#: ``anything.psi`` is a rotation secret, ``req.matrix`` is plaintext.
+SECRET_ATTRS: frozenset[str] = frozenset({
+    "psi", "digest", "_m_host", "_m_hosts", "seeds", "v", "matrix",
+    "aug_key", "_keys",
+})
+
+#: Calls whose *result* is secret (dotted suffix match on the unparsed
+#: callee): the seed/key mint points and raw key material.
+SECRET_CALLS: frozenset[str] = frozenset({
+    "seedgen", "seedgen_batch", "keygen", "keygen_batch",
+    "jax.random.key", "random.key",
+})
+
+#: Sanctioned chokepoints: a call THROUGH one of these launders taint —
+#: its result is clean even with secret arguments. This is exactly the
+#: paper's boundary argument: cipher/augment outputs are what servers
+#: may see; dispatch_subseed and hashlib are one-way derivations;
+#: outsource_determinant* are the audited client facades that perform
+#: the whole PMOP→dispatch→RRVP round themselves.
+SANITIZERS: frozenset[str] = frozenset({
+    "cipher", "cipher_batch", "_cipher_host",
+    "augment", "_augment_host", "_equilibrate_augment", "_equilibrate_augment_jit",
+    "equilibrate",
+    "dispatch_subseed",
+    "outsource_determinant", "outsource_determinant_mixed",
+})
+
+#: Dotted-callee prefixes that sanitize (hashlib.sha256(...).digest()).
+SANITIZER_PREFIXES: tuple[str, ...] = ("hashlib.",)
+
+#: Attribute loads that are metadata, never payload: taking .shape of a
+#: secret array yields a public value (the paper pads/sizes openly).
+METADATA_ATTRS: frozenset[str] = frozenset({
+    "shape", "ndim", "dtype", "size", "nbytes", "itemsize",
+    # gateway accounting identity on requests/results: timestamps, ids,
+    # tenant names, and the (public, padded) matrix size — never payload
+    "enqueued_at", "tenant", "rid", "n",
+})
+
+#: Logging-style callees (dotted suffix match) -> SPDC102.
+LOG_CALLEES: frozenset[str] = frozenset({
+    "print", "warnings.warn", "sys.stdout.write", "sys.stderr.write",
+})
+LOG_CALLEE_PREFIXES: tuple[str, ...] = ("logging.", "logger.", "log.")
+
+#: Boundary sinks -> SPDC101. Constructor names whose arguments cross to
+#: the edge servers, and wire encoders.
+BOUNDARY_CTORS: frozenset[str] = frozenset({"ShardTask"})
+WIRE_CALLEES: frozenset[str] = frozenset({"wire.encode", "encode_message"})
+#: Transport submission methods (suffix match, receiver must *mention*
+#: transport to avoid flagging every ThreadPoolExecutor.submit).
+TRANSPORT_METHODS: frozenset[str] = frozenset({
+    "start", "submit", "factor", "repair", "sweep", "driver_submit",
+})
+
+#: Metrics/event sinks -> SPDC104.
+METRIC_CTORS: frozenset[str] = frozenset({
+    "FlushEvent", "VerdictEvent", "RejectEvent",
+})
+METRIC_METHODS: frozenset[str] = frozenset({
+    "record_submit", "record_verdict", "record_flush", "record_reject",
+})
+
+#: Cross-file whitelist check (SPDC105): the dataclass that crosses the
+#: boundary and the runtime whitelist that guards its construction.
+TASK_WHITELIST_FILE = "src/repro/api/client.py"
+TASK_WHITELIST_NAME = "_TASK_FIELDS"
+TASK_DATACLASS_FILE = "src/repro/api/messages.py"
+TASK_DATACLASS_NAME = "ShardTask"
+
+# --------------------------------------------------------------------------
+# Pass 2 — lock discipline (SPDC20x).
+# --------------------------------------------------------------------------
+
+#: (path suffix, class name, attribute) triples that MUST carry a
+#: ``#: guarded-by:`` annotation. This list is what makes annotation
+#: deletion loud: removing the comment from the source trips SPDC206
+#: here rather than silently disabling the check.
+REQUIRED_GUARDS: tuple[tuple[str, str, str], ...] = (
+    # gateway shared state (all under the gateway RLock)
+    ("serve/spdc_gateway.py", "SPDCGateway", "_queue"),
+    ("serve/spdc_gateway.py", "SPDCGateway", "_results"),
+    ("serve/spdc_gateway.py", "SPDCGateway", "_next_rid"),
+    ("serve/spdc_gateway.py", "SPDCGateway", "_owned_transports"),
+    ("serve/spdc_gateway.py", "SPDCGateway", "stats"),
+    ("serve/spdc_gateway.py", "SPDCGateway", "metrics"),
+    ("serve/spdc_gateway.py", "SPDCGateway", "_admission"),
+    ("serve/spdc_gateway.py", "SPDCGateway", "_breakers"),
+    ("serve/spdc_gateway.py", "SPDCGateway", "_cache"),
+    ("serve/spdc_gateway.py", "SPDCGateway", "_inflight"),
+    ("serve/spdc_gateway.py", "SPDCGateway", "_dummies"),
+    # micro-batch queue: externally locked (the gateway's lock), the
+    # annotation documents the contract and keeps the attr in this table
+    ("serve/queue.py", "MicroBatchQueue", "_buckets"),
+    ("serve/queue.py", "MicroBatchQueue", "_pending"),
+    # socket transport metadata + worker daemon state
+    ("api/socket_transport.py", "SocketTransport", "_socks"),
+    ("api/socket_transport.py", "SocketTransport", "_hellos"),
+    ("api/socket_transport.py", "SocketTransport", "_sent_plan"),
+    ("api/socket_transport.py", "SocketTransport", "_spawned"),
+    ("api/socket_transport.py", "WorkerDaemon", "_edges"),
+    ("api/socket_transport.py", "WorkerDaemon", "_open"),
+    ("api/socket_transport.py", "WorkerDaemon", "connections"),
+    ("api/socket_transport.py", "WorkerDaemon", "frames_served"),
+    # multiprocess transport metadata
+    ("api/transport.py", "MultiprocessTransport", "_conns"),
+    ("api/transport.py", "MultiprocessTransport", "_procs"),
+    ("api/transport.py", "MultiprocessTransport", "_sent_plan"),
+    ("api/transport.py", "ThreadPoolTransport", "_edges"),
+)
+
+#: Callees (dotted suffix) that block: jitted sweep dispatch, socket and
+#: pipe I/O, futures, sleeps. Flagged under any held lock (SPDC202).
+BLOCKING_CALLEES: frozenset[str] = frozenset({
+    "time.sleep",
+    "outsource_determinant", "outsource_determinant_mixed",
+    "send_frame", "recv_frame", "serve_frame",
+})
+#: Method names that block regardless of receiver. ``.start`` is NOT
+#: here: Process.start is a fast fork, and flagging it would outlaw the
+#: legitimate spawn-under-metadata-lock pattern in the transports.
+BLOCKING_METHODS: frozenset[str] = frozenset({
+    "sleep", "result", "sendall", "recv", "recv_bytes", "send_bytes",
+    "accept", "connect", "join", "wait",
+})
+
+#: User-hook attributes: firing one of these while holding a lock is the
+#: PR-8 deadlock class (hook re-enters the gateway) -> SPDC203.
+HOOK_ATTRS: frozenset[str] = frozenset({"on_flush", "on_verdict", "on_reject"})
+
+#: Lock-ish attribute names recognised in ``with self.<name>:`` even
+#: without an annotation mentioning them.
+LOCK_NAME_HINTS: tuple[str, ...] = ("_lock", "_meta", "_worker_lock")
+
+# --------------------------------------------------------------------------
+# Pass 3 — jit/tracer hygiene (SPDC30x).
+# --------------------------------------------------------------------------
+
+WALLCLOCK_CALLEES: frozenset[str] = frozenset({
+    "time.time", "time.monotonic", "time.perf_counter", "time.process_time",
+    "time.time_ns", "time.monotonic_ns", "time.perf_counter_ns",
+    "datetime.now", "datetime.utcnow", "datetime.datetime.now",
+    "datetime.datetime.utcnow",
+})
+
+#: Host RNG callee prefixes (dotted). jax.random is NOT here — it is
+#: functional and trace-safe; np/stdlib RNG inside a traced body bakes
+#: one sample into the compiled executable.
+HOST_RNG_PREFIXES: tuple[str, ...] = (
+    "np.random.", "numpy.random.", "random.", "secrets.", "os.urandom",
+)
+#: Generator-method heuristic: ``rng.normal(...)`` where the receiver is
+#: literally named like a host RNG handle.
+HOST_RNG_RECEIVERS: frozenset[str] = frozenset({"rng", "np_rng", "host_rng"})
+HOST_RNG_METHODS: frozenset[str] = frozenset({
+    "standard_normal", "normal", "uniform", "integers", "random",
+    "permutation", "choice", "shuffle",
+})
+
+#: Container-mutating method names for the module-global check.
+MUTATOR_METHODS: frozenset[str] = frozenset({
+    "append", "extend", "insert", "add", "update", "setdefault",
+    "pop", "popitem", "clear", "remove", "discard",
+})
+
+# --------------------------------------------------------------------------
+# Pass 4 — export audit (SPDC401).
+# --------------------------------------------------------------------------
+
+#: Reference index roots: identifiers are harvested from every .py file
+#: under these (relative to repo root) regardless of which paths the CLI
+#: was pointed at, so `python -m tools.repro_lint src` still knows that
+#: tests/ uses a symbol.
+REFERENCE_ROOTS: tuple[str, ...] = (
+    "src", "tests", "benchmarks", "examples", "tools",
+)
+
+#: name -> justification. Symbols that are deliberately public yet
+#: unreferenced (registry-filled, forward-compat API surface).
+EXPORT_EXEMPT: dict[str, str] = {}
+
+#: Module path suffixes excluded from the export audit entirely.
+EXPORT_EXEMPT_MODULES: tuple[str, ...] = ()
