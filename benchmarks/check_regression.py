@@ -58,6 +58,16 @@ shape must stay within `--factor` of the baseline's.
     # the request count, so the floor is skipped there)
     python benchmarks/check_regression.py BENCH_ci.json BENCH_7.json \
         --suite gateway_overload --n 32 --servers 2 --factor 2.0
+    # linalg guard (rows from the `linalg` suite, BENCH_8): a shared-LU
+    # (slogdet, solve) pair must beat two standalone outsourcings by
+    # >= --shared-speedup x (the committed baseline is held to the sharp
+    # 1.5x claim), every row must report factorizations == 1 and fully
+    # verified ops, the gradient-step leg must match the plaintext
+    # reference to 1e-6, and the shared rate floors at --factor of the
+    # committed baseline when the shapes match (smoke shrinks n, so the
+    # floor is skipped there)
+    python benchmarks/check_regression.py BENCH_ci.json BENCH_8.json \
+        --suite linalg --n 256 --servers 2 --factor 2.0
 """
 
 from __future__ import annotations
@@ -150,6 +160,108 @@ def check_precision(
     else:
         print("precision |dlog| <= 1e-4 with exact signs on every row -> OK")
     return ok and not unverified and not inaccurate, fresh_f32, base_f32
+
+
+def check_linalg(
+    fresh_rows: list[dict],
+    base_rows: list[dict],
+    n: int,
+    servers: int,
+    shared_speedup: float,
+    factor: float,
+) -> bool:
+    """The linalg suite's acceptance claims (DESIGN.md §12, BENCH_8).
+
+    The COMMITTED baseline must hold the sharp shared ≥ 1.5× independent
+    claim at its own measured shape — one factorization serving a
+    (slogdet, solve) pair must beat two standalone outsourcings, which is
+    the subsystem's reason to exist. The FRESH run must show shared ≥
+    --shared-speedup × independent (margin for runner noise), report
+    factorizations == 1 on the shared row AND the gradient-step row (the
+    whole custom-VJP backward pass rides the same LU), keep every op
+    verified, keep the gradient within 1e-6 of the plaintext reference,
+    and stay within --factor of the committed baseline's shared rate when
+    the shapes match (smoke shrinks n, so the floor is skipped there).
+    """
+    def rows_of(rows, mode):
+        return [r for r in rows if r.get("suite") == "linalg"
+                and r.get("mode") == mode]
+
+    def speedup_of(rows, label, need, at_n):
+        ratios = [float(r["shared_speedup"]) for r in rows_of(rows, "ratio")
+                  if at_n is None or r.get("n") == at_n]
+        if not ratios:
+            raise SystemExit(
+                f"no linalg ratio rows ({label}) — did the suite run?"
+            )
+        r = max(ratios)
+        print(
+            f"linalg[{label}]: shared/independent {r:.2f}x "
+            f"(need >= {need}x) -> {'OK' if r >= need else 'FAIL'}"
+        )
+        return r >= need
+
+    ok = speedup_of(base_rows, "committed", 1.5, None)
+    ok = speedup_of(fresh_rows, "fresh", shared_speedup, None) and ok
+
+    not_amortized = [
+        r["name"] for r in fresh_rows
+        if r.get("suite") == "linalg" and "factorizations" in r
+        and int(r["factorizations"]) != 1
+    ]
+    if not_amortized:
+        print(f"linalg factorizations != 1 on: {not_amortized} -> FAIL")
+    else:
+        print("linalg one-factorization claim holds on every row -> OK")
+    unverified = [
+        r["name"] for r in fresh_rows
+        if r.get("suite") == "linalg" and r.get("all_verified") is False
+    ]
+    if unverified:
+        print(f"linalg unverified ops on: {unverified} -> FAIL")
+    else:
+        print("linalg every op verified on every row -> OK")
+    bad_grad = [
+        r["name"] for r in rows_of(fresh_rows, "gradstep")
+        if float(r.get("grad_err", "1")) > 1e-6
+        or r.get("value_matches") is False
+    ]
+    if bad_grad:
+        print(f"linalg gradient off the 1e-6 bar on: {bad_grad} -> FAIL")
+    else:
+        print("linalg gradients within 1e-6 of the reference -> OK")
+    ok = ok and not not_amortized and not unverified and not bad_grad
+
+    try:
+        got = best_rate(fresh_rows, n, servers, "shared")
+        want = best_rate(base_rows, n, servers, "shared")
+    except SystemExit:
+        print(
+            f"linalg[baseline] no shared rows at n={n} N={servers} in both "
+            "runs (smoke shapes differ) — absolute floor skipped"
+        )
+        return ok
+    good = got >= want / factor
+    print(
+        f"linalg[baseline] n={n} N={servers}: fresh {got:.2f} vs baseline "
+        f"{want:.2f} ops/sec (floor {want / factor:.2f} at {factor}x) "
+        f"-> {'OK' if good else 'REGRESSION'}"
+    )
+    return ok and good
+
+
+def best_rate(rows: list[dict], n: int, servers: int, mode: str) -> float:
+    """Max ops_per_sec over linalg rows for one (n, N) shape and mode."""
+    rates = [
+        float(r["ops_per_sec"]) for r in rows
+        if r.get("suite") == "linalg" and r.get("mode") == mode
+        and r.get("n") == n and r.get("num_servers") == servers
+    ]
+    if not rates:
+        raise SystemExit(
+            f"no linalg rows with mode={mode} for n={n}, N={servers}"
+        )
+    return max(rates)
 
 
 def check_rateless(
@@ -520,7 +632,7 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument(
         "--suite",
         choices=("throughput", "gateway", "precision", "transports",
-                 "rateless", "sockets", "gateway_overload"),
+                 "rateless", "sockets", "gateway_overload", "linalg"),
         default="throughput",
         help="which suite's rows to guard (gateway also checks the "
         "gateway-beats-loop acceptance claim on the fresh run; precision "
@@ -538,6 +650,13 @@ def main(argv: list[str] | None = None) -> int:
         type=float,
         default=1.5,
         help="precision suite: minimum fresh f32/f64 dets/sec ratio",
+    )
+    ap.add_argument(
+        "--shared-speedup",
+        type=float,
+        default=1.5,
+        help="linalg suite: minimum fresh shared-LU / two-independent-"
+        "outsourcings rate ratio for a (slogdet, solve) pair",
     )
     ap.add_argument(
         "--straggle-speedup",
@@ -584,6 +703,10 @@ def main(argv: list[str] | None = None) -> int:
 
     fresh = json.loads(args.fresh.read_text())
     base = json.loads(args.baseline.read_text())
+    if args.suite == "linalg":
+        ok = check_linalg(fresh["rows"], base["rows"], args.n,
+                          args.servers, args.shared_speedup, args.factor)
+        return 0 if ok else 1
     if args.suite == "gateway_overload":
         ok = check_gateway_overload(fresh["rows"], base["rows"], args.n,
                                     args.servers, args.containment_floor,

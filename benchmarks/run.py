@@ -902,6 +902,119 @@ def gateway_overload_suite(n: int = 32, N: int = 2):
                            and base_stats["breaker_opens"] == 0))
 
 
+def linalg_suite(n: int = 256, N: int = 2):
+    """Shared-LU op plan + differentiable ops (DESIGN.md §12).
+
+    Three measured legs, one guarded claim each (`--suite linalg`,
+    BENCH_8.json):
+
+      * independent — slogdet THEN solve as two standalone outsourcings
+        (fresh session each, the pre-§12 cost of wanting both);
+      * shared      — the same (slogdet, solve) pair on ONE LinalgSession:
+        one factorization + one O(n²) triangular-solve round. The guarded
+        claim: shared ≥ 1.5× the independent rate (amortization is the
+        subsystem's reason to exist);
+      * gradstep    — a full jitted value_and_grad of the GP negative
+        log-likelihood through secure_slogdet + secure_solve (forward +
+        custom-VJP backward on one factorization per step, session cache
+        cleared per rep so every step pays the real pipeline).
+    """
+    from repro.linalg import (
+        LinalgSession, SecureLinalg, secure_slogdet, secure_solve,
+    )
+
+    if SMOKE:
+        n = 64
+    b = _wellcond(n, seed=n)[:, 0]
+    m = _wellcond(n, seed=n + 1)
+
+    def independent():
+        s1 = LinalgSession(m, N)
+        sign, logabs = s1.slogdet()
+        s2 = LinalgSession(m, N)
+        y = s2.solve(b)
+        assert s1.factorizations + s2.factorizations == 2
+        return sign, logabs, y
+
+    def shared():
+        s = LinalgSession(m, N)
+        sign, logabs = s.slogdet()
+        y = s.solve(b)
+        assert s.factorizations == 1, "the op plan must share one LU"
+        return s, sign, logabs, y
+
+    t_ind, _ = _t(independent, reps=3, warmup=1)
+    emit(f"linalg_independent_n{n}_N{N}", t_ind, suite="linalg", n=n,
+         num_servers=N, mode="independent",
+         ops_per_sec=round(2e6 / t_ind, 2))
+    t_sh, (s, sign, logabs, y) = _t(shared, reps=3, warmup=1)
+    ref = np.linalg.solve(m, b)
+    emit(f"linalg_shared_n{n}_N{N}", t_sh, suite="linalg", n=n,
+         num_servers=N, mode="shared", ops_per_sec=round(2e6 / t_sh, 2),
+         factorizations=s.factorizations,
+         all_verified=bool(all(o.verified for o in s.report.ops)),
+         solve_err=float(np.linalg.norm(y - ref) / np.linalg.norm(ref)))
+    emit(f"linalg_shared_speedup_n{n}_N{N}", 0.0, suite="linalg", n=n,
+         num_servers=N, mode="ratio",
+         shared_speedup=round(t_ind / t_sh, 2))
+
+    # -- gradient-step throughput (the GP workload shape) ----------------
+    import jax as _jax
+
+    rng = np.random.default_rng(0)
+    xs = jnp.asarray(np.sort(rng.uniform(-3.0, 3.0, n)))
+    ys = jnp.asarray(np.sin(2.0 * np.asarray(xs))
+                     + 0.1 * rng.standard_normal(n))
+    ctx = SecureLinalg(N)
+
+    def nll(theta):
+        d2 = (xs[:, None] - xs[None, :]) ** 2
+        cov = jnp.exp(2 * theta[1]) * jnp.exp(
+            -0.5 * d2 / jnp.exp(2 * theta[0])
+        ) + jnp.exp(2 * theta[2]) * jnp.eye(n)
+        _, logdet = secure_slogdet(cov, linalg=ctx)
+        alpha = secure_solve(cov, ys, linalg=ctx)
+        return 0.5 * (logdet + ys @ alpha + n * jnp.log(2 * jnp.pi))
+
+    vg = _jax.jit(_jax.value_and_grad(nll))
+    rvg = _jax.jit(_jax.value_and_grad(
+        lambda th: 0.5 * (jnp.linalg.slogdet(
+            jnp.exp(2 * th[1]) * jnp.exp(
+                -0.5 * (xs[:, None] - xs[None, :]) ** 2
+                / jnp.exp(2 * th[0])
+            ) + jnp.exp(2 * th[2]) * jnp.eye(n)
+        )[1] + ys @ jnp.linalg.solve(
+            jnp.exp(2 * th[1]) * jnp.exp(
+                -0.5 * (xs[:, None] - xs[None, :]) ** 2
+                / jnp.exp(2 * th[0])
+            ) + jnp.exp(2 * th[2]) * jnp.eye(n), ys)
+            + n * jnp.log(2 * jnp.pi))
+    ))
+    theta = jnp.asarray([np.log(0.8), 0.0, np.log(0.2)])
+
+    def step():
+        ctx.clear()  # every rep pays factorization + VJP rounds
+        val, grad = vg(theta)
+        _jax.block_until_ready(grad)
+        return val, grad
+
+    t_step, (val, grad) = _t(step, reps=3, warmup=1)
+    rval, rgrad = rvg(theta)
+    gerr = float(jnp.max(jnp.abs(grad - rgrad))
+                 / (jnp.max(jnp.abs(rgrad)) + 1e-30))
+    sessions = list(ctx._sessions.values())
+    emit(f"linalg_gradstep_n{n}_N{N}", t_step, suite="linalg", n=n,
+         num_servers=N, mode="gradstep",
+         steps_per_sec=round(1e6 / t_step, 3),
+         grad_err=f"{gerr:.2e}",
+         factorizations=sum(s_.factorizations for s_ in sessions),
+         value_matches=bool(np.isclose(float(val), float(rval),
+                                       rtol=1e-9)),
+         all_verified=bool(all(
+             o.verified for s_ in sessions for o in s_.report.ops
+         )))
+
+
 def extension_inverse(n: int = 128):
     """Paper §VII.B future work, implemented: secure outsourced inversion."""
     from repro.core import outsource_inverse
@@ -931,6 +1044,7 @@ SUITES = {
     "rateless": rateless_suite,
     "sockets": sockets_suite,
     "gateway_overload": gateway_overload_suite,
+    "linalg": linalg_suite,
     "inverse": extension_inverse,
 }
 
@@ -982,7 +1096,8 @@ def main(argv: list[str] | None = None) -> None:
     own_baseline = {"gateway": "BENCH_2.json", "precision": "BENCH_3.json",
                     "transports": "BENCH_4.json", "rateless": "BENCH_5.json",
                     "sockets": "BENCH_6.json",
-                    "gateway_overload": "BENCH_7.json"}
+                    "gateway_overload": "BENCH_7.json",
+                    "linalg": "BENCH_8.json"}
     for suite, fname in own_baseline.items():
         rows = [r for r in RESULTS if r.get("suite") == suite]
         if suite in names and not SMOKE:

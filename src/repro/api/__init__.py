@@ -29,7 +29,13 @@ from .client import (
     Session,
     SPDCClient,
 )
-from .messages import FaultPlanFrame, ShardResult, ShardTask
+from .messages import (
+    FaultPlanFrame,
+    ShardResult,
+    ShardTask,
+    TriSolveResult,
+    TriSolveTask,
+)
 from .server import EdgeServer
 from .transport import (
     InlineTransport,
@@ -50,7 +56,8 @@ from .wire import WireError, decode_message
 __all__ = [
     "SPDCClient", "Session", "PendingResult", "BoundaryViolation",
     "EdgeServer",
-    "ShardTask", "ShardResult", "FaultPlanFrame",
+    "ShardTask", "ShardResult", "TriSolveTask", "TriSolveResult",
+    "FaultPlanFrame",
     "Transport", "TransportConfig", "TransportError", "TransportTimeout",
     "TransportWorkerDied", "TransportProtocolError",
     "InlineTransport", "ShardMapTransport",

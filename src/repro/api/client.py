@@ -70,6 +70,14 @@ _TASK_FIELDS = frozenset(
      "u_upstream", "session_id"}
 )
 
+#: everything a TriSolveTask (linalg.session's triangular-solve rounds,
+#: DESIGN.md §12) is allowed to hold — same contract as _TASK_FIELDS:
+#: repro-lint's SPDC105 cross-checks this set against the dataclass
+_SOLVE_TASK_FIELDS = frozenset(
+    {"server", "num_servers", "l", "u", "rhs", "subseed", "transpose",
+     "col0", "attempt", "session_id"}
+)
+
 #: auto boundary check: full entry-level plaintext-disjointness screening
 #: up to this many payload elements per sweep (beyond it the structural
 #: checks still run; tests force the full check at every size)
@@ -433,6 +441,11 @@ class Session:
     #: stays the physical fleet size.
     num_strips: int | None = None
     fleet_report: Any = None
+    #: retain the verified (possibly healed) factors after collect() so
+    #: linalg.LinalgSession can grow its op plan — solve/inv rounds reuse
+    #: the SAME verified LU instead of outsourcing a second factorization
+    keep_factors: bool = False
+    _factors: tuple | None = None
     _m_host: np.ndarray | None = None
     _m_hosts: list[np.ndarray] = field(default_factory=list)
     # phase timings feeding SPDCReport.timings (client.open_session stamps
@@ -759,6 +772,10 @@ class Session:
                 digest=self.digest, style=self._style, verdict=verdict,
                 dispatch=dispatch,
             )
+        if self.keep_factors:
+            # post-recovery: these are the factors Authenticate accepted,
+            # so every later trisolve round goes through healed material
+            self._factors = (np.asarray(l), np.asarray(u))
         comm = (
             None if transport.style == "pipeline"
             else nserver_comm_model(self.n_aug, self.partitions)

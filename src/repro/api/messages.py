@@ -36,7 +36,10 @@ from repro.core.faults import FaultPlan, ServerFault, normalize_plan
 
 from . import wire
 
-__all__ = ["ShardTask", "ShardResult", "FaultPlanFrame"]
+__all__ = [
+    "ShardTask", "ShardResult", "TriSolveTask", "TriSolveResult",
+    "FaultPlanFrame",
+]
 
 
 def _np_or_none(a):
@@ -168,6 +171,144 @@ class ShardResult:
         kind, scalars, arrays = wire.decode(data)
         if kind != "ShardResult":
             raise wire.WireError(f"expected ShardResult frame, got {kind!r}")
+        return cls._from_wire(scalars, arrays)
+
+
+@wire.register("TriSolveTask")
+@dataclass(frozen=True, eq=False)
+class TriSolveTask:
+    """One triangular-solve shard — client → server (DESIGN.md §12).
+
+    Ships the session's ALREADY-VERIFIED factors of the augmented
+    ciphertext plus one blinded right-hand-side column chunk; the server
+    answers X' y = rhs (or X'ᵀ y = rhs) through two triangular solves.
+    Everything here is already on the server side of the trust boundary:
+    l/u are what the fleet itself reported during factorization, and rhs
+    is either a public permutation block (inverse rounds) or passed
+    through the `blind_rhs` one-time-pad chokepoint (solve rounds) — no
+    new plaintext crosses with the op plan's extra rounds.
+
+    col0: first column index of this chunk in the round's full RHS (the
+        client reassembles chunks by columns, not by rows).
+    transpose: 0 solves through X' = L·U, 1 through X'ᵀ (the adjoint
+        round the VJPs use).
+    subseed: the trisolve dispatch-channel key
+        (distrib.recovery.trisolve_subseed) — a lane disjoint from the
+        LU dispatch keys, re-derived per attempt so a replayed chunk
+        cannot impersonate a re-issue.
+    """
+
+    server: int
+    num_servers: int
+    l: np.ndarray
+    u: np.ndarray
+    rhs: np.ndarray
+    subseed: bytes
+    transpose: int = 0
+    col0: int = 0
+    attempt: int = 0
+    session_id: str = ""
+
+    @property
+    def n(self) -> int:
+        """Padded solve size n' (the factors are (n', n'))."""
+        return int(self.l.shape[-1])
+
+    @property
+    def cols(self) -> int:
+        return int(self.rhs.shape[-1])
+
+    def to_bytes(self) -> bytes:
+        return wire.encode(
+            "TriSolveTask",
+            {
+                "server": self.server,
+                "num_servers": self.num_servers,
+                "subseed": self.subseed,
+                "transpose": self.transpose,
+                "col0": self.col0,
+                "attempt": self.attempt,
+                "session_id": self.session_id,
+            },
+            {"l": self.l, "u": self.u, "rhs": self.rhs},
+        )
+
+    @classmethod
+    def _from_wire(cls, scalars, arrays):
+        return cls(
+            server=int(scalars["server"]),
+            num_servers=int(scalars["num_servers"]),
+            l=arrays["l"],
+            u=arrays["u"],
+            rhs=arrays["rhs"],
+            subseed=scalars["subseed"],
+            transpose=int(scalars["transpose"]),
+            col0=int(scalars["col0"]),
+            attempt=int(scalars["attempt"]),
+            session_id=scalars["session_id"],
+        )
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "TriSolveTask":
+        kind, scalars, arrays = wire.decode(data)
+        if kind != "TriSolveTask":
+            raise wire.WireError(f"expected TriSolveTask frame, got {kind!r}")
+        return cls._from_wire(scalars, arrays)
+
+
+@wire.register("TriSolveResult")
+@dataclass(frozen=True, eq=False)
+class TriSolveResult:
+    """One solved column chunk — server → client.
+
+    y: the (n', c) solution chunk the server claims. Untrusted until the
+    client's residual check accepts it (linalg.session; a failed chunk is
+    re-dispatched through distrib.recovery.recover_solve). subseed /
+    attempt / col0 echo the task so the client binds the chunk to its
+    dispatch.
+    """
+
+    server: int
+    y: np.ndarray
+    subseed: bytes = b""
+    transpose: int = 0
+    col0: int = 0
+    attempt: int = 0
+    session_id: str = ""
+
+    def to_bytes(self) -> bytes:
+        return wire.encode(
+            "TriSolveResult",
+            {
+                "server": self.server,
+                "subseed": self.subseed,
+                "transpose": self.transpose,
+                "col0": self.col0,
+                "attempt": self.attempt,
+                "session_id": self.session_id,
+            },
+            {"y": self.y},
+        )
+
+    @classmethod
+    def _from_wire(cls, scalars, arrays):
+        return cls(
+            server=int(scalars["server"]),
+            y=arrays["y"],
+            subseed=scalars["subseed"],
+            transpose=int(scalars["transpose"]),
+            col0=int(scalars["col0"]),
+            attempt=int(scalars["attempt"]),
+            session_id=scalars["session_id"],
+        )
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "TriSolveResult":
+        kind, scalars, arrays = wire.decode(data)
+        if kind != "TriSolveResult":
+            raise wire.WireError(
+                f"expected TriSolveResult frame, got {kind!r}"
+            )
         return cls._from_wire(scalars, arrays)
 
 

@@ -23,10 +23,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from jax.scipy.linalg import solve_triangular
+
 from repro.core.faults import corrupt_strip, normalize_plan, sample_delay
 from repro.core.lu import lu_block_row
 
-from .messages import ShardResult, ShardTask
+from .messages import ShardResult, ShardTask, TriSolveResult, TriSolveTask
 
 __all__ = ["EdgeServer"]
 
@@ -54,15 +56,23 @@ class EdgeServer:
     def __init__(self, worker_id: int | None = None):
         self.worker_id = worker_id
 
-    def run(self, task: ShardTask, faults=()) -> ShardResult:
-        """Execute one ShardTask → ShardResult.
+    def run(self, task, faults=()):
+        """Execute one protocol task → its result message.
 
-        The task's strips are embedded into zero-filled (…, n', n')
-        frames because `lu_block_row` is written against full-matrix
-        coordinates; it only ever READS block row `task.server` of x and
-        the rows above `task.server` of u, so the zeros are never
-        consumed and the embedding changes no arithmetic.
+        ShardTask → ShardResult (one LU block row); TriSolveTask →
+        TriSolveResult (one triangular-solve column chunk, DESIGN.md
+        §12). The dispatch is by message type, so every transport whose
+        worker loop decodes frames with `wire.decode_message` serves the
+        linalg rounds with zero transport-side changes.
+
+        For ShardTasks, the strips are embedded into zero-filled
+        (…, n', n') frames because `lu_block_row` is written against
+        full-matrix coordinates; it only ever READS block row
+        `task.server` of x and the rows above `task.server` of u, so the
+        zeros are never consumed and the embedding changes no arithmetic.
         """
+        if isinstance(task, TriSolveTask):
+            return self._run_trisolve(task, faults)
         if task.style not in ("nserver", "pipeline"):
             raise ValueError(f"unknown task style {task.style!r}")
         n, b, s0 = task.n, task.block, task.server * task.block
@@ -98,6 +108,72 @@ class EdgeServer:
             attempt=task.attempt,
             session_id=task.session_id,
         )
+
+    def _run_trisolve(self, task: TriSolveTask, faults=()) -> TriSolveResult:
+        """One triangular-solve column chunk through the session's
+        verified factors: X' y = rhs via L a = rhs, U y = a — or the
+        adjoint X'ᵀ y = rhs via Uᵀ a = rhs, Lᵀ y = a when
+        task.transpose. The server only ever touches material it already
+        produced (l/u) or blinded/public RHS columns."""
+        l = jnp.asarray(task.l)
+        u = jnp.asarray(task.u)
+        rhs = jnp.asarray(task.rhs, dtype=l.dtype)
+        if l.ndim != 2 or l.shape != u.shape or rhs.shape[0] != l.shape[-1]:
+            raise ValueError(
+                f"trisolve shapes disagree: l {l.shape}, u {u.shape}, "
+                f"rhs {rhs.shape}"
+            )
+        self._straggle(task, faults)
+        if task.transpose:
+            a = solve_triangular(u, rhs, lower=False, trans=1)
+            y = solve_triangular(l, a, lower=True, trans=1)
+        else:
+            a = solve_triangular(l, rhs, lower=True)
+            y = solve_triangular(u, a, lower=False)
+        y = self._misbehave_solve(task, y, faults)
+        return TriSolveResult(
+            server=task.server,
+            y=np.asarray(y),
+            subseed=task.subseed,
+            transpose=task.transpose,
+            col0=task.col0,
+            attempt=task.attempt,
+            session_id=task.session_id,
+        )
+
+    def _misbehave_solve(self, task, y, faults):
+        """Trisolve leg of the fault model: a tamper fault naming this
+        worker corrupts the reported solution chunk (any target — the
+        chunk is the only thing this round reports); a dropout zeroes
+        it. Initial dispatch only, like `_misbehave` — re-issues go to
+        replacements chosen for not being the culprit.
+
+        Positions are picked directly inside the (n', c) chunk rather
+        than through `corrupt_strip`'s LU-strip geometry: a solve chunk
+        has no triangle structure, and the strip mapping can land outside
+        a narrow chunk (where jax's out-of-bounds scatter silently drops
+        the update — a tamper that never happened)."""
+        plan = [
+            f for f in normalize_plan(faults)
+            if f.server == self._bound(task) and task.attempt == 0
+            and f.kind != "delay"
+        ]
+        for f in plan:
+            if f.kind == "dropout":
+                y = jnp.zeros_like(y)
+                continue
+            if f.mode == "block":
+                y = y * (1.0 + f.magnitude)
+                continue
+            h = (f.seed * 1315423911 + f.server * 2654435761) & 0x7FFFFFFF
+            r = h % y.shape[0]
+            c = (h >> 8) % y.shape[1]
+            if f.mode == "sign_flip":
+                y = y.at[r, c].multiply(-1.0)
+            else:
+                y = y.at[r, c].set(y[r, c] * (1.0 + f.magnitude)
+                                   + f.magnitude)
+        return y
 
     def _bound(self, task) -> int:
         """The id faults bind to: the PHYSICAL worker when known, else the

@@ -640,10 +640,14 @@ class SocketTransport(Transport):
             self._sent_plan[worker_id] = plan
 
     def _run_on(self, task, worker_id: int, faults=(),
-                timeout: float | None = None) -> ShardResult:
+                timeout: float | None = None):
+        from .wire import decode_message
+
         def once():
             self._configure_faults(worker_id, faults, timeout)
-            return ShardResult.from_bytes(
+            # decode by wire kind, not a pinned class: the same daemon
+            # connection carries ShardResult and TriSolveResult replies
+            return decode_message(
                 self._request(worker_id, task.to_bytes(), timeout)
             )
 

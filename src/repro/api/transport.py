@@ -264,6 +264,41 @@ class Transport:
             self.start(task, worker_id, faults=faults, timeout=timeout)
         )
 
+    def solve_shards(self, tasks, faults=(), timeout: float | None = None):
+        """One triangular-solve round (DESIGN.md §12): dispatch each
+        TriSolveTask to its column-chunk's worker and gather the
+        TriSolveResults in task order.
+
+        Chunks are independent (column-partitioned RHS — no relay, no
+        data dependency), so transports with a per-task surface run them
+        concurrently via `start`; fused transports without one (shardmap)
+        fall back to an inline EdgeServer, same as their `repair` path. A
+        straggler past `timeout` yields None in its slot — the caller
+        treats it as a dropout: the residual check localizes the missing
+        chunk and recovery re-dispatches it.
+        """
+        self._ensure_open()
+        futures = []
+        for t in tasks:
+            try:
+                futures.append(
+                    self.start(t, t.server, faults=faults, timeout=timeout)
+                )
+            except NotImplementedError:
+                fut: Future = Future()
+                try:
+                    fut.set_result(EdgeServer(t.server).run(t, faults))
+                except Exception as e:  # noqa: BLE001 — future carries it
+                    fut.set_exception(e)
+                futures.append(fut)
+        out = []
+        for fut in futures:
+            try:
+                out.append(self.result(fut, timeout))
+            except TransportTimeout:
+                out.append(None)
+        return out
+
     # -- lifecycle -----------------------------------------------------------
 
     def close(self) -> None:
@@ -585,11 +620,15 @@ class MultiprocessTransport(Transport):
         with self._meta:
             self._sent_plan[worker_id] = plan
 
-    def _run_on(self, task: ShardTask, worker_id: int, faults=(),
+    def _run_on(self, task, worker_id: int, faults=(),
                 timeout: float | None = None):
+        from .wire import decode_message
+
         def once():
             self._configure_faults(worker_id, faults, timeout)
-            return ShardResult.from_bytes(
+            # decode by wire kind, not a pinned class: the same pipe
+            # carries ShardResult and TriSolveResult replies
+            return decode_message(
                 self._request(worker_id, task.to_bytes(), timeout)
             )
 

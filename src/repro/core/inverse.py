@@ -1,59 +1,130 @@
-"""Secure outsourced matrix INVERSION — the paper's §VII.B "future
-enhancement", built on the same CED + N-server-LU machinery (beyond-paper
-deliverable).
+"""Secure outsourced matrix INVERSION — facade over the shared-LU op plan.
 
-Math. With EWD ciphering, X = R^k(V^{-1} M) where V = diag(v) and R is one
-clockwise quarter-turn, R(A) = Aᵀ·J (transpose then reverse columns,
-J = exchange matrix). Then M = V·R^{-k}(X) and
+The paper's §VII.B "future enhancement", originally a standalone
+monolith predating the Session/Transport API. It is now a thin facade
+over `repro.linalg.LinalgSession.inv` (DESIGN.md §12): one verified
+outsourced factorization, one wide public-permutation-RHS triangular-
+solve round dispatched over any `repro.api` transport, and O(n²) client
+recovery (counter-rotations + the secret column scaling by v).
 
-    inv(M) = inv(R^{-k}(X)) · V^{-1} = R^{k}(inv(X)) · V^{-1}
+Verification happens at two layers. The session verifies the factors
+(Q2 + Q3) and every solve round (per-chunk, healed through
+`distrib.recovery.recover_solve`); the facade then re-checks the FINAL
+recovered inverse with a Freivalds projection against the plaintext M.
+The projection vector is drawn from a secret domain-separated lane of
+the session digest, fresh per attempt — the pre-facade implementation
+seeded it from a fixed 4-byte digest slice, a probe a server that
+learned the slice could precompute its tampering to be orthogonal to
+(the adaptive attack regression-tested in tests/test_inverse.py).
 
-(the identity inv(R^{-k}(X)) = R^{k}(inv(X)) is derived case-by-case in
-the recovery code below). The servers do all O(n³) work (LU of X, then
-column-block triangular
-solves for inv(X) — embarrassingly parallel across column blocks, no
-inter-server traffic beyond the LU pipeline itself). The client's recovery
-is O(n²): k counter-quarter-turns of inv(X) (pure data movement) and one
-column scaling by v⁻¹. Verification is the paper's Q2 idea applied to the
-inverse claim: the Freivalds projection ‖X(inv(X)·r) − r‖ at O(n²).
+`tamper=` survives as facade-level fault injection: it mutates the
+REPORTED inverse after recovery, exercising exactly the verification
+the client runs on what a lying fleet would hand back. Transport-level
+misbehavior (heal-able, per-chunk) is the `faults=` path instead.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import warnings
+from dataclasses import dataclass, field
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .augment import augment_for_servers
-from .cipher import CipherMeta, Mode, cipher
-from .keygen import keygen
-from .lu import lu_nserver
-from .prt import rot90_cw
-from .seed import Seed, seedgen
+from .cipher import CipherMeta, Mode
+from .protocol import SPDCReport
+from .seed import Seed
+
+__all__ = ["SPDCInverseResult", "outsource_inverse"]
+
+
+def _deprecated_protocol_field(name: str, hint: str):
+    """One-cycle shim: `result.seed` / `result.meta` still answer, loudly."""
+
+    @property
+    def shim(self):
+        warnings.warn(
+            f"SPDCInverseResult.{name} is deprecated; {hint}",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return getattr(self, f"_{name}")
+
+    return shim
 
 
 @dataclass
 class SPDCInverseResult:
+    """Outcome of one secure inversion (or a (B, n, n) stack of them).
+
+    `report` is the consolidated SPDCReport surface — its `ops` tuple
+    records the factorization and the inverse round(s) with per-op
+    verdicts, residuals, and heal counts. `verified` folds the session's
+    layered checks AND the facade's final Freivalds projection.
+    """
+
     inverse: jnp.ndarray
     verified: bool
     residual: float
-    seed: Seed
-    meta: CipherMeta
     padding: int
+    #: consolidated diagnostics (per-op verdicts / recovery / timings)
+    report: SPDCReport = field(default_factory=SPDCReport)
+    #: one-cycle deprecated protocol internals (pre-facade return shape)
+    _seed: Seed | None = field(default=None, repr=False)
+    _meta: CipherMeta | None = field(default=None, repr=False)
+
+    seed = _deprecated_protocol_field(
+        "seed", "the protocol seed is session-internal now; key "
+        "client-side state off the matrix bytes instead")
+    meta = _deprecated_protocol_field(
+        "meta", "the cipher meta is session-internal now; read "
+        "result.report.ops for per-op diagnostics")
 
 
-def _inv_from_lu(l: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
-    """Server-side: inv(X) columns by triangular solves against I.
+def _final_probe_residual(m, inverse, digest: bytes, attempt: int) -> float:
+    """Freivalds residual ‖M·(Y·r) − r‖/‖r‖ of the recovered inverse.
 
-    In deployment each server solves its own column block (n/N columns,
-    O(n³/N) flops, zero extra communication); simulated here in one call.
+    The probe r comes from the secret `inverse-probe` lane of the session
+    digest — domain-separated from every wire-crossing subseed and fresh
+    per attempt, so no server can precompute tampering orthogonal to it
+    (the fixed-seed probe this replaces is the adaptive-attack regression
+    in tests/test_inverse.py).
     """
-    n = l.shape[0]
-    eye = jnp.eye(n, dtype=l.dtype)
-    y = jax.scipy.linalg.solve_triangular(l, eye, lower=True,
-                                          unit_diagonal=True)
-    return jax.scipy.linalg.solve_triangular(u, y, lower=False)
+    from repro.linalg.session import _lane_rng
+
+    y = np.asarray(inverse)
+    rng = _lane_rng(digest, b"inverse-probe", attempt)
+    r = rng.standard_normal(y.shape[-1]).astype(y.dtype)
+    return float(
+        np.linalg.norm(np.asarray(m, dtype=y.dtype) @ (y @ r) - r)
+        / np.linalg.norm(r)
+    )
+
+
+def _invert_one(m, num_servers, *, lambda1, lambda2, mode, dtype, eps,
+                tamper, transport, faults, recover, standby):
+    from repro.linalg import LinalgSession
+
+    s = LinalgSession(
+        m, num_servers,
+        transport=transport, faults=faults, recover=recover,
+        standby=standby, mode=mode, lambda1=lambda1, lambda2=lambda2,
+        dtype=dtype,
+    )
+    inverse = jnp.asarray(s.inv())
+    if tamper is not None:
+        inverse = tamper(inverse)
+    resid = _final_probe_residual(m, inverse, s.digest, 0)
+    rep = s.report
+    session_ok = all(o.verified for o in rep.ops)
+    return SPDCInverseResult(
+        inverse=inverse,
+        verified=bool(session_ok and resid < eps),
+        residual=resid,
+        padding=s.padding,
+        report=rep,
+        _seed=s._session.seeds[0],
+        _meta=s._session.metas[0],
+    )
 
 
 def outsource_inverse(
@@ -63,54 +134,45 @@ def outsource_inverse(
     lambda1: int = 128,
     lambda2: int = 128,
     mode: Mode = "ewd",
-    dtype=jnp.float64,
+    dtype=None,
     eps: float = 1e-6,
     tamper=None,
+    transport=None,
+    faults=None,
+    recover: bool = True,
+    standby: int = 0,
 ) -> SPDCInverseResult:
-    """Full secure-inversion protocol: cipher -> N-server LU -> per-server
-    column solves -> client O(n²) recovery -> Freivalds verification."""
-    m = jnp.asarray(m, dtype=dtype)
-    n = int(m.shape[0])
+    """Secure inversion through one verified shared-LU session.
 
-    seed = seedgen(lambda1, np.asarray(m))
-    key = keygen(lambda2, seed, n)
-    x, meta = cipher(m, key, seed, mode=mode)
-    aug_key = jax.random.key(int.from_bytes(seed.digest[16:24], "big") % (2**31))
-    x_aug, padding = augment_for_servers(x, num_servers, key=aug_key)
-
-    # --- servers ---
-    l, u, _ = lu_nserver(x_aug, num_servers)
-    inv_x_aug = _inv_from_lu(l, u)
-    if tamper is not None:
-        inv_x_aug = tamper(inv_x_aug)
-
-    # client: verify the inverse claim with a Freivalds projection (Q2-style)
-    rng = np.random.default_rng(int.from_bytes(seed.digest[24:28], "big"))
-    r = jnp.asarray(rng.standard_normal(x_aug.shape[0]), dtype=dtype)
-    resid = float(jnp.linalg.norm(x_aug @ (inv_x_aug @ r) - r)
-                  / (jnp.linalg.norm(r)))
-    verified = resid < eps
-
-    # client: O(n²) recovery — drop padding, un-rotate, un-blind
-    # inv(X_aug) upper-left block is NOT inv(X) in general, BUT our
-    # augmentation B = [[X,0],[R,I]] gives inv(B) = [[inv(X),0],[-R·inv(X),I]]
-    # — the upper-left block IS inv(X) exactly.
-    inv_x = inv_x_aug[:n, :n]
-    # With R(A) = AᵀJ (one cw quarter-turn): R^{-1}(B) = JBᵀ, and
-    #   inv(R^{-1}(X)) = inv(JXᵀ) = X^{-T}J = R(inv(X))
-    #   inv(R^{-2}(X)) = inv(JXJ) = J·inv(X)·J = R²(inv(X))
-    #   inv(R^{-3}(X)) = J·X^{-T} = R³(inv(X))
-    # i.e. undoing k cipher rotations on the INVERSE means applying the SAME
-    # k clockwise quarter-turns to inv(X).
-    inv_unrot = rot90_cw(inv_x, meta.rotate_k)
-    v = jnp.asarray(key.v, dtype=dtype)
-    if mode == "ewd":
-        # M = V·R^{-k}(X)  =>  inv(M) = R^{-k}(inv(X)) · V^{-1} (col-scale)
-        inverse = inv_unrot / v[None, :]
-    else:
-        # EWM: M = V^{-1}·R^{-k}(X)  =>  inv(M) = R^{-k}(inv(X)) · V
-        inverse = inv_unrot * v[None, :]
-    return SPDCInverseResult(
-        inverse=inverse, verified=verified, residual=resid,
-        seed=seed, meta=meta, padding=padding,
-    )
+    m: one (n, n) matrix, or a (B, n, n) stack — the stack runs one
+        session per matrix and returns a single result with a (B, n, n)
+        inverse, verified = all, residual = max (per-op records of every
+        session concatenate into report.ops).
+    transport: any `repro.api` transport (name, instance, or None for
+        inline) — the facade predated PR 7 and bypassed the transport
+        layer entirely; it no longer does.
+    faults / recover / standby: the transport-level fault model — a
+        tampered server's chunks localize and HEAL through the session's
+        per-chunk verification (recover=True), unlike `tamper=`, which
+        corrupts the final reported inverse and must be caught by the
+        facade's Freivalds projection.
+    eps: acceptance threshold for that final projection residual.
+    """
+    m = np.asarray(m)
+    kwargs = dict(lambda1=lambda1, lambda2=lambda2, mode=mode, dtype=dtype,
+                  eps=eps, tamper=tamper, transport=transport, faults=faults,
+                  recover=recover, standby=standby)
+    if m.ndim == 3:
+        parts = [_invert_one(mi, num_servers, **kwargs) for mi in m]
+        return SPDCInverseResult(
+            inverse=jnp.stack([p.inverse for p in parts]),
+            verified=all(p.verified for p in parts),
+            residual=max(p.residual for p in parts),
+            padding=parts[0].padding,
+            report=SPDCReport(ops=tuple(
+                o for p in parts for o in p.report.ops
+            )),
+            _seed=parts[0]._seed,
+            _meta=parts[0]._meta,
+        )
+    return _invert_one(m, num_servers, **kwargs)

@@ -95,6 +95,26 @@ class SessionTimings:
     total_s: float = 0.0
 
 
+@dataclass(frozen=True)
+class OpRecord:
+    """One operation of a multi-op linalg session (DESIGN.md §12).
+
+    The shared-LU op plan runs several client-facing ops (slogdet, solve,
+    adjoint solve, inverse) through ONE outsourced factorization; each op
+    appends one of these so SPDCReport covers the whole plan, not just
+    the factor sweep. `round_trips` counts triangular-solve rounds the op
+    added through the transport (0 for slogdet — it reads the already
+    verified factors); `healed` counts chunks recovery re-dispatched.
+    """
+
+    op: str  # "factor" | "slogdet" | "solve" | "solve_t" | "inv"
+    verified: bool = True
+    residual: float = 0.0
+    wall_s: float = 0.0
+    round_trips: int = 0
+    healed: int = 0
+
+
 @dataclass
 class SPDCReport:
     """The ONE typed diagnostics surface on a protocol result.
@@ -109,12 +129,15 @@ class SPDCReport:
         None on classic sessions) — distrib.rateless.RatelessReport.
     timings: wall-clock phase breakdown (None on paths that don't time
         themselves, e.g. a hand-driven tasks→collect flow).
+    ops: per-operation timing/verdict records for multi-op linalg
+        sessions (empty on plain determinant runs) — OpRecord.
     """
 
     verdict: Verdict | None = None
     recovery: object | None = None
     fleet: object | None = None
     timings: SessionTimings | None = None
+    ops: tuple = ()
 
 
 def _deprecated_report_field(name: str):

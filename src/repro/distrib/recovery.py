@@ -66,6 +66,92 @@ def dispatch_subseed(digest: bytes, server: int, attempt: int) -> bytes:
     return h.digest()
 
 
+def trisolve_subseed(
+    digest: bytes, rnd: int, chunk: int, attempt: int
+) -> bytes:
+    """Dispatch-channel key for one triangular-solve chunk (DESIGN.md
+    §12): H(Ψ-digest ‖ "trisolve" ‖ round ‖ chunk ‖ attempt).
+
+    A lane DISJOINT from `dispatch_subseed` (the literal tag separates
+    the domains), so a server holding LU-round sub-seeds learns nothing
+    about the solve rounds' probe or masking keys, and a replayed chunk
+    cannot impersonate a re-issue (attempt is part of the derivation).
+    """
+    h = hashlib.sha256()
+    h.update(digest)
+    h.update(b"trisolve")
+    h.update(struct.pack(">qqq", int(rnd), int(chunk), int(attempt)))
+    return h.digest()
+
+
+def recover_solve(
+    results: list,
+    bad: list[int],
+    *,
+    make_task,
+    verify_chunk,
+    transport,
+    num_servers: int,
+    standby: int = 0,
+    max_rounds: int | None = None,
+    pool: "ServerPool | None" = None,
+) -> tuple[list, "RecoveryReport"]:
+    """Heal rejected triangular-solve chunks by re-dispatching them.
+
+    The solve analogue of `recover_lu`, column-wise instead of row-wise:
+    chunks are independent (no relay, no cascade), so each round simply
+    re-issues every failed chunk to a pool replacement with attempt+1 —
+    a fresh `trisolve_subseed` keys the re-dispatch — and re-verifies it
+    with the round's check. Convergence needs one honest replacement per
+    chunk; `max_rounds` (default num_servers) bounds a fleet that keeps
+    lying.
+
+    results: the round's TriSolveResult list, indexed by chunk (None for
+        timeouts). Healed in place on a copy, returned.
+    bad: chunk indices whose verification failed (or that are None).
+    make_task(chunk, attempt, replacement) -> TriSolveTask: mints the
+        re-issue — the LinalgSession closure holds the factors/RHS and
+        the digest, so this module never touches secret material.
+    verify_chunk(chunk, result) -> float | None: residual if the healed
+        chunk now verifies, None if it still fails.
+    """
+    pool = pool or ServerPool(num_servers, standby)
+    max_rounds = num_servers if max_rounds is None else max_rounds
+    report = RecoveryReport(ok=False, rounds=0)
+    results = list(results)
+    pending = sorted(set(bad))
+    attempts: dict[int, int] = {}
+    for rnd in range(max_rounds):
+        if not pending:
+            break
+        report.rounds = rnd + 1
+        still_bad = []
+        for c in pending:
+            attempts[c] = attempts.get(c, 0) + 1
+            phys, pool = pool.replacement_for(c % num_servers)
+            task = make_task(c, attempts[c], phys)
+            res = transport.repair(task, replacement=phys)
+            residual = verify_chunk(c, res)
+            if residual is None:
+                still_bad.append(c)
+                continue
+            results[c] = res
+            report.events.append(
+                RecoveryEvent(
+                    round=rnd,
+                    server=c,
+                    replacement=phys,
+                    residual=float(residual),
+                    comm_elements=2 * task.rhs.size + 2 * task.l.size,
+                    subseed=task.subseed.hex(),
+                )
+            )
+        pending = still_bad
+    report.ok = not pending
+    report.standby_used = pool.spares_used
+    return results, report
+
+
 def recovery_comm_elements(n: int, num_servers: int, server: int) -> int:
     """Wire cost (elements) of re-dispatching server `server`'s shard:
     its (b, n) ciphertext block row + the verified upstream U rows

@@ -51,11 +51,22 @@ def percentile_ms(lat_s: list[float], q: float) -> float:
     return float(np.percentile(np.asarray(lat_s), q) * 1e3)
 
 
-async def run_workload(gw, mats, arrival_s, tenants=None):
+def parse_ops(spec: str) -> tuple[str, ...]:
+    ops = tuple(s for s in spec.split(",") if s)
+    bad = set(ops) - {"det", "slogdet", "solve"}
+    if not ops or bad:
+        raise argparse.ArgumentTypeError(f"bad --ops {spec!r}")
+    return ops
+
+
+async def run_workload(gw, mats, arrival_s, tenants=None, ops=None,
+                       rhss=None):
     """Submit each matrix at its open-loop arrival time; gather results.
 
     Returns (results, rejected_by_kind, wall_s). Shed requests leave None
     in their results slot and count under their typed rejection kind.
+    `ops`/`rhss` carry each request's secure-linalg op and (for solve)
+    its right-hand side; None means all-determinant.
     """
     t0 = time.perf_counter()
     results = [None] * len(mats)
@@ -72,6 +83,10 @@ async def run_workload(gw, mats, arrival_s, tenants=None):
         )
 
         kwargs = {"tenant": tenants[i]} if tenants is not None else {}
+        if ops is not None:
+            kwargs["op"] = ops[i]
+            if ops[i] == "solve":
+                kwargs["rhs"] = rhss[i]
         try:
             results[i] = await gw.submit(mats[i], **kwargs)
         except GatewayOverloaded:
@@ -147,6 +162,11 @@ def main(argv=None) -> int:
                     help="offered load, requests/sec (0 = saturating)")
     ap.add_argument("--sizes", type=parse_sizes, default=(24, 48, 96),
                     help="comma-separated raw matrix sizes clients draw from")
+    ap.add_argument("--ops", type=parse_ops, default=("det",),
+                    help="secure-linalg ops clients draw from (comma-"
+                         "separated subset of det,slogdet,solve — "
+                         "DESIGN.md §12); solve requests carry a random "
+                         "right-hand side")
     ap.add_argument("--buckets", type=parse_sizes, default=None,
                     help="bucket sizes (default: preset buckets)")
     ap.add_argument("--max-batch", type=int, default=32)
@@ -210,6 +230,9 @@ def main(argv=None) -> int:
         args.buckets = args.buckets or (16, 32)
         args.max_batch = min(args.max_batch, 8)
         args.check = True
+        if args.ops == ("det",):
+            # the CI smoke proves the whole secure-linalg family
+            args.ops = ("det", "slogdet", "solve")
         if args.health_port is None:
             args.health_port = 0  # prove the health surface in CI
 
@@ -243,6 +266,15 @@ def main(argv=None) -> int:
     rng = np.random.default_rng(args.seed)
     sizes = rng.choice(args.sizes, size=args.requests)
     mats = [rng.standard_normal((n, n)) + n * np.eye(n) for n in sizes]
+    ops = (
+        [str(o) for o in rng.choice(args.ops, size=args.requests)]
+        if tuple(args.ops) != ("det",) else None
+    )
+    rhss = (
+        [rng.standard_normal(int(n)) if ops[i] == "solve" else None
+         for i, n in enumerate(sizes)]
+        if ops is not None else None
+    )
     tenants = (
         [f"tenant{i % args.tenants}" for i in range(args.requests)]
         if args.tenants > 1 else None
@@ -267,7 +299,7 @@ def main(argv=None) -> int:
                 print(f"[warmup] {compiled} bucket programs compiled in "
                       f"{time.perf_counter() - t0:.1f}s")
             results, rejected, wall = await run_workload(
-                gw, mats, arrival_s, tenants
+                gw, mats, arrival_s, tenants, ops, rhss
             )
             health_checked = False
             if health_srv is not None:
@@ -291,7 +323,12 @@ def main(argv=None) -> int:
     rate_txt = f"{args.rate:.0f} req/s" if args.rate else "saturating"
     print(f"[serve_spdc] N={args.servers} offered={rate_txt} "
           f"requests={args.requests} sizes={tuple(args.sizes)}"
+          + (f" ops={tuple(args.ops)}" if ops is not None else "")
           + (f" tenants={args.tenants}" if args.tenants > 1 else ""))
+    if ops is not None:
+        mix = {o: sum(1 for r in served if r.op == o) for o in args.ops}
+        print("  op mix served: "
+              + " ".join(f"{o}={c}" for o, c in mix.items()))
     print(f"  served={len(served)} rejected={n_rejected} "
           f"(overload={rejected['overload']} "
           f"admission={rejected['admission']} "
@@ -316,15 +353,25 @@ def main(argv=None) -> int:
         print("  health surface was not exercised")
         return 1
     if args.check:
-        for r, m in zip(results, mats, strict=True):
+        for i, (r, m) in enumerate(zip(results, mats, strict=True)):
             if r is None:
                 continue
+            if r.op == "solve":
+                want = np.linalg.solve(m, rhss[i])
+                err = (np.linalg.norm(np.asarray(r.solution) - want)
+                       / np.linalg.norm(want))
+                assert err < 1e-8, \
+                    f"solve mismatch for request {r.rid} (n={r.n}): {err:.2e}"
+                continue
             ws, wl = np.linalg.slogdet(m)
-            assert r.det.sign == ws and np.isclose(
-                r.det.logabs, wl, rtol=1e-10
-            ), f"det mismatch for request {r.rid} (n={r.n})"
-        print(f"  check: all {len(served)} dets match numpy slogdet "
-              "at rtol 1e-10")
+            if r.op == "slogdet":
+                got_s, got_l = r.sign, r.logabs
+            else:
+                got_s, got_l = r.det.sign, r.det.logabs
+            assert got_s == ws and np.isclose(got_l, wl, rtol=1e-10), \
+                f"{r.op} mismatch for request {r.rid} (n={r.n})"
+        print(f"  check: all {len(served)} answers match numpy at "
+              "op-appropriate tolerance")
     return 0
 
 

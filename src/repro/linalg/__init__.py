@@ -1,0 +1,29 @@
+"""repro.linalg — differentiable secure linear algebra on one shared LU.
+
+The client-facing secure-linalg family (DESIGN.md §12): `secure_slogdet`,
+`secure_solve`, `secure_inv` are differentiable jax ops whose values AND
+gradients route through one verified outsourced factorization per matrix
+(`LinalgSession`), dispatched over any `repro.api` transport.  The GP
+log-likelihood example (examples/gp_loglik.py) is the intended workload
+shape: log|Σ| + solves against Σ inside a jitted, grad-ed objective.
+"""
+from .ops import (
+    SecureLinalg,
+    default_linalg,
+    secure_inv,
+    secure_slogdet,
+    secure_solve,
+)
+from .session import (
+    LinalgSession,
+    LinalgVerificationError,
+    blind_rhs,
+    outsource_solve,
+)
+
+__all__ = [
+    "SecureLinalg", "default_linalg",
+    "secure_slogdet", "secure_solve", "secure_inv",
+    "LinalgSession", "LinalgVerificationError", "blind_rhs",
+    "outsource_solve",
+]

@@ -1,0 +1,481 @@
+"""LinalgSession — many secure ops on ONE verified outsourced LU.
+
+The paper outsources a determinant; everything else the client might
+want from the same matrix (solve, inverse, the slogdet pair) is a pure
+function of the SAME no-pivot factors of the augmented ciphertext
+X' = [[X, 0], [R, I]].  This module grows an *op plan* around one
+factorization (DESIGN.md §12): the first op pays the full SPDC protocol
+(cipher → N-server LU → Authenticate → heal), every later op is an
+O(n²)-client round of triangular solves THROUGH the already-verified
+factors, dispatched to the fleet as `TriSolveTask` column chunks.
+
+Math.  With EWD ciphering, B = V⁻¹M (V = diag(v)) and X = Rᵏ(B) where
+R(A) = Aᵀ·J is one clockwise quarter-turn (J = exchange).  Writing
+G = X⁻¹ — available through the factors because the border block
+structure gives inv(X')[:n,:n] = X⁻¹ and inv(X'ᵀ)[:n,:n] = X⁻ᵀ — the
+inverse of the UNROTATED ciphertext is case-by-case
+
+    B⁻¹ = G        (k ≡ 0)      B⁻ᵀ = Gᵀ
+    B⁻¹ = Gᵀ·J     (k ≡ 1)      B⁻ᵀ = J·G
+    B⁻¹ = J·G·J    (k ≡ 2)      B⁻ᵀ = J·Gᵀ·J
+    B⁻¹ = J·Gᵀ     (k ≡ 3)      B⁻ᵀ = G·J
+
+(growth-safe odd rotations compose the flip, giving X = Bᵀ exactly:
+B⁻¹ = Gᵀ, B⁻ᵀ = G).  Each case is ONE triangular-solve round — G or Gᵀ
+applied to a (permuted) right-hand side — plus client-side row
+reversals, and the client recovers M⁻¹w = B⁻¹(w/v) (EWD; ·v for EWM),
+M⁻ᵀw = (B⁻ᵀw)/v, and inv(M) = B⁻¹/v[None, :].
+
+Trust boundary.  The solve rounds never widen what the servers see:
+l/u are material the fleet itself produced, inverse rounds ship only a
+PUBLIC permutation RHS (I or J columns — the secret 1/v column scaling
+happens client-side after the round), and secret right-hand sides pass
+through the `blind_rhs` one-time-pad chokepoint — W = [z; 0] + X'·C
+with C drawn from a mask lane of the session digest that never leaves
+the client, so the reply is Y = X'⁻¹[z; 0] + C and unmasking is a
+subtraction.  Verification is per-chunk and client-keyed: narrow
+(masked) rounds check the FULL residual ‖A·Y − W‖/‖W‖ against the
+client-held X'; wide (inverse) rounds use a Freivalds probe drawn from a
+secret probe lane — fresh per round, chunk, AND attempt, so a server
+cannot precompute against it (the adaptive-attack fix of
+core.inverse).  Failed chunks heal through
+`distrib.recovery.recover_solve` — re-keyed re-issues to pool
+replacements, like LU rows.
+"""
+from __future__ import annotations
+
+import hashlib
+import struct
+import time
+from dataclasses import replace as _dc_replace
+
+import numpy as np
+
+from repro.api.client import SPDCClient
+from repro.api.messages import TriSolveTask
+from repro.api.transport import resolve_transport
+from repro.core.keygen import keygen
+from repro.core.protocol import OpRecord, SPDCReport
+from repro.distrib.recovery import recover_solve, trisolve_subseed
+
+__all__ = ["LinalgSession", "LinalgVerificationError", "blind_rhs",
+           "outsource_solve"]
+
+
+class LinalgVerificationError(RuntimeError):
+    """A triangular-solve round failed verification and could not heal."""
+
+
+def _lane_rng(digest: bytes, tag: bytes, *idx: int) -> np.random.Generator:
+    """Secret-keyed rng on a domain-separated lane of the session digest.
+
+    Unlike `trisolve_subseed` (which ships to servers as a channel tag),
+    these lanes NEVER cross the boundary — they key the one-time-pad
+    masks and the Freivalds probes, so a server holding every wire byte
+    still cannot precompute against either.
+    """
+    h = hashlib.sha256()
+    h.update(digest)
+    h.update(tag)
+    h.update(struct.pack(f">{len(idx)}q", *idx))
+    return np.random.default_rng(int.from_bytes(h.digest()[:8], "big"))
+
+
+def blind_rhs(rhs_aug, x_aug, digest: bytes, rnd: int, transpose: int):
+    """One-time-pad a secret RHS before it crosses the trust boundary.
+
+    Returns (shipped, c): shipped = rhs + A·C where A is the matrix the
+    round solves through (X' or X'ᵀ) and C is drawn from the secret mask
+    lane at the round's scale — the server's reply is then Y = A⁻¹rhs + C
+    and the client unmasks by subtracting C.  The residual check runs on
+    the MASKED pair (A·Y vs shipped), so verification needs no unmasking.
+    """
+    rng = _lane_rng(digest, b"trisolve-mask", rnd)
+    scale = float(np.linalg.norm(rhs_aug) / np.sqrt(rhs_aug.size) + 1.0)
+    c = rng.standard_normal(rhs_aug.shape).astype(rhs_aug.dtype) * scale
+    a = x_aug.T if transpose else x_aug
+    return rhs_aug + a @ c, c
+
+
+class LinalgSession:
+    """One matrix, one verified outsourced LU, a growing op plan.
+
+    Every public op (`slogdet`, `solve`, `inv`) shares the factors of the
+    session's single factorization — `factorizations` stays 1 however
+    many ops run, which is the whole point (and asserted in tests).
+    """
+
+    def __init__(
+        self,
+        m,
+        num_servers: int = 2,
+        *,
+        transport=None,
+        faults=None,
+        recover: bool = True,
+        standby: int = 0,
+        method: str = "q2",
+        mode: str = "ewd",
+        lambda1: int = 128,
+        lambda2: int = 128,
+        dtype=None,
+        growth_safe: bool | None = None,
+        solve_rtol: float | None = None,
+    ):
+        m = np.asarray(m)
+        if m.ndim != 2 or m.shape[0] != m.shape[1]:
+            raise ValueError(
+                f"LinalgSession needs one square matrix, got {m.shape}"
+            )
+        if dtype is None:
+            dtype = m.dtype if np.issubdtype(m.dtype, np.floating) \
+                else "float64"
+        if growth_safe is None:
+            # None = "the op plan's default", which is ON. The det path
+            # can afford the rotation cipher's elimination growth (log-
+            # magnitude arithmetic), but triangular solves through the
+            # factors cannot: rot90 of an SPD kernel matrix is about the
+            # worst no-pivot LU input there is (growth ~1e18 on a
+            # cond-500 RBF covariance at n=64), while the growth_safe
+            # transpose composition keeps near-SPD inputs at growth ~1.
+            growth_safe = True
+        # equilibrate stays OFF: the op plan stores only the scalar
+        # log2_scale the det path consumes — solve/inv recovery would
+        # need the full scaling vectors (growth_safe covers f32 instead)
+        self.client = SPDCClient(
+            lambda1=lambda1, lambda2=lambda2, mode=mode, method=method,
+            recover=recover, standby=standby, dtype=dtype,
+            growth_safe=growth_safe, equilibrate=False,
+        )
+        self.transport = resolve_transport(transport)
+        self._session = self.client.open_session(
+            np.asarray(m, dtype=np.dtype(self.client.dtype.name)),
+            num_servers, faults=faults,
+        )
+        self._session.keep_factors = True
+        self.n = int(m.shape[0])
+        self.num_servers = int(num_servers)
+        self.digest = self._session.digest
+        self.solve_rtol = solve_rtol
+        self.factorizations = 0
+        self._det_result = None
+        self._factors = None
+        self._x_aug = None
+        self._inv_cache = None
+        self._ops: list[OpRecord] = []
+        self._rounds = 0
+        self._meta = self._session.metas[0]
+        key = keygen(lambda2, self._session.seeds[0], self.n)
+        self._v = np.asarray(key.v, dtype=np.dtype(self.client.dtype.name))
+
+    @property
+    def padding(self) -> int:
+        """Identity-extension rows the augmented system carries beyond n
+        (protocol-exact — DESIGN.md §3)."""
+        return int(np.asarray(self._session.x_aug).shape[-1]) - self.n
+
+    # -- the one factorization ----------------------------------------------
+
+    def _ensure_factors(self) -> None:
+        if self._factors is not None:
+            return
+        t0 = time.perf_counter()
+        res = self._session.run(self.transport)
+        self.factorizations += 1
+        self._det_result = res
+        if not res.verified:
+            raise LinalgVerificationError(
+                "factorization rejected by Authenticate (residual "
+                f"{float(res.residual):.3e}) and recovery "
+                f"{'is disabled' if not self.client.recover else 'failed'}"
+                " — the op plan cannot build on unverified factors"
+            )
+        self._factors = self._session._factors
+        self._x_aug = np.asarray(self._session.x_aug)
+        # Q2 + Q3 on the accepted factors: the client method (default q2,
+        # secret-probed) is sensitive to the FULL product — which the op
+        # plan's trisolve rounds build on — while the paper's diagonal-only
+        # q3 certifies exactly the band Decipher reads.  A det-only
+        # session may accept q3 alone; an op plan may not: in-band relay
+        # poisoning can leave downstream strips wrong OFF the diagonal,
+        # and q2 is what drives recovery to heal them (tests/test_linalg).
+        from repro.core.verify import authenticate, epsilon, growth_estimate
+
+        import jax.numpy as jnp
+
+        l, u = self._factors
+        xa = jnp.asarray(self._x_aug)
+        # Uncapped growth widening: authenticate's default q3 eps clamps
+        # the growth term at q3_growth_cap(n) because a server could
+        # plant cancelling strictly-upper entries to dial its own
+        # tolerance when q3 is the ONLY check. Here q3 runs strictly
+        # after the secret-probed Q2 accepted these same factors, so the
+        # widening is not attacker-steerable — and honest no-pivot LU of
+        # smooth kernel matrices (the GP workload) routinely shows
+        # growth far beyond c·n.
+        eps3 = epsilon(
+            self._session.partitions, xa.shape[-1], xa, dtype=xa.dtype
+        ) * growth_estimate(jnp.asarray(u), xa)
+        v3 = authenticate(
+            jnp.asarray(l), jnp.asarray(u), xa,
+            num_servers=self._session.partitions, method="q3", eps=eps3,
+        )
+        if not v3.all_ok:
+            raise LinalgVerificationError(
+                "factors passed the probed check but failed the diagonal "
+                f"Q3 check (residual {float(v3.residual):.3e} > eps "
+                f"{float(v3.eps):.3e})"
+            )
+        self._ops.append(OpRecord(
+            op="factor", verified=res.verified and v3.all_ok,
+            residual=max(float(res.residual), float(v3.residual)),
+            wall_s=time.perf_counter() - t0, round_trips=1,
+        ))
+
+    # -- public ops ----------------------------------------------------------
+
+    def slogdet(self) -> tuple[float, float]:
+        """(sign, log|det|) — free once the factors are verified."""
+        t0 = time.perf_counter()
+        self._ensure_factors()
+        d = self._det_result.det
+        self._ops.append(OpRecord(
+            op="slogdet", verified=self._det_result.verified,
+            residual=float(self._det_result.residual),
+            wall_s=time.perf_counter() - t0,
+        ))
+        return float(d.sign), float(d.logabs)
+
+    def solve(self, b, *, transpose: bool = False) -> np.ndarray:
+        """M x = b (or Mᵀ x = b) through the shared verified factors.
+
+        b: (n,) or (n, c).  Secret — it rides the `blind_rhs` chokepoint.
+        """
+        npdt = np.dtype(self.client.dtype.name)
+        b = np.asarray(b, dtype=npdt)
+        vec = b.ndim == 1
+        b2 = b[:, None] if vec else b
+        if b2.ndim != 2 or b2.shape[0] != self.n:
+            raise ValueError(
+                f"rhs shape {b.shape} does not match matrix size {self.n}"
+            )
+        v = self._v[:, None]
+        ewd = self._meta.mode == "ewd"
+        if transpose:
+            # M⁻ᵀw = (B⁻ᵀw)/v  (EWD; ·v for EWM) — scale AFTER the round
+            y = self._apply_binv(b2, adjoint=True, masked=True, op="solve_t")
+            y = y / v if ewd else y * v
+        else:
+            # M⁻¹w = B⁻¹(w/v) — scaling a MASKED round's input is safe,
+            # the pad hides it; inverse rounds must not do this (public
+            # RHS would turn into key material on the wire)
+            w = b2 / v if ewd else b2 * v
+            y = self._apply_binv(w, adjoint=False, masked=True, op="solve")
+        return y[:, 0] if vec else y
+
+    def inv(self, *, transpose: bool = False) -> np.ndarray:
+        """inv(M) via one wide public-RHS round (cached).
+
+        The round ships only permutation columns; the secret 1/v column
+        scaling happens here, client-side, after verification.
+        """
+        if self._inv_cache is None:
+            npdt = np.dtype(self.client.dtype.name)
+            eye = np.eye(self.n, dtype=npdt)
+            binv = self._apply_binv(eye, adjoint=False, masked=False,
+                                    op="inv")
+            self._inv_cache = binv / self._v[None, :] \
+                if self._meta.mode == "ewd" else binv * self._v[None, :]
+        return self._inv_cache.T if transpose else self._inv_cache
+
+    @property
+    def report(self) -> SPDCReport:
+        """SPDCReport over the WHOLE op plan (ops= one record per op)."""
+        base = self._det_result.report if self._det_result is not None \
+            else SPDCReport()
+        return _dc_replace(base, ops=tuple(self._ops))
+
+    # -- the triangular-solve rounds -----------------------------------------
+
+    def _binv_plan(self, adjoint: bool) -> tuple[int, bool, bool]:
+        """(transpose_round, pre_J, post_J) realizing B⁻¹ (or B⁻ᵀ) as one
+        G/Gᵀ round with row reversals — the case table in the module
+        docstring."""
+        k = self._meta.rotate_k % 4
+        if self._meta.flipped and k % 2 == 1:  # X = Bᵀ exactly
+            return (0, False, False) if adjoint else (1, False, False)
+        if not adjoint:
+            return {0: (0, False, False), 1: (1, True, False),
+                    2: (0, True, True), 3: (1, False, True)}[k]
+        return {0: (1, False, False), 1: (0, False, True),
+                2: (1, True, True), 3: (0, True, False)}[k]
+
+    def _apply_binv(self, w, *, adjoint, masked, op) -> np.ndarray:
+        """B⁻¹w (or B⁻ᵀw) for an (n, c) block, via one verified round."""
+        self._ensure_factors()
+        t0 = time.perf_counter()
+        trans, pre, post = self._binv_plan(adjoint)
+        z = w[::-1, :] if pre else w
+        n_aug = self._x_aug.shape[0]
+        rhs = np.zeros((n_aug, z.shape[1]), dtype=self._x_aug.dtype)
+        rhs[: self.n] = z  # border rows zero: inv(X')[:n,:n] = X⁻¹ exactly
+        y = self._trisolve_round(rhs, transpose=trans, masked=masked,
+                                 op=op, t0=t0)[: self.n]
+        return y[::-1, :] if post else y
+
+    def _chunk_tasks(self, shipped, transpose, rnd) -> list[TriSolveTask]:
+        l, u = self._factors
+        cols = shipped.shape[1]
+        splits = np.array_split(np.arange(cols),
+                                max(1, min(self.num_servers, cols)))
+        tasks = []
+        for i, idx in enumerate(splits):
+            if idx.size == 0:
+                continue
+            tasks.append(TriSolveTask(
+                server=i, num_servers=self.num_servers,
+                l=l, u=u, rhs=shipped[:, idx[0] : idx[-1] + 1],
+                subseed=trisolve_subseed(self.digest, rnd, i, 0),
+                transpose=int(transpose), col0=int(idx[0]),
+                session_id=self._session.session_id,
+            ))
+        return tasks
+
+    def _tolerance(self) -> float:
+        if self.solve_rtol is not None:
+            return self.solve_rtol
+        eps = float(np.finfo(self._x_aug.dtype).eps)
+        # widen by the observed element growth of the no-pivot factors,
+        # exactly as verify.epsilon does for the LU checks: a triangular
+        # solve through a U with growth ρ loses ~ρ·u·n digits even when
+        # everyone is honest. Safe to trust here — unlike Q3's ε-widening
+        # (q3_growth_cap), these factors already passed the secret-probed
+        # Q2 check, so their growth is the growth of an ACCEPTED
+        # factorization, not an attacker-supplied dial.
+        from repro.core.verify import growth_estimate
+
+        rho = float(growth_estimate(np.triu(self._factors[1]), self._x_aug))
+        return eps * self._x_aug.shape[0] * 256.0 * rho
+
+    def _check_chunk(self, task, res, rnd: int, chunk: int,
+                     freivalds: bool) -> float | None:
+        """Relative residual if the chunk verifies, None if it fails.
+
+        The echo binding (subseed / col0 / transpose) runs first: a stale
+        or replayed chunk from another dispatch fails before any math.
+        """
+        if res is None or res.subseed != task.subseed \
+                or res.col0 != task.col0 or res.transpose != task.transpose:
+            return None
+        y = np.asarray(res.y)
+        if y.shape != task.rhs.shape:
+            return None
+        a = self._x_aug.T if task.transpose else self._x_aug
+        w = task.rhs
+        tiny = float(np.finfo(self._x_aug.dtype).tiny)
+        if freivalds:
+            # secret probe, fresh per (round, chunk, attempt): O(n'²)
+            # for a wide chunk instead of O(n'²c), and useless to
+            # precompute against — the lane never crosses the boundary
+            rng = _lane_rng(self.digest, b"trisolve-probe",
+                            rnd, chunk, task.attempt)
+            r = rng.standard_normal(a.shape[0]).astype(a.dtype)
+            ar = a.T @ r
+            num = float(np.linalg.norm(ar @ y - r @ w))
+            # backward-error scale of the dot products being compared:
+            # ‖aᵀr‖·‖y‖, not ‖r‖·‖w‖ — in the wide inverse round w is a
+            # unit-norm permutation block while y carries ‖M⁻¹‖-scale
+            # entries, so normalizing by ‖w‖ divides honest rounding
+            # noise by a vanishing scale and rejects clean fleets
+            den = float(np.linalg.norm(ar) * np.linalg.norm(y)
+                        + np.linalg.norm(r @ w)) + tiny
+        else:
+            num = float(np.linalg.norm(a @ y - w))
+            den = float(np.linalg.norm(w)) + tiny
+        rel = num / den
+        return rel if rel <= self._tolerance() else None
+
+    def _trisolve_round(self, rhs_aug, *, transpose, masked, op, t0):
+        """Dispatch one round of column chunks, verify each, heal the
+        bad ones, reassemble, unmask."""
+        rnd = self._rounds
+        self._rounds += 1
+        if masked:
+            shipped, c = blind_rhs(rhs_aug, self._x_aug, self.digest, rnd,
+                                   transpose)
+        else:
+            shipped, c = rhs_aug, None
+        # narrow secret rounds get the full residual; wide public rounds
+        # (inverse) get the cheaper Freivalds probe
+        freivalds = not masked
+        tasks = self._chunk_tasks(shipped, transpose, rnd)
+        results = list(self.transport.solve_shards(
+            tasks, faults=self._session.plan
+        ))
+        residuals, bad = [], []
+        for i, (t, r) in enumerate(zip(tasks, results)):
+            rel = self._check_chunk(t, r, rnd, i, freivalds)
+            if rel is None:
+                bad.append(i)
+            else:
+                residuals.append(rel)
+        healed = 0
+        if bad:
+            if not self.client.recover:
+                raise LinalgVerificationError(
+                    f"trisolve round {rnd} ({op}): chunks {bad} failed "
+                    "verification and recover=False"
+                )
+            reissued: dict[int, TriSolveTask] = {}
+
+            def make_task(i, attempt, phys):
+                t = _dc_replace(
+                    tasks[i], server=phys, attempt=attempt,
+                    subseed=trisolve_subseed(self.digest, rnd, i, attempt),
+                )
+                reissued[i] = t
+                return t
+
+            def verify_chunk(i, res):
+                return self._check_chunk(reissued[i], res, rnd, i,
+                                         freivalds)
+
+            results, rep = recover_solve(
+                results, bad, make_task=make_task,
+                verify_chunk=verify_chunk, transport=self.transport,
+                num_servers=self.num_servers, standby=self.client.standby,
+            )
+            if not rep.ok:
+                raise LinalgVerificationError(
+                    f"trisolve round {rnd} ({op}): recovery exhausted "
+                    f"after {rep.rounds} rounds"
+                )
+            healed = len(rep.events)
+            residuals.extend(e.residual for e in rep.events)
+        y = np.empty_like(shipped)
+        for t, r in zip(tasks, results):
+            y[:, t.col0 : t.col0 + t.cols] = np.asarray(r.y)
+        if masked:
+            y = y - c
+        self._ops.append(OpRecord(
+            op=op, verified=True,
+            residual=max(residuals) if residuals else 0.0,
+            wall_s=time.perf_counter() - t0, round_trips=1, healed=healed,
+        ))
+        return y
+
+
+def outsource_solve(m, rhs, num_servers: int = 2, *, transpose: bool = False,
+                    **session_kwargs):
+    """One-shot audited solve facade: factor, verify (Q2+Q3), solve.
+
+    Returns (solution, session). The same standing as
+    `core.protocol.outsource_determinant` — the whole PMOP→dispatch→
+    blinded-round→verify dance happens inside, so callers (the gateway's
+    per-request flush path, scripts) never touch factors or masks.  Hold
+    a `LinalgSession` directly instead when several ops should amortize
+    one factorization.
+    """
+    s = LinalgSession(m, num_servers, **session_kwargs)
+    y = s.solve(rhs, transpose=transpose)
+    return y, s

@@ -56,6 +56,14 @@ class BucketKey:
 
     pad_to: int
     num_servers: int
+    #: which secure-linalg operation this bucket serves (DESIGN.md §12).
+    #: Part of the key: "det" and "slogdet" sweeps coalesce per-op (they
+    #: read the same Determinant differently but must report distinct
+    #: metrics series), and "solve" requests carry an RHS payload that the
+    #: batched determinant sweep has no lane for — they run per-request
+    #: LinalgSessions instead. Same transport instance across ops ⇒ the
+    #: buckets still share one warm worker pool.
+    op: str = "det"
     mode: str = "ewd"
     method: str = "q3"
     lambda1: int = 128
@@ -100,6 +108,8 @@ class BucketKey:
 
         core = (f"n{self.pad_to}.N{self.num_servers}.{self.dtype}"
                 f".{self.mode}-{self.method}")
+        if self.op != "det":
+            core += f".{self.op}"
         if self.rateless:
             core += ".rateless"
         rest = (self.lambda1, self.lambda2, self.recover, self.standby,
@@ -109,7 +119,12 @@ class BucketKey:
         return f"{core}#{zlib.crc32(repr(rest).encode()) & 0xFFFF:04x}"
 
     def protocol_kwargs(self) -> dict:
-        """Keyword arguments for core.protocol.outsource_determinant_mixed."""
+        """Keyword arguments for core.protocol.outsource_determinant_mixed.
+
+        `op` is deliberately absent: it selects WHICH engine a flush runs
+        (the batched determinant sweep vs per-request LinalgSessions), not
+        a parameter of the sweep itself.
+        """
         return dict(
             pad_to=self.pad_to,
             mode=self.mode,
@@ -124,6 +139,32 @@ class BucketKey:
             equilibrate=self.equilibrate,
             transport=self.transport,
             rateless=self.rateless,
+        )
+
+    def linalg_kwargs(self) -> dict:
+        """Keyword arguments for linalg.LinalgSession (op="solve" flushes).
+
+        The session has no equilibrate / straggler_deadline / rateless
+        knobs (it forces equilibration off so the LU factors stay exactly
+        reusable, and solve rounds are narrow enough that deadline and
+        rateless dispatch buy nothing), so those BucketKey fields are
+        dropped rather than forwarded. A "q3" method is promoted to "q2":
+        Q3's diagonal-only residual cannot DRIVE recovery of in-band
+        relay poisoning on factors that will be reused (linalg.session
+        runs an explicit Q3 post-check on the accepted factors either
+        way), so the secret-probed full-product check is the one the
+        session's healing loop must steer by.
+        """
+        return dict(
+            transport=self.transport,
+            mode=self.mode,
+            method="q2" if self.method == "q3" else self.method,
+            lambda1=self.lambda1,
+            lambda2=self.lambda2,
+            recover=self.recover,
+            standby=self.standby,
+            dtype=self.dtype,
+            growth_safe=self.growth_safe,
         )
 
 
@@ -143,6 +184,12 @@ class DetRequest:
     #: gateway resolved at submit time; None when caching is off or the
     #: request rides the direct path
     ckey: object = None
+    #: which secure-linalg op the client asked for ("det" | "slogdet" |
+    #: "solve"); mirrors the request's BucketKey.op for the direct path
+    op: str = "det"
+    #: right-hand side for op="solve" — an (n,) or (n, c) ndarray; None
+    #: for determinant-family requests
+    rhs: object = None
 
 
 #: Granularity of synthesized fallback buckets: sizes are rounded up to

@@ -101,12 +101,18 @@ __all__ = [
 ]
 
 #: per-request security-config overrides submit() accepts (the BucketKey
-#: fields minus pad_to, which bucketing derives)
+#: fields minus pad_to, which bucketing derives, and minus op, which is
+#: submit()'s own first-class keyword)
 _OVERRIDE_KEYS = frozenset(
     {"num_servers", "mode", "method", "lambda1", "lambda2", "recover",
      "standby", "straggler_deadline", "dtype", "growth_safe",
      "equilibrate", "transport", "rateless"}
 )
+
+#: secure-linalg operations the gateway serves (DESIGN.md §12): the
+#: determinant family rides the coalesced batched sweep; "solve" runs one
+#: LinalgSession per request on the bucket's warm transport.
+_OPS = ("det", "slogdet", "solve")
 
 #: warmup-dummy cache bound: entries are (n_bucket, dtype)-keyed full
 #: matrices, so a long-lived gateway serving a diverse size/dtype mix must
@@ -161,6 +167,14 @@ class GatewayResult:
     error: str | None = None  # sweep failure, delivered per-request
     tenant: str = "default"
     cache_hit: bool = False  # answered from the idempotency cache
+    op: str = "det"  # which secure-linalg op served this request
+    #: op="slogdet": the Determinant unpacked into its overflow-safe pair
+    #: (det still carries the full object; these are the client-facing
+    #: answer shape, matching jnp.linalg.slogdet)
+    sign: float | None = None
+    logabs: float | None = None
+    #: op="solve": the (n,) / (n, c) solution array (det is None)
+    solution: object = None
 
     @property
     def latency_s(self) -> float:
@@ -312,7 +326,7 @@ class SPDCGateway:
         self.close()
         return False
 
-    def _key_for(self, n: int, overrides: dict) -> BucketKey:
+    def _key_for(self, n: int, overrides: dict, op: str = "det") -> BucketKey:
         spdc = self.config.spdc
         num_servers = overrides.get("num_servers", spdc.num_servers)
         rateless = overrides.get("rateless", spdc.rateless)
@@ -324,6 +338,7 @@ class SPDCGateway:
         return BucketKey(
             pad_to=pad_to,
             num_servers=num_servers,
+            op=op,
             rateless=rateless,
             mode=overrides.get("mode", spdc.mode),
             method=overrides.get("method", spdc.method),
@@ -363,15 +378,23 @@ class SPDCGateway:
             )
         return br
 
-    def _cache_key(self, key: BucketKey, tenant: str, matrix: np.ndarray):
+    def _cache_key(self, key: BucketKey, tenant: str, matrix: np.ndarray,
+                   rhs: np.ndarray | None = None):
         """(BucketKey, tenant, content digest): the BucketKey carries the
-        complete security tuple (and the transport identity), so a hit can
-        never cross configs; the digest covers bytes + shape + dtype."""
+        complete security tuple (transport identity AND op), so a hit can
+        never cross configs or ops; the digest covers bytes + shape +
+        dtype of the matrix — and of the RHS for op="solve", since two
+        solves of one matrix against different b are different answers."""
         m = np.ascontiguousarray(matrix)
         h = hashlib.sha256()
         h.update(str(m.shape).encode())
         h.update(str(m.dtype).encode())
         h.update(m.tobytes())
+        if rhs is not None:
+            b = np.ascontiguousarray(rhs)
+            h.update(str(b.shape).encode())
+            h.update(str(b.dtype).encode())
+            h.update(b.tobytes())
         return (key, tenant, h.digest())
 
     #: requires-lock: self._lock
@@ -387,8 +410,19 @@ class SPDCGateway:
     # -- submission ---------------------------------------------------------
 
     def submit(self, matrix, *, now: float | None = None,
-               tenant: str = "default", **overrides) -> int:
+               tenant: str = "default", op: str = "det", rhs=None,
+               **overrides) -> int:
         """Enqueue one (n, n) matrix; returns its request id.
+
+        `op` selects the secure-linalg operation (DESIGN.md §12):
+          * "det" (default) — the classic determinant sweep;
+          * "slogdet" — same sweep, result unpacked as the (sign, logabs)
+            pair on GatewayResult (its own buckets/metrics series);
+          * "solve" — requires `rhs` of shape (n,) or (n, c); served by a
+            per-request verified LinalgSession on the bucket's warm
+            transport (solve traffic never shares a sweep with
+            determinant traffic, but equal transports mean the SAME warm
+            worker pool serves both).
 
         Rejections are typed and nothing is ever half-enqueued:
           * GatewayOverloaded — the gateway-wide pending queue is full
@@ -422,6 +456,8 @@ class SPDCGateway:
                 f"unknown submit() overrides {sorted(unknown)}; "
                 f"allowed: {sorted(_OVERRIDE_KEYS)}"
             )
+        if op not in _OPS:
+            raise ValueError(f"unknown op {op!r}; expected one of {_OPS}")
         matrix = np.asarray(matrix)
         if matrix.ndim != 2 or matrix.shape[0] != matrix.shape[1]:
             raise ValueError(f"expected one square matrix, got {matrix.shape}")
@@ -431,12 +467,25 @@ class SPDCGateway:
                              "n >= 2 blinding elements)")
         if not np.all(np.isfinite(matrix)):
             raise ValueError("matrix contains non-finite entries")
+        if op == "solve":
+            if rhs is None:
+                raise ValueError('op="solve" needs an rhs')
+            rhs = np.asarray(rhs)
+            if rhs.ndim not in (1, 2) or rhs.shape[0] != n:
+                raise ValueError(
+                    f"rhs shape {rhs.shape} does not match matrix "
+                    f"({n}, {n})"
+                )
+            if not np.all(np.isfinite(rhs)):
+                raise ValueError("rhs contains non-finite entries")
+        elif rhs is not None:
+            raise ValueError(f'op={op!r} takes no rhs')
         now = self._clock() if now is None else now
         hook_events = []
         try:
             with self._lock:
                 try:
-                    key = self._key_for(n, overrides)
+                    key = self._key_for(n, overrides, op)
                 except NoBucketFits:
                     key = None
                 self.metrics.record_submit(tenant)
@@ -455,12 +504,13 @@ class SPDCGateway:
                 breaker = None
                 probe_granted = False
                 req = DetRequest(rid=rid, matrix=matrix, n=n,
-                                 enqueued_at=now, tenant=tenant)
+                                 enqueued_at=now, tenant=tenant,
+                                 op=op, rhs=rhs)
                 if key is not None:
                     # 2. idempotency cache / single-flight (cache hits cost
                     # O(hash) — they bypass breaker and quota entirely)
                     if self._cache is not None:
-                        req.ckey = self._cache_key(key, tenant, matrix)
+                        req.ckey = self._cache_key(key, tenant, matrix, rhs)
                         hit = self._cache.get(req.ckey)
                         if hit is not None:
                             self.stats.cache_hits += 1
@@ -659,6 +709,8 @@ class SPDCGateway:
                 self.stats.flushes_timeout += 1
             else:
                 self.stats.flushes_drain += 1
+        if key.op == "solve":
+            return self._flush_solve(key, reqs, reason, now)
         mats = [r.matrix for r in reqs]
         sweep_t0 = self._clock()
         try:
@@ -712,9 +764,10 @@ class SPDCGateway:
             self.metrics.record_flush(flush_ev)
             hook_events.append(("flush", flush_ev))
             for i, req in enumerate(reqs):
+                det = res.dets[i]
                 gres = GatewayResult(
                     rid=req.rid,
-                    det=res.dets[i],
+                    det=det,
                     verified=bool(res.verified[i]),
                     residual=float(res.residual[i]),
                     n=req.n,
@@ -725,6 +778,12 @@ class SPDCGateway:
                     completed_at=done,
                     recovery=res.report.recovery,
                     tenant=req.tenant,
+                    op=key.op,
+                    # slogdet answers in the overflow-safe pair the client
+                    # asked for; .value would overflow exactly where the
+                    # protocol's log-space arithmetic was built to survive
+                    sign=float(det.sign) if key.op == "slogdet" else None,
+                    logabs=float(det.logabs) if key.op == "slogdet" else None,
                 )
                 hook_events.append(("verdict", self._deliver(gres, label)))
                 out.append(gres)
@@ -744,6 +803,104 @@ class SPDCGateway:
                     hook_events.append(("verdict", self._deliver(fres, label)))
                     out.append(fres)
                     self.stats.served += 1
+                    self._admission.release_slot(f.tenant)
+        self._fire(hook_events)
+        return out
+
+    def _flush_solve(self, key: BucketKey, reqs, reason: str, now: float):
+        """op="solve" flush engine: one verified LinalgSession per request.
+
+        Solve requests carry private RHS payloads and run blinded
+        triangular-solve rounds against a per-matrix verified LU — there
+        is no batched sweep to coalesce them into (and pad_batches does
+        not apply). They still flow through the same bucket/flush
+        machinery so they inherit the breaker, cache, metrics, and the
+        bucket's WARM transport: a solve bucket and a det bucket keyed to
+        the same transport instance share one worker pool.
+
+        Failures are per-request: one rejected session fails that request
+        alone; the breaker sees the flush's unverified rate.
+        """
+        from repro.linalg import outsource_solve
+
+        sweep_t0 = self._clock()
+        faults = self._faults_for(key) if self._faults_for else None
+        outcomes = []  # (req, solution, residual, recovery, healed, error)
+        for req in reqs:
+            try:
+                y, s = outsource_solve(req.matrix, req.rhs, key.num_servers,
+                                       faults=faults, **key.linalg_kwargs())
+                rep = s.report
+                residual = max(
+                    (float(o.residual) for o in rep.ops), default=0.0
+                )
+                outcomes.append((req, y, residual, rep.recovery, None))
+            except Exception as e:  # noqa: BLE001 — fail the request, not the flush
+                outcomes.append(
+                    (req, None, float("nan"), None,
+                     f"{type(e).__name__}: {e}")
+                )
+        done = self._clock()
+        label = key.label()
+        out = []
+        hook_events = []
+        with self._lock:
+            n_failed = sum(1 for o in outcomes if o[4] is not None)
+            if any(o[3] is not None for o in outcomes):
+                self.stats.recovered_flushes += 1
+            self._record_breaker(
+                key, now=done, failed=n_failed == len(reqs),
+                unverified_rate=n_failed / len(reqs),
+            )
+            flush_ev = FlushEvent(
+                bucket=label, reason=reason, batch=len(reqs),
+                padded_batch=len(reqs),
+                queue_waits_s=tuple(now - r.enqueued_at for r in reqs),
+                sweep_s=done - sweep_t0,
+                recovered=any(o[3] is not None for o in outcomes),
+            )
+            self.metrics.record_flush(flush_ev)
+            hook_events.append(("flush", flush_ev))
+            for req, y, residual, recovery, error in outcomes:
+                ok = error is None
+                gres = GatewayResult(
+                    rid=req.rid,
+                    det=None,
+                    verified=ok,
+                    residual=residual,
+                    n=req.n,
+                    pad_to=key.pad_to,
+                    batch=len(reqs),
+                    flush_reason=reason,
+                    submitted_at=req.enqueued_at,
+                    completed_at=done,
+                    recovery=recovery,
+                    error=error,
+                    tenant=req.tenant,
+                    op="solve",
+                    solution=y,
+                )
+                hook_events.append(("verdict", self._deliver(gres, label)))
+                out.append(gres)
+                if ok:
+                    self.stats.served += 1
+                else:
+                    self.stats.failed += 1
+                self._admission.release_slot(req.tenant)
+                if (req.ckey is not None and self._cache is not None
+                        and ok):
+                    self._cache.put(req.ckey, gres)
+                for f in self._followers_of(req):
+                    fres = replace(
+                        gres, rid=f.rid, submitted_at=f.enqueued_at,
+                        flush_reason="coalesced", tenant=f.tenant,
+                    )
+                    hook_events.append(("verdict", self._deliver(fres, label)))
+                    out.append(fres)
+                    if ok:
+                        self.stats.served += 1
+                    else:
+                        self.stats.failed += 1
                     self._admission.release_slot(f.tenant)
         self._fire(hook_events)
         return out
@@ -802,6 +959,7 @@ class SPDCGateway:
                     completed_at=done,
                     error=error,
                     tenant=req.tenant,
+                    op=req.op,
                 )
                 hook_events.append(("verdict", self._deliver(
                     gres, label if reason != "direct" else None)))
@@ -824,34 +982,76 @@ class SPDCGateway:
         return out
 
     def _run_direct(self, req: DetRequest, overrides: dict, now: float):
-        """Oversize / breaker-detour escape hatch: one un-coalesced call."""
+        """Oversize / breaker-detour escape hatch: one un-coalesced call.
+
+        Op-aware like the flush path: solve requests run their own
+        LinalgSession, slogdet unpacks the Determinant's overflow-safe
+        pair, det stays the classic protocol call.
+        """
         from repro.core.protocol import outsource_determinant
 
         spdc = self.config.spdc
+        transport = self._resolve_transport(
+            overrides.get("transport", spdc.transport)
+        )
         try:
-            res = outsource_determinant(
-                req.matrix,
-                overrides.get("num_servers", spdc.num_servers),
-                mode=overrides.get("mode", spdc.mode),
-                method=overrides.get("method", spdc.method),
-                lambda1=overrides.get("lambda1", spdc.lambda1),
-                lambda2=overrides.get("lambda2", spdc.lambda2),
-                recover=overrides.get("recover", spdc.recover),
-                standby=overrides.get("standby", spdc.standby),
-                straggler_deadline=overrides.get(
-                    "straggler_deadline", spdc.straggler_deadline
-                ),
-                dtype=overrides.get("dtype", spdc.dtype),
-                growth_safe=overrides.get("growth_safe", spdc.growth_safe),
-                equilibrate=overrides.get("equilibrate", spdc.equilibrate),
-                transport=self._resolve_transport(
-                    overrides.get("transport", spdc.transport)
-                ),
-                rateless=overrides.get("rateless", spdc.rateless),
-            )
+            if req.op == "solve":
+                from repro.linalg import outsource_solve
+
+                method = overrides.get("method", spdc.method)
+                y, s = outsource_solve(
+                    req.matrix,
+                    req.rhs,
+                    overrides.get("num_servers", spdc.num_servers),
+                    transport=transport,
+                    mode=overrides.get("mode", spdc.mode),
+                    # same q3→q2 promotion as BucketKey.linalg_kwargs
+                    method="q2" if method == "q3" else method,
+                    lambda1=overrides.get("lambda1", spdc.lambda1),
+                    lambda2=overrides.get("lambda2", spdc.lambda2),
+                    recover=overrides.get("recover", spdc.recover),
+                    standby=overrides.get("standby", spdc.standby),
+                    dtype=overrides.get("dtype", spdc.dtype),
+                    growth_safe=overrides.get(
+                        "growth_safe", spdc.growth_safe
+                    ),
+                )
+                rep = s.report
+                det = None
+                verified = True
+                residual = max(
+                    (float(o.residual) for o in rep.ops), default=0.0
+                )
+                padding = s.padding
+                recovery = rep.recovery
+            else:
+                res = outsource_determinant(
+                    req.matrix,
+                    overrides.get("num_servers", spdc.num_servers),
+                    mode=overrides.get("mode", spdc.mode),
+                    method=overrides.get("method", spdc.method),
+                    lambda1=overrides.get("lambda1", spdc.lambda1),
+                    lambda2=overrides.get("lambda2", spdc.lambda2),
+                    recover=overrides.get("recover", spdc.recover),
+                    standby=overrides.get("standby", spdc.standby),
+                    straggler_deadline=overrides.get(
+                        "straggler_deadline", spdc.straggler_deadline
+                    ),
+                    dtype=overrides.get("dtype", spdc.dtype),
+                    growth_safe=overrides.get("growth_safe", spdc.growth_safe),
+                    equilibrate=overrides.get("equilibrate", spdc.equilibrate),
+                    transport=transport,
+                    rateless=overrides.get("rateless", spdc.rateless),
+                )
+                y = None
+                det = res.det
+                verified = res.verified
+                residual = res.residual
+                padding = res.padding
+                recovery = res.report.recovery
         except Exception as e:  # noqa: BLE001 — fail the request, not the service
             key = BucketKey(pad_to=req.n, num_servers=spdc.num_servers,
-                            rateless=spdc.rateless)
+                            op=req.op, rateless=spdc.rateless)
             self._fail_requests([req], key, "direct",
                                 f"{type(e).__name__}: {e}")
             return
@@ -861,17 +1061,21 @@ class SPDCGateway:
             self.metrics.counters["direct"] += 1
             gres = GatewayResult(
                 rid=req.rid,
-                det=res.det,
-                verified=res.verified,
-                residual=res.residual,
+                det=det,
+                verified=verified,
+                residual=residual,
                 n=req.n,
-                pad_to=req.n + res.padding,
+                pad_to=req.n + padding,
                 batch=1,
                 flush_reason="direct",
                 submitted_at=req.enqueued_at,
                 completed_at=self._clock(),
-                recovery=res.report.recovery,
+                recovery=recovery,
                 tenant=req.tenant,
+                op=req.op,
+                sign=float(det.sign) if req.op == "slogdet" else None,
+                logabs=float(det.logabs) if req.op == "slogdet" else None,
+                solution=y,
             )
             hook_events.append(("verdict", self._deliver(gres, None)))
         self._fire(hook_events)
@@ -1054,11 +1258,13 @@ class AsyncSPDCGateway:
         return await asyncio.to_thread(self._gw.warmup, batch_sizes)
 
     async def submit(self, matrix, *, tenant: str = "default",
-                     **overrides) -> GatewayResult:
+                     op: str = "det", rhs=None, **overrides) -> GatewayResult:
         """Enqueue one matrix and wait for its bucket's sweep.
 
-        Raises GatewayOverloaded / AdmissionRejected / BreakerOpen
-        immediately (without queueing) when the gateway sheds the request.
+        `op`/`rhs` select the secure-linalg operation exactly as on
+        SPDCGateway.submit. Raises GatewayOverloaded / AdmissionRejected /
+        BreakerOpen immediately (without queueing) when the gateway sheds
+        the request.
         """
         import asyncio
 
@@ -1067,7 +1273,8 @@ class AsyncSPDCGateway:
         # to_thread keeps the event loop free even when submit() itself
         # does device work (the oversize direct-call escape hatch)
         rid = await asyncio.to_thread(
-            self._gw.submit, matrix, tenant=tenant, **overrides
+            self._gw.submit, matrix, tenant=tenant, op=op, rhs=rhs,
+            **overrides
         )
         ready = self._gw.take(rid)
         if ready is not None:  # direct call or cache hit completed inline

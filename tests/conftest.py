@@ -37,3 +37,10 @@ except ModuleNotFoundError:
     _mod = importlib.util.module_from_spec(_spec)
     _spec.loader.exec_module(_mod)
     sys.modules["hypothesis"] = _mod
+
+# repro.linalg flips jax_cpu_enable_async_dispatch, which only takes
+# effect if it runs before the first jax dispatch of the process — and
+# pytest runs every module in one process. Import it here so the
+# jit-callback tests (tests/test_linalg.py) can't deadlock just because
+# an earlier test module initialized the CPU backend first.
+import repro.linalg  # noqa: E402,F401

@@ -1,0 +1,174 @@
+"""outsource_inverse — the facade over the shared-LU op plan.
+
+The §VII.B enhancement, post-refactor (DESIGN.md §12): one verified
+session factorization, one wide public-RHS round, facade-level Freivalds
+re-check with a SECRET probe lane. Includes the adaptive-attack
+regression against the fixed-seed probe the facade replaced, and the
+one-cycle deprecation shims for the pre-facade result fields.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import outsource_determinant, outsource_inverse
+from repro.core.faults import ServerFault
+from repro.linalg import LinalgSession
+
+X64 = bool(jax.config.jax_enable_x64)
+needs_x64 = pytest.mark.skipif(
+    not X64, reason="compares against float64-calibrated tolerances"
+)
+
+
+def _wellcond(n, seed=0, batch=None):
+    rng = np.random.default_rng(seed)
+    if batch is None:
+        return rng.standard_normal((n, n)) + n * np.eye(n)
+    return rng.standard_normal((batch, n, n)) + n * np.eye(n)
+
+
+@pytest.mark.parametrize("dtype,tol", [
+    ("float64", 1e-9),
+    ("float32", 2e-3),
+])
+def test_honest_roundtrip(dtype, tol):
+    if dtype == "float64" and not X64:
+        pytest.skip("x64 disabled")
+    m = _wellcond(10, seed=1)
+    res = outsource_inverse(m, 2, dtype=dtype)
+    assert res.verified
+    np.testing.assert_allclose(
+        np.asarray(res.inverse), np.linalg.inv(m), rtol=0, atol=tol
+    )
+    assert res.residual < tol
+    # per-op diagnostics: factorization + the inverse round, all verified
+    ops = [o.op for o in res.report.ops]
+    assert "factor" in ops and "inv" in ops
+    assert all(o.verified for o in res.report.ops)
+
+
+@needs_x64
+def test_tampered_server_localizes_and_heals():
+    """Transport-level misbehavior is the heal-able kind: the session's
+    per-chunk verification localizes the bad chunk and recovers, and the
+    facade still verifies the final inverse."""
+    m = _wellcond(12, seed=2)
+    res = outsource_inverse(
+        m, 2, faults=ServerFault(server=0, magnitude=50.0), recover=True,
+    )
+    assert res.verified
+    np.testing.assert_allclose(
+        np.asarray(res.inverse), np.linalg.inv(m), rtol=0, atol=1e-9
+    )
+    assert any(o.healed >= 1 for o in res.report.ops)
+
+
+def test_final_tamper_is_caught():
+    """`tamper=` corrupts the REPORTED inverse after recovery — only the
+    facade's final Freivalds projection can catch it."""
+    m = _wellcond(10, seed=3)
+    res = outsource_inverse(
+        m, 2, tamper=lambda iv: iv.at[3, 4].add(0.01)
+    )
+    assert not res.verified
+    assert res.residual > 1e-6
+
+
+def test_batched_path():
+    ms = _wellcond(8, seed=4, batch=3)
+    res = outsource_inverse(ms, 2)
+    assert res.verified
+    assert np.asarray(res.inverse).shape == (3, 8, 8)
+    tol = 1e-9 if X64 else 2e-3
+    for i in range(3):
+        np.testing.assert_allclose(
+            np.asarray(res.inverse[i]), np.linalg.inv(ms[i]),
+            rtol=0, atol=tol,
+        )
+    # one factorization per matrix in the stack, concatenated reports
+    assert sum(1 for o in res.report.ops if o.op == "factor") == 3
+
+
+@needs_x64
+def test_factors_bit_equal_to_fresh_outsourcing():
+    """The protocol is deterministic in the matrix bytes: the facade's
+    session factors are BIT-identical to a fresh determinant outsourcing
+    under the same client knobs — which is what lets the differentiable
+    ops re-enter under jit replay and land on the same session."""
+    m = _wellcond(10, seed=5)
+    s1 = LinalgSession(m, 2)
+    s1._ensure_factors()
+    s2 = LinalgSession(m, 2)
+    s2._ensure_factors()
+    for f1, f2 in zip(s1._factors, s2._factors):
+        np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+    assert s1.digest == s2.digest
+    # and the det the facade's factors imply agrees exactly with the
+    # standalone protocol entry point at the session's config
+    det = outsource_determinant(
+        m, 2, method="q2", recover=True, growth_safe=True,
+        equilibrate=False,
+    )
+    sign, logabs = s1.slogdet()
+    assert float(det.det.sign) == sign
+    assert np.isclose(float(det.det.logabs), logabs, rtol=0, atol=1e-12)
+
+
+@needs_x64
+def test_adaptive_attack_on_fixed_probe_is_caught():
+    """Regression for the fixed-seed Freivalds probe the facade replaced.
+
+    The pre-facade check seeded its projection from a fixed slice of the
+    session digest — wire-adjacent material an adaptive server could
+    learn. Such a server tampers with E chosen ORTHOGONAL to that
+    predictable probe r₀ (E·r₀ = 0): the old check's residual is
+    untouched while the inverse is arbitrarily wrong. The secret-lane
+    probe (fresh per attempt, never on the wire) must reject it.
+    """
+    m = _wellcond(10, seed=6)
+    # the digest is deterministic in the matrix bytes — exactly what an
+    # adaptive attacker could replay to learn a digest-sliced seed
+    digest = LinalgSession(m, 2).digest
+    r0 = np.random.default_rng(
+        int.from_bytes(digest[:4], "big")
+    ).standard_normal(10)
+    # rank-1 tamper orthogonal to the predictable probe, O(1) magnitude
+    z = np.arange(1.0, 11.0)
+    w = np.random.default_rng(7).standard_normal(10)
+    w -= (w @ r0) / (r0 @ r0) * r0
+    attack = np.outer(z, w / np.linalg.norm(w))
+
+    res = outsource_inverse(
+        m, 2, tamper=lambda iv: iv + np.asarray(attack, dtype=iv.dtype)
+    )
+    # the OLD check would have accepted: the attack is invisible to r₀
+    old_resid = float(
+        np.linalg.norm(m @ ((np.asarray(res.inverse)) @ r0) - r0)
+        / np.linalg.norm(r0)
+    )
+    assert old_resid < 1e-6, "attack must be orthogonal to the old probe"
+    # the secret-lane probe catches it
+    assert not res.verified
+    assert res.residual > 1e-3
+
+
+def test_deprecated_protocol_fields_warn_and_error_policy():
+    """`result.seed` / `result.meta` still answer but warn; under the
+    repo's error::DeprecationWarning filter the access RAISES, which is
+    the one-cycle removal contract."""
+    m = _wellcond(8, seed=8)
+    res = outsource_inverse(m, 2)
+    with pytest.warns(DeprecationWarning, match="session-internal"):
+        seed = res.seed
+    assert seed is not None
+    with pytest.warns(DeprecationWarning, match="report.ops"):
+        meta = res.meta
+    assert meta is not None
+    # the pytest.ini policy (error::DeprecationWarning:repro) turns the
+    # bare access into an exception — shims cannot silently outlive
+    import warnings
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        with pytest.raises(DeprecationWarning):
+            _ = res.seed

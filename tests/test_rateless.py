@@ -294,8 +294,13 @@ def test_probation_probe_readmits_transient_offender():
 
 def test_probation_probe_keeps_persistent_tamperer_benched():
     """The probe rides the wire as attempt 0, so a persistently tampering
-    worker corrupts the probe too and stays quarantined."""
-    cfg = RatelessConfig(probation_cooldown_s=0.01)
+    worker corrupts the probe too and stays quarantined.
+
+    cooldown 0 makes the probe deterministic: the worker is probation-due
+    in the same scheduler iteration that re-streams its tampered strip,
+    so the probe cannot race the session finishing (a nonzero cooldown
+    flakes when the remaining strips complete inside the window)."""
+    cfg = RatelessConfig(probation_cooldown_s=0.0)
     plan = ServerFault(server=1, kind="tamper", mode="single", target="u",
                        magnitude=100.0)
     client = SPDCClient(rateless=cfg, recover=True)

@@ -482,12 +482,23 @@ def _functions(tree: ast.Module):
 
 
 def _whitelist_check(ctx: Context) -> list[Finding]:
-    """SPDC105: ShardTask dataclass fields vs the client-side mint
-    whitelist must agree exactly — a field added to the wire message
-    without a whitelist decision (or a stale whitelist name) is a
-    boundary change nobody signed off on."""
-    wl_file = ctx.by_suffix(vocab.TASK_WHITELIST_FILE)
-    dc_file = ctx.by_suffix(vocab.TASK_DATACLASS_FILE)
+    """SPDC105: each wire-task dataclass and the client-side mint
+    whitelist that guards it must agree exactly — a field added to a
+    wire message without a whitelist decision (or a stale whitelist
+    name) is a boundary change nobody signed off on. One check per row
+    of vocab.TASK_WHITELISTS."""
+    out: list[Finding] = []
+    for wl_path, wl_name, dc_path, dc_name in vocab.TASK_WHITELISTS:
+        out.extend(_whitelist_check_one(ctx, wl_path, wl_name,
+                                        dc_path, dc_name))
+    return out
+
+
+def _whitelist_check_one(
+    ctx: Context, wl_path: str, wl_name: str, dc_path: str, dc_name: str
+) -> list[Finding]:
+    wl_file = ctx.by_suffix(wl_path)
+    dc_file = ctx.by_suffix(dc_path)
     if wl_file is None or dc_file is None:
         return []
     if wl_file.tree is None or dc_file.tree is None:
@@ -498,7 +509,7 @@ def _whitelist_check(ctx: Context) -> list[Finding]:
     for node in ast.walk(wl_file.tree):
         if isinstance(node, ast.Assign):
             names = [t.id for t in node.targets if isinstance(t, ast.Name)]
-            if vocab.TASK_WHITELIST_NAME in names:
+            if wl_name in names:
                 try:
                     val = ast.literal_eval(
                         node.value.args[0]
@@ -513,7 +524,7 @@ def _whitelist_check(ctx: Context) -> list[Finding]:
     fields: set[str] = set()
     dc_line = 1
     for node in dc_file.tree.body:
-        if isinstance(node, ast.ClassDef) and node.name == vocab.TASK_DATACLASS_NAME:
+        if isinstance(node, ast.ClassDef) and node.name == dc_name:
             dc_line = node.lineno
             for sub in node.body:
                 if isinstance(sub, ast.AnnAssign) and isinstance(
@@ -525,7 +536,7 @@ def _whitelist_check(ctx: Context) -> list[Finding]:
     if whitelist is None:
         out.append(Finding(
             wl_file.path, wl_line, "SPDC105",
-            f"{vocab.TASK_WHITELIST_NAME} whitelist not found in "
+            f"{wl_name} whitelist not found in "
             f"{wl_file.path} (moved or deleted?)",
         ))
         return out
@@ -534,13 +545,13 @@ def _whitelist_check(ctx: Context) -> list[Finding]:
     for f in sorted(fields - whitelist):
         out.append(Finding(
             dc_file.path, dc_line, "SPDC105",
-            f"{vocab.TASK_DATACLASS_NAME} field {f!r} is not in the "
-            f"{vocab.TASK_WHITELIST_NAME} whitelist",
+            f"{dc_name} field {f!r} is not in the "
+            f"{wl_name} whitelist",
         ))
     for f in sorted(whitelist - fields):
         out.append(Finding(
             wl_file.path, wl_line, "SPDC105",
-            f"whitelist entry {f!r} matches no {vocab.TASK_DATACLASS_NAME} field",
+            f"whitelist entry {f!r} matches no {dc_name} field",
         ))
     return out
 

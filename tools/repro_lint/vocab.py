@@ -61,6 +61,7 @@ TAINT_SCOPE_PREFIXES: tuple[str, ...] = (
     "src/repro/core/",
     "src/repro/serve/",
     "src/repro/distrib/",
+    "src/repro/linalg/",
 )
 
 #: Parameter names that introduce taint at function entry. These are the
@@ -104,6 +105,15 @@ SANITIZERS: frozenset[str] = frozenset({
     "equilibrate",
     "dispatch_subseed",
     "outsource_determinant", "outsource_determinant_mixed",
+    # linalg family: LinalgSession is the audited shared-LU client facade
+    # (same standing as outsource_determinant — everything it ships is
+    # ciphered/augmented internally); blind_rhs is the one-time-pad
+    # chokepoint every secret RHS must pass before a trisolve round;
+    # trisolve_subseed / _lane_rng are hashlib one-way derivations like
+    # dispatch_subseed.
+    "LinalgSession", "outsource_solve",
+    "blind_rhs",
+    "trisolve_subseed", "_lane_rng",
 })
 
 #: Dotted-callee prefixes that sanitize (hashlib.sha256(...).digest()).
@@ -114,8 +124,9 @@ SANITIZER_PREFIXES: tuple[str, ...] = ("hashlib.",)
 METADATA_ATTRS: frozenset[str] = frozenset({
     "shape", "ndim", "dtype", "size", "nbytes", "itemsize",
     # gateway accounting identity on requests/results: timestamps, ids,
-    # tenant names, and the (public, padded) matrix size — never payload
-    "enqueued_at", "tenant", "rid", "n",
+    # tenant names, the (public, padded) matrix size, and the requested
+    # op kind ("det"/"slogdet"/"solve") — never payload
+    "enqueued_at", "tenant", "rid", "n", "op",
 })
 
 #: Logging-style callees (dotted suffix match) -> SPDC102.
@@ -126,7 +137,7 @@ LOG_CALLEE_PREFIXES: tuple[str, ...] = ("logging.", "logger.", "log.")
 
 #: Boundary sinks -> SPDC101. Constructor names whose arguments cross to
 #: the edge servers, and wire encoders.
-BOUNDARY_CTORS: frozenset[str] = frozenset({"ShardTask"})
+BOUNDARY_CTORS: frozenset[str] = frozenset({"ShardTask", "TriSolveTask"})
 WIRE_CALLEES: frozenset[str] = frozenset({"wire.encode", "encode_message"})
 #: Transport submission methods (suffix match, receiver must *mention*
 #: transport to avoid flagging every ThreadPoolExecutor.submit).
@@ -142,12 +153,17 @@ METRIC_METHODS: frozenset[str] = frozenset({
     "record_submit", "record_verdict", "record_flush", "record_reject",
 })
 
-#: Cross-file whitelist check (SPDC105): the dataclass that crosses the
-#: boundary and the runtime whitelist that guards its construction.
-TASK_WHITELIST_FILE = "src/repro/api/client.py"
-TASK_WHITELIST_NAME = "_TASK_FIELDS"
-TASK_DATACLASS_FILE = "src/repro/api/messages.py"
-TASK_DATACLASS_NAME = "ShardTask"
+#: Cross-file whitelist checks (SPDC105): each row pairs a dataclass
+#: that crosses the boundary with the runtime whitelist that guards its
+#: construction — (whitelist file, whitelist name, dataclass file,
+#: dataclass name). Every wire task kind gets a row; adding a field to
+#: either side without the other is a boundary change nobody signed off.
+TASK_WHITELISTS: tuple[tuple[str, str, str, str], ...] = (
+    ("src/repro/api/client.py", "_TASK_FIELDS",
+     "src/repro/api/messages.py", "ShardTask"),
+    ("src/repro/api/client.py", "_SOLVE_TASK_FIELDS",
+     "src/repro/api/messages.py", "TriSolveTask"),
+)
 
 # --------------------------------------------------------------------------
 # Pass 2 — lock discipline (SPDC20x).
